@@ -1,0 +1,57 @@
+//! Quickstart: fit a sketched KRR model with the paper's accumulation
+//! sketch and compare it against exact KRR and the two extremes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use accumkrr::data::{bimodal, BimodalConfig};
+use accumkrr::kernels::{kernel_matrix, Kernel};
+use accumkrr::krr::{KrrModel, SketchedKrr};
+use accumkrr::rng::Pcg64;
+use accumkrr::sketch::{SketchBuilder, SketchKind};
+use accumkrr::stats::in_sample_sq_error;
+use accumkrr::util::timer::timed;
+
+fn main() {
+    let n = 1000;
+    let mut rng = Pcg64::seed(1);
+
+    // 1. data: the paper's bimodal distribution (high incoherence)
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let (x, y, _truth) = bimodal(&cfg, &mut rng);
+
+    // 2. paper schedules: λ = 0.5·n^{−4/7}, d = ⌊1.3·n^{3/7}⌋, Gaussian
+    //    kernel with bw = 1.5·n^{−1/7}
+    let lambda = 0.5 * (n as f64).powf(-4.0 / 7.0);
+    let d = (1.3 * (n as f64).powf(3.0 / 7.0)) as usize;
+    let kern = Kernel::gaussian(1.5 * (n as f64).powf(-1.0 / 7.0));
+    println!("n={n}  d={d}  lambda={lambda:.5}  kernel={} bw={:.3}", kern.name(), kern.bandwidth);
+
+    // 3. exact KRR reference (O(n³) — this is what sketching avoids)
+    let k = kernel_matrix(&kern, &x);
+    let (exact, exact_secs) = timed(|| KrrModel::fit_with_k(kern, &x, &k, &y, lambda).unwrap());
+    println!("exact KRR:               {exact_secs:>8.3}s");
+
+    // 4. three sketches at the same d
+    for (name, kind) in [
+        ("nystrom (m=1)", SketchKind::Nystrom),
+        ("accumulation (m=4)", SketchKind::Accumulation { m: 4 }),
+        ("gaussian (m=inf)", SketchKind::Gaussian),
+    ] {
+        let (model, secs) = timed(|| {
+            let s = SketchBuilder::new(kind.clone()).build(n, d, &mut rng);
+            SketchedKrr::fit(kern, &x, &y, &s, lambda, None).unwrap()
+        });
+        let err = in_sample_sq_error(model.fitted(), exact.fitted());
+        println!(
+            "{name:<24} {secs:>8.3}s  approx_err={err:.3e}  landmarks={}",
+            model.num_landmarks()
+        );
+    }
+    println!("\nexpected shape: accumulation error ~ gaussian error, runtime ~ nystrom.");
+}

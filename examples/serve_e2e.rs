@@ -1,0 +1,244 @@
+//! End-to-end driver (the DESIGN.md E2E experiment): proves all three
+//! layers compose on a real small workload.
+//!
+//! 1. **L1/L2 via PJRT**: fit sketched KRR through the AOT-compiled
+//!    JAX/Pallas artifact and cross-check against the native Rust path.
+//! 2. **L3 serving**: train a model in the coordinator, start the TCP
+//!    server, fire concurrent batched prediction requests, and report
+//!    latency/throughput plus batching effectiveness.
+//! 3. Report the paper's headline metric: approximation error of the
+//!    accumulation sketch vs Nyström/Gaussian at equal d.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use accumkrr::coordinator::{serve, ModelStore, ServerConfig, TrainRequest};
+use accumkrr::data::{bimodal, BimodalConfig};
+use accumkrr::kernels::{kernel_matrix, Kernel};
+use accumkrr::krr::{KrrModel, SketchedKrr};
+use accumkrr::rng::Pcg64;
+use accumkrr::runtime::ModelRuntime;
+use accumkrr::sketch::{Sketch, SketchBuilder, SketchKind};
+use accumkrr::stats::in_sample_sq_error;
+use accumkrr::util::json::Json;
+use accumkrr::util::timer::{timing_stats, Timer};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn main() {
+    println!("=== accumkrr end-to-end driver ===\n");
+    part1_pjrt();
+    part2_serving();
+    part3_headline();
+    println!("\nE2E complete.");
+}
+
+/// L1/L2 through PJRT, cross-checked against native Rust.
+fn part1_pjrt() {
+    println!("--- part 1: AOT artifact execution (python never on this path) ---");
+    let rt = match ModelRuntime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIPPED: {e}\n(run `make artifacts` first)\n");
+            return;
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let n = 512;
+    let d = 32;
+    let mut rng = Pcg64::seed(2024);
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let (x, y, _) = bimodal(&cfg, &mut rng);
+    let kern = Kernel::gaussian(0.6);
+    let lam = 1e-3;
+    let sketch = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, d, &mut rng);
+    let Sketch::Sparse(sp) = &sketch else { unreachable!() };
+
+    let t = Timer::start();
+    let pjrt_fit = rt
+        .fit_sketched("gaussian", &x, &y, sp, lam, kern.bandwidth)
+        .expect("pjrt fit");
+    let cold_secs = t.secs(); // includes one-time artifact compilation
+    let t = Timer::start();
+    let _ = rt
+        .fit_sketched("gaussian", &x, &y, sp, lam, kern.bandwidth)
+        .expect("pjrt fit (warm)");
+    let warm_secs = t.secs(); // steady-state execute
+    let t = Timer::start();
+    let native = SketchedKrr::fit(kern, &x, &y, &sketch, lam, None).expect("native fit");
+    let native_secs = t.secs();
+    let agreement = in_sample_sq_error(&pjrt_fit.fitted, native.fitted());
+    println!(
+        "fit n={n} d={d} m=4: pjrt({}) cold {:.3}s / warm {:.4}s vs native {:.4}s; fitted-value MSE between paths = {:.3e}",
+        pjrt_fit.artifact, cold_secs, warm_secs, native_secs, agreement
+    );
+    assert!(agreement < 1e-3, "pjrt and native paths must agree");
+    println!("agreement OK (f32 artifact vs f64 native)\n");
+}
+
+/// Serving: train via TCP, concurrent clients, batched predictions.
+fn part2_serving() {
+    println!("--- part 2: coordinator serving (TCP, dynamic batching) ---");
+    let store = Arc::new(ModelStore::new());
+    store
+        .train(&TrainRequest {
+            name: "rqa-accum".into(),
+            dataset: "rqa".into(),
+            n: 2000,
+            kind: SketchKind::Accumulation { m: 4 },
+            d: 0,      // paper schedule
+            lambda: 0.0, // paper schedule
+            bandwidth: 0.0,
+            seed: 7,
+        })
+        .expect("train");
+    let meta = store.get("rqa-accum").unwrap();
+    println!(
+        "trained rqa-accum: n={} landmarks={} train_mse={:.4} train_secs={:.3}",
+        meta.n_train,
+        meta.model.num_landmarks(),
+        meta.train_mse,
+        meta.train_secs
+    );
+
+    let addr = serve(
+        store,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        false,
+    )
+    .expect("serve");
+
+    // concurrent clients
+    let clients = 8;
+    let requests_per_client = 25;
+    let t = Timer::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        handles.push(std::thread::spawn(move || {
+            let conn = TcpStream::connect(addr).unwrap();
+            conn.set_nodelay(true).unwrap();
+            let mut writer = conn.try_clone().unwrap();
+            let mut reader = BufReader::new(conn);
+            let mut latencies = Vec::new();
+            let mut rng = Pcg64::seed(100 + c as u64);
+            for _ in 0..requests_per_client {
+                let x: Vec<String> = (0..3)
+                    .map(|_| {
+                        format!(
+                            "[{:.4},{:.4},{:.4},{:.4}]",
+                            rng.uniform(),
+                            rng.uniform(),
+                            rng.uniform(),
+                            rng.uniform()
+                        )
+                    })
+                    .collect();
+                let req = format!(r#"{{"op":"predict","model":"rqa-accum","x":[{}]}}"#, x.join(","));
+                let t = Timer::start();
+                writeln!(writer, "{req}").unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                latencies.push(t.secs());
+                let j = Json::parse(&line).unwrap();
+                assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+            }
+            latencies
+        }));
+    }
+    let mut all: Vec<f64> = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let wall = t.secs();
+    let st = timing_stats(&all);
+    let total_queries = clients * requests_per_client * 3;
+    println!(
+        "served {} requests ({} rows) from {clients} concurrent clients in {wall:.3}s",
+        clients * requests_per_client,
+        total_queries
+    );
+    println!(
+        "latency per request: median {:.2}ms  p25 {:.2}ms  p75 {:.2}ms  max {:.2}ms",
+        st.median * 1e3,
+        st.p25 * 1e3,
+        st.p75 * 1e3,
+        st.max * 1e3
+    );
+    println!("throughput: {:.0} rows/s", total_queries as f64 / wall);
+
+    // read batching metrics
+    let conn = TcpStream::connect(addr).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    writeln!(writer, r#"{{"op":"metrics"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    let q = j.get("queries").and_then(|v| v.as_usize()).unwrap_or(0);
+    let b = j.get("batches").and_then(|v| v.as_usize()).unwrap_or(1);
+    println!(
+        "dynamic batching: {q} rows in {b} batches ({:.2} rows/batch)\n",
+        q as f64 / b as f64
+    );
+    writeln!(writer, r#"{{"op":"shutdown"}}"#).unwrap();
+}
+
+/// The paper's headline: accumulation ≈ Gaussian accuracy at ≈ Nyström cost.
+fn part3_headline() {
+    println!("--- part 3: headline metric (paper Fig. 1 shape) ---");
+    let n = 1500;
+    let mut rng = Pcg64::seed(31);
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let (x, y, _) = bimodal(&cfg, &mut rng);
+    let kern = Kernel::gaussian(1.5 * (n as f64).powf(-1.0 / 7.0));
+    let lambda = 0.5 * (n as f64).powf(-4.0 / 7.0);
+    let d = (1.3 * (n as f64).powf(3.0 / 7.0)) as usize;
+    let k = kernel_matrix(&kern, &x);
+    let exact = KrrModel::fit_with_k(kern, &x, &k, &y, lambda).unwrap();
+    let reps = 5;
+    println!("n={n} d={d} ({reps} replicates)");
+    let mut summary: Vec<(String, f64, f64)> = Vec::new();
+    for (name, kind) in [
+        ("nystrom", SketchKind::Nystrom),
+        ("accum_m4", SketchKind::Accumulation { m: 4 }),
+        ("gaussian", SketchKind::Gaussian),
+    ] {
+        let mut errs = Vec::new();
+        let mut secs = Vec::new();
+        for _ in 0..reps {
+            let t = Timer::start();
+            let s = SketchBuilder::new(kind.clone()).build(n, d, &mut rng);
+            let m = SketchedKrr::fit(kern, &x, &y, &s, lambda, None).unwrap();
+            secs.push(t.secs());
+            errs.push(in_sample_sq_error(m.fitted(), exact.fitted()));
+        }
+        let err = errs.iter().sum::<f64>() / reps as f64;
+        let sec = secs.iter().sum::<f64>() / reps as f64;
+        println!("  {name:<10} approx_err={err:.3e}  fit_secs={sec:.3}");
+        summary.push((name.into(), err, sec));
+    }
+    let nys = &summary[0];
+    let acc = &summary[1];
+    let gau = &summary[2];
+    println!(
+        "\nheadline: accum err is {:.1}x better than nystrom; {:.1}x of gaussian err; {:.1}x faster than gaussian",
+        nys.1 / acc.1,
+        acc.1 / gau.1,
+        gau.2 / acc.2
+    );
+}

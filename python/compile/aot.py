@@ -1,0 +1,123 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts + manifest.
+
+HLO text (not ``lowered.compile().serialize()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids that xla_extension 0.5.1 (behind the published ``xla`` 0.1.6 crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Every artifact is a fixed-shape *bucket*; the rust coordinator pads
+requests up to the nearest bucket (padding columns carry w = 0, padding
+rows y = 0 - correctness under padding is covered by rust integration
+tests). Run ``python -m compile.aot --out ../artifacts`` (the Makefile's
+``make artifacts``).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import kmat
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Default shape buckets. Small enough to AOT quickly on 1 CPU core, big
+# enough for the end-to-end example and serving path. Extend via --buckets.
+FIT_BUCKETS = [
+    # (kernel, n, p, d, m)
+    ("gaussian", 512, 3, 32, 4),
+    ("matern32", 512, 4, 24, 4),
+]
+PREDICT_BUCKETS = [
+    # (kernel, batch, p, d, m)
+    ("gaussian", 64, 3, 32, 4),
+    ("matern32", 64, 4, 24, 4),
+]
+EXACT_BUCKETS = [
+    # (kernel, n, p)
+    ("gaussian", 256, 3),
+]
+
+
+def lower_fit(kind_name, n, p, d, m):
+    kind = kmat.KIND_NAMES[kind_name]
+    fn = functools.partial(model.fit_sketched, kind=kind)
+    return jax.jit(fn).lower(
+        spec((n, p)), spec((n,)), spec((d, m), I32), spec((d, m)),
+        spec(()), spec(()),
+    )
+
+
+def lower_predict(kind_name, b, p, d, m):
+    kind = kmat.KIND_NAMES[kind_name]
+    fn = functools.partial(model.predict_sketched, kind=kind)
+    return jax.jit(fn).lower(
+        spec((b, p)), spec((d, m, p)), spec((d, m)), spec((d,)), spec(()),
+    )
+
+
+def lower_exact(kind_name, n, p):
+    kind = kmat.KIND_NAMES[kind_name]
+    fn = functools.partial(model.fit_exact, kind=kind)
+    return jax.jit(fn).lower(spec((n, p)), spec((n,)), spec(()), spec(()))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+
+    def emit(name, lowered, meta):
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"name": name, "file": f"{name}.hlo.txt", **meta})
+        print(f"  {name}: {len(text)} chars")
+
+    for kind, n, p, d, m in FIT_BUCKETS:
+        name = f"fit_{kind}_n{n}_p{p}_d{d}_m{m}"
+        emit(name, lower_fit(kind, n, p, d, m),
+             {"entry": "fit_sketched", "kernel": kind, "n": n, "p": p, "d": d, "m": m})
+
+    for kind, b, p, d, m in PREDICT_BUCKETS:
+        name = f"predict_{kind}_b{b}_p{p}_d{d}_m{m}"
+        emit(name, lower_predict(kind, b, p, d, m),
+             {"entry": "predict_sketched", "kernel": kind, "b": b, "p": p, "d": d, "m": m})
+
+    for kind, n, p in EXACT_BUCKETS:
+        name = f"exact_{kind}_n{n}_p{p}"
+        emit(name, lower_exact(kind, n, p),
+             {"entry": "fit_exact", "kernel": kind, "n": n, "p": p})
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Pallas kernels (L1) + pure-jnp reference oracles."""

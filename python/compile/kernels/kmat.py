@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: tiled pairwise kernel-matrix blocks.
+
+The paper's hot spot is forming (pieces of) the empirical kernel matrix
+``K[i, j] = k(x_i, x_j)``. On TPU the natural schedule is MXU-shaped: the
+squared distances over a (block_r x block_c) tile are expanded as
+
+    d2 = |x|^2 + |y|^2 - 2 * x @ y.T
+
+so the cross term is a (block_r, p) x (p, block_c) matmul feeding the
+systolic array, and the kernel map (Gaussian / Matern) is elementwise VPU
+work on the tile while it is VMEM-resident. BlockSpec expresses the
+HBM->VMEM pipeline over the (rows, cols) grid.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (see DESIGN.md
+SectionHardware-Adaptation for the real-TPU cost estimate).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# kernel-family tags (static python ints baked into each artifact)
+GAUSSIAN = 0
+MATERN12 = 1
+MATERN32 = 2
+MATERN52 = 3
+
+KIND_NAMES = {
+    "gaussian": GAUSSIAN,
+    "matern12": MATERN12,
+    "matern32": MATERN32,
+    "matern52": MATERN52,
+}
+
+# default MXU-friendly tile; shrunk automatically for small inputs
+BLOCK_R = 128
+BLOCK_C = 128
+
+
+def _apply_kind(d2, bw, kind):
+    """Elementwise kernel map on a tile of squared distances."""
+    d2 = jnp.maximum(d2, 0.0)
+    if kind == GAUSSIAN:
+        return jnp.exp(-d2 / (2.0 * bw * bw))
+    r = jnp.sqrt(d2 + 1e-30)
+    if kind == MATERN12:
+        return jnp.exp(-r / bw)
+    if kind == MATERN32:
+        a = jnp.sqrt(3.0) * r / bw
+        return (1.0 + a) * jnp.exp(-a)
+    if kind == MATERN52:
+        a = jnp.sqrt(5.0) * r / bw
+        return (1.0 + a + 5.0 * d2 / (3.0 * bw * bw)) * jnp.exp(-a)
+    raise ValueError(f"unknown kernel kind {kind}")
+
+
+def _kmat_kernel(x_ref, y_ref, bw_ref, o_ref, *, kind):
+    """One (BLOCK_R x BLOCK_C) output tile.
+
+    x_ref: (block_r, p) row slab, y_ref: (block_c, p) col slab. Both arrive
+    in VMEM via BlockSpec; the cross term is a single MXU matmul.
+    """
+    x = x_ref[...]
+    y = y_ref[...]
+    bw = bw_ref[0]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)          # (br, 1)
+    yn = jnp.sum(y * y, axis=1, keepdims=True).T        # (1, bc)
+    cross = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    d2 = xn + yn - 2.0 * cross
+    o_ref[...] = _apply_kind(d2, bw, kind)
+
+
+def kernel_matrix(x, y, bw, kind, block_r=BLOCK_R, block_c=BLOCK_C):
+    """Cross kernel matrix k(x_i, y_j) via the Pallas tile kernel.
+
+    x: (n, p), y: (m, p), bw: scalar array. Pads n/m up to tile multiples
+    and slices back (padding rows produce garbage columns that are simply
+    dropped).
+    """
+    n, p = x.shape
+    m, _ = y.shape
+    br = min(block_r, max(8, n))
+    bc = min(block_c, max(8, m))
+    n_pad = -n % br
+    m_pad = -m % bc
+    xp = jnp.pad(x, ((0, n_pad), (0, 0)))
+    yp = jnp.pad(y, ((0, m_pad), (0, 0)))
+    grid = (xp.shape[0] // br, yp.shape[0] // bc)
+    bw_arr = jnp.asarray(bw, jnp.float32).reshape((1,))
+    out = pl.pallas_call(
+        functools.partial(_kmat_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, p), lambda i, j: (j, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], yp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), yp.astype(jnp.float32), bw_arr)
+    return out[:n, :m]

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model.
+
+Everything here is the straightforward O(n^2) definition; pytest checks the
+Pallas kernels and the AOT'd model against these to machine tolerance.
+"""
+
+import jax.numpy as jnp
+
+from . import kmat
+
+
+def kernel_matrix_ref(x, y, bw, kind):
+    """Dense cross-kernel matrix, direct definition."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = jnp.maximum(
+        jnp.sum(x * x, 1)[:, None] + jnp.sum(y * y, 1)[None, :] - 2.0 * x @ y.T,
+        0.0,
+    )
+    if kind == kmat.GAUSSIAN:
+        return jnp.exp(-d2 / (2.0 * bw * bw))
+    r = jnp.sqrt(d2 + 1e-30)
+    if kind == kmat.MATERN12:
+        return jnp.exp(-r / bw)
+    if kind == kmat.MATERN32:
+        a = jnp.sqrt(3.0) * r / bw
+        return (1.0 + a) * jnp.exp(-a)
+    if kind == kmat.MATERN52:
+        a = jnp.sqrt(5.0) * r / bw
+        return (1.0 + a + 5.0 * d2 / (3.0 * bw * bw)) * jnp.exp(-a)
+    raise ValueError(kind)
+
+
+def sketch_dense_ref(n, idx, w):
+    """Materialise the sparse accumulation sketch as a dense (n, d) matrix."""
+    d, m = idx.shape
+    s = jnp.zeros((n, d), jnp.float32)
+    for j in range(d):
+        for t in range(m):
+            s = s.at[idx[j, t], j].add(w[j, t])
+    return s
+
+
+def ks_ref(k, idx, w):
+    """KS via the dense sketch."""
+    s = sketch_dense_ref(k.shape[1], idx, w)
+    return k.astype(jnp.float32) @ s
+
+
+def fit_sketched_ref(x, y, idx, w, lam, bw, kind):
+    """Direct dense implementation of the sketched KRR fit (paper eq. 3)."""
+    n = x.shape[0]
+    k = kernel_matrix_ref(x, x, bw, kind)
+    s = sketch_dense_ref(n, idx, w)
+    ks = k @ s
+    stks = s.T @ ks
+    stk2s = ks.T @ ks
+    a = stk2s + n * lam * stks
+    rhs = ks.T @ y.astype(jnp.float32)
+    theta = jnp.linalg.solve(a + 1e-8 * jnp.eye(a.shape[0]), rhs)
+    fitted = ks @ theta
+    return theta, fitted
+
+
+def predict_sketched_ref(xq, xs, w, theta, bw, kind):
+    """f(x) = sum_j theta_j sum_t w[j,t] k(x, xs[j,t])."""
+    d, m, p = xs.shape
+    kq = kernel_matrix_ref(xq, xs.reshape(d * m, p), bw, kind).reshape(
+        xq.shape[0], d, m
+    )
+    return jnp.einsum("bdm,dm,d->b", kq, w, theta)
+
+
+def fit_exact_ref(x, y, lam, bw, kind):
+    """Exact KRR (paper eq. 2)."""
+    n = x.shape[0]
+    k = kernel_matrix_ref(x, x, bw, kind)
+    alpha = jnp.linalg.solve(k + n * lam * jnp.eye(n), y.astype(jnp.float32))
+    return alpha, k @ alpha

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: accumulated-sketch application KS.
+
+The paper's Section3.3 cost argument: for a sketch built from m accumulated
+sub-sampling matrices, column j of S has entries w[j, t] at rows
+idx[j, t], so
+
+    KS[:, j] = sum_t w[j, t] * K[:, idx[j, t]]
+
+is a gather-accumulate over at most m*d kernel columns - O(n*m*d) instead
+of the dense O(n^2 d). Expressed in Pallas, a row-tile of K stays
+VMEM-resident while all d output columns are accumulated from it; the
+schedule over row tiles is the BlockSpec grid (on TPU this is the
+HBM->VMEM pipeline the paper's "few extra matrix additions" become).
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 128
+
+
+def _ks_kernel(k_ref, idx_ref, w_ref, o_ref):
+    """One row-tile: o[br, d] = gather-accumulate from k[br, n].
+
+    idx: (d, m) int32, w: (d, m) f32 - small, fully VMEM-resident.
+    """
+    k = k_ref[...]                      # (br, n)
+    idx = idx_ref[...]                  # (d, m)
+    w = w_ref[...]                      # (d, m)
+    # gather columns: (br, d, m) then weighted-sum over m
+    gathered = jnp.take(k, idx, axis=1)  # (br, d, m)
+    o_ref[...] = jnp.einsum("rdm,dm->rd", gathered, w)
+
+
+def ks_accumulate(k, idx, w, block_r=BLOCK_R):
+    """Compute KS for a sparse accumulation sketch.
+
+    k: (n, n) kernel matrix (or any (r, n) slab), idx: (d, m) int32 row
+    indices, w: (d, m) weights. Returns (r, d).
+    """
+    r, n = k.shape
+    d, m = idx.shape
+    br = min(block_r, max(8, r))
+    r_pad = -r % br
+    kp = jnp.pad(k, ((0, r_pad), (0, 0)))
+    grid = (kp.shape[0] // br,)
+    out = pl.pallas_call(
+        _ks_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((d, m), lambda i: (0, 0)),
+            pl.BlockSpec((d, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp.shape[0], d), jnp.float32),
+        interpret=True,
+    )(k.astype(jnp.float32), idx.astype(jnp.int32), w.astype(jnp.float32))
+    return out[:r]
+
+
+def st_mat(b, idx, w):
+    """S^T B for the same sparse sketch: row j = sum_t w[j,t] * B[idx[j,t], :].
+
+    Pure-jnp gather (the d x c output is small; no tiling needed), kept next
+    to the Pallas kernel because the two are always used together.
+    """
+    gathered = jnp.take(b, idx, axis=0)   # (d, m, c)
+    return jnp.einsum("dmc,dm->dc", gathered, w)

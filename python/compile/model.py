@@ -1,0 +1,95 @@
+"""L2: the sketched-KRR compute graph in JAX, calling the L1 Pallas kernels.
+
+Three jit-able entry points, each lowered to one HLO artifact per shape
+bucket by aot.py:
+
+* fit_sketched  - the paper's eq. (3) training path for an accumulation
+  sketch given as COO (idx[d, m], w[d, m]): K via the Pallas tile kernel,
+  KS via the Pallas gather-accumulate kernel, the d x d system solved with
+  matrix-free CG. CG (not Cholesky) is deliberate: jnp.linalg.solve /
+  cholesky lower to LAPACK FFI custom-calls that the xla_extension 0.5.1
+  CPU client cannot execute, while CG lowers to plain HLO (dots + while).
+* predict_sketched - batched prediction from the folded (xs, w, theta).
+* fit_exact - eq. (2) with the same CG trick, for the small-n buckets the
+  approximation-error experiments compare against.
+
+Scalars (lambda, bandwidth) are runtime inputs so one artifact serves every
+regularisation setting of its shape bucket; the kernel family is static
+(baked per artifact).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import kmat, sketch_apply
+
+
+def _cg_solve(a, b, iters):
+    """Conjugate gradients on SPD a x = b, fixed iteration count.
+
+    Lowers to a single HLO While of dots - compact artifact text and no
+    LAPACK custom-calls. For the d <= 128 systems in our buckets, 2d
+    iterations reach fp32 machine precision; cost is negligible next to
+    the O(n m d) gram work.
+    """
+
+    def body(_, carry):
+        x, r, p, rs = carry
+        ap = a @ p
+        denom = jnp.dot(p, ap)
+        alpha = rs / jnp.where(denom > 0, denom, 1.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        beta = rs_new / jnp.where(rs > 0, rs, 1.0)
+        return (x, r, r + beta * p, rs_new)
+
+    x0 = jnp.zeros_like(b)
+    x, _, _, _ = lax.fori_loop(0, iters, body, (x0, b, b, jnp.dot(b, b)))
+    return x
+
+
+def fit_sketched(x, y, idx, w, lam, bw, *, kind, cg_iters=None):
+    """Sketched KRR fit (paper eq. 3).
+
+    x: (n, p) f32, y: (n,) f32, idx: (d, m) i32, w: (d, m) f32,
+    lam/bw: scalars. Returns (theta (d,), fitted (n,)).
+    """
+    n = x.shape[0]
+    d = idx.shape[0]
+    k = kmat.kernel_matrix(x, x, bw, kind)
+    ks = sketch_apply.ks_accumulate(k, idx, w)          # (n, d)  O(n m d)
+    stks = sketch_apply.st_mat(ks, idx, w)               # (d, d)  O(m d^2)
+    stks = 0.5 * (stks + stks.T)
+    stk2s = ks.T @ ks                                    # (d, d)
+    a = stk2s + n * lam * stks
+    # tiny relative jitter for collided columns (same policy as the rust path)
+    a = a + (1e-7 * jnp.trace(a) / d) * jnp.eye(d, dtype=a.dtype)
+    rhs = ks.T @ y
+    theta = _cg_solve(a, rhs, cg_iters or 2 * d)
+    fitted = ks @ theta
+    return theta, fitted
+
+
+def predict_sketched(xq, xs, w, theta, bw, *, kind):
+    """Batched sketched-KRR prediction.
+
+    xq: (b, p), xs: (d, m, p) sampled support points, w: (d, m),
+    theta: (d,). Returns (b,).
+    """
+    d, m, p = xs.shape
+    kq = kmat.kernel_matrix(xq, xs.reshape(d * m, p), bw, kind)
+    kq = kq.reshape(xq.shape[0], d, m)
+    return jnp.einsum("bdm,dm,d->b", kq, w, theta)
+
+
+def fit_exact(x, y, lam, bw, *, kind, cg_iters=None):
+    """Exact KRR fit (paper eq. 2) for small-n buckets.
+
+    Returns (alpha (n,), fitted (n,)).
+    """
+    n = x.shape[0]
+    k = kmat.kernel_matrix(x, x, bw, kind)
+    a = k + n * lam * jnp.eye(n, dtype=k.dtype)
+    alpha = _cg_solve(a, y, cg_iters or min(3 * n, 600))
+    return alpha, k @ alpha

@@ -1,0 +1,53 @@
+"""AOT path: lowering produces parseable HLO text with the expected
+parameter signature, and contains no LAPACK/FFI custom-calls (which the
+xla_extension 0.5.1 CPU client behind the rust runtime cannot execute).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_fit_lowering_emits_custom_call_free_hlo():
+    text = aot.to_hlo_text(aot.lower_fit("gaussian", 64, 3, 8, 2))
+    assert "ENTRY" in text
+    assert "custom-call" not in text, "artifact would not run on the rust CPU client"
+
+
+def test_predict_lowering_emits_custom_call_free_hlo():
+    text = aot.to_hlo_text(aot.lower_predict("matern32", 16, 4, 8, 2))
+    assert "ENTRY" in text
+    assert "custom-call" not in text
+
+
+def test_exact_lowering_emits_custom_call_free_hlo():
+    text = aot.to_hlo_text(aot.lower_exact("gaussian", 32, 3))
+    assert "ENTRY" in text
+    assert "custom-call" not in text
+
+
+def test_fit_hlo_has_expected_parameters():
+    text = aot.to_hlo_text(aot.lower_fit("gaussian", 64, 3, 8, 2))
+    # x, y, idx, w, lam, bw = 6 parameters
+    assert "f32[64,3]" in text
+    assert "s32[8,2]" in text
+
+
+@pytest.mark.slow
+def test_full_aot_run_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert len(manifest["artifacts"]) >= 5
+    for a in manifest["artifacts"]:
+        assert (out / a["file"]).exists()

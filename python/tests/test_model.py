@@ -1,0 +1,88 @@
+"""L2 correctness: the jit-able model vs dense reference implementations."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import kmat, ref
+
+
+def problem(n=60, p=3, d=8, m=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.uniform(k1, (n, p), jnp.float32)
+    y = jnp.sin(3.0 * x[:, 0]) + 0.1 * jax.random.normal(k2, (n,), jnp.float32)
+    idx = jax.random.randint(k3, (d, m), 0, n, jnp.int32)
+    # algorithm-1 weights: r / sqrt(d m p_i) with uniform p = 1/n
+    sign = jnp.where(jax.random.bernoulli(k4, 0.5, (d, m)), 1.0, -1.0)
+    w = sign * np.sqrt(n / (d * m))
+    return x, y, idx, w.astype(jnp.float32)
+
+
+@pytest.mark.parametrize("kind", [kmat.GAUSSIAN, kmat.MATERN32])
+def test_fit_sketched_matches_dense_reference(kind):
+    x, y, idx, w = problem(seed=kind)
+    lam, bw = 1e-3, 0.7
+    theta, fitted = model.fit_sketched(x, y, idx, w, lam, bw, kind=kind)
+    theta_ref, fitted_ref = ref.fit_sketched_ref(x, y, idx, w, lam, bw, kind)
+    np.testing.assert_allclose(fitted, fitted_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(theta, theta_ref, rtol=2e-2, atol=2e-2)
+
+
+def test_fit_sketched_jits_and_is_deterministic():
+    x, y, idx, w = problem(seed=7)
+    fn = jax.jit(functools.partial(model.fit_sketched, kind=kmat.GAUSSIAN))
+    t1, f1 = fn(x, y, idx, w, 1e-3, 0.5)
+    t2, f2 = fn(x, y, idx, w, 1e-3, 0.5)
+    np.testing.assert_array_equal(t1, t2)
+    assert f1.shape == (60,)
+
+
+def test_predict_sketched_matches_ref():
+    x, y, idx, w = problem(seed=3)
+    lam, bw = 1e-3, 0.7
+    theta, _ = model.fit_sketched(x, y, idx, w, lam, bw, kind=kmat.GAUSSIAN)
+    d, m = idx.shape
+    xs = x[idx.reshape(-1)].reshape(d, m, x.shape[1])
+    xq = jax.random.uniform(jax.random.PRNGKey(9), (17, x.shape[1]), jnp.float32)
+    got = model.predict_sketched(xq, xs, w, theta, bw, kind=kmat.GAUSSIAN)
+    want = ref.predict_sketched_ref(xq, xs, w, theta, bw, kmat.GAUSSIAN)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_predict_consistent_with_fit_on_train_points():
+    # predicting at the training points must reproduce the fitted values
+    x, y, idx, w = problem(n=50, seed=5)
+    lam, bw = 1e-3, 0.6
+    theta, fitted = model.fit_sketched(x, y, idx, w, lam, bw, kind=kmat.GAUSSIAN)
+    d, m = idx.shape
+    xs = x[idx.reshape(-1)].reshape(d, m, x.shape[1])
+    pred = model.predict_sketched(x, xs, w, theta, bw, kind=kmat.GAUSSIAN)
+    np.testing.assert_allclose(pred, fitted, rtol=1e-3, atol=1e-3)
+
+
+def test_fit_exact_matches_ref():
+    x, y, _, _ = problem(n=40, seed=11)
+    lam, bw = 1e-2, 0.8
+    alpha, fitted = model.fit_exact(x, y, lam, bw, kind=kmat.GAUSSIAN)
+    alpha_ref, fitted_ref = ref.fit_exact_ref(x, y, lam, bw, kmat.GAUSSIAN)
+    np.testing.assert_allclose(fitted, fitted_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(alpha, alpha_ref, rtol=1e-2, atol=1e-2)
+
+
+def test_full_sketch_recovers_exact():
+    # d = n, m = 1, identity-like sketch: sketched fit == exact fit
+    n = 30
+    x, y, _, _ = problem(n=n, seed=13)
+    idx = jnp.arange(n, dtype=jnp.int32)[:, None]
+    w = jnp.ones((n, 1), jnp.float32)
+    lam, bw = 1e-3, 0.6
+    _, fitted_s = model.fit_sketched(x, y, idx, w, lam, bw, kind=kmat.GAUSSIAN)
+    _, fitted_e = model.fit_exact(x, y, lam, bw, kind=kmat.GAUSSIAN)
+    # the sketched path solves the squared system (condition number k(K)^2),
+    # so fp32 CG leaves a few 1e-2 of slack on ill-conditioned RBF grams
+    np.testing.assert_allclose(fitted_s, fitted_e, rtol=3e-2, atol=3e-2)

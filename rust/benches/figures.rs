@@ -1,0 +1,18 @@
+//! `cargo bench --bench figures` — quick-scale regeneration of every paper
+//! figure (full scale via the CLI: `accumkrr bench <id> --full`).
+use accumkrr::bench::{self, BenchOpts};
+
+fn main() {
+    let quick = BenchOpts {
+        replicates: 3,
+        n_max: 1000,
+        ..Default::default()
+    };
+    for id in [
+        "fig1", "fig2", "fig3", "fig4", "fig5", "thm8", "cost", "ext-sketches",
+        "ext-amm", "ext-kpca",
+    ] {
+        let rows = bench::run(id, &quick).expect("bench");
+        bench::print_table(id, &rows, &None);
+    }
+}

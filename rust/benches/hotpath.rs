@@ -1,0 +1,3 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the L3 hot paths
+//! (hand-rolled harness; criterion is unavailable offline).
+fn main() { accumkrr::bench::hotpath_main(); }

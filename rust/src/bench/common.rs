@@ -1,0 +1,162 @@
+//! Shared bench plumbing: options, result rows, table printing, CSV dump.
+
+use crate::util::csv::write_csv;
+
+/// Harness options (CLI flags map onto these).
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    /// Replicates per setting (paper: 30; default kept small for the
+    /// 1-core CI box — crank with `--replicates`).
+    pub replicates: usize,
+    /// Largest sample size in sweeps.
+    pub n_max: usize,
+    /// Root seed.
+    pub seed: u64,
+    /// Optional CSV output path.
+    pub csv: Option<String>,
+    /// Run at full paper scale (overrides n_max upwards).
+    pub full: bool,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            replicates: 5,
+            n_max: 2000,
+            seed: 20210217,
+            csv: None,
+            full: false,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Sweep of sample sizes: doubling from 500 (paper: from 1000) capped
+    /// at `n_max` (paper: 8k/15k/16k — use `--full`).
+    pub fn n_sweep(&self) -> Vec<usize> {
+        let cap = if self.full { 16000 } else { self.n_max };
+        let mut ns = Vec::new();
+        let mut n = 500;
+        while n <= cap {
+            ns.push(n);
+            n *= 2;
+        }
+        ns
+    }
+}
+
+/// One result row: string key columns + named numeric columns.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// Key columns (figure id, dataset, method, …).
+    pub keys: Vec<(String, String)>,
+    /// Numeric columns (n, d, error, secs, …).
+    pub vals: Vec<(String, f64)>,
+}
+
+impl Row {
+    /// Build from slices.
+    pub fn new(keys: &[(&str, &str)], vals: &[(&str, f64)]) -> Row {
+        Row {
+            keys: keys.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            vals: vals.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    /// Numeric column by name.
+    pub fn val(&self, name: &str) -> Option<f64> {
+        self.vals.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Key column by name.
+    pub fn key(&self, name: &str) -> Option<&str> {
+        self.keys.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Print rows as an aligned table and optionally dump CSV.
+pub fn print_table(title: &str, rows: &[Row], csv: &Option<String>) {
+    println!("\n== {title} ==");
+    if rows.is_empty() {
+        println!("(no rows)");
+        return;
+    }
+    let key_names: Vec<&str> = rows[0].keys.iter().map(|(k, _)| k.as_str()).collect();
+    let val_names: Vec<&str> = rows[0].vals.iter().map(|(k, _)| k.as_str()).collect();
+    let mut header = String::new();
+    for k in &key_names {
+        header.push_str(&format!("{k:>12} "));
+    }
+    for v in &val_names {
+        header.push_str(&format!("{v:>14} "));
+    }
+    println!("{header}");
+    for r in rows {
+        let mut line = String::new();
+        for (_, v) in &r.keys {
+            line.push_str(&format!("{v:>12} "));
+        }
+        for (_, v) in &r.vals {
+            if v.abs() >= 1e-3 && v.abs() < 1e6 {
+                line.push_str(&format!("{v:>14.6} "));
+            } else {
+                line.push_str(&format!("{v:>14.3e} "));
+            }
+        }
+        println!("{line}");
+    }
+    if let Some(path) = csv {
+        let mut header: Vec<&str> = key_names.clone();
+        header.extend(val_names.iter());
+        // CSV wants uniform numeric rows; encode keys as their own columns
+        let mut out_rows: Vec<Vec<f64>> = Vec::new();
+        let mut text = String::new();
+        text.push_str(&header.join(","));
+        text.push('\n');
+        for r in rows {
+            let mut fields: Vec<String> = r.keys.iter().map(|(_, v)| v.clone()).collect();
+            fields.extend(r.vals.iter().map(|(_, v)| format!("{v}")));
+            text.push_str(&fields.join(","));
+            text.push('\n');
+        }
+        let _ = out_rows.pop();
+        let _ = write_csv; // numeric-only writer unused here; we wrote text
+        if let Err(e) = std::fs::write(path, text) {
+            eprintln!("csv write failed: {e}");
+        } else {
+            println!("(csv written to {path})");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_accessors() {
+        let r = Row::new(&[("method", "accum")], &[("err", 0.5), ("secs", 1.25)]);
+        assert_eq!(r.key("method"), Some("accum"));
+        assert_eq!(r.val("err"), Some(0.5));
+        assert_eq!(r.val("missing"), None);
+    }
+
+    #[test]
+    fn n_sweep_caps() {
+        let o = BenchOpts {
+            n_max: 2100,
+            ..Default::default()
+        };
+        assert_eq!(o.n_sweep(), vec![500, 1000, 2000]);
+    }
+
+    #[test]
+    fn csv_dump_roundtrips() {
+        let path = std::env::temp_dir().join("accumkrr_bench_csv_test.csv");
+        let rows = vec![Row::new(&[("m", "x")], &[("v", 1.0)])];
+        print_table("t", &rows, &Some(path.to_string_lossy().to_string()));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("m,v"));
+        std::fs::remove_file(&path).ok();
+    }
+}

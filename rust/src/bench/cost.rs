@@ -1,0 +1,97 @@
+//! §3.3 cost-model ablation: measured wall-clock of forming `KS` / `SᵀKS`
+//! as m grows, against (a) the dense-Gaussian `O(n²d)` path and (b) the
+//! "vanilla scheme": a plain Nyström sketch of width `m·d` — the paper
+//! argues the vanilla scheme's `SᵀK²S` bottleneck costs ≈ m² more than the
+//! accumulation method at equal statistical budget.
+
+use super::common::{BenchOpts, Row};
+use crate::data::{bimodal, BimodalConfig};
+use crate::kernels::Kernel;
+use crate::rng::Pcg64;
+use crate::sketch::{sketch_gram, SketchBuilder, SketchKind};
+use crate::util::timer::{timed, timing_stats};
+
+/// Run the cost ablation.
+pub fn run_cost(opts: &BenchOpts) -> Vec<Row> {
+    let n = opts.n_max;
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed(opts.seed ^ 0xc0);
+    let (x, _, _) = bimodal(&cfg, &mut rng);
+    let kern = Kernel::gaussian(0.5);
+    let d = ((1.5 * (n as f64).powf(3.0 / 7.0)) as usize).max(4);
+    let reps = opts.replicates.max(3);
+
+    let mut rows = Vec::new();
+    let mut bench = |label: &str, m_label: f64, d_used: usize, kind: SketchKind| {
+        let mut secs = Vec::with_capacity(reps);
+        let mut evals = 0usize;
+        let mut nnz = 0usize;
+        for _ in 0..reps {
+            let s = SketchBuilder::new(kind.clone()).build(n, d_used, &mut rng);
+            nnz = s.nnz();
+            let (g, t) = timed(|| sketch_gram(&kern, &x, &s, None));
+            evals = g.kernel_evals;
+            secs.push(t);
+        }
+        let st = timing_stats(&secs);
+        rows.push(Row::new(
+            &[("fig", "cost"), ("scheme", label)],
+            &[
+                ("n", n as f64),
+                ("d", d_used as f64),
+                ("m", m_label),
+                ("nnz", nnz as f64),
+                ("kernel_evals", evals as f64),
+                ("gram_secs", st.median),
+            ],
+        ));
+    };
+
+    for &m in &[1usize, 2, 4, 8, 16] {
+        bench("accum", m as f64, d, SketchKind::Accumulation { m });
+        // vanilla scheme: Nyström of width m·d (same sample budget)
+        bench("vanilla_md", m as f64, m * d, SketchKind::Nystrom);
+    }
+    bench("gaussian", f64::INFINITY, d, SketchKind::Gaussian);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulation_cheaper_than_dense_and_vanilla_grows_faster() {
+        let opts = BenchOpts {
+            replicates: 3,
+            n_max: 600,
+            ..Default::default()
+        };
+        let rows = run_cost(&opts);
+        let get = |scheme: &str, m: f64, col: &str| {
+            rows.iter()
+                .find(|r| r.key("scheme") == Some(scheme) && r.val("m") == Some(m))
+                .unwrap()
+                .val(col)
+                .unwrap()
+        };
+        // accumulation at m=8 is far cheaper than the dense-Gaussian path
+        assert!(
+            get("accum", 8.0, "gram_secs") < get("gaussian", f64::INFINITY, "gram_secs"),
+            "accum {} vs gaussian {}",
+            get("accum", 8.0, "gram_secs"),
+            get("gaussian", f64::INFINITY, "gram_secs")
+        );
+        // kernel evaluations scale with support (≤ m·d columns), far below n²
+        assert!(get("accum", 8.0, "kernel_evals") < (600.0 * 600.0));
+        // the vanilla m·d-wide scheme pays more kernel evals than accum at
+        // the same m (equal sample budget but no column reuse in SᵀK²S)
+        assert!(
+            get("vanilla_md", 8.0, "kernel_evals") >= get("accum", 8.0, "kernel_evals")
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! Extension benches beyond the paper's figures:
+//!
+//! * `ext-sketches` — all seven sketch families in the crate on one
+//!   high-incoherence KRR task (err + time at equal d).
+//! * `ext-amm` — approximate matrix multiplication error vs d (paper §5
+//!   future work).
+//! * `ext-kpca` — sketched kernel PCA: top-spectrum mass recovered per
+//!   sketch family (paper §5 future work).
+
+use super::common::{BenchOpts, Row};
+use crate::coordinator::JobScheduler;
+use crate::data::{bimodal, BimodalConfig};
+use crate::kernels::{kernel_matrix, Kernel, RffKrr};
+use crate::krr::{sketched_kpca, KrrModel, SketchedKrr};
+use crate::linalg::Matrix;
+use crate::sketch::{countsketch, srht, Sketch, SketchBuilder, SketchKind};
+use crate::stats::{in_sample_sq_error, SpectralView};
+use crate::util::timer::Timer;
+
+fn build_named(name: &str, n: usize, d: usize, rng: &mut crate::rng::Pcg64) -> Sketch {
+    match name {
+        "nystrom" => SketchBuilder::new(SketchKind::Nystrom).build(n, d, rng),
+        "accum_m4" => SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, d, rng),
+        "accum_m16" => SketchBuilder::new(SketchKind::Accumulation { m: 16 }).build(n, d, rng),
+        "gaussian" => SketchBuilder::new(SketchKind::Gaussian).build(n, d, rng),
+        "rademacher" => SketchBuilder::new(SketchKind::Rademacher).build(n, d, rng),
+        "verysparse" => {
+            SketchBuilder::new(SketchKind::VerySparse { sparsity: None }).build(n, d, rng)
+        }
+        "srht" => srht(n, d, rng),
+        "countsketch" => countsketch(n, d, rng),
+        other => panic!("unknown sketch {other}"),
+    }
+}
+
+const FAMILIES: &[&str] = &[
+    "nystrom",
+    "accum_m4",
+    "accum_m16",
+    "gaussian",
+    "rademacher",
+    "verysparse",
+    "srht",
+    "countsketch",
+];
+
+/// All sketch families + the RFF baseline on one sketched-KRR task.
+pub fn run_ext_sketches(opts: &BenchOpts) -> Vec<Row> {
+    let n = opts.n_max.min(1500);
+    let sched = JobScheduler::new(opts.seed ^ 0xe1);
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let kern = Kernel::gaussian(1.5 * (n as f64).powf(-1.0 / 7.0));
+    let lambda = 0.5 * (n as f64).powf(-4.0 / 7.0);
+    let d = ((1.5 * (n as f64).powf(3.0 / 7.0)) as usize).max(4);
+
+    let n_settings = FAMILIES.len() + 1; // + rff
+    let results = sched.run_sweep(n_settings, opts.replicates, |pt, rng| {
+        let (x, y, _) = bimodal(&cfg, rng);
+        let k = kernel_matrix(&kern, &x);
+        let exact = KrrModel::fit_with_k(kern, &x, &k, &y, lambda).expect("exact");
+        let t = Timer::start();
+        if pt.setting < FAMILIES.len() {
+            let name = FAMILIES[pt.setting];
+            let s = build_named(name, n, d, rng);
+            let shared_k = matches!(s, Sketch::Dense(_)).then_some(&k);
+            let model = SketchedKrr::fit(kern, &x, &y, &s, lambda, shared_k).expect("fit");
+            let secs = t.secs();
+            (in_sample_sq_error(model.fitted(), exact.fitted()), secs)
+        } else {
+            // RFF baseline with D = 4·d features
+            let model = RffKrr::fit(&kern, &x, &y, 4 * d, lambda, rng).expect("rff fit");
+            let secs = t.secs();
+            (in_sample_sq_error(model.fitted(), exact.fitted()), secs)
+        }
+    });
+
+    let mut rows = Vec::new();
+    for (si, res) in results.iter().enumerate() {
+        let name = if si < FAMILIES.len() { FAMILIES[si] } else { "rff_4d" };
+        let errs: Vec<f64> = res.iter().map(|r| r.0).collect();
+        let secs: Vec<f64> = res.iter().map(|r| r.1).collect();
+        let (err, err_se) = JobScheduler::mean_stderr(&errs);
+        let (sec, _) = JobScheduler::mean_stderr(&secs);
+        rows.push(Row::new(
+            &[("fig", "ext-sketches"), ("method", name)],
+            &[
+                ("n", n as f64),
+                ("d", d as f64),
+                ("approx_err", err),
+                ("err_se", err_se),
+                ("secs", sec),
+            ],
+        ));
+    }
+    rows
+}
+
+/// AMM error vs d for accumulation sketches (paper §5).
+pub fn run_ext_amm(opts: &BenchOpts) -> Vec<Row> {
+    let n = opts.n_max.min(800);
+    let sched = JobScheduler::new(opts.seed ^ 0xe2);
+    let ds = [8usize, 16, 32, 64, 128];
+    let results = sched.run_sweep(ds.len(), opts.replicates.max(5), |pt, rng| {
+        let d = ds[pt.setting];
+        let a = Matrix::from_fn(16, n, |_, _| rng.normal());
+        let b = Matrix::from_fn(n, 16, |_, _| rng.normal());
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, d, rng);
+        crate::sketch::amm_rel_error(&a, &b, &s)
+    });
+    let mut rows = Vec::new();
+    for (si, &d) in ds.iter().enumerate() {
+        let (err, se) = JobScheduler::mean_stderr(&results[si]);
+        rows.push(Row::new(
+            &[("fig", "ext-amm")],
+            &[("n", n as f64), ("d", d as f64), ("rel_err", err), ("err_se", se)],
+        ));
+    }
+    rows
+}
+
+/// KPCA spectrum recovery per sketch family (paper §5).
+pub fn run_ext_kpca(opts: &BenchOpts) -> Vec<Row> {
+    let n = opts.n_max.min(400);
+    let sched = JobScheduler::new(opts.seed ^ 0xe3);
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let kern = Kernel::gaussian(0.7);
+    let d = ((2.0 * (n as f64).powf(3.0 / 7.0)) as usize).max(8);
+    let r = 6;
+    let families = ["nystrom", "accum_m4", "accum_m16", "gaussian"];
+    let results = sched.run_sweep(families.len(), opts.replicates, |pt, rng| {
+        let (x, _, _) = bimodal(&cfg, rng);
+        let k = kernel_matrix(&kern, &x);
+        let view = SpectralView::new(&k);
+        let exact_mass: f64 = view.sigma[..r].iter().sum();
+        let s = build_named(families[pt.setting], n, d, rng);
+        let got = sketched_kpca(&kern, &x, &s, r)
+            .map(|res| res.eigenvalues.iter().sum::<f64>())
+            .unwrap_or(0.0);
+        got / exact_mass
+    });
+    let mut rows = Vec::new();
+    for (si, &name) in families.iter().enumerate() {
+        let (frac, se) = JobScheduler::mean_stderr(&results[si]);
+        rows.push(Row::new(
+            &[("fig", "ext-kpca"), ("method", name)],
+            &[
+                ("n", n as f64),
+                ("d", d as f64),
+                ("r", r as f64),
+                ("spectrum_frac", frac),
+                ("err_se", se),
+            ],
+        ));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ext_sketches_all_finite_and_accum_competitive() {
+        let opts = BenchOpts {
+            replicates: 3,
+            n_max: 400,
+            ..Default::default()
+        };
+        let rows = run_ext_sketches(&opts);
+        assert_eq!(rows.len(), FAMILIES.len() + 1);
+        for r in &rows {
+            assert!(r.val("approx_err").unwrap().is_finite(), "{:?}", r.key("method"));
+        }
+        let err = |m: &str| {
+            rows.iter()
+                .find(|r| r.key("method") == Some(m))
+                .unwrap()
+                .val("approx_err")
+                .unwrap()
+        };
+        // accumulation m=16 should be within a small factor of gaussian
+        assert!(err("accum_m16") < 20.0 * err("gaussian") + 1e-9);
+    }
+
+    #[test]
+    fn ext_amm_error_monotone_in_d() {
+        let opts = BenchOpts {
+            replicates: 6,
+            n_max: 300,
+            ..Default::default()
+        };
+        let rows = run_ext_amm(&opts);
+        let first = rows.first().unwrap().val("rel_err").unwrap();
+        let last = rows.last().unwrap().val("rel_err").unwrap();
+        assert!(last < first, "rel err should fall with d: {first} → {last}");
+    }
+
+    #[test]
+    fn ext_kpca_gaussian_and_accum_recover_more_than_nystrom() {
+        let opts = BenchOpts {
+            replicates: 4,
+            n_max: 250,
+            ..Default::default()
+        };
+        let rows = run_ext_kpca(&opts);
+        let frac = |m: &str| {
+            rows.iter()
+                .find(|r| r.key("method") == Some(m))
+                .unwrap()
+                .val("spectrum_frac")
+                .unwrap()
+        };
+        assert!(frac("accum_m16") >= frac("nystrom") * 0.95);
+        assert!(frac("gaussian") > 0.5);
+    }
+}

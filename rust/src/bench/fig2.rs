@@ -1,0 +1,114 @@
+//! Figure 2 (§4.1): approximation error ‖f̂_S − f̂_n‖²_n vs projection
+//! dimension d, one curve per accumulation level m ∈ {1, 2, 4, 8, 16, 32}
+//! plus Gaussian (m = ∞) and the exact-KRR estimation error ‖f̂_n − f*‖²_n
+//! as the reference line. Gaussian kernel bw = 1.5·n^{−1/7},
+//! λ = 0.5·n^{−4/7}, bimodal γ = 0.6, d from ⌊0.3·n^{3/7}⌋ to ⌊3·n^{3/7}⌋.
+
+use super::common::{BenchOpts, Row};
+use crate::coordinator::JobScheduler;
+use crate::data::{bimodal, BimodalConfig};
+use crate::kernels::{kernel_matrix, Kernel};
+use crate::krr::{KrrModel, SketchedKrr};
+use crate::sketch::{SketchBuilder, SketchKind};
+use crate::stats::in_sample_sq_error;
+
+/// m-levels plotted by the paper (0 encodes Gaussian / m = ∞).
+pub const M_LEVELS: &[usize] = &[1, 2, 4, 8, 16, 32, 0];
+
+/// Run the Figure-2 sweep at `n = opts.n_max` (the paper varies n from 1k
+/// to 8k; each n is a separate invocation).
+pub fn run_fig2(opts: &BenchOpts) -> Vec<Row> {
+    let n = opts.n_max;
+    let lambda = 0.5 * (n as f64).powf(-4.0 / 7.0);
+    let bw = 1.5 * (n as f64).powf(-1.0 / 7.0);
+    let kern = Kernel::gaussian(bw);
+    let base_d = (n as f64).powf(3.0 / 7.0);
+    let d_factors = [0.3, 0.75, 1.5, 3.0];
+    let sched = JobScheduler::new(opts.seed ^ 2);
+
+    // settings = (d, m) grid
+    let mut settings = Vec::new();
+    for &f in &d_factors {
+        let d = ((f * base_d).floor() as usize).max(2);
+        for &m in M_LEVELS {
+            settings.push((d, m));
+        }
+    }
+
+    let results = sched.run_sweep(settings.len(), opts.replicates, |pt, rng| {
+        let (d, m) = settings[pt.setting];
+        let cfg = BimodalConfig {
+            n,
+            gamma: 0.6,
+            ..Default::default()
+        };
+        let (x, y, truth) = bimodal(&cfg, rng);
+        let k = kernel_matrix(&kern, &x);
+        let exact = KrrModel::fit_with_k(kern, &x, &k, &y, lambda).expect("exact KRR");
+        let kind = if m == 0 {
+            SketchKind::Gaussian
+        } else {
+            SketchKind::Accumulation { m }
+        };
+        let shared_k = matches!(kind, SketchKind::Gaussian).then_some(&k);
+        let s = SketchBuilder::new(kind).build(n, d, rng);
+        let skrr = SketchedKrr::fit(kern, &x, &y, &s, lambda, shared_k).expect("sketched fit");
+        let approx_err = in_sample_sq_error(skrr.fitted(), exact.fitted());
+        let est_err = in_sample_sq_error(exact.fitted(), &truth);
+        (approx_err, est_err)
+    });
+
+    let mut rows = Vec::new();
+    for (si, &(d, m)) in settings.iter().enumerate() {
+        let errs: Vec<f64> = results[si].iter().map(|r| r.0).collect();
+        let refs: Vec<f64> = results[si].iter().map(|r| r.1).collect();
+        let (err, err_se) = JobScheduler::mean_stderr(&errs);
+        let (est, _) = JobScheduler::mean_stderr(&refs);
+        let label = if m == 0 { "inf".to_string() } else { m.to_string() };
+        rows.push(Row::new(
+            &[("fig", "fig2"), ("m", &label)],
+            &[
+                ("n", n as f64),
+                ("d", d as f64),
+                ("approx_err", err),
+                ("err_se", err_se),
+                ("krr_est_err", est),
+            ],
+        ));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_error_monotone_in_m_at_small_scale() {
+        let opts = BenchOpts {
+            replicates: 6,
+            n_max: 500,
+            ..Default::default()
+        };
+        let rows = run_fig2(&opts);
+        // pick the largest d; errors averaged over replicates should be
+        // (weakly) ordered: m=1 worst, m=32 ≈ gaussian
+        let dmax = rows
+            .iter()
+            .map(|r| r.val("d").unwrap() as usize)
+            .max()
+            .unwrap() as f64;
+        let err_of = |m: &str| {
+            rows.iter()
+                .find(|r| r.key("m") == Some(m) && r.val("d") == Some(dmax))
+                .unwrap()
+                .val("approx_err")
+                .unwrap()
+        };
+        let e1 = err_of("1");
+        let e16 = err_of("16");
+        let einf = err_of("inf");
+        assert!(e16 < e1, "m=16 ({e16}) should beat m=1 ({e1})");
+        assert!(einf < e1, "gaussian ({einf}) should beat m=1 ({e1})");
+    }
+}

@@ -1,0 +1,132 @@
+//! Figures 3 & 4 (§4.2/§D.3): accuracy-vs-efficiency trade-off on the
+//! (simulated) UCI datasets. Methods: Gaussian sketching, very sparse
+//! random projection, Nyström with BLESS leverage scores, and the
+//! accumulation method (m = 4). Matérn ν = 3/2,
+//! λ = 0.9·n^{−(3+dX)/(3+2dX)}, d = ⌊1.5·n^{dX/(3+2dX)}⌋, 20% held-out
+//! test split, features normalised to unit variance.
+
+use super::common::{BenchOpts, Row};
+use crate::coordinator::state::{dataset_for, paper_d, paper_lambda};
+use crate::coordinator::JobScheduler;
+use crate::data::{normalize_features, train_test_split};
+use crate::krr::SketchedKrr;
+use crate::leverage::bless;
+use crate::rng::Pcg64;
+use crate::sketch::{Sampling, Sketch, SketchBuilder, SketchKind};
+use crate::stats::test_error;
+use crate::util::timer::{timed, Timer};
+
+/// The four candidate methods of Figure 3.
+pub const METHODS: &[&str] = &["gaussian", "verysparse", "bless", "accum_m4"];
+
+/// Train one method; returns (test_error, train_secs).
+pub fn run_method(
+    method: &str,
+    kern: crate::kernels::Kernel,
+    train_x: &crate::linalg::Matrix,
+    train_y: &[f64],
+    test_x: &crate::linalg::Matrix,
+    test_y: &[f64],
+    d: usize,
+    lambda: f64,
+    rng: &mut Pcg64,
+) -> (f64, f64) {
+    let n = train_x.rows();
+    let t = Timer::start();
+    let sketch: Sketch = match method {
+        "gaussian" => SketchBuilder::new(SketchKind::Gaussian).build(n, d, rng),
+        "verysparse" => SketchBuilder::new(SketchKind::VerySparse { sparsity: None })
+            .build(n, d, rng),
+        "accum_m4" => SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, d, rng),
+        "bless" => {
+            // leverage-score Nyström: BLESS estimates the scores (paper uses
+            // ⌊3·n^{dX/(3+2dX)}⌋ sub-samples; we match via d target)
+            let bl = bless(&kern, train_x, lambda, 2 * d, 1.5, rng);
+            SketchBuilder::new(SketchKind::Nystrom)
+                .with_sampling(Sampling::Weighted(bl.sampling_table()))
+                .build(n, d, rng)
+        }
+        other => panic!("unknown method {other}"),
+    };
+    let (fit, fit_secs) = timed(|| SketchedKrr::fit(kern, train_x, train_y, &sketch, lambda, None));
+    let model = fit.expect("fit");
+    let secs = t.secs().max(fit_secs);
+    let pred = model.predict(test_x);
+    (test_error(&pred, test_y), secs)
+}
+
+/// Run the Figure-3/4 sweep over the given datasets.
+pub fn run_fig3(opts: &BenchOpts, datasets: &[&str]) -> Vec<Row> {
+    let ns = opts.n_sweep();
+    let sched = JobScheduler::new(opts.seed ^ 3);
+    let mut rows = Vec::new();
+    for &ds_name in datasets {
+        for &n in &ns {
+            // draw n training + 20% test rows
+            let results = sched.run_sweep(METHODS.len(), opts.replicates, |pt, rng| {
+                let method = METHODS[pt.setting];
+                let total = n + n / 4;
+                let (mut ds, dx, kern) =
+                    dataset_for(ds_name, total, 0.0, rng).expect("dataset");
+                normalize_features(&mut ds.x);
+                let (train, test) = train_test_split(&ds, 0.2, rng);
+                let train = train.head(n);
+                let d = paper_d(n, dx);
+                let lambda = paper_lambda(n, dx);
+                run_method(
+                    method, kern, &train.x, &train.y, &test.x, &test.y, d, lambda, rng,
+                )
+            });
+            for (mi, &method) in METHODS.iter().enumerate() {
+                let errs: Vec<f64> = results[mi].iter().map(|r| r.0).collect();
+                let secs: Vec<f64> = results[mi].iter().map(|r| r.1).collect();
+                let (err, err_se) = JobScheduler::mean_stderr(&errs);
+                let (sec, _) = JobScheduler::mean_stderr(&secs);
+                rows.push(Row::new(
+                    &[("fig", "fig3"), ("dataset", ds_name), ("method", method)],
+                    &[
+                        ("n", n as f64),
+                        ("test_err", err),
+                        ("err_se", err_se),
+                        ("secs", sec),
+                    ],
+                ));
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_tradeoff_shape_small_scale() {
+        let opts = BenchOpts {
+            replicates: 3,
+            n_max: 500,
+            ..Default::default()
+        };
+        let rows = run_fig3(&opts, &["rqa"]);
+        assert_eq!(rows.len(), METHODS.len());
+        let get = |m: &str, col: &str| {
+            rows.iter()
+                .find(|r| r.key("method") == Some(m))
+                .unwrap()
+                .val(col)
+                .unwrap()
+        };
+        // runtime shape: accumulation ≪ gaussian (the O(nmd) vs O(n²d) gap)
+        assert!(
+            get("accum_m4", "secs") < get("gaussian", "secs"),
+            "accum {} vs gaussian {}",
+            get("accum_m4", "secs"),
+            get("gaussian", "secs")
+        );
+        // every method produces finite errors
+        for m in METHODS {
+            assert!(get(m, "test_err").is_finite());
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Figure 5 (§D.3): the Figure-3/4 trade-off with every sketch solved
+//! through Falkon (preconditioned CG + early stopping) instead of the
+//! direct d×d solve. The paper's conclusion — the accumulation sketch
+//! keeps the best accuracy/efficiency trade-off — must survive the solver
+//! swap.
+
+use super::common::{BenchOpts, Row};
+use super::fig3::METHODS;
+use crate::coordinator::state::{dataset_for, paper_d, paper_lambda};
+use crate::coordinator::JobScheduler;
+use crate::data::{normalize_features, train_test_split};
+use crate::krr::{falkon, FalkonOptions};
+use crate::leverage::bless;
+use crate::sketch::{Sampling, Sketch, SketchBuilder, SketchKind};
+use crate::stats::test_error;
+use crate::util::timer::Timer;
+
+/// Run the Figure-5 sweep.
+pub fn run_fig5(opts: &BenchOpts, datasets: &[&str]) -> Vec<Row> {
+    let ns = opts.n_sweep();
+    let sched = JobScheduler::new(opts.seed ^ 5);
+    let mut rows = Vec::new();
+    for &ds_name in datasets {
+        for &n in &ns {
+            let results = sched.run_sweep(METHODS.len(), opts.replicates, |pt, rng| {
+                let method = METHODS[pt.setting];
+                let total = n + n / 4;
+                let (mut ds, dx, kern) = dataset_for(ds_name, total, 0.0, rng).expect("dataset");
+                normalize_features(&mut ds.x);
+                let (train, test) = train_test_split(&ds, 0.2, rng);
+                let train = train.head(n);
+                let n_train = train.n();
+                let d = paper_d(n, dx);
+                let lambda = paper_lambda(n, dx);
+                let t = Timer::start();
+                let sketch: Sketch = match method {
+                    "gaussian" => SketchBuilder::new(SketchKind::Gaussian).build(n_train, d, rng),
+                    "verysparse" => SketchBuilder::new(SketchKind::VerySparse { sparsity: None })
+                        .build(n_train, d, rng),
+                    "accum_m4" => {
+                        SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n_train, d, rng)
+                    }
+                    "bless" => {
+                        let bl = bless(&kern, &train.x, lambda, 2 * d, 1.5, rng);
+                        SketchBuilder::new(SketchKind::Nystrom)
+                            .with_sampling(Sampling::Weighted(bl.sampling_table()))
+                            .build(n_train, d, rng)
+                    }
+                    other => panic!("unknown method {other}"),
+                };
+                let fk = falkon(
+                    kern,
+                    &train.x,
+                    &train.y,
+                    &sketch,
+                    lambda,
+                    FalkonOptions::default(),
+                    None,
+                )
+                .expect("falkon fit");
+                let secs = t.secs();
+                let pred = fk.predict(&kern, &test.x);
+                (test_error(&pred, &test.y), secs, fk.iters as f64)
+            });
+            for (mi, &method) in METHODS.iter().enumerate() {
+                let errs: Vec<f64> = results[mi].iter().map(|r| r.0).collect();
+                let secs: Vec<f64> = results[mi].iter().map(|r| r.1).collect();
+                let iters: Vec<f64> = results[mi].iter().map(|r| r.2).collect();
+                let (err, err_se) = JobScheduler::mean_stderr(&errs);
+                let (sec, _) = JobScheduler::mean_stderr(&secs);
+                let (it, _) = JobScheduler::mean_stderr(&iters);
+                rows.push(Row::new(
+                    &[("fig", "fig5"), ("dataset", ds_name), ("method", method)],
+                    &[
+                        ("n", n as f64),
+                        ("test_err", err),
+                        ("err_se", err_se),
+                        ("secs", sec),
+                        ("cg_iters", it),
+                    ],
+                ));
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_falkon_preserves_tradeoff_small_scale() {
+        let opts = BenchOpts {
+            replicates: 3,
+            n_max: 500,
+            ..Default::default()
+        };
+        let rows = run_fig5(&opts, &["rqa"]);
+        assert_eq!(rows.len(), METHODS.len());
+        let get = |m: &str, col: &str| {
+            rows.iter()
+                .find(|r| r.key("method") == Some(m))
+                .unwrap()
+                .val(col)
+                .unwrap()
+        };
+        assert!(get("accum_m4", "secs") < get("gaussian", "secs"));
+        for m in METHODS {
+            assert!(get(m, "test_err").is_finite());
+            assert!(get(m, "cg_iters") >= 1.0);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Micro-benchmarks of the L3 hot paths: GEMM, kernel-matrix assembly,
+//! sparse sketch application, Cholesky, Falkon iteration. Hand-rolled
+//! harness (criterion is unavailable in the offline image): warmup + N
+//! timed reps, median/IQR reported. This is the §Perf measurement tool —
+//! before/after numbers in EXPERIMENTS.md come from here.
+
+use crate::data::{bimodal, BimodalConfig};
+use crate::kernels::{kernel_matrix, Kernel};
+use crate::linalg::{chol_factor, matmul, Matrix};
+use crate::rng::Pcg64;
+use crate::sketch::{sketch_gram, SketchBuilder, SketchKind};
+use crate::util::timer::{timed, timing_stats, TimingStats};
+
+/// One benchmark case.
+struct Case {
+    name: &'static str,
+    /// flop estimate for the throughput column (0 = skip).
+    flops: f64,
+    run: Box<dyn FnMut()>,
+}
+
+fn report(name: &str, flops: f64, stats: TimingStats) {
+    let gflops = if flops > 0.0 && stats.median > 0.0 {
+        flops / stats.median / 1e9
+    } else {
+        0.0
+    };
+    println!(
+        "{name:>28}  median {:>9.3} ms  iqr [{:>8.3}, {:>8.3}]  {:>7.2} gflop/s  (n={})",
+        stats.median * 1e3,
+        stats.p25 * 1e3,
+        stats.p75 * 1e3,
+        gflops,
+        stats.n
+    );
+}
+
+/// Entry point for `cargo bench --bench hotpath`.
+pub fn hotpath_main() {
+    let reps = std::env::var("ACCUMKRR_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7usize);
+    let mut rng = Pcg64::seed(0xb5);
+
+    // shared inputs
+    let n = 1500;
+    let p = 3;
+    let d = 40;
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let (x, y, _) = bimodal(&cfg, &mut rng);
+    let kern = Kernel::gaussian(0.5);
+    let k = kernel_matrix(&kern, &x);
+    let a = Matrix::from_fn(512, 512, |_, _| rng.normal());
+    let b = Matrix::from_fn(512, 512, |_, _| rng.normal());
+    let mut spd = crate::linalg::syrk_at_a(&Matrix::from_fn(300, 256, |_, _| rng.normal()));
+    spd.add_diag(1.0);
+    let accum_sketch = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, d, &mut rng);
+    let gauss_sketch = SketchBuilder::new(SketchKind::Gaussian).build(n, d, &mut rng);
+    let lam = 1e-3;
+
+    let mut cases: Vec<Case> = vec![
+        Case {
+            name: "gemm 512^3",
+            flops: 2.0 * 512f64.powi(3),
+            run: Box::new({
+                let (a, b) = (a.clone(), b.clone());
+                move || {
+                    std::hint::black_box(matmul(&a, &b));
+                }
+            }),
+        },
+        Case {
+            name: "kernel_matrix n=1500 p=3",
+            flops: (n * n) as f64 * (2.0 * p as f64 + 8.0),
+            run: Box::new({
+                let x = x.clone();
+                move || {
+                    std::hint::black_box(kernel_matrix(&kern, &x));
+                }
+            }),
+        },
+        Case {
+            name: "sketch_gram accum m=4",
+            flops: 0.0,
+            run: Box::new({
+                let x = x.clone();
+                let s = accum_sketch.clone();
+                move || {
+                    std::hint::black_box(sketch_gram(&kern, &x, &s, None));
+                }
+            }),
+        },
+        Case {
+            name: "sketch_gram gaussian (K given)",
+            flops: 2.0 * (n * n * d) as f64,
+            run: Box::new({
+                let x = x.clone();
+                let k = k.clone();
+                let s = gauss_sketch.clone();
+                move || {
+                    std::hint::black_box(sketch_gram(&kern, &x, &s, Some(&k)));
+                }
+            }),
+        },
+        Case {
+            name: "cholesky 256",
+            flops: 256f64.powi(3) / 3.0,
+            run: Box::new({
+                let spd = spd.clone();
+                move || {
+                    std::hint::black_box(chol_factor(&spd).unwrap());
+                }
+            }),
+        },
+        Case {
+            name: "sketched fit end-to-end",
+            flops: 0.0,
+            run: Box::new({
+                let x = x.clone();
+                let y = y.clone();
+                let s = accum_sketch.clone();
+                move || {
+                    std::hint::black_box(
+                        crate::krr::SketchedKrr::fit(kern, &x, &y, &s, lam, None).unwrap(),
+                    );
+                }
+            }),
+        },
+        Case {
+            name: "falkon fit end-to-end",
+            flops: 0.0,
+            run: Box::new({
+                let x = x.clone();
+                let y = y.clone();
+                let s = accum_sketch.clone();
+                move || {
+                    std::hint::black_box(
+                        crate::krr::falkon(
+                            kern,
+                            &x,
+                            &y,
+                            &s,
+                            lam,
+                            crate::krr::FalkonOptions::default(),
+                            None,
+                        )
+                        .unwrap(),
+                    );
+                }
+            }),
+        },
+    ];
+
+    println!("hotpath micro-benchmarks (reps={reps}, 1 warmup)");
+    for case in cases.iter_mut() {
+        (case.run)(); // warmup
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let ((), t) = timed(|| (case.run)());
+            samples.push(t);
+        }
+        report(case.name, case.flops, timing_stats(&samples));
+    }
+}

@@ -1,0 +1,45 @@
+//! Figure-regeneration harness: one entry per table/figure in the paper
+//! (see DESIGN.md §3 for the experiment index). Each harness returns
+//! structured rows and prints the same series the paper plots; `cargo
+//! bench --bench figures` runs quick versions, the CLI (`accumkrr bench
+//! <id>`) exposes full-scale knobs.
+
+mod common;
+mod cost;
+mod ext;
+mod fig1;
+mod fig2;
+mod fig3;
+mod fig5;
+mod hotpath;
+mod thm8;
+
+pub use common::{print_table, BenchOpts, Row};
+pub use ext::{run_ext_amm, run_ext_kpca, run_ext_sketches};
+pub use hotpath::hotpath_main;
+pub use cost::run_cost;
+pub use fig1::run_fig1;
+pub use fig2::run_fig2;
+pub use fig3::run_fig3;
+pub use fig5::run_fig5;
+pub use thm8::run_thm8;
+
+/// Dispatch a bench by id (`fig1`, `fig2`, `fig3`, `fig4`, `fig5`, `thm8`,
+/// `cost`). `fig4` is `fig3` over all three datasets.
+pub fn run(id: &str, opts: &BenchOpts) -> Result<Vec<Row>, String> {
+    match id {
+        "fig1" => Ok(run_fig1(opts)),
+        "fig2" => Ok(run_fig2(opts)),
+        "fig3" => Ok(run_fig3(opts, &["rqa"])),
+        "fig4" => Ok(run_fig3(opts, &["rqa", "casp", "gas"])),
+        "fig5" => Ok(run_fig5(opts, &["rqa", "casp", "gas"])),
+        "thm8" => Ok(run_thm8(opts)),
+        "cost" => Ok(run_cost(opts)),
+        "ext-sketches" => Ok(run_ext_sketches(opts)),
+        "ext-amm" => Ok(run_ext_amm(opts)),
+        "ext-kpca" => Ok(run_ext_kpca(opts)),
+        other => Err(format!(
+            "unknown bench id {other:?} (try fig1|fig2|fig3|fig4|fig5|thm8|cost|ext-sketches|ext-amm|ext-kpca)"
+        )),
+    }
+}

@@ -1,0 +1,129 @@
+//! Theorem-8 ablation: empirical K-satisfiability and incoherence vs
+//! (d, m) on the paper's §3.2 failure construction — two clusters, a tiny
+//! *dense, far* minority carrying an eigendirection almost entirely on a
+//! few coordinates, so uniform sub-sampling has incoherence `M = Θ(n)`.
+//! Demonstrates the theorem's two conditions in action: `d ≳ d_δ log²`
+//! fixes the intrinsic dimension, `m·d ≳ M log³` fixes the incoherence —
+//! raising m at fixed (adequate) d rescues uniform sub-sampling.
+
+use super::common::{BenchOpts, Row};
+use crate::coordinator::JobScheduler;
+use crate::kernels::{kernel_matrix, Kernel};
+use crate::linalg::Matrix;
+use crate::sketch::{SketchBuilder, SketchKind};
+use crate::stats::{incoherence, k_satisfiability, SpectralView};
+
+/// Run the ablation at `n = min(opts.n_max, 600)` (the diagnostics are
+/// eigendecomposition-bound).
+pub fn run_thm8(opts: &BenchOpts) -> Vec<Row> {
+    let n = opts.n_max.min(600);
+    let sched = JobScheduler::new(opts.seed ^ 8);
+    // §3.2 construction: diffuse majority + tiny tight far minority
+    let n_small = (n / 150).max(2);
+    let n_big = n - n_small;
+    let mut rng0 = sched.rng_for(crate::coordinator::SweepPoint {
+        setting: 0,
+        replicate: 0,
+    });
+    let x = Matrix::from_fn(n, 2, |i, _| {
+        if i < n_big {
+            2.0 * rng0.uniform()
+        } else {
+            30.0 + 0.05 * rng0.uniform()
+        }
+    });
+    let kern = Kernel::gaussian(1.0);
+    let k = kernel_matrix(&kern, &x);
+    let view = SpectralView::new(&k);
+    // δ just below the minority eigenvalue σ ≈ n_small/n, so the minority
+    // direction sits inside the top space U₁
+    let delta = 0.8 * n_small as f64 / n as f64;
+    let d_delta = view.d_delta(delta);
+    let m_uniform = incoherence(&view, &vec![1.0 / n as f64; n], delta);
+
+    let ms = [1usize, 2, 4, 8, 16];
+    let base = d_delta.max(2);
+    let ds = [base, 4 * base, 12 * base];
+    let mut settings = Vec::new();
+    for &d in &ds {
+        for &m in &ms {
+            settings.push((d, m));
+        }
+    }
+    let results = sched.run_sweep(settings.len(), opts.replicates, |pt, rng| {
+        let (d, m) = settings[pt.setting];
+        let s = SketchBuilder::new(SketchKind::Accumulation { m }).build(n, d, rng);
+        let rep = k_satisfiability(&view, &s, delta);
+        (
+            rep.top_distortion,
+            rep.tail_norm / rep.sqrt_delta,
+            rep.satisfied() as usize as f64,
+        )
+    });
+
+    let mut rows = Vec::new();
+    for (si, &(d, m)) in settings.iter().enumerate() {
+        let dist: Vec<f64> = results[si].iter().map(|r| r.0).collect();
+        let tail: Vec<f64> = results[si].iter().map(|r| r.1).collect();
+        let sat: Vec<f64> = results[si].iter().map(|r| r.2).collect();
+        let (dmean, _) = JobScheduler::mean_stderr(&dist);
+        let (tmean, _) = JobScheduler::mean_stderr(&tail);
+        let (smean, _) = JobScheduler::mean_stderr(&sat);
+        rows.push(Row::new(
+            &[("fig", "thm8")],
+            &[
+                ("n", n as f64),
+                ("d", d as f64),
+                ("m", m as f64),
+                ("d_delta", d_delta as f64),
+                ("M_incoh", m_uniform),
+                ("top_distortion", dmean),
+                ("tail_ratio", tmean),
+                ("ksat_rate", smean),
+            ],
+        ));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raising_m_reduces_distortion_at_adequate_d() {
+        let opts = BenchOpts {
+            replicates: 6,
+            n_max: 300,
+            ..Default::default()
+        };
+        let rows = run_thm8(&opts);
+        // incoherence of the construction is Θ(n), dwarfing d_stat
+        let m_incoh = rows[0].val("M_incoh").unwrap();
+        let d_delta = rows[0].val("d_delta").unwrap();
+        assert!(
+            m_incoh > 5.0 * d_delta,
+            "construction should be high-incoherence: M={m_incoh}, d_δ={d_delta}"
+        );
+        // at the largest (adequate) d, distortion at m=16 beats m=1
+        // (Theorem 8: m·d ≳ M log³ is what uniform m=1 cannot meet)
+        let dmax = rows
+            .iter()
+            .map(|r| r.val("d").unwrap() as u64)
+            .max()
+            .unwrap() as f64;
+        let get_m = |m: f64| {
+            rows.iter()
+                .find(|r| r.val("d") == Some(dmax) && r.val("m") == Some(m))
+                .unwrap()
+                .val("top_distortion")
+                .unwrap()
+        };
+        assert!(
+            get_m(16.0) < get_m(1.0),
+            "d={dmax}: m=16 {} should beat m=1 {}",
+            get_m(16.0),
+            get_m(1.0)
+        );
+    }
+}

@@ -1,0 +1,277 @@
+//! Dynamic batcher: coalesce concurrent predict requests per model.
+//!
+//! Prediction against a sketched-KRR model is a cross-kernel GEMV per
+//! query; batching queries into one cross-kernel GEMM amortises the
+//! landmark-matrix traversal (and, on the PJRT path, fills the fixed-shape
+//! predict bucket). Requests wait at most `max_wait` for co-riders; a full
+//! batch flushes immediately.
+
+use crate::coordinator::state::ModelStore;
+use crate::linalg::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Max queries per flushed batch.
+    pub max_batch: usize,
+    /// Max time the first request in a batch waits for co-riders.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+struct Item {
+    model: String,
+    rows: Vec<Vec<f64>>,
+    reply: Sender<Result<Vec<f64>, String>>,
+}
+
+/// Counters exported by the `metrics` server op.
+#[derive(Debug, Default)]
+pub struct BatcherMetrics {
+    /// Total queries served.
+    pub queries: AtomicU64,
+    /// Total flushed batches.
+    pub batches: AtomicU64,
+}
+
+/// Handle to the batching worker.
+pub struct Batcher {
+    tx: Mutex<Option<Sender<Item>>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    metrics: Arc<BatcherMetrics>,
+}
+
+impl Batcher {
+    /// Spawn the worker thread over a shared model store.
+    pub fn start(store: Arc<ModelStore>, cfg: BatcherConfig) -> Batcher {
+        let (tx, rx) = channel::<Item>();
+        let metrics = Arc::new(BatcherMetrics::default());
+        let m2 = metrics.clone();
+        let handle = std::thread::spawn(move || worker(store, cfg, rx, m2));
+        Batcher {
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            metrics,
+        }
+    }
+
+    /// Submit rows for prediction against a named model; blocks until the
+    /// batch containing them is served.
+    pub fn predict(&self, model: &str, rows: Vec<Vec<f64>>) -> Result<Vec<f64>, String> {
+        let (reply_tx, reply_rx) = channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard.as_ref().ok_or("batcher stopped")?;
+            tx.send(Item {
+                model: model.to_string(),
+                rows,
+                reply: reply_tx,
+            })
+            .map_err(|_| "batcher worker gone")?;
+        }
+        reply_rx.recv().map_err(|_| "batcher dropped reply".to_string())?
+    }
+
+    /// Metrics snapshot: (queries, batches).
+    pub fn metrics(&self) -> (u64, u64) {
+        (
+            self.metrics.queries.load(Ordering::Relaxed),
+            self.metrics.batches.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Stop the worker (drains the queue).
+    pub fn stop(&self) {
+        let tx = self.tx.lock().unwrap().take();
+        drop(tx);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker(
+    store: Arc<ModelStore>,
+    cfg: BatcherConfig,
+    rx: Receiver<Item>,
+    metrics: Arc<BatcherMetrics>,
+) {
+    loop {
+        // block for the first item
+        let first = match rx.recv() {
+            Ok(i) => i,
+            Err(_) => return, // all senders gone
+        };
+        let deadline = std::time::Instant::now() + cfg.max_wait;
+        let mut batch = vec![first];
+        let mut total_rows = batch[0].rows.len();
+        while total_rows < cfg.max_batch {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(i) => {
+                    total_rows += i.rows.len();
+                    batch.push(i);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        flush(&store, batch, &metrics);
+    }
+}
+
+/// Serve one coalesced batch, grouping items by model.
+fn flush(store: &ModelStore, batch: Vec<Item>, metrics: &BatcherMetrics) {
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    // group indices by model name
+    let mut by_model: std::collections::HashMap<String, Vec<usize>> = Default::default();
+    for (i, item) in batch.iter().enumerate() {
+        by_model.entry(item.model.clone()).or_default().push(i);
+    }
+    let mut replies: Vec<Option<Result<Vec<f64>, String>>> = (0..batch.len()).map(|_| None).collect();
+    for (model_name, idxs) in by_model {
+        let stored = store.get(&model_name);
+        match stored {
+            None => {
+                for &i in &idxs {
+                    replies[i] = Some(Err(format!("unknown model {model_name:?}")));
+                }
+            }
+            Some(sm) => {
+                // build one matrix over all items for this model
+                let p = sm.model.landmarks().cols();
+                let rows: usize = idxs.iter().map(|&i| batch[i].rows.len()).sum();
+                let mut ok = true;
+                let mut xq = Matrix::zeros(rows, p);
+                let mut r = 0;
+                for &i in &idxs {
+                    for row in &batch[i].rows {
+                        if row.len() != p {
+                            ok = false;
+                            break;
+                        }
+                        xq.row_mut(r).copy_from_slice(row);
+                        r += 1;
+                    }
+                }
+                if !ok {
+                    for &i in &idxs {
+                        replies[i] = Some(Err(format!("feature dim != {p}")));
+                    }
+                    continue;
+                }
+                metrics.queries.fetch_add(rows as u64, Ordering::Relaxed);
+                let y = sm.model.predict(&xq);
+                let mut off = 0;
+                for &i in &idxs {
+                    let k = batch[i].rows.len();
+                    replies[i] = Some(Ok(y[off..off + k].to_vec()));
+                    off += k;
+                }
+            }
+        }
+    }
+    for (item, reply) in batch.into_iter().zip(replies.into_iter()) {
+        let _ = item.reply.send(reply.unwrap_or_else(|| Err("internal: no reply".into())));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::{StoredModel, TrainRequest};
+    use crate::sketch::SketchKind;
+
+    fn store_with_model() -> Arc<ModelStore> {
+        let store = Arc::new(ModelStore::new());
+        store
+            .train(&TrainRequest {
+                name: "m".into(),
+                dataset: "bimodal".into(),
+                n: 150,
+                kind: SketchKind::Accumulation { m: 3 },
+                d: 10,
+                lambda: 1e-3,
+                bandwidth: 0.0,
+                seed: 5,
+            })
+            .unwrap();
+        store
+    }
+
+    #[test]
+    fn batched_equals_unbatched() {
+        let store = store_with_model();
+        let sm = store.get("m").unwrap();
+        let b = Batcher::start(store.clone(), BatcherConfig::default());
+        let rows = vec![vec![0.5, 0.5, 0.5], vec![2.2, 2.2, 2.2]];
+        let got = b.predict("m", rows.clone()).unwrap();
+        let mut xq = Matrix::zeros(2, 3);
+        xq.row_mut(0).copy_from_slice(&rows[0]);
+        xq.row_mut(1).copy_from_slice(&rows[1]);
+        let want = sm.model.predict(&xq);
+        for (a, w) in got.iter().zip(want.iter()) {
+            assert!((a - w).abs() < 1e-12);
+        }
+        let (q, batches) = b.metrics();
+        assert_eq!(q, 2);
+        assert!(batches >= 1);
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce() {
+        let store = store_with_model();
+        let b = Arc::new(Batcher::start(
+            store,
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(30),
+            },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                let v = 0.1 * i as f64;
+                b.predict("m", vec![vec![v, v, v]]).unwrap()
+            }));
+        }
+        for h in handles {
+            let y = h.join().unwrap();
+            assert_eq!(y.len(), 1);
+            assert!(y[0].is_finite());
+        }
+        let (q, batches) = b.metrics();
+        assert_eq!(q, 8);
+        assert!(batches < 8, "requests should coalesce, got {batches} batches");
+    }
+
+    #[test]
+    fn unknown_model_and_bad_dims_error() {
+        let store = store_with_model();
+        let b = Batcher::start(store, BatcherConfig::default());
+        assert!(b.predict("nope", vec![vec![0.0; 3]]).is_err());
+        assert!(b.predict("m", vec![vec![0.0; 7]]).is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! Experiment job scheduler.
+//!
+//! Every figure in the paper is a sweep: settings × replicates, each
+//! replicate an independent seeded run. The scheduler fans jobs out over a
+//! worker pool (bounded by `pool::num_threads`), gives each job its own
+//! PCG stream (derived from the root seed + job index, so results are
+//! reproducible regardless of scheduling order), and collects results in
+//! submission order.
+
+use crate::pool;
+use crate::rng::Pcg64;
+
+/// One point in a sweep: setting index × replicate index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SweepPoint {
+    /// Index into the settings list.
+    pub setting: usize,
+    /// Replicate number within the setting.
+    pub replicate: usize,
+}
+
+/// Scheduler configured with a root seed.
+#[derive(Clone, Debug)]
+pub struct JobScheduler {
+    root_seed: u64,
+}
+
+impl JobScheduler {
+    /// New scheduler; all job RNGs derive from `root_seed`.
+    pub fn new(root_seed: u64) -> JobScheduler {
+        JobScheduler { root_seed }
+    }
+
+    /// RNG for a given sweep point — stable under parallel scheduling.
+    pub fn rng_for(&self, pt: SweepPoint) -> Pcg64 {
+        Pcg64::seed_stream(
+            self.root_seed ^ (pt.setting as u64).wrapping_mul(0x9e3779b97f4a7c15),
+            0x100 + pt.replicate as u64,
+        )
+    }
+
+    /// Run `f` over `settings × replicates` in parallel; results arrive
+    /// grouped per setting, in replicate order.
+    pub fn run_sweep<R: Send, F>(&self, n_settings: usize, replicates: usize, f: F) -> Vec<Vec<R>>
+    where
+        F: Fn(SweepPoint, &mut Pcg64) -> R + Sync,
+    {
+        let total = n_settings * replicates;
+        let flat = pool::parallel_map(total, |i| {
+            let pt = SweepPoint {
+                setting: i / replicates,
+                replicate: i % replicates,
+            };
+            let mut rng = self.rng_for(pt);
+            f(pt, &mut rng)
+        });
+        let mut out: Vec<Vec<R>> = (0..n_settings).map(|_| Vec::with_capacity(replicates)).collect();
+        for (i, r) in flat.into_iter().enumerate() {
+            out[i / replicates].push(r);
+        }
+        out
+    }
+
+    /// Mean and standard error over replicate values (the paper reports
+    /// 30-replicate averages with standard-error bars).
+    pub fn mean_stderr(values: &[f64]) -> (f64, f64) {
+        let n = values.len();
+        if n == 0 {
+            return (f64::NAN, f64::NAN);
+        }
+        let mean = values.iter().sum::<f64>() / n as f64;
+        if n == 1 {
+            return (mean, 0.0);
+        }
+        let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (n - 1) as f64;
+        (mean, (var / n as f64).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shape_and_order() {
+        let s = JobScheduler::new(42);
+        let out = s.run_sweep(3, 4, |pt, _| (pt.setting, pt.replicate));
+        assert_eq!(out.len(), 3);
+        for (si, group) in out.iter().enumerate() {
+            assert_eq!(group.len(), 4);
+            for (ri, &(gs, gr)) in group.iter().enumerate() {
+                assert_eq!((gs, gr), (si, ri));
+            }
+        }
+    }
+
+    #[test]
+    fn rng_streams_reproducible_and_distinct() {
+        let s = JobScheduler::new(7);
+        let a1 = s
+            .rng_for(SweepPoint { setting: 1, replicate: 2 })
+            .next_u64();
+        let a2 = s
+            .rng_for(SweepPoint { setting: 1, replicate: 2 })
+            .next_u64();
+        assert_eq!(a1, a2);
+        let b = s
+            .rng_for(SweepPoint { setting: 1, replicate: 3 })
+            .next_u64();
+        let c = s
+            .rng_for(SweepPoint { setting: 2, replicate: 2 })
+            .next_u64();
+        assert_ne!(a1, b);
+        assert_ne!(a1, c);
+    }
+
+    #[test]
+    fn sweep_results_deterministic() {
+        let run = || {
+            JobScheduler::new(3).run_sweep(2, 3, |_, rng| rng.uniform())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn mean_stderr_basic() {
+        let (m, se) = JobScheduler::mean_stderr(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert!((se - 1.0).abs() < 1e-12); // var = 2, se = √(2/2) = 1
+        let (m1, se1) = JobScheduler::mean_stderr(&[5.0]);
+        assert_eq!((m1, se1), (5.0, 0.0));
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator — the service layer a team would deploy around the
+//! library:
+//!
+//! * [`jobs`] — experiment job scheduler: parameter sweeps × replicates run
+//!   on a worker pool with per-job RNG streams (drives every bench figure).
+//! * [`state`] — model store: named trained models behind an `RwLock`, with
+//!   JSON persistence (landmarks + β round-trip).
+//! * [`batcher`] — dynamic batcher: concurrent predict requests are
+//!   coalesced (per model) up to a batch cap / deadline before hitting the
+//!   compute path — the same discipline a serving system applies in front
+//!   of fixed-shape accelerators.
+//! * [`server`] — threaded TCP server speaking newline-delimited JSON
+//!   (`train` / `predict` / `models` / `metrics` / `ping`).
+
+pub mod batcher;
+pub mod jobs;
+pub mod server;
+pub mod state;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use jobs::{JobScheduler, SweepPoint};
+pub use server::{serve, ServerConfig};
+pub use state::{ModelStore, StoredModel, TrainRequest};

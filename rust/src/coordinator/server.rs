@@ -1,0 +1,295 @@
+//! Threaded TCP server speaking newline-delimited JSON.
+//!
+//! Operations:
+//!
+//! | op        | request fields                                         | reply |
+//! |-----------|--------------------------------------------------------|-------|
+//! | `ping`    | —                                                      | `{"ok":true,"pong":true}` |
+//! | `train`   | `name,dataset,n,sketch,m,d,lambda,bandwidth,seed`      | training metadata |
+//! | `predict` | `model, x: [[f64,…],…]`                                | `{"ok":true,"y":[…]}` |
+//! | `models`  | —                                                      | list of stored models |
+//! | `metrics` | —                                                      | batcher counters |
+//! | `shutdown`| —                                                      | stops the listener |
+//!
+//! One thread per connection (requests within a connection are pipelined
+//! line-by-line); predictions flow through the [`Batcher`] so concurrent
+//! clients coalesce.
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::state::{ModelStore, TrainRequest};
+use crate::sketch::SketchKind;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:7878` (port 0 → ephemeral).
+    pub addr: String,
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".into(),
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Start serving; returns the bound local address and a shutdown closure is
+/// not needed — send `{"op":"shutdown"}`. Blocks until shutdown when
+/// `block` is true; otherwise serves on a background thread.
+pub fn serve(
+    store: Arc<ModelStore>,
+    cfg: ServerConfig,
+    block: bool,
+) -> std::io::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let batcher = Arc::new(Batcher::start(store.clone(), cfg.batcher));
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept_loop = {
+        let stop = stop.clone();
+        move || {
+            for stream in listener.incoming() {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let store = store.clone();
+                        let batcher = batcher.clone();
+                        let stop = stop.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(s, &store, &batcher, &stop);
+                        });
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+    };
+    if block {
+        accept_loop();
+    } else {
+        std::thread::spawn(accept_loop);
+    }
+    Ok(addr)
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    store: &ModelStore,
+    batcher: &Batcher,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    // small request/reply lines: Nagle + delayed-ACK would add ~40-90ms
+    // per round trip (measured in EXPERIMENTS.md §Perf)
+    stream.set_nodelay(true)?;
+    let peer_addr = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = dispatch(&line, store, batcher, stop);
+        writeln!(writer, "{reply}")?;
+        if stop.load(Ordering::Relaxed) {
+            // poke the listener so the accept loop observes the flag
+            let _ = TcpStream::connect(peer_addr.ip().to_string() + ":0");
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn err(msg: impl Into<String>) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+}
+
+/// Decode one request line, execute, encode the reply. Public so tests can
+/// exercise the protocol without sockets.
+pub fn dispatch(line: &str, store: &ModelStore, batcher: &Batcher, stop: &AtomicBool) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err(format!("bad json: {e}")),
+    };
+    match req.get("op").and_then(|o| o.as_str()) {
+        Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        Some("train") => op_train(&req, store),
+        Some("predict") => op_predict(&req, batcher),
+        Some("models") => {
+            let list = store
+                .list()
+                .into_iter()
+                .map(|(name, n, secs, sketch)| {
+                    Json::obj(vec![
+                        ("name", Json::Str(name)),
+                        ("n_train", Json::from(n)),
+                        ("train_secs", Json::Num(secs)),
+                        ("sketch", Json::Str(sketch)),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::Arr(list))])
+        }
+        Some("metrics") => {
+            let (q, b) = batcher.metrics();
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("queries", Json::from(q as usize)),
+                ("batches", Json::from(b as usize)),
+            ])
+        }
+        Some("shutdown") => {
+            stop.store(true, Ordering::Relaxed);
+            Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))])
+        }
+        Some(other) => err(format!("unknown op {other:?}")),
+        None => err("missing op"),
+    }
+}
+
+fn op_train(req: &Json, store: &ModelStore) -> Json {
+    let s = |k: &str, d: &str| -> String {
+        req.get(k).and_then(|v| v.as_str()).unwrap_or(d).to_string()
+    };
+    let u = |k: &str, d: usize| req.get(k).and_then(|v| v.as_usize()).unwrap_or(d);
+    let f = |k: &str, d: f64| req.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+    let kind = match s("sketch", "accum").as_str() {
+        "nystrom" => SketchKind::Nystrom,
+        "gaussian" => SketchKind::Gaussian,
+        "rademacher" => SketchKind::Rademacher,
+        "verysparse" => SketchKind::VerySparse { sparsity: None },
+        "accum" => SketchKind::Accumulation { m: u("m", 4).max(1) },
+        other => return err(format!("unknown sketch {other:?}")),
+    };
+    let treq = TrainRequest {
+        name: s("name", "default"),
+        dataset: s("dataset", "bimodal"),
+        n: u("n", 1000),
+        kind,
+        d: u("d", 0),
+        lambda: f("lambda", 0.0),
+        bandwidth: f("bandwidth", 0.0),
+        seed: u("seed", 1) as u64,
+    };
+    match store.train(&treq) {
+        Ok(meta) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("name", Json::Str(treq.name)),
+            ("n_train", Json::from(meta.n_train)),
+            ("train_secs", Json::Num(meta.train_secs)),
+            ("train_mse", Json::Num(meta.train_mse)),
+            ("landmarks", Json::from(meta.model.num_landmarks())),
+            ("sketch", Json::Str(meta.sketch)),
+        ]),
+        Err(e) => err(e),
+    }
+}
+
+fn op_predict(req: &Json, batcher: &Batcher) -> Json {
+    let model = match req.get("model").and_then(|v| v.as_str()) {
+        Some(m) => m.to_string(),
+        None => return err("missing model"),
+    };
+    let rows: Option<Vec<Vec<f64>>> = req.get("x").and_then(|v| v.as_arr()).map(|rows| {
+        rows.iter()
+            .filter_map(|r| {
+                r.as_arr()
+                    .map(|vals| vals.iter().filter_map(|v| v.as_f64()).collect())
+            })
+            .collect()
+    });
+    let rows = match rows {
+        Some(r) if !r.is_empty() => r,
+        _ => return err("missing/empty x"),
+    };
+    match batcher.predict(&model, rows) {
+        Ok(y) => Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::nums(&y))]),
+        Err(e) => err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+
+    fn setup() -> (Arc<ModelStore>, Batcher, AtomicBool) {
+        let store = Arc::new(ModelStore::new());
+        let b = Batcher::start(store.clone(), BatcherConfig::default());
+        (store, b, AtomicBool::new(false))
+    }
+
+    #[test]
+    fn ping_and_unknown() {
+        let (store, b, stop) = setup();
+        let r = dispatch(r#"{"op":"ping"}"#, &store, &b, &stop);
+        assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
+        let r = dispatch(r#"{"op":"wat"}"#, &store, &b, &stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let r = dispatch("not json", &store, &b, &stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn train_then_predict_roundtrip() {
+        let (store, b, stop) = setup();
+        let r = dispatch(
+            r#"{"op":"train","name":"m1","dataset":"bimodal","n":150,"sketch":"accum","m":3,"d":10,"lambda":0.001,"seed":5}"#,
+            &store,
+            &b,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let r = dispatch(
+            r#"{"op":"predict","model":"m1","x":[[0.5,0.5,0.5],[2.2,2.2,2.2]]}"#,
+            &store,
+            &b,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("y").unwrap().as_arr().unwrap().len(), 2);
+        let r = dispatch(r#"{"op":"models"}"#, &store, &b, &stop);
+        assert_eq!(r.get("models").unwrap().as_arr().unwrap().len(), 1);
+        let r = dispatch(r#"{"op":"metrics"}"#, &store, &b, &stop);
+        assert_eq!(r.get("queries").and_then(|q| q.as_usize()), Some(2));
+    }
+
+    #[test]
+    fn shutdown_sets_flag() {
+        let (store, b, stop) = setup();
+        dispatch(r#"{"op":"shutdown"}"#, &store, &b, &stop);
+        assert!(stop.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let store = Arc::new(ModelStore::new());
+        let addr = serve(
+            store,
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                batcher: BatcherConfig::default(),
+            },
+            false,
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, r#"{{"op":"ping"}}"#).unwrap();
+        let mut line = String::new();
+        BufReader::new(conn.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("pong"), Some(&Json::Bool(true)));
+        writeln!(conn, r#"{{"op":"shutdown"}}"#).unwrap();
+    }
+}

@@ -1,0 +1,291 @@
+//! Model store: named trained models with JSON persistence.
+
+use crate::data::{normalize_features, Dataset};
+use crate::kernels::Kernel;
+use crate::krr::SketchedKrr;
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+use crate::sketch::{SketchBuilder, SketchKind};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// A trained model plus the metadata clients query.
+#[derive(Clone, Debug)]
+pub struct StoredModel {
+    /// The predict-ready model.
+    pub model: Arc<SketchedKrr>,
+    /// Training rows used.
+    pub n_train: usize,
+    /// Wall-clock training seconds.
+    pub train_secs: f64,
+    /// Sketch descriptor (`accum_m4`, `nystrom`, …).
+    pub sketch: String,
+    /// In-sample MSE at train time.
+    pub train_mse: f64,
+}
+
+/// Parameters of a `train` request (server op or CLI).
+#[derive(Clone, Debug)]
+pub struct TrainRequest {
+    /// Model name to store under.
+    pub name: String,
+    /// Dataset: `rqa` / `casp` / `gas` / `bimodal`.
+    pub dataset: String,
+    /// Rows to train on.
+    pub n: usize,
+    /// Sketch kind.
+    pub kind: SketchKind,
+    /// Projection dimension (0 → paper schedule `⌊1.5·n^{dX/(3+2dX)}⌋`).
+    pub d: usize,
+    /// Ridge λ (0 → paper schedule `0.9·n^{−(3+dX)/(3+2dX)}`).
+    pub lambda: f64,
+    /// Kernel bandwidth.
+    pub bandwidth: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+/// Thread-safe named model registry.
+#[derive(Default)]
+pub struct ModelStore {
+    models: RwLock<HashMap<String, StoredModel>>,
+}
+
+impl ModelStore {
+    /// Empty store.
+    pub fn new() -> ModelStore {
+        ModelStore::default()
+    }
+
+    /// Insert/replace a model.
+    pub fn put(&self, name: &str, m: StoredModel) {
+        self.models.write().unwrap().insert(name.to_string(), m);
+    }
+
+    /// Fetch a model by name.
+    pub fn get(&self, name: &str) -> Option<StoredModel> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Names + summary metadata of all models.
+    pub fn list(&self) -> Vec<(String, usize, f64, String)> {
+        self.models
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.n_train, v.train_secs, v.sketch.clone()))
+            .collect()
+    }
+
+    /// Train a model per the request and store it. Returns the stored
+    /// metadata. This is the coordinator's end-to-end training path.
+    pub fn train(&self, req: &TrainRequest) -> Result<StoredModel, String> {
+        let mut rng = Pcg64::seed(req.seed);
+        let (mut ds, dx, kernel) = dataset_for(&req.dataset, req.n, req.bandwidth, &mut rng)?;
+        normalize_features(&mut ds.x);
+        let n = ds.n();
+        let d = if req.d > 0 {
+            req.d
+        } else {
+            paper_d(n, dx)
+        };
+        let lambda = if req.lambda > 0.0 {
+            req.lambda
+        } else {
+            paper_lambda(n, dx)
+        };
+        let t = crate::util::Timer::start();
+        let sketch = SketchBuilder::new(req.kind.clone()).build(n, d, &mut rng);
+        let model = SketchedKrr::fit(kernel, &ds.x, &ds.y, &sketch, lambda, None)
+            .ok_or("sketched fit failed (singular system)")?;
+        let train_secs = t.secs();
+        let train_mse = crate::stats::mse(model.fitted(), &ds.y);
+        let stored = StoredModel {
+            model: Arc::new(model),
+            n_train: n,
+            train_secs,
+            sketch: req.kind.name(),
+            train_mse,
+        };
+        self.put(&req.name, stored.clone());
+        Ok(stored)
+    }
+}
+
+/// Paper's projection-dimension schedule `⌊1.5·n^{dX/(3+2dX)}⌋` (§4.2/D.3).
+pub fn paper_d(n: usize, dx: usize) -> usize {
+    ((1.5 * (n as f64).powf(dx as f64 / (3.0 + 2.0 * dx as f64))).floor() as usize).max(2)
+}
+
+/// Paper's ridge schedule `0.9·n^{−(3+dX)/(3+2dX)}` (§D.3).
+pub fn paper_lambda(n: usize, dx: usize) -> f64 {
+    0.9 * (n as f64).powf(-(3.0 + dx as f64) / (3.0 + 2.0 * dx as f64))
+}
+
+/// Resolve a dataset name into data + feature count + default kernel.
+pub fn dataset_for(
+    name: &str,
+    n: usize,
+    bandwidth: f64,
+    rng: &mut Pcg64,
+) -> Result<(Dataset, usize, Kernel), String> {
+    let bw = |default: f64| if bandwidth > 0.0 { bandwidth } else { default };
+    match name {
+        "rqa" => {
+            let s = crate::data::rqa_sim(n, rng);
+            Ok((Dataset { x: s.x, y: s.y }, 4, Kernel::matern(1.5, bw(1.0))))
+        }
+        "casp" => {
+            let s = crate::data::casp_sim(n, rng);
+            Ok((Dataset { x: s.x, y: s.y }, 9, Kernel::matern(1.5, bw(1.0))))
+        }
+        "gas" => {
+            let s = crate::data::gas_sim(n, rng);
+            Ok((Dataset { x: s.x, y: s.y }, 10, Kernel::matern(1.5, bw(1.0))))
+        }
+        "bimodal" => {
+            let cfg = crate::data::BimodalConfig {
+                n,
+                ..Default::default()
+            };
+            let (x, y, _) = crate::data::bimodal(&cfg, rng);
+            // paper Fig. 2: Gaussian kernel, bw = 1.5 n^{-1/7}
+            Ok((
+                Dataset { x, y },
+                3,
+                Kernel::gaussian(bw(1.5 * (n as f64).powf(-1.0 / 7.0))),
+            ))
+        }
+        other => {
+            // fall back to a CSV file path (real UCI data dropped in)
+            if std::path::Path::new(other).exists() {
+                let mut ds = crate::data::load_csv_dataset(other, true)?;
+                ds.shuffle(rng);
+                let ds = ds.head(n);
+                let dx = ds.x.cols();
+                Ok((ds, dx, Kernel::matern(1.5, bw(1.0))))
+            } else {
+                Err(format!("unknown dataset {other:?}"))
+            }
+        }
+    }
+}
+
+/// Serialise a model (landmarks + β + kernel) to JSON for persistence.
+pub fn model_to_json(m: &SketchedKrr) -> Json {
+    let l = m.landmarks();
+    Json::obj(vec![
+        ("kernel", Json::from(m.kernel().name())),
+        ("bandwidth", Json::Num(m.kernel().bandwidth)),
+        ("rows", Json::from(l.rows())),
+        ("cols", Json::from(l.cols())),
+        ("landmarks", Json::nums(l.data())),
+        ("beta", Json::nums(m.beta())),
+    ])
+}
+
+/// Rebuild a predict-only model from [`model_to_json`] output.
+pub fn model_from_json(j: &Json) -> Result<SketchedKrr, String> {
+    let name = j.get("kernel").and_then(|v| v.as_str()).ok_or("missing kernel")?;
+    let bw = j.get("bandwidth").and_then(|v| v.as_f64()).ok_or("missing bandwidth")?;
+    let kernel = match name {
+        "gaussian" => Kernel::gaussian(bw),
+        "matern12" => Kernel::matern(0.5, bw),
+        "matern32" => Kernel::matern(1.5, bw),
+        "matern52" => Kernel::matern(2.5, bw),
+        "laplacian" => Kernel::laplacian(bw),
+        other => return Err(format!("unknown kernel {other}")),
+    };
+    let rows = j.get("rows").and_then(|v| v.as_usize()).ok_or("rows")?;
+    let cols = j.get("cols").and_then(|v| v.as_usize()).ok_or("cols")?;
+    let land: Vec<f64> = j
+        .get("landmarks")
+        .and_then(|v| v.as_arr())
+        .ok_or("landmarks")?
+        .iter()
+        .filter_map(|x| x.as_f64())
+        .collect();
+    let beta: Vec<f64> = j
+        .get("beta")
+        .and_then(|v| v.as_arr())
+        .ok_or("beta")?
+        .iter()
+        .filter_map(|x| x.as_f64())
+        .collect();
+    if land.len() != rows * cols || beta.len() != rows {
+        return Err("model json: size mismatch".into());
+    }
+    Ok(SketchedKrr::from_parts(
+        kernel,
+        Matrix::from_vec(rows, cols, land),
+        beta,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_and_fetch() {
+        let store = ModelStore::new();
+        let req = TrainRequest {
+            name: "m1".into(),
+            dataset: "bimodal".into(),
+            n: 200,
+            kind: SketchKind::Accumulation { m: 4 },
+            d: 12,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 3,
+        };
+        let meta = store.train(&req).unwrap();
+        assert_eq!(meta.n_train, 200);
+        assert!(meta.train_mse.is_finite());
+        let got = store.get("m1").unwrap();
+        assert_eq!(got.sketch, "accum_m4");
+        assert_eq!(store.list().len(), 1);
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let store = ModelStore::new();
+        let req = TrainRequest {
+            name: "x".into(),
+            dataset: "nope".into(),
+            n: 50,
+            kind: SketchKind::Nystrom,
+            d: 5,
+            lambda: 1e-2,
+            bandwidth: 0.0,
+            seed: 1,
+        };
+        assert!(store.train(&req).is_err());
+    }
+
+    #[test]
+    fn paper_schedules_match_formulas() {
+        // RQA: dX = 4 → d = ⌊1.5·n^{4/11}⌋, λ = 0.9·n^{−7/11}
+        assert_eq!(paper_d(15000, 4), (1.5f64 * 15000f64.powf(4.0 / 11.0)) as usize);
+        let lam = paper_lambda(15000, 4);
+        assert!((lam - 0.9 * 15000f64.powf(-7.0 / 11.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let mut rng = Pcg64::seed(9);
+        let x = Matrix::from_fn(30, 2, |_, _| rng.uniform());
+        let y: Vec<f64> = (0..30).map(|i| x[(i, 0)]).collect();
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 2 }).build(30, 6, &mut rng);
+        let m = SketchedKrr::fit(Kernel::gaussian(0.5), &x, &y, &s, 1e-3, None).unwrap();
+        let j = model_to_json(&m);
+        let m2 = model_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        let q = Matrix::from_fn(5, 2, |_, _| 0.3);
+        let p1 = m.predict(&q);
+        let p2 = m2.predict(&q);
+        for (a, b) in p1.iter().zip(p2.iter()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}

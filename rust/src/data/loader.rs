@@ -1,0 +1,166 @@
+//! Dataset container, CSV ingestion, preprocessing, splits.
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+use crate::util::csv;
+
+/// A regression dataset ready for KRR.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Feature rows.
+    pub x: Matrix,
+    /// Responses.
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    /// Number of rows.
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Take the first `n` rows (after an external shuffle).
+    pub fn head(&self, n: usize) -> Dataset {
+        let n = n.min(self.n());
+        Dataset {
+            x: self.x.slice(0, n, 0, self.x.cols()),
+            y: self.y[..n].to_vec(),
+        }
+    }
+
+    /// Shuffle rows in place.
+    pub fn shuffle(&mut self, rng: &mut Pcg64) {
+        let n = self.n();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut x = Matrix::zeros(n, self.x.cols());
+        let mut y = vec![0.0; n];
+        for (dst, &src) in order.iter().enumerate() {
+            x.row_mut(dst).copy_from_slice(self.x.row(src));
+            y[dst] = self.y[src];
+        }
+        self.x = x;
+        self.y = y;
+    }
+}
+
+/// Load a numeric CSV whose **last column is the response** (the layout of
+/// the UCI RQA/CASP/GAS files after their header row).
+pub fn load_csv_dataset(path: &str, skip_header: bool) -> Result<Dataset, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let m = csv::parse_numeric(&text, skip_header)?;
+    if m.cols() < 2 {
+        return Err("dataset needs ≥ 1 feature + response".into());
+    }
+    let p = m.cols() - 1;
+    let x = m.slice(0, m.rows(), 0, p);
+    let y = (0..m.rows()).map(|i| m[(i, p)]).collect();
+    Ok(Dataset { x, y })
+}
+
+/// Normalise every feature to unit variance (paper §4.2: "normalizing the
+/// features to have variance 1"). Returns the per-feature scales applied.
+pub fn normalize_features(x: &mut Matrix) -> Vec<f64> {
+    let (n, p) = (x.rows(), x.cols());
+    let mut scales = vec![1.0; p];
+    if n == 0 {
+        return scales;
+    }
+    for j in 0..p {
+        let mean: f64 = (0..n).map(|i| x[(i, j)]).sum::<f64>() / n as f64;
+        let var: f64 = (0..n).map(|i| (x[(i, j)] - mean).powi(2)).sum::<f64>() / n as f64;
+        let sd = var.sqrt();
+        if sd > 1e-12 {
+            scales[j] = 1.0 / sd;
+            for i in 0..n {
+                x[(i, j)] *= scales[j];
+            }
+        }
+    }
+    scales
+}
+
+/// Random train/test split with the given test fraction (paper: 20%).
+pub fn train_test_split(ds: &Dataset, test_frac: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
+    let n = ds.n();
+    let n_test = ((n as f64 * test_frac).round() as usize).min(n);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let (test_idx, train_idx) = order.split_at(n_test);
+    let take = |idx: &[usize]| -> Dataset {
+        let mut x = Matrix::zeros(idx.len(), ds.x.cols());
+        let mut y = vec![0.0; idx.len()];
+        for (dst, &src) in idx.iter().enumerate() {
+            x.row_mut(dst).copy_from_slice(ds.x.row(src));
+            y[dst] = ds.y[src];
+        }
+        Dataset { x, y }
+    };
+    (take(train_idx), take(test_idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            x: Matrix::from_fn(10, 2, |i, j| (i * 2 + j) as f64),
+            y: (0..10).map(|i| i as f64).collect(),
+        }
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let ds = toy();
+        let mut rng = Pcg64::seed(171);
+        let (train, test) = train_test_split(&ds, 0.2, &mut rng);
+        assert_eq!(train.n(), 8);
+        assert_eq!(test.n(), 2);
+        // every y value appears exactly once across the split
+        let mut all: Vec<f64> = train.y.iter().chain(test.y.iter()).cloned().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, (0..10).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normalize_gives_unit_variance() {
+        let mut x = Matrix::from_fn(50, 2, |i, j| (i as f64) * (j as f64 + 0.5) * 3.0);
+        normalize_features(&mut x);
+        for j in 0..2 {
+            let mean: f64 = (0..50).map(|i| x[(i, j)]).sum::<f64>() / 50.0;
+            let var: f64 = (0..50).map(|i| (x[(i, j)] - mean).powi(2)).sum::<f64>() / 50.0;
+            assert!((var - 1.0).abs() < 1e-9, "var={var}");
+        }
+    }
+
+    #[test]
+    fn constant_feature_untouched() {
+        let mut x = Matrix::from_fn(10, 1, |_, _| 3.0);
+        let scales = normalize_features(&mut x);
+        assert_eq!(scales[0], 1.0);
+        assert_eq!(x[(0, 0)], 3.0);
+    }
+
+    #[test]
+    fn csv_roundtrip_via_tempfile() {
+        let path = std::env::temp_dir().join("accumkrr_loader_test.csv");
+        std::fs::write(&path, "a,b,y\n1,2,3\n4,5,6\n").unwrap();
+        let ds = load_csv_dataset(path.to_str().unwrap(), true).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.x.cols(), 2);
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn head_and_shuffle_preserve_multiset() {
+        let mut ds = toy();
+        let mut rng = Pcg64::seed(172);
+        ds.shuffle(&mut rng);
+        let mut y = ds.y.clone();
+        y.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(y, (0..10).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(ds.head(4).n(), 4);
+    }
+}

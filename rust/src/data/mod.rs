@@ -1,0 +1,11 @@
+//! Datasets: the paper's synthetic bimodal generator, simulated UCI
+//! surrogates (see DESIGN.md §5 substitutions), a CSV loader for the real
+//! files, and preprocessing (normalisation, train/test splits).
+
+mod loader;
+mod synthetic;
+mod ucisim;
+
+pub use loader::{load_csv_dataset, normalize_features, train_test_split, Dataset};
+pub use synthetic::{bimodal, f_star, BimodalConfig};
+pub use ucisim::{casp_sim, gas_sim, rqa_sim, UciSim};

@@ -1,0 +1,150 @@
+//! The paper's synthetic bimodal distribution (§4.1, §D.1, §D.2).
+//!
+//! With probability `n/(n+n^γ)` a point is `Unif[0,1]³`; with probability
+//! `n^γ/(n+n^γ)` each coordinate has pdf `4·(5−2x)` on `[2, 2.5]` (the
+//! normalised version of the paper's `∏(5−2x_j)`). The minority cluster is
+//! dense and far from the majority — this is precisely the high-incoherence
+//! regime where plain Nyström fails (paper §3.2).
+//!
+//! The regression target is `f*(x) = g(‖x‖/3)` with
+//! `g(t) = 1.6|(t−0.4)(t−0.6)| − t(t−1)(t−2) − 0.5`, plus `N(0, 0.25)`
+//! noise.
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Configuration of the bimodal generator.
+#[derive(Clone, Copy, Debug)]
+pub struct BimodalConfig {
+    /// Sample size n.
+    pub n: usize,
+    /// Cluster-imbalance exponent γ (0.5 in Fig. 1, 0.6 in Fig. 2).
+    pub gamma: f64,
+    /// Noise standard deviation (paper: 0.5, i.e. variance 0.25).
+    pub noise_std: f64,
+    /// Input dimension (paper: 3).
+    pub dim: usize,
+}
+
+impl Default for BimodalConfig {
+    fn default() -> Self {
+        BimodalConfig {
+            n: 1000,
+            gamma: 0.6,
+            noise_std: 0.5,
+            dim: 3,
+        }
+    }
+}
+
+/// The paper's univariate shape function `g`.
+fn g(t: f64) -> f64 {
+    1.6 * ((t - 0.4) * (t - 0.6)).abs() - t * (t - 1.0) * (t - 2.0) - 0.5
+}
+
+/// True regression function `f*(x) = g(‖x‖/3)`.
+pub fn f_star(x: &[f64]) -> f64 {
+    let norm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    g(norm / 3.0)
+}
+
+/// Draw one coordinate of the dense minority cluster: pdf `4(5−2x)` on
+/// `[2, 2.5]`, by inverse CDF (`x = (5 − √(1−u))/2`).
+fn minority_coord(rng: &mut Pcg64) -> f64 {
+    let u = rng.uniform();
+    (5.0 - (1.0 - u).sqrt()) / 2.0
+}
+
+/// Generate `(X, y, f*(X))`. The third return value (noiseless truth) lets
+/// experiments compute estimation error against `f*` exactly as Figure 2's
+/// reference line does.
+pub fn bimodal(cfg: &BimodalConfig, rng: &mut Pcg64) -> (Matrix, Vec<f64>, Vec<f64>) {
+    let n = cfg.n;
+    let p_minor = (n as f64).powf(cfg.gamma) / (n as f64 + (n as f64).powf(cfg.gamma));
+    let mut x = Matrix::zeros(n, cfg.dim);
+    for i in 0..n {
+        let minor = rng.uniform() < p_minor;
+        for j in 0..cfg.dim {
+            x[(i, j)] = if minor {
+                minority_coord(rng)
+            } else {
+                rng.uniform()
+            };
+        }
+    }
+    let truth: Vec<f64> = (0..n).map(|i| f_star(x.row(i))).collect();
+    let y: Vec<f64> = truth
+        .iter()
+        .map(|t| t + cfg.noise_std * rng.normal())
+        .collect();
+    (x, y, truth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_noise() {
+        let mut rng = Pcg64::seed(151);
+        let cfg = BimodalConfig {
+            n: 500,
+            ..Default::default()
+        };
+        let (x, y, truth) = bimodal(&cfg, &mut rng);
+        assert_eq!((x.rows(), x.cols()), (500, 3));
+        assert_eq!(y.len(), 500);
+        // noise has roughly the configured std
+        let resid: Vec<f64> = y.iter().zip(truth.iter()).map(|(a, b)| a - b).collect();
+        let var = resid.iter().map(|r| r * r).sum::<f64>() / 500.0;
+        assert!((var - 0.25).abs() < 0.08, "noise var {var}");
+    }
+
+    #[test]
+    fn clusters_land_in_expected_boxes() {
+        let mut rng = Pcg64::seed(152);
+        let cfg = BimodalConfig {
+            n: 2000,
+            gamma: 0.6,
+            ..Default::default()
+        };
+        let (x, _, _) = bimodal(&cfg, &mut rng);
+        let mut minor = 0usize;
+        for i in 0..2000 {
+            let first = x[(i, 0)];
+            if first >= 2.0 {
+                // whole row must be in the minority box
+                for j in 0..3 {
+                    assert!((2.0..=2.5).contains(&x[(i, j)]));
+                }
+                minor += 1;
+            } else {
+                for j in 0..3 {
+                    assert!((0.0..=1.0).contains(&x[(i, j)]));
+                }
+            }
+        }
+        // expected minority fraction = n^γ/(n+n^γ) ≈ 0.0465 for n=2000, γ=0.6
+        let frac = minor as f64 / 2000.0;
+        assert!((frac - 0.0465).abs() < 0.02, "minority fraction {frac}");
+    }
+
+    #[test]
+    fn minority_coordinate_density_decreasing() {
+        // pdf 4(5−2x) decreases on [2,2.5]: F(2.25) = 4(5·2.25 − 2.25² − 6)
+        // = 0.75, so the left half holds 3/4 of the mass.
+        let mut rng = Pcg64::seed(153);
+        let left = (0..20_000)
+            .filter(|_| minority_coord(&mut rng) < 2.25)
+            .count() as f64
+            / 20_000.0;
+        assert!((left - 0.75).abs() < 0.015, "left mass {left}");
+    }
+
+    #[test]
+    fn f_star_matches_g_formula() {
+        // at x = 0: g(0) = 1.6·|0.24| − 0 − 0.5 = −0.116
+        let v = f_star(&[0.0, 0.0, 0.0]);
+        assert!((v - (1.6 * 0.24 - 0.5)).abs() < 1e-12);
+    }
+}

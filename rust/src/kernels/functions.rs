@@ -1,0 +1,259 @@
+//! Kernel function definitions.
+
+/// Which positive semi-definite kernel to use.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelKind {
+    /// Gaussian / RBF: `exp(−‖x−y‖² / (2σ²))`.
+    Gaussian,
+    /// Matérn ν = 1/2 (a.k.a. exponential): `exp(−r/σ)`.
+    Matern12,
+    /// Matérn ν = 3/2: `(1 + √3 r/σ) exp(−√3 r/σ)`.
+    Matern32,
+    /// Matérn ν = 5/2: `(1 + √5 r/σ + 5r²/(3σ²)) exp(−√5 r/σ)`.
+    Matern52,
+    /// Laplacian over L1 distance: `exp(−‖x−y‖₁/σ)`.
+    Laplacian,
+    /// Polynomial `(xᵀy/σ + 1)^p` (degree in [`Kernel::degree`]).
+    Polynomial,
+    /// Linear `xᵀy`.
+    Linear,
+}
+
+/// A configured kernel: kind + bandwidth (+ degree for polynomial).
+#[derive(Clone, Copy, Debug)]
+pub struct Kernel {
+    /// Kernel family.
+    pub kind: KernelKind,
+    /// Length-scale σ (ignored by `Linear`).
+    pub bandwidth: f64,
+    /// Polynomial degree (ignored elsewhere).
+    pub degree: u32,
+}
+
+impl Kernel {
+    /// Gaussian kernel with bandwidth σ.
+    pub fn gaussian(bandwidth: f64) -> Kernel {
+        Kernel {
+            kind: KernelKind::Gaussian,
+            bandwidth,
+            degree: 0,
+        }
+    }
+
+    /// Matérn kernel; `nu` must be one of 0.5, 1.5, 2.5.
+    pub fn matern(nu: f64, bandwidth: f64) -> Kernel {
+        let kind = if nu == 0.5 {
+            KernelKind::Matern12
+        } else if nu == 1.5 {
+            KernelKind::Matern32
+        } else if nu == 2.5 {
+            KernelKind::Matern52
+        } else {
+            panic!("matern: nu must be 0.5 / 1.5 / 2.5, got {nu}")
+        };
+        Kernel {
+            kind,
+            bandwidth,
+            degree: 0,
+        }
+    }
+
+    /// Laplacian kernel.
+    pub fn laplacian(bandwidth: f64) -> Kernel {
+        Kernel {
+            kind: KernelKind::Laplacian,
+            bandwidth,
+            degree: 0,
+        }
+    }
+
+    /// Polynomial kernel `(xᵀy/σ + 1)^degree`.
+    pub fn polynomial(bandwidth: f64, degree: u32) -> Kernel {
+        Kernel {
+            kind: KernelKind::Polynomial,
+            bandwidth,
+            degree,
+        }
+    }
+
+    /// Linear kernel.
+    pub fn linear() -> Kernel {
+        Kernel {
+            kind: KernelKind::Linear,
+            bandwidth: 1.0,
+            degree: 0,
+        }
+    }
+
+    /// Evaluate `k(x, y)` for feature slices.
+    #[inline]
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match self.kind {
+            KernelKind::Gaussian => {
+                let d2 = sq_dist(x, y);
+                (-d2 / (2.0 * self.bandwidth * self.bandwidth)).exp()
+            }
+            KernelKind::Matern12 => {
+                let r = sq_dist(x, y).sqrt();
+                (-r / self.bandwidth).exp()
+            }
+            KernelKind::Matern32 => {
+                let r = sq_dist(x, y).sqrt();
+                let a = 3f64.sqrt() * r / self.bandwidth;
+                (1.0 + a) * (-a).exp()
+            }
+            KernelKind::Matern52 => {
+                let r2 = sq_dist(x, y);
+                let r = r2.sqrt();
+                let a = 5f64.sqrt() * r / self.bandwidth;
+                (1.0 + a + 5.0 * r2 / (3.0 * self.bandwidth * self.bandwidth)) * (-a).exp()
+            }
+            KernelKind::Laplacian => {
+                let l1: f64 = x.iter().zip(y).map(|(a, b)| (a - b).abs()).sum();
+                (-l1 / self.bandwidth).exp()
+            }
+            KernelKind::Polynomial => {
+                let ip = dot(x, y);
+                (ip / self.bandwidth + 1.0).powi(self.degree as i32)
+            }
+            KernelKind::Linear => dot(x, y),
+        }
+    }
+
+    /// Evaluate from a precomputed squared distance (used by the tiled
+    /// assembly path, which gets ‖x−y‖² from the GEMM-shaped expansion).
+    /// Only valid for translation-invariant kernels.
+    #[inline]
+    pub fn eval_sq_dist(&self, d2: f64) -> f64 {
+        let d2 = d2.max(0.0); // guard round-off negatives from the expansion
+        match self.kind {
+            KernelKind::Gaussian => (-d2 / (2.0 * self.bandwidth * self.bandwidth)).exp(),
+            KernelKind::Matern12 => (-d2.sqrt() / self.bandwidth).exp(),
+            KernelKind::Matern32 => {
+                let a = 3f64.sqrt() * d2.sqrt() / self.bandwidth;
+                (1.0 + a) * (-a).exp()
+            }
+            KernelKind::Matern52 => {
+                let a = 5f64.sqrt() * d2.sqrt() / self.bandwidth;
+                (1.0 + a + 5.0 * d2 / (3.0 * self.bandwidth * self.bandwidth)) * (-a).exp()
+            }
+            _ => panic!("eval_sq_dist: {:?} is not translation-invariant-over-L2", self.kind),
+        }
+    }
+
+    /// True when `eval_sq_dist` applies (the fast tiled assembly path).
+    pub fn is_radial(&self) -> bool {
+        matches!(
+            self.kind,
+            KernelKind::Gaussian | KernelKind::Matern12 | KernelKind::Matern32 | KernelKind::Matern52
+        )
+    }
+
+    /// `k(x,x)` (1 for all radial kernels; data-dependent otherwise).
+    pub fn diag_value(&self, x: &[f64]) -> f64 {
+        match self.kind {
+            KernelKind::Linear => dot(x, x),
+            KernelKind::Polynomial => (dot(x, x) / self.bandwidth + 1.0).powi(self.degree as i32),
+            _ => 1.0,
+        }
+    }
+
+    /// Stable name used in artifact manifests and bench output.
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            KernelKind::Gaussian => "gaussian",
+            KernelKind::Matern12 => "matern12",
+            KernelKind::Matern32 => "matern32",
+            KernelKind::Matern52 => "matern52",
+            KernelKind::Laplacian => "laplacian",
+            KernelKind::Polynomial => "polynomial",
+            KernelKind::Linear => "linear",
+        }
+    }
+}
+
+#[inline]
+fn dot(x: &[f64], y: &[f64]) -> f64 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+#[inline]
+fn sq_dist(x: &[f64], y: &[f64]) -> f64 {
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_basic_values() {
+        let k = Kernel::gaussian(1.0);
+        assert!((k.eval(&[0.0], &[0.0]) - 1.0).abs() < 1e-12);
+        assert!((k.eval(&[0.0], &[1.0]) - (-0.5f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matern12_is_exponential() {
+        let k = Kernel::matern(0.5, 2.0);
+        assert!((k.eval(&[0.0, 0.0], &[3.0, 4.0]) - (-2.5f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matern_orders_decrease_with_distance() {
+        for nu in [0.5, 1.5, 2.5] {
+            let k = Kernel::matern(nu, 1.0);
+            let near = k.eval(&[0.0], &[0.1]);
+            let far = k.eval(&[0.0], &[2.0]);
+            assert!(near > far, "nu={nu}");
+            assert!((k.eval(&[0.3], &[0.3]) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eval_sq_dist_consistent() {
+        for kern in [
+            Kernel::gaussian(1.3),
+            Kernel::matern(0.5, 0.9),
+            Kernel::matern(1.5, 1.1),
+            Kernel::matern(2.5, 2.0),
+        ] {
+            let (x, y) = ([0.2, -1.0, 3.0], [1.0, 0.5, 2.0]);
+            let d2: f64 = x.iter().zip(y.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(
+                (kern.eval(&x, &y) - kern.eval_sq_dist(d2)).abs() < 1e-12,
+                "{:?}",
+                kern.kind
+            );
+        }
+    }
+
+    #[test]
+    fn polynomial_and_linear() {
+        let k = Kernel::polynomial(1.0, 2);
+        assert!((k.eval(&[1.0, 2.0], &[3.0, 4.0]) - 144.0).abs() < 1e-9); // (11+1)^2
+        let l = Kernel::linear();
+        assert!((l.eval(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetry() {
+        let kerns = [
+            Kernel::gaussian(0.7),
+            Kernel::matern(1.5, 0.7),
+            Kernel::laplacian(0.7),
+            Kernel::polynomial(2.0, 3),
+        ];
+        let (x, y) = ([0.1, 0.9], [-0.4, 2.0]);
+        for k in kerns {
+            assert_eq!(k.eval(&x, &y), k.eval(&y, &x));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_matern_nu_panics() {
+        let _ = Kernel::matern(2.0, 1.0);
+    }
+}

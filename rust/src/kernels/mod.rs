@@ -1,0 +1,16 @@
+//! Kernel functions and empirical kernel-matrix assembly.
+//!
+//! The paper's experiments use the Gaussian (RBF) kernel (Figure 2) and the
+//! Matérn family with ν ∈ {1/2, 3/2} (Figures 1, 3–5); Laplacian,
+//! polynomial and linear kernels round out the library for downstream use.
+//! Kernel-matrix assembly ([`kernel_matrix`], [`cross_kernel`]) is tiled
+//! and runs on the thread pool — it is one of the two L3 hot paths (the
+//! other is sketch application).
+
+mod functions;
+mod matrix;
+mod rff;
+
+pub use functions::{Kernel, KernelKind};
+pub use matrix::{cross_kernel, gather_rows, kernel_cols, kernel_diag, kernel_matrix};
+pub use rff::{RandomFourierFeatures, RffKrr};

@@ -1,0 +1,187 @@
+//! Random Fourier Features (Rahimi & Recht, 2008) — the other major
+//! kernel-approximation family the paper's introduction cites. Included so
+//! downstream users can compare feature-space against sketch-space
+//! approximation in one framework.
+//!
+//! For a shift-invariant kernel with spectral density `p(ω)`,
+//! `k(x, y) ≈ z(x)ᵀ z(y)` with `z(x) = √(2/D)·[cos(ωᵢᵀx + bᵢ)]ᵢ`,
+//! `ωᵢ ~ p`, `bᵢ ~ Unif[0, 2π)`. Gaussian kernel → ω ~ N(0, I/σ²);
+//! Matérn ν → ω ~ multivariate-t with 2ν dof (componentwise scaled).
+
+use super::functions::{Kernel, KernelKind};
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// A sampled random-feature map.
+#[derive(Clone, Debug)]
+pub struct RandomFourierFeatures {
+    /// Frequencies, one row per feature (D × p).
+    omega: Matrix,
+    /// Phases (D).
+    phase: Vec<f64>,
+    /// √(2/D).
+    scale: f64,
+}
+
+impl RandomFourierFeatures {
+    /// Sample `n_features` random features for the given radial kernel.
+    pub fn sample(kernel: &Kernel, input_dim: usize, n_features: usize, rng: &mut Pcg64) -> Self {
+        assert!(kernel.is_radial(), "RFF needs a shift-invariant kernel");
+        let bw = kernel.bandwidth;
+        let omega = Matrix::from_fn(n_features, input_dim, |_, _| match kernel.kind {
+            KernelKind::Gaussian => rng.normal() / bw,
+            // Matérn ν: ω ∼ t_{2ν}/bw componentwise via N/√(χ²_{2ν}/2ν).
+            KernelKind::Matern12 | KernelKind::Matern32 | KernelKind::Matern52 => {
+                let nu = match kernel.kind {
+                    KernelKind::Matern12 => 0.5,
+                    KernelKind::Matern32 => 1.5,
+                    _ => 2.5,
+                };
+                let dof = 2.0 * nu;
+                // χ²_k as sum of k standard-normal squares (k = 1, 3, 5)
+                let chi2: f64 = (0..dof as usize * 2)
+                    .map(|_| {
+                        let g = rng.normal();
+                        g * g * 0.5
+                    })
+                    .sum();
+                rng.normal() / bw / (chi2 / dof).max(1e-12).sqrt()
+            }
+            _ => unreachable!(),
+        });
+        let phase: Vec<f64> = (0..n_features)
+            .map(|_| rng.uniform() * std::f64::consts::TAU)
+            .collect();
+        RandomFourierFeatures {
+            omega,
+            phase,
+            scale: (2.0 / n_features as f64).sqrt(),
+        }
+    }
+
+    /// Number of random features D.
+    pub fn dim(&self) -> usize {
+        self.omega.rows()
+    }
+
+    /// Map data rows to feature space: (n × D).
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let n = x.rows();
+        let d = self.dim();
+        let mut z = Matrix::zeros(n, d);
+        for i in 0..n {
+            let xi = x.row(i);
+            let zrow = z.row_mut(i);
+            for j in 0..d {
+                let w = self.omega.row(j);
+                let mut ip = self.phase[j];
+                for (a, b) in w.iter().zip(xi.iter()) {
+                    ip += a * b;
+                }
+                zrow[j] = self.scale * ip.cos();
+            }
+        }
+        z
+    }
+
+    /// Approximate kernel matrix `Z Zᵀ` (diagnostic).
+    pub fn approx_kernel(&self, x: &Matrix) -> Matrix {
+        let z = self.transform(x);
+        crate::linalg::matmul_a_bt(&z, &z)
+    }
+}
+
+/// Ridge regression in RFF space: `w = (ZᵀZ + nλI)⁻¹ Zᵀ y` — the RFF-KRR
+/// baseline (`O(n·D²)`).
+#[derive(Clone, Debug)]
+pub struct RffKrr {
+    features: RandomFourierFeatures,
+    weights: Vec<f64>,
+    fitted: Vec<f64>,
+}
+
+impl RffKrr {
+    /// Fit the RFF ridge model.
+    pub fn fit(
+        kernel: &Kernel,
+        x: &Matrix,
+        y: &[f64],
+        n_features: usize,
+        lambda: f64,
+        rng: &mut Pcg64,
+    ) -> Option<RffKrr> {
+        let n = x.rows();
+        let features = RandomFourierFeatures::sample(kernel, x.cols(), n_features, rng);
+        let z = features.transform(x);
+        let mut a = crate::linalg::syrk_at_a(&z);
+        a.add_diag(n as f64 * lambda);
+        let rhs = z.matvec_t(y);
+        let w = crate::linalg::chol_solve(&a, &rhs)?;
+        let fitted = z.matvec(&w);
+        Some(RffKrr {
+            features,
+            weights: w,
+            fitted,
+        })
+    }
+
+    /// In-sample fitted values.
+    pub fn fitted(&self) -> &[f64] {
+        &self.fitted
+    }
+
+    /// Predict at query rows.
+    pub fn predict(&self, xq: &Matrix) -> Vec<f64> {
+        self.features.transform(xq).matvec(&self.weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rff_approximates_gaussian_kernel() {
+        let mut rng = Pcg64::seed(0xff1);
+        let x = Matrix::from_fn(20, 2, |_, _| rng.uniform());
+        let kern = Kernel::gaussian(0.8);
+        let rff = RandomFourierFeatures::sample(&kern, 2, 4000, &mut rng);
+        let approx = rff.approx_kernel(&x);
+        let exact = crate::kernels::kernel_matrix(&kern, &x);
+        let mut max_err = 0.0f64;
+        for i in 0..20 {
+            for j in 0..20 {
+                max_err = max_err.max((approx[(i, j)] - exact[(i, j)]).abs());
+            }
+        }
+        assert!(max_err < 0.08, "max |K̂ − K| = {max_err}");
+    }
+
+    #[test]
+    fn rff_matern_diag_is_one() {
+        let mut rng = Pcg64::seed(0xff2);
+        let x = Matrix::from_fn(10, 3, |_, _| rng.normal());
+        let kern = Kernel::matern(1.5, 1.0);
+        let rff = RandomFourierFeatures::sample(&kern, 3, 3000, &mut rng);
+        let approx = rff.approx_kernel(&x);
+        for i in 0..10 {
+            assert!((approx[(i, i)] - 1.0).abs() < 0.06, "{}", approx[(i, i)]);
+        }
+    }
+
+    #[test]
+    fn rff_krr_learns_smooth_function() {
+        let mut rng = Pcg64::seed(0xff3);
+        let n = 150;
+        let x = Matrix::from_fn(n, 1, |_, _| rng.uniform() * 2.0);
+        let y: Vec<f64> = (0..n).map(|i| (2.0 * x[(i, 0)]).sin() + 0.05 * rng.normal()).collect();
+        let model = RffKrr::fit(&Kernel::gaussian(0.5), &x, &y, 200, 1e-4, &mut rng).unwrap();
+        let mse = crate::stats::mse(model.fitted(), &y);
+        assert!(mse < 0.02, "train mse {mse}");
+        // predict at train points ≈ fitted
+        let p = model.predict(&x);
+        for (a, b) in p.iter().zip(model.fitted().iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

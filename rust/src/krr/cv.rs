@@ -1,0 +1,162 @@
+//! k-fold cross-validation for sketched-KRR hyperparameters.
+//!
+//! The paper selects kernel bandwidth and λ "by cross validation" (§4.1,
+//! §D.1/D.2); this module makes that step part of the framework: grid
+//! search over (λ, bandwidth) with k-fold CV, fitting the *sketched*
+//! estimator in each fold so model selection costs `O(k·n·d²)` rather than
+//! the exact `O(k·n³)`.
+
+use crate::kernels::Kernel;
+use crate::krr::SketchedKrr;
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+use crate::sketch::SketchBuilder;
+use crate::stats::test_error;
+
+/// Result of a CV grid search.
+#[derive(Clone, Debug)]
+pub struct CvResult {
+    /// Winning λ.
+    pub lambda: f64,
+    /// Winning bandwidth.
+    pub bandwidth: f64,
+    /// CV error of the winner.
+    pub cv_error: f64,
+    /// Full grid: (λ, bandwidth, mean CV error).
+    pub grid: Vec<(f64, f64, f64)>,
+}
+
+/// k-fold CV over a (λ × bandwidth) grid for a given kernel family
+/// (bandwidth is substituted into `kernel_of(bw)`).
+#[allow(clippy::too_many_arguments)]
+pub fn cv_select(
+    kernel_of: impl Fn(f64) -> Kernel,
+    x: &Matrix,
+    y: &[f64],
+    lambdas: &[f64],
+    bandwidths: &[f64],
+    sketch_builder: &SketchBuilder,
+    d: usize,
+    folds: usize,
+    rng: &mut Pcg64,
+) -> CvResult {
+    let n = x.rows();
+    assert!(folds >= 2 && n >= 2 * folds, "cv: need ≥ 2 folds and data");
+    // one shuffled fold assignment shared across the grid (paired design)
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+
+    let mut grid = Vec::new();
+    let mut best: Option<(f64, f64, f64)> = None;
+    for &bw in bandwidths {
+        let kern = kernel_of(bw);
+        for &lam in lambdas {
+            let mut err_sum = 0.0;
+            let mut err_count = 0usize;
+            for f in 0..folds {
+                // fold f = validation
+                let val_idx: Vec<usize> = order
+                    .iter()
+                    .enumerate()
+                    .filter(|(pos, _)| pos % folds == f)
+                    .map(|(_, &i)| i)
+                    .collect();
+                let train_idx: Vec<usize> = order
+                    .iter()
+                    .enumerate()
+                    .filter(|(pos, _)| pos % folds != f)
+                    .map(|(_, &i)| i)
+                    .collect();
+                let take = |idx: &[usize]| -> (Matrix, Vec<f64>) {
+                    let mut xm = Matrix::zeros(idx.len(), x.cols());
+                    let mut ym = vec![0.0; idx.len()];
+                    for (dst, &src) in idx.iter().enumerate() {
+                        xm.row_mut(dst).copy_from_slice(x.row(src));
+                        ym[dst] = y[src];
+                    }
+                    (xm, ym)
+                };
+                let (xt, yt) = take(&train_idx);
+                let (xv, yv) = take(&val_idx);
+                let sketch = sketch_builder.build(xt.rows(), d.min(xt.rows()), rng);
+                if let Some(model) = SketchedKrr::fit(kern, &xt, &yt, &sketch, lam, None) {
+                    err_sum += test_error(&model.predict(&xv), &yv);
+                    err_count += 1;
+                }
+            }
+            if err_count == 0 {
+                continue;
+            }
+            let mean = err_sum / err_count as f64;
+            grid.push((lam, bw, mean));
+            if best.map(|(_, _, e)| mean < e).unwrap_or(true) {
+                best = Some((lam, bw, mean));
+            }
+        }
+    }
+    let (lambda, bandwidth, cv_error) = best.expect("cv: every grid point failed");
+    CvResult {
+        lambda,
+        bandwidth,
+        cv_error,
+        grid,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchKind;
+
+    /// CV must reject a wildly wrong bandwidth and an absurd λ.
+    #[test]
+    fn cv_picks_sane_hyperparameters() {
+        let mut rng = Pcg64::seed(0xcf1);
+        let n = 240;
+        let x = Matrix::from_fn(n, 1, |_, _| rng.uniform() * 3.0);
+        let y: Vec<f64> = (0..n)
+            .map(|i| (2.0 * x[(i, 0)]).sin() + 0.1 * rng.normal())
+            .collect();
+        let builder = SketchBuilder::new(SketchKind::Accumulation { m: 4 });
+        let res = cv_select(
+            Kernel::gaussian,
+            &x,
+            &y,
+            &[1e-5, 1e-1, 100.0],
+            &[0.5, 50.0],
+            &builder,
+            24,
+            4,
+            &mut rng,
+        );
+        assert_eq!(res.grid.len(), 6);
+        assert!(res.bandwidth < 50.0, "picked bw {}", res.bandwidth);
+        assert!(res.lambda < 100.0, "picked λ {}", res.lambda);
+        // the winner's CV error beats the flat-function error (variance of y)
+        let var = {
+            let m = y.iter().sum::<f64>() / n as f64;
+            y.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / n as f64
+        };
+        assert!(res.cv_error < var, "cv {} vs var {var}", res.cv_error);
+    }
+
+    #[test]
+    #[should_panic(expected = "cv: need")]
+    fn cv_rejects_tiny_data() {
+        let mut rng = Pcg64::seed(1);
+        let x = Matrix::zeros(3, 1);
+        let y = vec![0.0; 3];
+        let builder = SketchBuilder::new(SketchKind::Nystrom);
+        let _ = cv_select(
+            Kernel::gaussian,
+            &x,
+            &y,
+            &[0.1],
+            &[1.0],
+            &builder,
+            2,
+            3,
+            &mut rng,
+        );
+    }
+}

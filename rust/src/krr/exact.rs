@@ -1,0 +1,134 @@
+//! Exact kernel ridge regression (paper eq. 2).
+
+use crate::kernels::{cross_kernel, kernel_matrix, Kernel};
+use crate::linalg::{chol_factor, Matrix};
+
+/// Trained exact-KRR model: `f̂(x) = Σᵢ αᵢ k(x, xᵢ)`.
+#[derive(Clone, Debug)]
+pub struct KrrModel {
+    kernel: Kernel,
+    x_train: Matrix,
+    alpha: Vec<f64>,
+    fitted: Vec<f64>,
+}
+
+impl KrrModel {
+    /// Fit by solving `(K + nλI) α = Y` with Cholesky. Returns `None` if
+    /// the shifted kernel matrix is not PD at working precision (λ ≤ 0 or
+    /// catastrophically scaled inputs).
+    pub fn fit(kernel: Kernel, x: &Matrix, y: &[f64], lambda: f64) -> Option<KrrModel> {
+        let n = x.rows();
+        assert_eq!(y.len(), n, "krr: |y| != n");
+        let mut a = kernel_matrix(&kernel, x);
+        let fitted_from = a.clone();
+        a.add_diag(n as f64 * lambda);
+        let fac = chol_factor(&a)?;
+        let alpha = fac.solve(y);
+        let fitted = fitted_from.matvec(&alpha);
+        Some(KrrModel {
+            kernel,
+            x_train: x.clone(),
+            alpha,
+            fitted,
+        })
+    }
+
+    /// Fit when `K` is already available (bench sweeps share it).
+    pub fn fit_with_k(
+        kernel: Kernel,
+        x: &Matrix,
+        k: &Matrix,
+        y: &[f64],
+        lambda: f64,
+    ) -> Option<KrrModel> {
+        let n = x.rows();
+        let mut a = k.clone();
+        a.add_diag(n as f64 * lambda);
+        let fac = chol_factor(&a)?;
+        let alpha = fac.solve(y);
+        let fitted = k.matvec(&alpha);
+        Some(KrrModel {
+            kernel,
+            x_train: x.clone(),
+            alpha,
+            fitted,
+        })
+    }
+
+    /// In-sample fitted values `f̂(xᵢ)` (used by the approximation-error
+    /// experiments of Figure 1/2).
+    pub fn fitted(&self) -> &[f64] {
+        &self.fitted
+    }
+
+    /// Representer coefficients α.
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// Predict at query rows.
+    pub fn predict(&self, xq: &Matrix) -> Vec<f64> {
+        let kq = cross_kernel(&self.kernel, xq, &self.x_train);
+        kq.matvec(&self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// KRR with tiny λ interpolates smooth noiseless data.
+    #[test]
+    fn interpolates_noiseless_data() {
+        let mut rng = Pcg64::seed(101);
+        let n = 40;
+        let x = Matrix::from_fn(n, 1, |_, _| rng.uniform() * 2.0 - 1.0);
+        let y: Vec<f64> = (0..n).map(|i| (2.0 * x[(i, 0)]).sin()).collect();
+        let model = KrrModel::fit(Kernel::gaussian(0.5), &x, &y, 1e-10 / n as f64).unwrap();
+        for (f, t) in model.fitted().iter().zip(y.iter()) {
+            assert!((f - t).abs() < 1e-4, "{f} vs {t}");
+        }
+        // predict at train points matches fitted
+        let p = model.predict(&x);
+        for (a, b) in p.iter().zip(model.fitted().iter()) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn ridge_shrinks_towards_zero() {
+        let mut rng = Pcg64::seed(102);
+        let n = 30;
+        let x = Matrix::from_fn(n, 2, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n).map(|_| rng.normal() + 3.0).collect();
+        let small = KrrModel::fit(Kernel::gaussian(1.0), &x, &y, 1e-6).unwrap();
+        let large = KrrModel::fit(Kernel::gaussian(1.0), &x, &y, 100.0).unwrap();
+        let norm = |v: &[f64]| v.iter().map(|a| a * a).sum::<f64>();
+        assert!(norm(large.fitted()) < norm(small.fitted()));
+        // heavy ridge pushes fitted values towards 0
+        assert!(norm(large.fitted()) < 0.5 * norm(&y));
+    }
+
+    #[test]
+    fn fit_with_k_matches_fit() {
+        let mut rng = Pcg64::seed(103);
+        let x = Matrix::from_fn(20, 2, |_, _| rng.normal());
+        let y: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let kern = Kernel::matern(1.5, 1.0);
+        let k = kernel_matrix(&kern, &x);
+        let a = KrrModel::fit(kern, &x, &y, 0.01).unwrap();
+        let b = KrrModel::fit_with_k(kern, &x, &k, &y, 0.01).unwrap();
+        for (u, v) in a.alpha().iter().zip(b.alpha().iter()) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rejects_nonpositive_lambda_degeneracy() {
+        // duplicate points + λ = 0 → singular K, factorisation must fail
+        let x = Matrix::from_vec(2, 1, vec![0.5, 0.5]);
+        let y = vec![1.0, -1.0];
+        assert!(KrrModel::fit(Kernel::gaussian(1.0), &x, &y, 0.0).is_none());
+    }
+}

@@ -1,0 +1,273 @@
+//! Falkon (Rudi, Carratino & Rosasco, 2017) — the state-of-the-art Nyström
+//! variant the paper compares against in Figure 5 / §D.3.
+//!
+//! Falkon solves the sketched KRR system iteratively:
+//!
+//! ```text
+//!   (SᵀK²S + nλ SᵀKS) θ = SᵀKY
+//! ```
+//!
+//! by conjugate gradients with the Nyström preconditioner
+//! `P = T⁻¹ A⁻¹` where `T = chol(SᵀKS)` and
+//! `A = chol(T Tᵀ / d + nλ I)`, plus early stopping. The original paper
+//! fixes `S` to a column sub-sampling matrix; following §3.3 we generalise
+//! to any [`Sketch`] from this crate (accumulation sketches included) —
+//! the preconditioner only needs the `d×d` Grams.
+
+use crate::kernels::{gather_rows, Kernel};
+use crate::linalg::{chol_factor, CholFactor, Matrix};
+use crate::sketch::{sketch_gram, Sketch};
+
+/// Falkon solver options.
+#[derive(Clone, Copy, Debug)]
+pub struct FalkonOptions {
+    /// Maximum CG iterations (early stopping bound; Falkon's analysis needs
+    /// only `O(log n)`).
+    pub max_iters: usize,
+    /// Relative residual tolerance for early stopping.
+    pub tol: f64,
+}
+
+impl Default for FalkonOptions {
+    fn default() -> Self {
+        FalkonOptions {
+            max_iters: 20,
+            tol: 1e-8,
+        }
+    }
+}
+
+/// Falkon fit result.
+#[derive(Clone, Debug)]
+pub struct FalkonResult {
+    /// θ solving the sketched system (coefficients in sketch space).
+    pub theta: Vec<f64>,
+    /// In-sample fitted values `KSθ`.
+    pub fitted: Vec<f64>,
+    /// Landmark rows + folded weights (same prediction form as
+    /// [`crate::krr::SketchedKrr`]).
+    pub landmarks: Matrix,
+    /// Folded landmark weights.
+    pub beta: Vec<f64>,
+    /// CG iterations actually run.
+    pub iters: usize,
+    /// Final relative residual.
+    pub residual: f64,
+    /// Kernel evaluations performed.
+    pub kernel_evals: usize,
+}
+
+impl FalkonResult {
+    /// Predict at query rows.
+    pub fn predict(&self, kernel: &Kernel, xq: &Matrix) -> Vec<f64> {
+        let kq = crate::kernels::cross_kernel(kernel, xq, &self.landmarks);
+        kq.matvec(&self.beta)
+    }
+}
+
+/// Run Falkon-style preconditioned CG for sketched KRR.
+pub fn falkon(
+    kernel: Kernel,
+    x: &Matrix,
+    y: &[f64],
+    sketch: &Sketch,
+    lambda: f64,
+    opts: FalkonOptions,
+    k_full: Option<&Matrix>,
+) -> Option<FalkonResult> {
+    let n = x.rows();
+    assert_eq!(y.len(), n);
+    let gram = sketch_gram(&kernel, x, sketch, k_full);
+    let d = sketch.d();
+    let nl = n as f64 * lambda;
+
+    // Preconditioner factors. With G = SᵀKS = L·Lᵀ and E[SSᵀ] = I, the
+    // system operator is H = SᵀK²S + nλG ≈ G² + nλG = L(LᵀL + nλI)Lᵀ, so
+    // M⁻¹ = L⁻ᵀ (LᵀL + nλI)⁻¹ L⁻¹ — two triangular solves plus one small
+    // SPD solve per CG step. Jitter like the sketched direct solver.
+    let t_fac = factor_with_jitter(&gram.stks)?;
+    let tl = t_fac.l();
+    let mut a = crate::linalg::matmul_at_b(tl, tl);
+    a.add_diag(nl);
+    let a_fac = factor_with_jitter(&a)?;
+
+    // System operator: H θ = (SᵀK²S + nλ SᵀKS) θ.
+    let mut h = gram.stk2s.clone();
+    h.axpy(nl, &gram.stks);
+    h.symmetrize();
+
+    // rhs
+    let b = gram.ks.matvec_t(y);
+
+    // M⁻¹ r = L⁻ᵀ (LᵀL + nλI)⁻¹ L⁻¹ r (SPD by construction).
+    let apply_minv = |r: &[f64]| -> Vec<f64> {
+        let z1 = forward_sub(t_fac.l(), r);
+        let z2 = a_fac.solve(&z1);
+        backward_sub_t(t_fac.l(), &z2)
+    };
+
+    let mut theta = vec![0.0; d];
+    let mut r = b.clone(); // residual (θ₀ = 0)
+    let b_norm = norm2(&b).max(1e-300);
+    let mut z = apply_minv(&r);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut iters = 0;
+    let mut residual = norm2(&r) / b_norm;
+    for _ in 0..opts.max_iters {
+        if residual < opts.tol {
+            break;
+        }
+        iters += 1;
+        let hp = h.matvec(&p);
+        let php = dot(&p, &hp);
+        if php <= 0.0 || !php.is_finite() {
+            break; // numerical breakdown: keep the current iterate
+        }
+        let alpha = rz / php;
+        for i in 0..d {
+            theta[i] += alpha * p[i];
+            r[i] -= alpha * hp[i];
+        }
+        residual = norm2(&r) / b_norm;
+        z = apply_minv(&r);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..d {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+
+    let fitted = gram.ks.matvec(&theta);
+    let (landmarks, beta) = match sketch {
+        Sketch::Sparse(sp) => {
+            let (support, beta) = sp.landmark_weights(&theta);
+            (gather_rows(x, &support), beta)
+        }
+        Sketch::Dense(_) => (x.clone(), sketch.s_vec(&theta)),
+    };
+    Some(FalkonResult {
+        theta,
+        fitted,
+        landmarks,
+        beta,
+        iters,
+        residual,
+        kernel_evals: gram.kernel_evals,
+    })
+}
+
+fn factor_with_jitter(m: &Matrix) -> Option<CholFactor> {
+    let mut a = m.clone();
+    let scale = (0..a.rows()).map(|i| a[(i, i)]).fold(0.0f64, f64::max).max(1e-300);
+    for bump in 0..9 {
+        if let Some(f) = chol_factor(&a) {
+            return Some(f);
+        }
+        a.add_diag(scale * 1e-12 * 10f64.powi(bump));
+    }
+    None
+}
+
+/// Solve `L y = r` (L lower-triangular).
+fn forward_sub(l: &Matrix, r: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut y = r.to_vec();
+    for i in 0..n {
+        let row = l.row(i);
+        let mut s = y[i];
+        for p in 0..i {
+            s -= row[p] * y[p];
+        }
+        y[i] = s / row[i];
+    }
+    y
+}
+
+/// Solve `Lᵀ x = r`.
+fn backward_sub_t(l: &Matrix, r: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut x = r.to_vec();
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for p in (i + 1)..n {
+            s -= l[(p, i)] * x[p];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::krr::SketchedKrr;
+    use crate::rng::Pcg64;
+    use crate::sketch::{SketchBuilder, SketchKind};
+
+    fn toy(n: usize, seed: u64) -> (Matrix, Vec<f64>, Kernel, f64) {
+        let mut rng = Pcg64::seed(seed);
+        let x = Matrix::from_fn(n, 2, |_, _| rng.uniform());
+        let y: Vec<f64> = (0..n)
+            .map(|i| (4.0 * x[(i, 0)]).cos() + 0.05 * rng.normal())
+            .collect();
+        (x, y, Kernel::gaussian(0.5), 1e-3)
+    }
+
+    #[test]
+    fn falkon_matches_direct_sketched_solution() {
+        let (x, y, kern, lam) = toy(80, 121);
+        let mut rng = Pcg64::seed(122);
+        for kind in [SketchKind::Nystrom, SketchKind::Accumulation { m: 4 }] {
+            let s = SketchBuilder::new(kind).build(80, 12, &mut rng);
+            let direct = SketchedKrr::fit(kern, &x, &y, &s, lam, None).unwrap();
+            let fk = falkon(kern, &x, &y, &s, lam, FalkonOptions { max_iters: 200, tol: 1e-12 }, None)
+                .unwrap();
+            for (a, b) in fk.theta.iter().zip(direct.theta().iter()) {
+                assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn early_stopping_caps_iterations() {
+        let (x, y, kern, lam) = toy(60, 123);
+        let mut rng = Pcg64::seed(124);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 2 }).build(60, 8, &mut rng);
+        let fk = falkon(kern, &x, &y, &s, lam, FalkonOptions { max_iters: 3, tol: 0.0 }, None)
+            .unwrap();
+        assert_eq!(fk.iters, 3);
+    }
+
+    #[test]
+    fn preconditioner_converges_fast() {
+        // the whole point of Falkon: few iterations to tight residual
+        let (x, y, kern, lam) = toy(100, 125);
+        let mut rng = Pcg64::seed(126);
+        let s = SketchBuilder::new(SketchKind::Nystrom).build(100, 15, &mut rng);
+        let fk = falkon(kern, &x, &y, &s, lam, FalkonOptions::default(), None).unwrap();
+        assert!(fk.residual < 1e-6, "residual={}", fk.residual);
+        assert!(fk.iters <= 20);
+    }
+
+    #[test]
+    fn predict_works() {
+        let (x, y, kern, lam) = toy(50, 127);
+        let mut rng = Pcg64::seed(128);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 3 }).build(50, 10, &mut rng);
+        let fk = falkon(kern, &x, &y, &s, lam, FalkonOptions::default(), None).unwrap();
+        let p = fk.predict(&kern, &x);
+        for (a, b) in p.iter().zip(fk.fitted.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Sketched kernel k-means — the paper's §5 future work ("how the
+//! approximation error translates when the new sketching method is
+//! utilized to approximate some classical machine learning models, such as
+//! k-means and PCA").
+//!
+//! Kernel k-means in the sketched feature space: the sketched KPCA scores
+//! (`krr::sketched_kpca`) embed the data into `ℝ^r` where ordinary Lloyd
+//! iterations run in `O(n·r·k)` per step — the kernel matrix is never
+//! materialised beyond the `O(n·m·d)` sketch application.
+
+use crate::kernels::Kernel;
+use crate::krr::sketched_kpca;
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+use crate::sketch::Sketch;
+
+/// Result of sketched kernel k-means.
+#[derive(Clone, Debug)]
+pub struct KernelKmeans {
+    /// Cluster assignment per point.
+    pub labels: Vec<usize>,
+    /// Final within-cluster sum of squares in the embedded space.
+    pub inertia: f64,
+    /// Lloyd iterations run.
+    pub iters: usize,
+}
+
+/// Run sketched kernel k-means with `k` clusters on the top-`r` sketched
+/// kernel principal components.
+pub fn kernel_kmeans(
+    kernel: &Kernel,
+    x: &Matrix,
+    sketch: &Sketch,
+    k: usize,
+    r: usize,
+    max_iters: usize,
+    rng: &mut Pcg64,
+) -> Option<KernelKmeans> {
+    let n = x.rows();
+    assert!(k >= 1 && k <= n);
+    let kpca = sketched_kpca(kernel, x, sketch, r)?;
+    // weight components by √λ so distances approximate kernel-space ones
+    let mut emb = kpca.components.clone();
+    for j in 0..emb.cols() {
+        let w = kpca.eigenvalues[j].max(0.0).sqrt();
+        for i in 0..n {
+            emb[(i, j)] *= w;
+        }
+    }
+    Some(lloyd(&emb, k, max_iters, rng))
+}
+
+/// Plain Lloyd iterations with k-means++-style seeding.
+pub fn lloyd(emb: &Matrix, k: usize, max_iters: usize, rng: &mut Pcg64) -> KernelKmeans {
+    let (n, p) = (emb.rows(), emb.cols());
+    // k-means++ seeding
+    let mut centers = Matrix::zeros(k, p);
+    let first = rng.below(n as u64) as usize;
+    centers.row_mut(0).copy_from_slice(emb.row(first));
+    let mut dist2: Vec<f64> = (0..n).map(|i| sqd(emb.row(i), centers.row(0))).collect();
+    for c in 1..k {
+        let idx = rng.categorical(&dist2.iter().map(|&d| d.max(1e-12)).collect::<Vec<_>>());
+        centers.row_mut(c).copy_from_slice(emb.row(idx));
+        for i in 0..n {
+            dist2[i] = dist2[i].min(sqd(emb.row(i), centers.row(c)));
+        }
+    }
+
+    let mut labels = vec![0usize; n];
+    let mut iters = 0;
+    for it in 0..max_iters {
+        iters = it + 1;
+        // assign
+        let mut changed = false;
+        for i in 0..n {
+            let row = emb.row(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..k {
+                let d = sqd(row, centers.row(c));
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if labels[i] != best.1 {
+                labels[i] = best.1;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        // update
+        let mut counts = vec![0usize; k];
+        let mut sums = Matrix::zeros(k, p);
+        for i in 0..n {
+            counts[labels[i]] += 1;
+            let row = emb.row(i);
+            let srow = sums.row_mut(labels[i]);
+            for (s, v) in srow.iter_mut().zip(row.iter()) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f64;
+                let crow = centers.row_mut(c);
+                let srow = sums.row(c);
+                for (cv, sv) in crow.iter_mut().zip(srow.iter()) {
+                    *cv = sv * inv;
+                }
+            } else {
+                // re-seed an empty cluster at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        sqd(emb.row(a), centers.row(labels[a]))
+                            .partial_cmp(&sqd(emb.row(b), centers.row(labels[b])))
+                            .unwrap()
+                    })
+                    .unwrap();
+                centers.row_mut(c).copy_from_slice(emb.row(far));
+            }
+        }
+    }
+    let inertia = (0..n).map(|i| sqd(emb.row(i), centers.row(labels[i]))).sum();
+    KernelKmeans {
+        labels,
+        inertia,
+        iters,
+    }
+}
+
+fn sqd(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{SketchBuilder, SketchKind};
+
+    /// Two well-separated nonlinear clusters (concentric rings) that plain
+    /// Euclidean k-means cannot split but kernel k-means can.
+    fn rings(n_per: usize, rng: &mut Pcg64) -> (Matrix, Vec<usize>) {
+        let n = 2 * n_per;
+        let mut x = Matrix::zeros(n, 2);
+        let mut truth = vec![0usize; n];
+        for i in 0..n {
+            let r = if i < n_per { 0.3 } else { 2.0 };
+            truth[i] = (i >= n_per) as usize;
+            let a = rng.uniform() * std::f64::consts::TAU;
+            x[(i, 0)] = r * a.cos() + 0.03 * rng.normal();
+            x[(i, 1)] = r * a.sin() + 0.03 * rng.normal();
+        }
+        (x, truth)
+    }
+
+    fn agreement(labels: &[usize], truth: &[usize]) -> f64 {
+        let n = labels.len();
+        let same: usize = labels
+            .iter()
+            .zip(truth.iter())
+            .filter(|(a, b)| a == b)
+            .count();
+        (same.max(n - same)) as f64 / n as f64
+    }
+
+    #[test]
+    fn separates_rings_with_accumulation_sketch() {
+        let mut rng = Pcg64::seed(0xabc);
+        let (x, truth) = rings(60, &mut rng);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(120, 30, &mut rng);
+        let res = kernel_kmeans(&Kernel::gaussian(0.4), &x, &s, 2, 6, 50, &mut rng).unwrap();
+        let acc = agreement(&res.labels, &truth);
+        assert!(acc > 0.9, "ring separation accuracy {acc}");
+        assert!(res.inertia.is_finite());
+    }
+
+    #[test]
+    fn lloyd_converges_and_labels_in_range() {
+        let mut rng = Pcg64::seed(0xbcd);
+        let emb = Matrix::from_fn(40, 2, |i, _| if i < 20 { 0.0 } else { 5.0 });
+        let res = lloyd(&emb, 2, 100, &mut rng);
+        assert!(res.iters < 100);
+        assert!(res.labels.iter().all(|&l| l < 2));
+        // perfect split ⇒ inertia 0
+        assert!(res.inertia < 1e-12, "inertia {}", res.inertia);
+    }
+
+    #[test]
+    fn single_cluster_degenerate() {
+        let mut rng = Pcg64::seed(0xcde);
+        let emb = Matrix::from_fn(10, 2, |_, _| rng.normal());
+        let res = lloyd(&emb, 1, 10, &mut rng);
+        assert!(res.labels.iter().all(|&l| l == 0));
+    }
+}

@@ -1,0 +1,24 @@
+//! Kernel ridge regression estimators.
+//!
+//! * [`KrrModel`] — the exact estimator `f̂(x) = k(x,X)(K + nλI)⁻¹Y`
+//!   (paper eq. 2), `O(n³)`.
+//! * [`SketchedKrr`] — the sketched estimator
+//!   `f̂_S(x) = k(x,X) S (SᵀK²S + nλ SᵀKS)⁻¹ SᵀKY` (paper eq. 3), `O(nd²)`
+//!   once the sketch Grams are formed.
+//! * [`falkon`] — the Falkon baseline (Rudi et al. 2017): preconditioned
+//!   conjugate gradients with early stopping, generalised to take any
+//!   sketch from this crate (paper §3.3 discusses exactly this pairing).
+
+mod cv;
+mod exact;
+mod falkon;
+mod kkmeans;
+mod kpca;
+mod sketched;
+
+pub use cv::{cv_select, CvResult};
+pub use exact::KrrModel;
+pub use falkon::{falkon, FalkonOptions, FalkonResult};
+pub use kkmeans::{kernel_kmeans, lloyd, KernelKmeans};
+pub use kpca::{sketched_kpca, SketchedKpca};
+pub use sketched::{SketchedKrr, SketchedKrrReport};

@@ -1,0 +1,277 @@
+//! Sketched kernel ridge regression (paper eq. 3).
+
+use crate::kernels::{cross_kernel, gather_rows, Kernel};
+use crate::linalg::{chol_factor, Matrix};
+use crate::sketch::{sketch_gram, Sketch};
+use crate::util::timer::Timer;
+
+/// Trained sketched-KRR model.
+///
+/// Training solves `(SᵀK²S + nλ SᵀKS) θ = SᵀKY` (d×d system). Prediction
+/// folds `Sθ` into *landmark weights* over the sketch support: for a sparse
+/// accumulation sketch, `f̂_S(x) = Σ_u β_u k(x, x_u)` over at most `m·d`
+/// support points (paper §3.3); for dense sketches the support is all of X.
+#[derive(Clone, Debug)]
+pub struct SketchedKrr {
+    kernel: Kernel,
+    /// Landmark feature rows (support points of the sketch).
+    landmarks: Matrix,
+    /// Folded weights β (one per landmark row).
+    beta: Vec<f64>,
+    /// Solution of the d×d system.
+    theta: Vec<f64>,
+    /// In-sample fitted values `(KSθ)ᵢ`.
+    fitted: Vec<f64>,
+    report: SketchedKrrReport,
+}
+
+/// Cost/telemetry of one sketched fit — consumed by the bench harness and
+/// the coordinator's metrics endpoint.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SketchedKrrReport {
+    /// Kernel evaluations performed while forming the sketched Grams.
+    pub kernel_evals: usize,
+    /// Seconds forming `KS`, `SᵀKS`, `SᵀK²S`.
+    pub gram_secs: f64,
+    /// Seconds in the d×d Cholesky solve.
+    pub solve_secs: f64,
+    /// Projection dimension d.
+    pub d: usize,
+    /// Sketch non-zeros (density `m·d` for accumulation).
+    pub nnz: usize,
+    /// Ridge bump retries needed for PD-ness (0 in healthy runs).
+    pub jitter_bumps: u32,
+}
+
+impl SketchedKrr {
+    /// Fit the sketched estimator. `k_full` optionally shares a precomputed
+    /// kernel matrix across fits (bench sweeps).
+    pub fn fit(
+        kernel: Kernel,
+        x: &Matrix,
+        y: &[f64],
+        sketch: &Sketch,
+        lambda: f64,
+        k_full: Option<&Matrix>,
+    ) -> Option<SketchedKrr> {
+        let n = x.rows();
+        assert_eq!(y.len(), n, "sketched krr: |y| != n");
+        let mut t = Timer::start();
+        let gram = sketch_gram(&kernel, x, sketch, k_full);
+        let gram_secs = t.lap();
+
+        // A = SᵀK²S + nλ·SᵀKS ; rhs = SᵀKY = (KS)ᵀ y
+        let nl = n as f64 * lambda;
+        let mut a = gram.stk2s.clone();
+        a.axpy(nl, &gram.stks);
+        a.symmetrize();
+        let rhs = gram.ks.matvec_t(y);
+
+        // PD can fail when sampled columns collide (rank-deficient SᵀKS);
+        // bump the diagonal by escalating jitter like production KRR
+        // libraries do, and record it.
+        let mut jitter_bumps = 0;
+        let scale = (0..a.rows()).map(|i| a[(i, i)]).fold(0.0f64, f64::max).max(1e-300);
+        let fac = loop {
+            match chol_factor(&a) {
+                Some(f) => break f,
+                None => {
+                    jitter_bumps += 1;
+                    if jitter_bumps > 8 {
+                        return None;
+                    }
+                    a.add_diag(scale * 1e-12 * 10f64.powi(jitter_bumps as i32));
+                }
+            }
+        };
+        let theta = fac.solve(&rhs);
+        let solve_secs = t.lap();
+
+        let fitted = gram.ks.matvec(&theta);
+
+        // fold Sθ into landmark weights
+        let (landmarks, beta) = match sketch {
+            Sketch::Sparse(sp) => {
+                let (support, beta) = sp.landmark_weights(&theta);
+                (gather_rows(x, &support), beta)
+            }
+            Sketch::Dense(_) => (x.clone(), sketch.s_vec(&theta)),
+        };
+
+        Some(SketchedKrr {
+            kernel,
+            landmarks,
+            beta,
+            theta,
+            fitted,
+            report: SketchedKrrReport {
+                kernel_evals: gram.kernel_evals,
+                gram_secs,
+                solve_secs,
+                d: sketch.d(),
+                nnz: sketch.nnz(),
+                jitter_bumps,
+            },
+        })
+    }
+
+    /// In-sample fitted values `f̂_S(xᵢ)`.
+    pub fn fitted(&self) -> &[f64] {
+        &self.fitted
+    }
+
+    /// θ, the d-dimensional solution.
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    /// Landmark count (≤ m·d for accumulation sketches).
+    pub fn num_landmarks(&self) -> usize {
+        self.landmarks.rows()
+    }
+
+    /// Fit telemetry.
+    pub fn report(&self) -> &SketchedKrrReport {
+        &self.report
+    }
+
+    /// Landmark rows (sketch support points).
+    pub fn landmarks(&self) -> &Matrix {
+        &self.landmarks
+    }
+
+    /// Folded landmark weights β.
+    pub fn beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    /// Kernel used by this model.
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Rebuild a predict-only model from persisted parts (the coordinator's
+    /// model store round-trips landmarks + β as JSON).
+    pub fn from_parts(kernel: Kernel, landmarks: Matrix, beta: Vec<f64>) -> SketchedKrr {
+        assert_eq!(landmarks.rows(), beta.len());
+        SketchedKrr {
+            kernel,
+            landmarks,
+            beta,
+            theta: Vec::new(),
+            fitted: Vec::new(),
+            report: SketchedKrrReport::default(),
+        }
+    }
+
+    /// Predict at query rows: `O(|landmarks|)` kernel evals per query.
+    pub fn predict(&self, xq: &Matrix) -> Vec<f64> {
+        let kq = cross_kernel(&self.kernel, xq, &self.landmarks);
+        kq.matvec(&self.beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::krr::KrrModel;
+    use crate::rng::Pcg64;
+    use crate::sketch::{SketchBuilder, SketchKind};
+
+    fn toy_problem(n: usize, seed: u64) -> (Matrix, Vec<f64>, Kernel, f64) {
+        let mut rng = Pcg64::seed(seed);
+        let x = Matrix::from_fn(n, 2, |_, _| rng.uniform());
+        let y: Vec<f64> = (0..n)
+            .map(|i| (3.0 * x[(i, 0)]).sin() + 0.1 * rng.normal())
+            .collect();
+        (x, y, Kernel::gaussian(0.4), 1e-3)
+    }
+
+    #[test]
+    fn full_rank_sketch_recovers_exact_krr() {
+        // d = n with an invertible (Gaussian) sketch ⇒ K_S = K, so the
+        // sketched estimator equals the exact one.
+        let (x, y, kern, lam) = toy_problem(25, 111);
+        let mut rng = Pcg64::seed(112);
+        let s = SketchBuilder::new(SketchKind::Gaussian).build(25, 25, &mut rng);
+        let skrr = SketchedKrr::fit(kern, &x, &y, &s, lam, None).unwrap();
+        let exact = KrrModel::fit(kern, &x, &y, lam).unwrap();
+        for (a, b) in skrr.fitted().iter().zip(exact.fitted().iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn approximation_error_decreases_with_m() {
+        // the paper's core claim, in miniature: on *high-incoherence*
+        // (bimodal, unbalanced) data, accumulation error at m = 16 is much
+        // lower than Nyström (m = 1) at the same d, averaged over draws.
+        // (On low-incoherence data the two match — that is also the theory.)
+        let mut rng = Pcg64::seed(113);
+        let cfg = crate::data::BimodalConfig {
+            n: 150,
+            gamma: 0.5,
+            ..Default::default()
+        };
+        let (x, y, _) = crate::data::bimodal(&cfg, &mut rng);
+        let kern = Kernel::gaussian(0.5);
+        let lam = 1e-3;
+        let exact = KrrModel::fit(kern, &x, &y, lam).unwrap();
+        let err = |m: usize, seed: u64| -> f64 {
+            let mut rng = Pcg64::seed(seed);
+            let mut total = 0.0;
+            let reps = 15;
+            for _ in 0..reps {
+                let s = SketchBuilder::new(SketchKind::Accumulation { m }).build(150, 10, &mut rng);
+                let skrr = SketchedKrr::fit(kern, &x, &y, &s, lam, None).unwrap();
+                total += crate::stats::in_sample_sq_error(skrr.fitted(), exact.fitted());
+            }
+            total / reps as f64
+        };
+        let e1 = err(1, 7);
+        let e16 = err(16, 7);
+        assert!(
+            e16 < e1 * 0.8,
+            "accumulation should beat Nyström: m=1 err {e1} vs m=16 err {e16}"
+        );
+    }
+
+    #[test]
+    fn predict_consistent_with_fitted() {
+        let (x, y, kern, lam) = toy_problem(60, 114);
+        let mut rng = Pcg64::seed(115);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(60, 10, &mut rng);
+        let skrr = SketchedKrr::fit(kern, &x, &y, &s, lam, None).unwrap();
+        let p = skrr.predict(&x);
+        for (a, b) in p.iter().zip(skrr.fitted().iter()) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+        assert!(skrr.num_landmarks() <= 40);
+    }
+
+    #[test]
+    fn shared_k_matches_fast_path() {
+        let (x, y, kern, lam) = toy_problem(50, 116);
+        let k = crate::kernels::kernel_matrix(&kern, &x);
+        let mut rng1 = Pcg64::seed(117);
+        let mut rng2 = Pcg64::seed(117);
+        let s1 = SketchBuilder::new(SketchKind::Accumulation { m: 3 }).build(50, 9, &mut rng1);
+        let s2 = SketchBuilder::new(SketchKind::Accumulation { m: 3 }).build(50, 9, &mut rng2);
+        let a = SketchedKrr::fit(kern, &x, &y, &s1, lam, None).unwrap();
+        let b = SketchedKrr::fit(kern, &x, &y, &s2, lam, Some(&k)).unwrap();
+        for (u, v) in a.theta().iter().zip(b.theta().iter()) {
+            assert!((u - v).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn report_populated() {
+        let (x, y, kern, lam) = toy_problem(40, 118);
+        let mut rng = Pcg64::seed(119);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 2 }).build(40, 6, &mut rng);
+        let r = *SketchedKrr::fit(kern, &x, &y, &s, lam, None).unwrap().report();
+        assert_eq!(r.d, 6);
+        assert_eq!(r.nnz, 12);
+        assert!(r.kernel_evals > 0 && r.kernel_evals <= 40 * 12);
+    }
+}

@@ -1,0 +1,222 @@
+//! Ridge leverage scores — exact and BLESS-style approximate.
+//!
+//! The statistical leverage score of sample `i` (paper §2.2) is
+//! `ℓᵢ = (K(K + nλIₙ)⁻¹)ᵢᵢ`; sampling landmarks with `pᵢ ∝ ℓᵢ` makes the
+//! incoherence `M` collapse to `d_stat` (paper Theorem 8 remark), which is
+//! why the leverage-based Nyström method is a baseline in Figures 3–5.
+//! Exact scores cost `O(n³)`; [`bless`] implements a bottom-up approximate
+//! sampler in the spirit of BLESS (Rudi et al., 2018): leverage scores are
+//! estimated through a growing landmark set while the regularisation is
+//! annealed down to the target λ.
+
+use crate::kernels::{cross_kernel, gather_rows, kernel_diag, kernel_matrix, Kernel};
+use crate::linalg::{chol_factor, Matrix};
+use crate::rng::{AliasTable, Pcg64};
+
+/// Exact ridge leverage scores `ℓᵢ = (K(K+nλI)⁻¹)ᵢᵢ = 1 − nλ·[(K+nλI)⁻¹]ᵢᵢ`.
+pub fn exact_scores(k: &Matrix, lambda: f64) -> Vec<f64> {
+    let n = k.rows();
+    let nl = n as f64 * lambda;
+    let mut a = k.clone();
+    a.add_diag(nl);
+    let fac = chol_factor(&a).expect("K + nλI must be PD for λ > 0");
+    let inv = fac.inverse();
+    (0..n).map(|i| (1.0 - nl * inv[(i, i)]).clamp(0.0, 1.0)).collect()
+}
+
+/// Statistical dimension `d_stat = Σᵢ ℓᵢ` — the theoretical lower bound on
+/// the projection dimension (paper §2.2).
+pub fn stat_dim_from_scores(scores: &[f64]) -> f64 {
+    scores.iter().sum()
+}
+
+/// Result of the BLESS-style approximate leverage-score computation.
+#[derive(Clone, Debug)]
+pub struct BlessResult {
+    /// Approximate leverage scores (same indexing as the data).
+    pub scores: Vec<f64>,
+    /// Landmark set used in the final round.
+    pub landmarks: Vec<usize>,
+    /// Kernel evaluations performed (cost diagnostic).
+    pub kernel_evals: usize,
+}
+
+impl BlessResult {
+    /// Sampling distribution `pᵢ ∝ ℓ̂ᵢ` as an alias table.
+    pub fn sampling_table(&self) -> AliasTable {
+        AliasTable::new(&self.scores)
+    }
+}
+
+/// Bottom-up approximate ridge leverage scores.
+///
+/// Rounds `h = 0,1,…` anneal `λ_h = λ_0 / q^h` down to the target `λ`
+/// (`λ_0` chosen so the first round is easy: `λ_0 = 1`). Each round:
+///
+/// 1. sample a landmark set `J_h` (size `≤ q_size·d_target`) from the
+///    previous round's score estimates,
+/// 2. estimate all n scores against those landmarks via the Nyström
+///    resolvent `ℓ̂ᵢ = (1/nλ_h)·(kᵢᵢ − k_{iJ}(K_{JJ} + nλ_h D)⁻¹ k_{Ji})`
+///    with `D = diag(1/(s·p_J))` correcting for the sampling,
+///
+/// which costs `O(n·|J|² )` per round instead of `O(n³)` total.
+pub fn bless(
+    kernel: &Kernel,
+    x: &Matrix,
+    lambda: f64,
+    d_target: usize,
+    oversample: f64,
+    rng: &mut Pcg64,
+) -> BlessResult {
+    let n = x.rows();
+    assert!(n > 0 && lambda > 0.0);
+    let diag = kernel_diag(kernel, x);
+    let mut kernel_evals = 0usize;
+
+    // initial estimates: uniform
+    let mut scores = vec![1.0; n];
+    #[allow(unused_assignments)]
+    let mut landmarks: Vec<usize> = Vec::new();
+
+    // anneal λ_h geometrically from 1.0 down to the target
+    let q = 2.0;
+    let mut lam_h = 1.0f64.max(lambda);
+    loop {
+        lam_h = (lam_h / q).max(lambda);
+        // sample landmark set from current scores
+        let size = ((oversample * d_target as f64).ceil() as usize).clamp(4, n);
+        let table = AliasTable::new(&scores);
+        let mut set: Vec<usize> = (0..size).map(|_| table.sample(rng)).collect();
+        set.sort_unstable();
+        set.dedup();
+        let j = set;
+        let s = j.len();
+
+        // Nyström resolvent over the subset: A = K_JJ + s·λ_h·I. With
+        // J = [n] this reduces to the exact identity ℓᵢ = (1/nλ)(kᵢᵢ −
+        // kᵢ(K+nλI)⁻¹kᵢ); with |J| = s the sλ_h shift keeps the per-subset
+        // regularisation proportional to its size (BLESS's rescaling).
+        let xj = gather_rows(x, &j);
+        let kjj = kernel_matrix(kernel, &xj);
+        kernel_evals += s * s;
+        let mut a = kjj;
+        a.add_diag(s as f64 * lam_h);
+        let fac = match chol_factor(&a) {
+            Some(f) => f,
+            None => {
+                let mut aj = a;
+                aj.add_diag(1e-8);
+                chol_factor(&aj).expect("bless: jittered factor")
+            }
+        };
+
+        // estimate scores for all points
+        let kxj = cross_kernel(kernel, x, &xj); // n × s
+        kernel_evals += n * s;
+        let mut new_scores = vec![0.0; n];
+        for i in 0..n {
+            let ki = kxj.row(i);
+            let sol = fac.solve(ki);
+            let reduced: f64 = ki.iter().zip(sol.iter()).map(|(a, b)| a * b).sum();
+            let resid = (diag[i] - reduced).max(0.0);
+            new_scores[i] = (resid / (n as f64 * lam_h)).clamp(1e-12, 1.0);
+        }
+        scores = new_scores;
+        landmarks = j;
+
+        if lam_h <= lambda {
+            break;
+        }
+    }
+
+    BlessResult {
+        scores,
+        landmarks,
+        kernel_evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Two-cluster data where the paper's §3.2 failure case lives: a small
+    /// dense cluster far from a large one. The dense far cluster's points
+    /// must carry outsized leverage.
+    fn clustered(n_big: usize, n_small: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed(seed);
+        Matrix::from_fn(n_big + n_small, 2, |i, _| {
+            if i < n_big {
+                rng.uniform() // big diffuse cluster in [0,1]
+            } else {
+                8.0 + 0.01 * rng.uniform() // tiny tight far cluster
+            }
+        })
+    }
+
+    #[test]
+    fn exact_scores_in_unit_interval_and_sum_to_statdim() {
+        let x = clustered(30, 5, 131);
+        let k = kernel_matrix(&Kernel::gaussian(0.5), &x);
+        let lam = 1e-3;
+        let scores = exact_scores(&k, lam);
+        assert!(scores.iter().all(|&s| (0.0..=1.0).contains(&s)));
+        // d_stat = Σ σᵢ/(σᵢ+λ) over eigenvalues of K/n
+        let eig = crate::linalg::eigh(&k);
+        let n = x.rows() as f64;
+        let want: f64 = eig.w.iter().map(|&w| {
+            let s = (w / n).max(0.0);
+            s / (s + lam)
+        }).sum();
+        let got = stat_dim_from_scores(&scores);
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn far_cluster_points_have_high_leverage() {
+        let x = clustered(60, 3, 132);
+        let k = kernel_matrix(&Kernel::gaussian(0.4), &x);
+        let scores = exact_scores(&k, 1e-4);
+        let big_mean: f64 = scores[..60].iter().sum::<f64>() / 60.0;
+        let small_mean: f64 = scores[60..].iter().sum::<f64>() / 3.0;
+        assert!(
+            small_mean > big_mean,
+            "small far cluster should be high-leverage: {small_mean} vs {big_mean}"
+        );
+    }
+
+    #[test]
+    fn bless_correlates_with_exact() {
+        let x = clustered(50, 5, 133);
+        let kern = Kernel::gaussian(0.5);
+        let k = kernel_matrix(&kern, &x);
+        let lam = 1e-3;
+        let exact = exact_scores(&k, lam);
+        let mut rng = Pcg64::seed(134);
+        let approx = bless(&kern, &x, lam, 15, 3.0, &mut rng);
+        // rank correlation proxy: the top-5 exact points should rank highly
+        // in the approximation on average
+        let mut order: Vec<usize> = (0..55).collect();
+        order.sort_by(|&a, &b| approx.scores[b].partial_cmp(&approx.scores[a]).unwrap());
+        let rank_of = |i: usize| order.iter().position(|&j| j == i).unwrap();
+        let mut top_exact: Vec<usize> = (0..55).collect();
+        top_exact.sort_by(|&a, &b| exact[b].partial_cmp(&exact[a]).unwrap());
+        let mean_rank: f64 =
+            top_exact[..5].iter().map(|&i| rank_of(i) as f64).sum::<f64>() / 5.0;
+        assert!(mean_rank < 22.0, "top exact-leverage points rank {mean_rank} on average");
+        assert!(approx.kernel_evals < 55 * 55 * 12);
+    }
+
+    #[test]
+    fn bless_sampling_table_usable() {
+        let x = clustered(20, 2, 135);
+        let mut rng = Pcg64::seed(136);
+        let r = bless(&Kernel::gaussian(0.6), &x, 1e-2, 6, 2.0, &mut rng);
+        let t = r.sampling_table();
+        assert_eq!(t.len(), 22);
+        let i = t.sample(&mut rng);
+        assert!(i < 22);
+        assert!(!r.landmarks.is_empty());
+    }
+}

@@ -1,0 +1,45 @@
+//! # accumkrr
+//!
+//! Production-grade reproduction of *"Accumulation of Sub-Sampling Matrices
+//! with Applications to Statistical Computation"* (Chen & Yang, 2021):
+//! a unified framework for random sketches in kernel ridge regression (KRR)
+//! in which the sketching matrix `S ∈ ℝ^{n×d}` is the accumulation of `m`
+//! rescaled, randomly-signed sub-sampling matrices (paper Algorithm 1).
+//!
+//! * `m = 1`  → the classical Nyström method (sub-sampling sketch).
+//! * `m → ∞` → sub-Gaussian (Gaussian) sketching, by the CLT.
+//! * medium `m` → the paper's contribution: accuracy close to Gaussian
+//!   sketching at close to Nyström cost, because
+//!   `KS = Σᵢ K S₍ᵢ₎` costs `O(nmd)` rather than `O(n²d)`.
+//!
+//! The crate is organised in three layers:
+//!
+//! * **Substrates** (built from scratch — the offline image only ships the
+//!   `xla` and `anyhow` crates): [`rng`], [`linalg`], [`pool`], [`util`].
+//! * **Core statistical library**: [`kernels`], [`sketch`], [`leverage`],
+//!   [`krr`], [`stats`], [`data`].
+//! * **System layer**: [`runtime`] (PJRT execution of AOT-compiled JAX/Pallas
+//!   artifacts), [`coordinator`] (experiment scheduler, prediction server,
+//!   dynamic batcher), [`bench`] (paper figure regeneration harness).
+//!
+//! See `DESIGN.md` for the full inventory and the per-experiment index.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod kernels;
+pub mod krr;
+pub mod leverage;
+pub mod linalg;
+pub mod pool;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod stats;
+pub mod util;
+
+pub use kernels::Kernel;
+pub use krr::{KrrModel, SketchedKrr};
+pub use linalg::Matrix;
+pub use rng::Pcg64;
+pub use sketch::{Sketch, SketchKind};

@@ -1,0 +1,218 @@
+//! Cholesky factorisation and SPD solves.
+//!
+//! The KRR training paths solve `(K + nλI) α = Y` (exact estimator) and
+//! `(SᵀK²S + nλ SᵀKS) θ = SᵀKY` (sketched estimator, paper eq. 3); both
+//! matrices are symmetric positive-definite. We factor `A = L·Lᵀ` in place
+//! and back-substitute.
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor `L` with `A = L·Lᵀ`.
+#[derive(Clone, Debug)]
+pub struct CholFactor {
+    l: Matrix,
+}
+
+/// Factor a symmetric positive-definite matrix. Returns `None` when a pivot
+/// is non-positive (matrix not PD to working precision) — callers either
+/// bump the ridge or surface the failure.
+pub fn chol_factor(a: &Matrix) -> Option<CholFactor> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "chol: square required");
+    let mut l = a.clone();
+    for j in 0..n {
+        // diagonal
+        let mut d = l[(j, j)];
+        for p in 0..j {
+            let v = l[(j, p)];
+            d -= v * v;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return None;
+        }
+        let dj = d.sqrt();
+        l[(j, j)] = dj;
+        let inv = 1.0 / dj;
+        // column below the diagonal. Rows i and j are both contiguous in
+        // row-major storage; 4 accumulators break the FMA reduction
+        // dependency chain (§Perf: ~2.5 → ~4 gflop/s on the 256 case).
+        let (head, tail) = l.data_mut().split_at_mut((j + 1) * n);
+        let jrow = &head[j * n..j * n + j];
+        for (off, trow) in tail.chunks_mut(n).enumerate() {
+            let i = j + 1 + off;
+            let _ = i;
+            let irow = &trow[..j];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            let mut p = 0;
+            while p + 4 <= j {
+                s0 += irow[p] * jrow[p];
+                s1 += irow[p + 1] * jrow[p + 1];
+                s2 += irow[p + 2] * jrow[p + 2];
+                s3 += irow[p + 3] * jrow[p + 3];
+                p += 4;
+            }
+            let mut s = s0 + s1 + s2 + s3;
+            while p < j {
+                s += irow[p] * jrow[p];
+                p += 1;
+            }
+            trow[j] = (trow[j] - s) * inv;
+        }
+    }
+    // zero the strict upper triangle so `l` is exactly L
+    for i in 0..n {
+        for j in (i + 1)..n {
+            l[(i, j)] = 0.0;
+        }
+    }
+    Some(CholFactor { l })
+}
+
+impl CholFactor {
+    /// Order of the factor.
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// Access the lower-triangular factor.
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Solve `A x = b` via forward + backward substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = y[i];
+            for p in 0..i {
+                s -= row[p] * y[p];
+            }
+            y[i] = s / row[i];
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for p in (i + 1)..n {
+                s -= self.l[(p, i)] * y[p];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve with a matrix right-hand side (column-wise).
+    pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(b.rows(), b.cols());
+        for j in 0..b.cols() {
+            let col = b.col(j);
+            let x = self.solve(&col);
+            for i in 0..b.rows() {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// log-determinant of `A` (twice the log-det of L) — used by diagnostics.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// `A⁻¹` explicitly (only for small diagnostic matrices).
+    pub fn inverse(&self) -> Matrix {
+        self.solve_mat(&Matrix::eye(self.n()))
+    }
+}
+
+/// One-shot SPD solve.
+pub fn chol_solve(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    chol_factor(a).map(|f| f.solve(b))
+}
+
+/// One-shot SPD solve with matrix RHS.
+pub fn chol_solve_many(a: &Matrix, b: &Matrix) -> Option<Matrix> {
+    chol_factor(a).map(|f| f.solve_mat(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, syrk_at_a};
+    use crate::rng::Pcg64;
+
+    fn random_spd(r: &mut Pcg64, n: usize) -> Matrix {
+        let a = Matrix::from_fn(n + 3, n, |_, _| r.normal());
+        let mut g = syrk_at_a(&a);
+        g.add_diag(0.5); // well-conditioned
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut r = Pcg64::seed(31);
+        let a = random_spd(&mut r, 12);
+        let f = chol_factor(&a).unwrap();
+        let rec = matmul(f.l(), &f.l().transpose());
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((rec[(i, j)] - a[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut r = Pcg64::seed(32);
+        let a = random_spd(&mut r, 20);
+        let b: Vec<f64> = (0..20).map(|_| r.normal()).collect();
+        let x = chol_solve(&a, &b).unwrap();
+        let back = a.matvec(&x);
+        for (u, v) in back.iter().zip(b.iter()) {
+            assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(chol_factor(&a).is_none());
+    }
+
+    #[test]
+    fn solve_mat_multiple_rhs() {
+        let mut r = Pcg64::seed(33);
+        let a = random_spd(&mut r, 8);
+        let b = Matrix::from_fn(8, 3, |_, _| r.normal());
+        let x = chol_solve_many(&a, &b).unwrap();
+        let back = matmul(&a, &x);
+        for i in 0..8 {
+            for j in 0..3 {
+                assert!((back[(i, j)] - b[(i, j)]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_identity_zero() {
+        let f = chol_factor(&Matrix::eye(5)).unwrap();
+        assert!(f.logdet().abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_times_a_is_identity() {
+        let mut r = Pcg64::seed(34);
+        let a = random_spd(&mut r, 6);
+        let inv = chol_factor(&a).unwrap().inverse();
+        let id = matmul(&a, &inv);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id[(i, j)] - want).abs() < 1e-8);
+            }
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Symmetric eigendecomposition: Householder tridiagonalisation followed by
+//! implicit-shift QL with eigenvector accumulation (Numerical-Recipes-style
+//! `tred2`/`tqli` scheme, re-derived for row-major storage).
+//!
+//! This is the backbone of the paper's *diagnostics*: the K-satisfiability
+//! check (Definition 3) needs `U₁`, `Σ` of the empirical kernel matrix, the
+//! incoherence `M` (Theorem 8) needs `Ψ_δ = [Σ(Σ+nδI)]^{-1/2} Uᵀ`, and the
+//! statistical dimension is a spectral sum. It is *not* on the training hot
+//! path (KRR solves go through Cholesky).
+
+use super::Matrix;
+
+/// Result of [`eigh`]: `a = V · diag(w) · Vᵀ`, eigenvalues ascending.
+#[derive(Clone, Debug)]
+pub struct EighResult {
+    /// Eigenvalues in ascending order.
+    pub w: Vec<f64>,
+    /// Orthonormal eigenvectors; column `j` pairs with `w[j]`.
+    pub v: Matrix,
+}
+
+impl EighResult {
+    /// Eigenvalues in descending order with matching eigenvector columns
+    /// (the paper's convention σ₁ ≥ σ₂ ≥ …).
+    pub fn descending(&self) -> (Vec<f64>, Matrix) {
+        let n = self.w.len();
+        let mut w = vec![0.0; n];
+        let mut v = Matrix::zeros(n, n);
+        for j in 0..n {
+            let src = n - 1 - j;
+            w[j] = self.w[src];
+            for i in 0..n {
+                v[(i, j)] = self.v[(i, src)];
+            }
+        }
+        (w, v)
+    }
+}
+
+/// Eigendecomposition of a symmetric matrix. Input asymmetry beyond
+/// round-off is the caller's bug (use `Matrix::symmetrize`).
+pub fn eigh(a: &Matrix) -> EighResult {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh: square required");
+    if n == 0 {
+        return EighResult {
+            w: vec![],
+            v: Matrix::zeros(0, 0),
+        };
+    }
+    let mut z = a.clone();
+    let mut d = vec![0.0; n]; // diagonal
+    let mut e = vec![0.0; n]; // sub-diagonal
+    tred2(&mut z, &mut d, &mut e);
+    tqli(&mut d, &mut e, &mut z);
+    // sort ascending, permuting eigenvector columns
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let w: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut v = Matrix::zeros(n, n);
+    for (jnew, &jold) in order.iter().enumerate() {
+        for i in 0..n {
+            v[(i, jnew)] = z[(i, jold)];
+        }
+    }
+    EighResult { w, v }
+}
+
+/// Householder reduction to tridiagonal form; `z` is overwritten with the
+/// accumulated orthogonal transform Q (so the original A = Q·T·Qᵀ).
+fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let upd = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= upd;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    let upd = g * z[(k, i)];
+                    z[(k, j)] -= upd;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL iteration on the tridiagonal (d, e), accumulating the
+/// rotations into `z`.
+fn tqli(d: &mut [f64], e: &mut [f64], z: &mut Matrix) {
+    let n = d.len();
+    if n <= 1 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find a small sub-diagonal element to split
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 100, "eigh: QL failed to converge");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // recover from underflow (Numerical Recipes tqli)
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate rotation
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, syrk_at_a};
+    use crate::rng::Pcg64;
+
+    fn random_sym(r: &mut Pcg64, n: usize) -> Matrix {
+        let mut a = Matrix::from_fn(n, n, |_, _| r.normal());
+        let at = a.transpose();
+        a.axpy(1.0, &at);
+        a.scale(0.5);
+        a
+    }
+
+    fn check_decomposition(a: &Matrix, res: &EighResult, tol: f64) {
+        let n = a.rows();
+        // A v_j = w_j v_j
+        for j in 0..n {
+            let vj = res.v.col(j);
+            let av = a.matvec(&vj);
+            for i in 0..n {
+                assert!(
+                    (av[i] - res.w[j] * vj[i]).abs() < tol,
+                    "eigpair {j}: {} vs {}",
+                    av[i],
+                    res.w[j] * vj[i]
+                );
+            }
+        }
+        // VᵀV = I
+        let vtv = matmul(&res.v.transpose(), &res.v);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - want).abs() < tol);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let res = eigh(&a);
+        assert!((res.w[0] - 1.0).abs() < 1e-12);
+        assert!((res.w[1] - 2.0).abs() < 1e-12);
+        assert!((res.w[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 1 and 3
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let res = eigh(&a);
+        assert!((res.w[0] - 1.0).abs() < 1e-12);
+        assert!((res.w[1] - 3.0).abs() < 1e-12);
+        check_decomposition(&a, &res, 1e-10);
+    }
+
+    #[test]
+    fn random_symmetric_various_sizes() {
+        let mut r = Pcg64::seed(41);
+        for &n in &[1usize, 2, 5, 10, 30] {
+            let a = random_sym(&mut r, n);
+            let res = eigh(&a);
+            check_decomposition(&a, &res, 1e-8);
+            // ascending order
+            for j in 1..n {
+                assert!(res.w[j] >= res.w[j - 1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn psd_gram_matrix_nonnegative_spectrum() {
+        let mut r = Pcg64::seed(42);
+        let b = Matrix::from_fn(15, 8, |_, _| r.normal());
+        let g = syrk_at_a(&b); // PSD, rank 8
+        let res = eigh(&g);
+        assert!(res.w.iter().all(|&w| w > -1e-9));
+        check_decomposition(&g, &res, 1e-7);
+    }
+
+    #[test]
+    fn descending_helper() {
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let res = eigh(&a);
+        let (w, v) = res.descending();
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+        // first descending column is an eigenvector for 3
+        let av = a.matvec(&v.col(0));
+        for i in 0..2 {
+            assert!((av[i] - 3.0 * v[(i, 0)]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut r = Pcg64::seed(43);
+        let a = random_sym(&mut r, 20);
+        let res = eigh(&a);
+        let tr: f64 = (0..20).map(|i| a[(i, i)]).sum();
+        let ws: f64 = res.w.iter().sum();
+        assert!((tr - ws).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,221 @@
+//! Blocked matrix multiplication kernels.
+//!
+//! Cache-blocked, `i-k-j` loop order (row-major friendly: the inner loop
+//! streams both B's row and C's row), with an optional thread-pool split
+//! over row panels. This is the L3 hot path for `K·S_dense`, `SᵀK²S` and
+//! the Gaussian-sketch baseline; the sparse accumulation path lives in
+//! `sketch::apply`.
+
+use super::Matrix;
+use crate::pool;
+
+/// Row-panel height a single task works on. 64 rows × (k ≤ a few thousand)
+/// keeps the A-panel in L2 while C stays write-streamed.
+const PANEL: usize = 64;
+/// k-blocking: the B block of `KB × cols` must stay cache-resident.
+const KBLOCK: usize = 256;
+
+/// `C = A · B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    let bdat = b.data();
+    let adat = a.data();
+    // split C's rows into panels, execute panels on the pool
+    let cdat = c.data_mut();
+    pool::scope_chunks(cdat, n * PANEL, |panel_idx, chunk| {
+        let r0 = panel_idx * PANEL;
+        for kk in (0..k).step_by(KBLOCK) {
+            let kend = (kk + KBLOCK).min(k);
+            for (local_i, crow) in chunk.chunks_mut(n).enumerate() {
+                let i = r0 + local_i;
+                let arow = &adat[i * k..(i + 1) * k];
+                // 4-way k-unroll: one pass over crow consumes four B rows,
+                // quartering the C-row read/write traffic (§Perf: 6.7 →
+                // see EXPERIMENTS.md for the measured delta).
+                let mut p = kk;
+                while p + 4 <= kend {
+                    let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+                    let b0 = &bdat[p * n..p * n + n];
+                    let b1 = &bdat[(p + 1) * n..(p + 1) * n + n];
+                    let b2 = &bdat[(p + 2) * n..(p + 2) * n + n];
+                    let b3 = &bdat[(p + 3) * n..(p + 3) * n + n];
+                    for j in 0..n {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    p += 4;
+                }
+                while p < kend {
+                    let aval = arow[p];
+                    if aval != 0.0 {
+                        let brow = &bdat[p * n..(p + 1) * n];
+                        for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += aval * bv;
+                        }
+                    }
+                    p += 1;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// `C = Aᵀ · B` without materialising the transpose.
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    // C[i,:] += A[p,i] * B[p,:]   — stream rows of A and B together.
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let aval = arow[i];
+            if aval == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aval * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` (dot-product form; B's rows are contiguous).
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut c = Matrix::zeros(m, n);
+    let n_cols = n;
+    let adat = a.data();
+    let bdat = b.data();
+    let cdat = c.data_mut();
+    pool::scope_chunks(cdat, n_cols * PANEL, |panel_idx, chunk| {
+        let r0 = panel_idx * PANEL;
+        for (local_i, crow) in chunk.chunks_mut(n_cols).enumerate() {
+            let i = r0 + local_i;
+            let arow = &adat[i * k..(i + 1) * k];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &bdat[j * k..(j + 1) * k];
+                let mut s = 0.0;
+                for (x, y) in arow.iter().zip(brow.iter()) {
+                    s += x * y;
+                }
+                *cv = s;
+            }
+        }
+    });
+    c
+}
+
+/// `C = Aᵀ · A` (symmetric rank-k update), computing only the upper triangle
+/// and mirroring. Used for `SᵀK²S = (KS)ᵀ(KS)`.
+pub fn syrk_at_a(a: &Matrix) -> Matrix {
+    let (k, n) = (a.rows(), a.cols());
+    let mut c = Matrix::zeros(n, n);
+    for p in 0..k {
+        let row = a.row(p);
+        for i in 0..n {
+            let v = row[i];
+            if v == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in i..n {
+                crow[j] += v * row[j];
+            }
+        }
+    }
+    // mirror
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = c[(i, j)];
+            c[(j, i)] = v;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn randm(r: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| r.normal())
+    }
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for p in 0..a.cols() {
+                    s += a[(i, p)] * b[(p, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    fn close(a: &Matrix, b: &Matrix, tol: f64) -> bool {
+        a.rows() == b.rows()
+            && a.cols() == b.cols()
+            && a.data()
+                .iter()
+                .zip(b.data().iter())
+                .all(|(x, y)| (x - y).abs() < tol)
+    }
+
+    #[test]
+    fn matmul_matches_naive_various_shapes() {
+        let mut r = Pcg64::seed(21);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 13), (70, 33, 70), (128, 64, 5)] {
+            let a = randm(&mut r, m, k);
+            let b = randm(&mut r, k, n);
+            assert!(close(&matmul(&a, &b), &naive(&a, &b), 1e-9), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn at_b_matches() {
+        let mut r = Pcg64::seed(22);
+        let a = randm(&mut r, 31, 7);
+        let b = randm(&mut r, 31, 11);
+        assert!(close(&matmul_at_b(&a, &b), &naive(&a.transpose(), &b), 1e-9));
+    }
+
+    #[test]
+    fn a_bt_matches() {
+        let mut r = Pcg64::seed(23);
+        let a = randm(&mut r, 13, 9);
+        let b = randm(&mut r, 17, 9);
+        assert!(close(&matmul_a_bt(&a, &b), &naive(&a, &b.transpose()), 1e-9));
+    }
+
+    #[test]
+    fn syrk_matches_and_symmetric() {
+        let mut r = Pcg64::seed(24);
+        let a = randm(&mut r, 40, 12);
+        let c = syrk_at_a(&a);
+        assert!(close(&c, &naive(&a.transpose(), &a), 1e-9));
+        for i in 0..12 {
+            for j in 0..12 {
+                assert_eq!(c[(i, j)], c[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 4);
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows(), c.cols()), (0, 4));
+    }
+}

@@ -1,0 +1,110 @@
+//! Matrix norms: Frobenius, and operator (spectral) norm by power iteration
+//! on `AᵀA`. The K-satisfiability conditions (paper Definition 3) are
+//! operator-norm bounds on `U₁ᵀSSᵀU₁ − I` and `SᵀU₂Σ₂^{1/2}`; power
+//! iteration avoids a full SVD of those rectangular matrices.
+
+use super::Matrix;
+use crate::rng::Pcg64;
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Matrix) -> f64 {
+    a.data().iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Spectral norm of a square symmetric matrix by power iteration.
+pub fn op_norm(a: &Matrix, iters: usize) -> f64 {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut rng = Pcg64::seed(0x5eed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    normalize(&mut v);
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let mut w = a.matvec(&v);
+        lam = norm2(&w);
+        if lam == 0.0 {
+            return 0.0;
+        }
+        normalize(&mut w);
+        v = w;
+    }
+    // for symmetric A, |λ_max| is the operator norm; power iteration on A
+    // converges to the dominant-magnitude eigenvalue
+    lam
+}
+
+/// Spectral norm of a rectangular matrix: power iteration on the Gram
+/// operator `v ↦ Aᵀ(Av)` (never materialises `AᵀA`).
+pub fn op_norm_rect(a: &Matrix, iters: usize) -> f64 {
+    let (r, c) = (a.rows(), a.cols());
+    if r == 0 || c == 0 {
+        return 0.0;
+    }
+    let mut rng = Pcg64::seed(0x5eed2);
+    let mut v: Vec<f64> = (0..c).map(|_| rng.normal()).collect();
+    normalize(&mut v);
+    let mut s2 = 0.0;
+    for _ in 0..iters {
+        let av = a.matvec(&v);
+        let mut w = a.matvec_t(&av);
+        s2 = norm2(&w);
+        if s2 == 0.0 {
+            return 0.0;
+        }
+        normalize(&mut w);
+        v = w;
+    }
+    s2.sqrt()
+}
+
+fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm2(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigh;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn fro_of_identity() {
+        assert!((fro_norm(&Matrix::eye(4)) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn opnorm_diagonal() {
+        let a = Matrix::from_vec(3, 3, vec![1.0, 0.0, 0.0, 0.0, -5.0, 0.0, 0.0, 0.0, 2.0]);
+        let n = op_norm(&a, 200);
+        assert!((n - 5.0).abs() < 1e-6, "n={n}");
+    }
+
+    #[test]
+    fn opnorm_rect_matches_eig_of_gram() {
+        let mut r = Pcg64::seed(51);
+        let a = Matrix::from_fn(12, 5, |_, _| r.normal());
+        let got = op_norm_rect(&a, 300);
+        let gram = crate::linalg::gemm::matmul_at_b(&a, &a);
+        let want = eigh(&gram).w.last().unwrap().max(0.0).sqrt();
+        assert!((got - want).abs() < 1e-6 * want.max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Matrix::zeros(4, 3);
+        assert_eq!(op_norm_rect(&a, 50), 0.0);
+        assert_eq!(fro_norm(&a), 0.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! `accumkrr` — CLI launcher for the accumulation-sketch KRR framework.
+//!
+//! ```text
+//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost> [--replicates N]
+//!          [--n-max N] [--seed S] [--csv PATH] [--full]
+//! accumkrr train --name M --dataset rqa --n 2000 --sketch accum --m 4
+//!          [--d D] [--lambda L] [--bandwidth B] [--seed S] [--save PATH]
+//! accumkrr serve [--addr 127.0.0.1:7878]
+//! accumkrr info [--artifacts DIR]
+//! accumkrr gen-data --dataset rqa --n 1000 --out data.csv [--seed S]
+//! ```
+
+use accumkrr::bench::{self, BenchOpts};
+use accumkrr::coordinator::state::{model_to_json, ModelStore, TrainRequest};
+use accumkrr::coordinator::{serve, ServerConfig};
+use accumkrr::sketch::SketchKind;
+use accumkrr::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.positional.first().map(|s| s.as_str()) {
+        Some("bench") => cmd_bench(&args),
+        Some("train") => cmd_train(&args),
+        Some("cv") => cmd_cv(&args),
+        Some("kpca") => cmd_kpca(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        Some("gen-data") => cmd_gen_data(&args),
+        _ => {
+            eprintln!("usage: accumkrr <bench|train|cv|kpca|serve|info|gen-data> [flags]");
+            eprintln!("       see module docs / README for flags");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn bench_opts(args: &Args) -> BenchOpts {
+    // precedence: built-in defaults < --config file < explicit flags
+    let cfg = args
+        .flags
+        .get("config")
+        .map(|p| accumkrr::util::config::Config::load(p).expect("config file"))
+        .unwrap_or_default();
+    let defaults = BenchOpts::default();
+    BenchOpts {
+        replicates: args.usize_or(
+            "replicates",
+            cfg.usize_or("bench", "replicates", defaults.replicates),
+        ),
+        n_max: args.usize_or("n-max", cfg.usize_or("bench", "n_max", defaults.n_max)),
+        seed: args.usize_or("seed", cfg.usize_or("bench", "seed", defaults.seed as usize)) as u64,
+        csv: args
+            .flags
+            .get("csv")
+            .cloned()
+            .or_else(|| cfg.get("bench", "csv").and_then(|v| v.as_str().map(String::from))),
+        full: args.has("full") || cfg.bool_or("bench", "full", false),
+    }
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let Some(id) = args.positional.get(1) else {
+        eprintln!("bench: missing figure id");
+        return 2;
+    };
+    let opts = bench_opts(args);
+    match bench::run(id, &opts) {
+        Ok(rows) => {
+            bench::print_table(&format!("{id} (replicates={})", opts.replicates), &rows, &opts.csv);
+            0
+        }
+        Err(e) => {
+            eprintln!("bench: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let kind = match args.str_or("sketch", "accum") {
+        "nystrom" => SketchKind::Nystrom,
+        "gaussian" => SketchKind::Gaussian,
+        "rademacher" => SketchKind::Rademacher,
+        "verysparse" => SketchKind::VerySparse { sparsity: None },
+        "accum" => SketchKind::Accumulation {
+            m: args.usize_or("m", 4).max(1),
+        },
+        other => {
+            eprintln!("train: unknown sketch {other:?}");
+            return 2;
+        }
+    };
+    let req = TrainRequest {
+        name: args.str_or("name", "default").to_string(),
+        dataset: args.str_or("dataset", "bimodal").to_string(),
+        n: args.usize_or("n", 1000),
+        kind,
+        d: args.usize_or("d", 0),
+        lambda: args.f64_or("lambda", 0.0),
+        bandwidth: args.f64_or("bandwidth", 0.0),
+        seed: args.usize_or("seed", 1) as u64,
+    };
+    let store = ModelStore::new();
+    match store.train(&req) {
+        Ok(meta) => {
+            println!(
+                "trained {:?}: n={} sketch={} landmarks={} train_mse={:.6} train_secs={:.3}",
+                req.name,
+                meta.n_train,
+                meta.sketch,
+                meta.model.num_landmarks(),
+                meta.train_mse,
+                meta.train_secs
+            );
+            if let Some(path) = args.flags.get("save") {
+                let j = model_to_json(&meta.model);
+                if let Err(e) = std::fs::write(path, j.to_string()) {
+                    eprintln!("save failed: {e}");
+                    return 1;
+                }
+                println!("model saved to {path}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("train: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_cv(args: &Args) -> i32 {
+    use accumkrr::rng::Pcg64;
+    let mut rng = Pcg64::seed(args.usize_or("seed", 1) as u64);
+    let n = args.usize_or("n", 1000);
+    let dataset = args.str_or("dataset", "bimodal");
+    let (mut ds, dx, _) = match accumkrr::coordinator::state::dataset_for(dataset, n, 0.0, &mut rng)
+    {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("cv: {e}");
+            return 1;
+        }
+    };
+    accumkrr::data::normalize_features(&mut ds.x);
+    let d = args.usize_or("d", accumkrr::coordinator::state::paper_d(n, dx));
+    let m = args.usize_or("m", 4);
+    let builder = accumkrr::sketch::SketchBuilder::new(
+        accumkrr::sketch::SketchKind::Accumulation { m },
+    );
+    let lambdas = [1e-5, 1e-4, 1e-3, 1e-2, 1e-1];
+    let bandwidths = [0.25, 0.5, 1.0, 2.0, 4.0];
+    let res = accumkrr::krr::cv_select(
+        accumkrr::kernels::Kernel::gaussian,
+        &ds.x,
+        &ds.y,
+        &lambdas,
+        &bandwidths,
+        &builder,
+        d,
+        args.usize_or("folds", 5),
+        &mut rng,
+    );
+    println!("cv grid ({} points):", res.grid.len());
+    for (lam, bw, err) in &res.grid {
+        println!("  lambda={lam:<8.1e} bw={bw:<6} cv_err={err:.6}");
+    }
+    println!(
+        "selected: lambda={:.1e} bandwidth={} (cv error {:.6})",
+        res.lambda, res.bandwidth, res.cv_error
+    );
+    0
+}
+
+fn cmd_kpca(args: &Args) -> i32 {
+    use accumkrr::rng::Pcg64;
+    let mut rng = Pcg64::seed(args.usize_or("seed", 1) as u64);
+    let n = args.usize_or("n", 500);
+    let dataset = args.str_or("dataset", "bimodal");
+    let (mut ds, dx, kern) =
+        match accumkrr::coordinator::state::dataset_for(dataset, n, args.f64_or("bandwidth", 0.0), &mut rng) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("kpca: {e}");
+                return 1;
+            }
+        };
+    accumkrr::data::normalize_features(&mut ds.x);
+    let d = args.usize_or("d", accumkrr::coordinator::state::paper_d(n, dx) * 2);
+    let m = args.usize_or("m", 4);
+    let r = args.usize_or("r", 8);
+    let s = accumkrr::sketch::SketchBuilder::new(accumkrr::sketch::SketchKind::Accumulation { m })
+        .build(ds.n(), d, &mut rng);
+    match accumkrr::krr::sketched_kpca(&kern, &ds.x, &s, r) {
+        Some(res) => {
+            println!("sketched kernel PCA on {dataset} (n={n}, d={d}, m={m}):");
+            for (j, lam) in res.eigenvalues.iter().enumerate() {
+                println!("  component {j}: eigenvalue {lam:.6}");
+            }
+            0
+        }
+        None => {
+            eprintln!("kpca: factorisation failed");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = ServerConfig {
+        addr: args.str_or("addr", "127.0.0.1:7878").to_string(),
+        ..Default::default()
+    };
+    let store = Arc::new(ModelStore::new());
+    println!("accumkrr serving on {} (newline-delimited JSON)", cfg.addr);
+    match serve(store, cfg, true) {
+        Ok(_) => 0,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let dir = args.str_or("artifacts", "artifacts");
+    match accumkrr::runtime::ModelRuntime::open(dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts in {dir}:");
+            for a in &rt.manifest().artifacts {
+                println!(
+                    "  {:40} entry={:17} kernel={:9} n={} p={} d={} m={} b={}",
+                    a.name, a.entry, a.kernel, a.n, a.p, a.d, a.m, a.b
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("info: {e} (run `make artifacts` first?)");
+            1
+        }
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> i32 {
+    use accumkrr::rng::Pcg64;
+    let n = args.usize_or("n", 1000);
+    let name = args.str_or("dataset", "rqa");
+    let out = args.str_or("out", "data.csv");
+    let mut rng = Pcg64::seed(args.usize_or("seed", 1) as u64);
+    let result = accumkrr::coordinator::state::dataset_for(name, n, 0.0, &mut rng);
+    match result {
+        Ok((ds, _, _)) => {
+            let mut text = String::new();
+            let p = ds.x.cols();
+            let header: Vec<String> = (0..p).map(|j| format!("f{j}")).collect();
+            text.push_str(&header.join(","));
+            text.push_str(",y\n");
+            for i in 0..ds.n() {
+                let mut fields: Vec<String> =
+                    ds.x.row(i).iter().map(|v| format!("{v}")).collect();
+                fields.push(format!("{}", ds.y[i]));
+                text.push_str(&fields.join(","));
+                text.push('\n');
+            }
+            if let Err(e) = std::fs::write(out, text) {
+                eprintln!("gen-data: {e}");
+                return 1;
+            }
+            println!("wrote {n} rows of {name} to {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("gen-data: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Minimal data-parallel substrate (no `rayon` in the offline image).
+//!
+//! Built on `std::thread::scope`. Two primitives cover every parallel site
+//! in the library:
+//!
+//! * [`scope_chunks`] — split a mutable slice into fixed-size chunks and run
+//!   a closure per chunk (GEMM row panels, kernel-matrix row tiles).
+//! * [`parallel_map`] — map a closure over an index range collecting results
+//!   (experiment replicates in the coordinator's job scheduler).
+//!
+//! The worker count defaults to `std::thread::available_parallelism()` and
+//! can be pinned with `ACCUMKRR_THREADS` (the bench harness pins 1 for
+//! stable timings).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static CACHED: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("ACCUMKRR_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Override the worker count (tests exercise the multi-threaded path on
+/// single-core CI; the bench harness pins 1 for stable timings).
+pub fn set_num_threads(n: usize) {
+    CACHED.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Split `data` into consecutive chunks of at most `chunk_len` elements and
+/// invoke `f(chunk_index, chunk)` for each, distributing chunks over worker
+/// threads. Falls back to a plain serial loop when one worker suffices
+/// (avoids thread-spawn overhead on the 1-core bench machine).
+pub fn scope_chunks<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunk_len = chunk_len.max(1);
+    let nthreads = num_threads();
+    if nthreads <= 1 || data.len() <= chunk_len {
+        for (idx, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(idx, chunk);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
+    // hand ownership of each chunk to exactly one worker via an atomic cursor
+    let cells: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..nthreads.min(cells.len()) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                if let Some((idx, chunk)) = cells[i].lock().unwrap().take() {
+                    f(idx, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, preserving order of results.
+pub fn parallel_map<R: Send, F>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let nthreads = num_threads();
+    if nthreads <= 1 || n == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    scope_chunks(&mut out, 1, |i, slot| {
+        slot[0] = Some(f(i));
+    });
+    out.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_all_elements_once() {
+        let mut v = vec![0u32; 1000];
+        scope_chunks(&mut v, 37, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunk_indices_correct() {
+        let mut v = vec![0usize; 100];
+        scope_chunks(&mut v, 10, |idx, chunk| {
+            for x in chunk {
+                *x = idx;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i / 10);
+        }
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(57, |i| i * i);
+        assert_eq!(out, (0..57).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let mut v: Vec<u8> = vec![];
+        scope_chunks(&mut v, 4, |_, _| panic!("no chunks expected"));
+        assert!(parallel_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn multithreaded_path_covers_all_chunks() {
+        // force >1 workers even on a 1-core box, then restore
+        let before = num_threads();
+        set_num_threads(4);
+        let mut v = vec![0u32; 5000];
+        scope_chunks(&mut v, 13, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+        let out = parallel_map(100, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+        set_num_threads(before);
+    }
+
+    #[test]
+    fn multithreaded_gemm_matches_serial() {
+        use crate::linalg::{matmul, Matrix};
+        use crate::rng::Pcg64;
+        let mut r = Pcg64::seed(0x9001);
+        let a = Matrix::from_fn(130, 40, |_, _| r.normal());
+        let b = Matrix::from_fn(40, 50, |_, _| r.normal());
+        let before = num_threads();
+        set_num_threads(1);
+        let serial = matmul(&a, &b);
+        set_num_threads(3);
+        let parallel = matmul(&a, &b);
+        set_num_threads(before);
+        assert_eq!(serial.data(), parallel.data());
+    }
+}

@@ -1,0 +1,139 @@
+//! Walker/Vose alias method for O(1) sampling from a fixed discrete
+//! distribution.
+//!
+//! The leverage-score Nyström sampler draws `m·d` indices from an n-point
+//! non-uniform distribution; a linear scan per draw would be `O(n·m·d)`.
+//! The alias table costs `O(n)` to build and `O(1)` per draw.
+
+use super::Pcg64;
+
+/// Preprocessed alias table over `n` outcomes.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+    /// Normalised probabilities (kept for the rescaling 1/√(d·m·pᵢ) used by
+    /// sub-sampling sketches).
+    p: Vec<f64>,
+}
+
+impl AliasTable {
+    /// Build from (unnormalised, non-negative) weights. Panics if all
+    /// weights are zero or any is negative/NaN.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0);
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "alias: invalid weights"
+        );
+        let p: Vec<f64> = weights.iter().map(|w| w / total).collect();
+        let mut scaled: Vec<f64> = p.iter().map(|q| q * n as f64).collect();
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        let mut prob = vec![1.0; n];
+        let mut alias: Vec<usize> = (0..n).collect();
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // leftovers are numerically 1.0
+        AliasTable { prob, alias, p }
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True if the table is over zero outcomes (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Normalised probability of outcome `i`.
+    #[inline]
+    pub fn p(&self, i: usize) -> f64 {
+        self.p[i]
+    }
+
+    /// Draw one outcome.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let n = self.prob.len();
+        let i = rng.below(n as u64) as usize;
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    /// Uniform table over `n` outcomes (the classical Nyström sampler).
+    pub fn uniform(n: usize) -> Self {
+        AliasTable::new(&vec![1.0; n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_weights_empirically() {
+        let w = [0.5, 2.0, 0.0, 1.5];
+        let t = AliasTable::new(&w);
+        let mut rng = Pcg64::seed(11);
+        let mut counts = [0usize; 4];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        let total: f64 = w.iter().sum();
+        for i in [0usize, 1, 3] {
+            let emp = counts[i] as f64 / n as f64;
+            let want = w[i] / total;
+            assert!((emp - want).abs() < 0.01, "i={i} emp={emp} want={want}");
+        }
+    }
+
+    #[test]
+    fn normalised_probs_accessible() {
+        let t = AliasTable::new(&[1.0, 3.0]);
+        assert!((t.p(0) - 0.25).abs() < 1e-12);
+        assert!((t.p(1) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_table() {
+        let t = AliasTable::uniform(7);
+        assert_eq!(t.len(), 7);
+        for i in 0..7 {
+            assert!((t.p(i) - 1.0 / 7.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_outcome() {
+        let t = AliasTable::new(&[42.0]);
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..10 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+}

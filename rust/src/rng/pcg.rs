@@ -1,0 +1,88 @@
+//! PCG64 (PCG XSL RR 128/64) — O'Neill's permuted congruential generator.
+//!
+//! 128-bit LCG state with an xor-shift + random-rotate output permutation.
+//! Chosen for statistical quality, tiny state, and trivially reproducible
+//! streams (every experiment in the bench harness is seeded).
+
+/// PCG XSL RR 128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream constant fixed).
+    pub fn seed(seed: u64) -> Self {
+        Self::seed_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Create a generator with an explicit stream; distinct streams are
+    /// statistically independent (used to give each worker its own RNG).
+    pub fn seed_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut g = Pcg64 {
+            state: 0,
+            inc,
+        };
+        g.state = g.state.wrapping_mul(MULT).wrapping_add(g.inc);
+        g.state = g.state.wrapping_add(seed as u128);
+        g.state = g.state.wrapping_mul(MULT).wrapping_add(g.inc);
+        g.next_u64();
+        g
+    }
+
+    /// Derive a child generator (for per-replicate / per-worker streams).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let s = self.next_u64() ^ tag.rotate_left(17);
+        Pcg64::seed_stream(s, self.next_u64() | 1)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::seed_stream(1, 1);
+        let mut b = Pcg64::seed_stream(1, 2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_children_independent() {
+        let mut root = Pcg64::seed(9);
+        let mut c1 = root.split(0);
+        let mut c2 = root.split(1);
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn no_short_cycle() {
+        let mut g = Pcg64::seed(5);
+        let first = g.next_u64();
+        for _ in 0..10_000 {
+            assert_ne!(g.next_u64(), 0u64.wrapping_sub(1) ^ first ^ first.wrapping_add(1), "sanity");
+        }
+        // the real check: 10k outputs contain no immediate repetition
+        let mut prev = g.next_u64();
+        for _ in 0..10_000 {
+            let x = g.next_u64();
+            assert_ne!(x, prev);
+            prev = x;
+        }
+    }
+}

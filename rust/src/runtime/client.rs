@@ -1,0 +1,83 @@
+//! Thin PJRT wrapper over the `xla` crate.
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus the artifacts compiled on it.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable.
+pub struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (manifest key), for diagnostics.
+    pub name: String,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    /// Platform string (diagnostics / `accumkrr info`).
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &str, name: &str) -> Result<LoadedArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(LoadedArtifact {
+            exe,
+            name: name.to_string(),
+        })
+    }
+}
+
+impl LoadedArtifact {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("device → host transfer")?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an `f32` literal of the given shape from `f64` data (row-major).
+pub fn literal_f32(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+    let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+    Ok(xla::Literal::vec1(&f32s).reshape(dims)?)
+}
+
+/// Build an `i32` literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(x: f64) -> xla::Literal {
+    xla::Literal::scalar(x as f32)
+}
+
+/// Extract an f32 literal into `f64`s.
+pub fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect())
+}

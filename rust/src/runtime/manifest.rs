@@ -1,0 +1,159 @@
+//! Artifact manifest (`artifacts/manifest.json`) written by
+//! `python -m compile.aot`.
+
+use crate::util::json::Json;
+
+/// One artifact's metadata: entry point + static shape bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    /// Manifest name (also the file stem).
+    pub name: String,
+    /// HLO file name relative to the artifact dir.
+    pub file: String,
+    /// Entry point: `fit_sketched`, `predict_sketched`, `fit_exact`.
+    pub entry: String,
+    /// Kernel family baked into the artifact (`gaussian`, `matern32`, …).
+    pub kernel: String,
+    /// Training rows (fit buckets).
+    pub n: usize,
+    /// Feature dimension.
+    pub p: usize,
+    /// Projection dimension (sketched buckets).
+    pub d: usize,
+    /// Accumulation parameter (sketched buckets).
+    pub m: usize,
+    /// Query batch (predict buckets).
+    pub b: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// All artifact specs.
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Directory the files live in.
+    pub dir: String,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON.
+    pub fn parse(text: &str, dir: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("manifest: missing artifacts array")?;
+        let field = |o: &Json, k: &str| -> usize {
+            o.get(k).and_then(|v| v.as_usize()).unwrap_or(0)
+        };
+        let sfield = |o: &Json, k: &str| -> Result<String, String> {
+            o.get(k)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("manifest: artifact missing {k}"))
+        };
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(ArtifactSpec {
+                name: sfield(a, "name")?,
+                file: sfield(a, "file")?,
+                entry: sfield(a, "entry")?,
+                kernel: sfield(a, "kernel")?,
+                n: field(a, "n"),
+                p: field(a, "p"),
+                d: field(a, "d"),
+                m: field(a, "m"),
+                b: field(a, "b"),
+            });
+        }
+        Ok(Manifest {
+            artifacts,
+            dir: dir.to_string(),
+        })
+    }
+
+    /// Smallest fit bucket that fits `(kernel, n, p, d, m)` (padding up).
+    pub fn find_fit(&self, kernel: &str, n: usize, p: usize, d: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.entry == "fit_sketched"
+                    && a.kernel == kernel
+                    && a.n >= n
+                    && a.p == p
+                    && a.d >= d
+                    && a.m >= m
+            })
+            .min_by_key(|a| (a.n, a.d, a.m))
+    }
+
+    /// Smallest predict bucket that fits `(kernel, batch, p, d, m)`.
+    pub fn find_predict(&self, kernel: &str, b: usize, p: usize, d: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.entry == "predict_sketched"
+                    && a.kernel == kernel
+                    && a.b >= b
+                    && a.p == p
+                    && a.d >= d
+                    && a.m >= m
+            })
+            .min_by_key(|a| (a.b, a.d, a.m))
+    }
+
+    /// Full path of an artifact file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> String {
+        format!("{}/{}", self.dir, spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"version":1,"artifacts":[
+      {"name":"fit_gaussian_n512_p3_d32_m4","file":"f1.hlo.txt","entry":"fit_sketched","kernel":"gaussian","n":512,"p":3,"d":32,"m":4},
+      {"name":"fit_gaussian_n1024_p3_d48_m4","file":"f2.hlo.txt","entry":"fit_sketched","kernel":"gaussian","n":1024,"p":3,"d":48,"m":4},
+      {"name":"predict_gaussian_b64_p3_d32_m4","file":"p1.hlo.txt","entry":"predict_sketched","kernel":"gaussian","b":64,"p":3,"d":32,"m":4}
+    ]}"#;
+
+    #[test]
+    fn parses_specs() {
+        let m = Manifest::parse(SAMPLE, "arts").unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].n, 512);
+        assert_eq!(m.path_of(&m.artifacts[0]), "arts/f1.hlo.txt");
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, ".").unwrap();
+        let b = m.find_fit("gaussian", 300, 3, 20, 4).unwrap();
+        assert_eq!(b.n, 512);
+        let b2 = m.find_fit("gaussian", 600, 3, 20, 4).unwrap();
+        assert_eq!(b2.n, 1024);
+        assert!(m.find_fit("gaussian", 2000, 3, 20, 4).is_none());
+        assert!(m.find_fit("matern32", 300, 3, 20, 4).is_none());
+    }
+
+    #[test]
+    fn predict_bucket() {
+        let m = Manifest::parse(SAMPLE, ".").unwrap();
+        assert!(m.find_predict("gaussian", 64, 3, 32, 4).is_some());
+        assert!(m.find_predict("gaussian", 65, 3, 32, 4).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", ".").is_err());
+        assert!(Manifest::parse("{\"artifacts\":[{\"name\":\"x\"}]}", ".").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (built once by
+//! `python -m compile.aot`) and execute them from the Rust hot path.
+//! Python never runs at request time.
+//!
+//! * [`Engine`] wraps `xla::PjRtClient` (CPU) and compiles HLO **text**
+//!   artifacts (`artifacts/*.hlo.txt`). Text, not serialized protos: jax ≥
+//!   0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//!   the text parser reassigns ids.
+//! * [`Manifest`] / [`ArtifactSpec`] mirror `artifacts/manifest.json`.
+//! * [`ModelRuntime`] is the typed facade: pad a request to the nearest
+//!   shape bucket, convert `f64 → f32`, execute, unpad.
+
+mod client;
+mod manifest;
+mod model_runtime;
+
+pub use client::{
+    literal_f32, literal_i32, literal_scalar, literal_to_f64, Engine, LoadedArtifact,
+};
+pub use manifest::{ArtifactSpec, Manifest};
+pub use model_runtime::{FitOutput, ModelRuntime};

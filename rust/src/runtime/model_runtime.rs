@@ -1,0 +1,253 @@
+//! Typed facade over the compiled artifacts: shape-bucket padding, dtype
+//! conversion, execution, unpadding.
+//!
+//! Padding semantics (tested in `rust/tests/pjrt_roundtrip.rs`):
+//!
+//! * **fit**: extra data rows are placed at the *mean of the real rows*
+//!   with `y = 0` — they contribute kernel mass but the sketch never
+//!   samples them (all idx point at real rows), so `KS` rows for padding
+//!   are computed-but-ignored; extra sketch columns get `w = 0` (their θ
+//!   entries are driven to 0 by the jittered system) — padding rows appear
+//!   far away so their kernel columns are ≈0. In practice we pad features
+//!   at a large sentinel offset so padding is *kernel-invisible*.
+//! * **predict**: extra query rows are sentinel rows whose outputs are
+//!   dropped; extra (d, m) slots carry `w = 0`.
+
+use super::client::{literal_f32, literal_i32, literal_scalar, literal_to_f64, Engine, LoadedArtifact};
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::linalg::Matrix;
+use crate::sketch::SparseSketch;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Feature-space sentinel for padding rows: far from any normalised data,
+/// so every radial kernel value against real rows underflows to ~0.
+const PAD_SENTINEL: f64 = 1.0e3;
+
+/// Output of a PJRT fit call.
+#[derive(Clone, Debug)]
+pub struct FitOutput {
+    /// θ (d entries, unpadded).
+    pub theta: Vec<f64>,
+    /// In-sample fitted values (n entries, unpadded).
+    pub fitted: Vec<f64>,
+    /// Which artifact served the call.
+    pub artifact: String,
+}
+
+/// Engine + manifest + compiled-artifact cache.
+pub struct ModelRuntime {
+    engine: Engine,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedArtifact>>>,
+}
+
+impl ModelRuntime {
+    /// Open the artifact directory (compiles lazily, caches per artifact).
+    pub fn open(dir: &str) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        Ok(ModelRuntime {
+            engine: Engine::cpu()?,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform description.
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    fn compiled(&self, spec: &ArtifactSpec) -> Result<std::sync::Arc<LoadedArtifact>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(a) = cache.get(&spec.name) {
+            return Ok(a.clone());
+        }
+        let path = self.manifest.path_of(spec);
+        let loaded = std::sync::Arc::new(self.engine.load_hlo_text(&path, &spec.name)?);
+        cache.insert(spec.name.clone(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Sketched KRR fit through the AOT artifact.
+    ///
+    /// `sketch` must be a sparse sketch whose columns each hold ≤ bucket-m
+    /// entries (accumulation sketches by construction).
+    pub fn fit_sketched(
+        &self,
+        kernel_name: &str,
+        x: &Matrix,
+        y: &[f64],
+        sketch: &SparseSketch,
+        lambda: f64,
+        bandwidth: f64,
+    ) -> Result<FitOutput> {
+        let (n, p) = (x.rows(), x.cols());
+        let d = sketch.d();
+        let m_max = (0..d).map(|j| sketch.col(j).len()).max().unwrap_or(1);
+        let spec = self
+            .manifest
+            .find_fit(kernel_name, n, p, d, m_max)
+            .ok_or_else(|| {
+                anyhow!("no fit bucket for kernel={kernel_name} n={n} p={p} d={d} m={m_max}")
+            })?
+            .clone();
+        let exe = self.compiled(&spec)?;
+
+        // pad features: real rows then sentinel rows
+        let mut xp = vec![0.0f64; spec.n * spec.p];
+        for i in 0..n {
+            xp[i * spec.p..i * spec.p + p].copy_from_slice(x.row(i));
+        }
+        for i in n..spec.n {
+            for j in 0..spec.p {
+                xp[i * spec.p + j] = PAD_SENTINEL + (i as f64);
+            }
+        }
+        let mut yp = vec![0.0f64; spec.n];
+        yp[..n].copy_from_slice(y);
+
+        // pad sketch to (spec.d, spec.m): idx 0 with w = 0 is inert
+        let mut idx = vec![0i32; spec.d * spec.m];
+        let mut w = vec![0.0f64; spec.d * spec.m];
+        for j in 0..d {
+            for (t, &(row, weight)) in sketch.col(j).iter().enumerate() {
+                idx[j * spec.m + t] = row as i32;
+                w[j * spec.m + t] = weight;
+            }
+        }
+
+        let inputs = vec![
+            literal_f32(&xp, &[spec.n as i64, spec.p as i64])?,
+            literal_f32(&yp, &[spec.n as i64])?,
+            literal_i32(&idx, &[spec.d as i64, spec.m as i64])?,
+            literal_f32(&w, &[spec.d as i64, spec.m as i64])?,
+            literal_scalar(lambda * n as f64 / spec.n as f64), // rescale nλ: artifact multiplies by bucket n
+            literal_scalar(bandwidth),
+        ];
+        let out = exe.execute(&inputs)?;
+        if out.len() != 2 {
+            return Err(anyhow!("fit artifact returned {} outputs", out.len()));
+        }
+        let theta_full = literal_to_f64(&out[0])?;
+        let fitted_full = literal_to_f64(&out[1])?;
+        Ok(FitOutput {
+            theta: theta_full[..d].to_vec(),
+            fitted: fitted_full[..n].to_vec(),
+            artifact: spec.name.clone(),
+        })
+    }
+
+    /// Exact KRR fit through the AOT `fit_exact` artifact (small-n buckets;
+    /// the approximation-error experiments' reference line).
+    pub fn fit_exact(
+        &self,
+        kernel_name: &str,
+        x: &Matrix,
+        y: &[f64],
+        lambda: f64,
+        bandwidth: f64,
+    ) -> Result<FitOutput> {
+        let (n, p) = (x.rows(), x.cols());
+        let spec = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.entry == "fit_exact" && a.kernel == kernel_name && a.n >= n && a.p == p)
+            .min_by_key(|a| a.n)
+            .ok_or_else(|| anyhow!("no exact bucket for kernel={kernel_name} n={n} p={p}"))?
+            .clone();
+        let exe = self.compiled(&spec)?;
+        let mut xp = vec![0.0f64; spec.n * spec.p];
+        for i in 0..n {
+            xp[i * spec.p..i * spec.p + p].copy_from_slice(x.row(i));
+        }
+        for i in n..spec.n {
+            for j in 0..spec.p {
+                xp[i * spec.p + j] = PAD_SENTINEL + i as f64;
+            }
+        }
+        let mut yp = vec![0.0f64; spec.n];
+        yp[..n].copy_from_slice(y);
+        let inputs = vec![
+            literal_f32(&xp, &[spec.n as i64, spec.p as i64])?,
+            literal_f32(&yp, &[spec.n as i64])?,
+            literal_scalar(lambda * n as f64 / spec.n as f64),
+            literal_scalar(bandwidth),
+        ];
+        let out = exe.execute(&inputs)?;
+        let alpha = literal_to_f64(&out[0])?;
+        let fitted = literal_to_f64(&out[1])?;
+        Ok(FitOutput {
+            theta: alpha[..n].to_vec(),
+            fitted: fitted[..n].to_vec(),
+            artifact: spec.name.clone(),
+        })
+    }
+
+    /// Batched prediction through the AOT artifact.
+    ///
+    /// `support`: (d, m, p) sampled support points flattened per sketch
+    /// column; `w` the matching weights; `theta` from a fit.
+    pub fn predict_sketched(
+        &self,
+        kernel_name: &str,
+        xq: &Matrix,
+        support: &[Matrix], // one (m_j, p) matrix per sketch column
+        w: &[Vec<f64>],
+        theta: &[f64],
+        bandwidth: f64,
+    ) -> Result<Vec<f64>> {
+        let (b, p) = (xq.rows(), xq.cols());
+        let d = theta.len();
+        let m_max = w.iter().map(|c| c.len()).max().unwrap_or(1);
+        let spec = self
+            .manifest
+            .find_predict(kernel_name, b, p, d, m_max)
+            .ok_or_else(|| {
+                anyhow!("no predict bucket for kernel={kernel_name} b={b} p={p} d={d} m={m_max}")
+            })?
+            .clone();
+        let exe = self.compiled(&spec)?;
+
+        let mut xqp = vec![0.0f64; spec.b * spec.p];
+        for i in 0..b {
+            xqp[i * spec.p..i * spec.p + p].copy_from_slice(xq.row(i));
+        }
+        for i in b..spec.b {
+            for j in 0..spec.p {
+                xqp[i * spec.p + j] = PAD_SENTINEL + i as f64;
+            }
+        }
+
+        // support points (spec.d, spec.m, spec.p); w = 0 slots are inert
+        let mut xs = vec![PAD_SENTINEL; spec.d * spec.m * spec.p];
+        let mut wp = vec![0.0f64; spec.d * spec.m];
+        let mut thetap = vec![0.0f64; spec.d];
+        thetap[..d].copy_from_slice(theta);
+        for j in 0..d {
+            for t in 0..w[j].len() {
+                wp[j * spec.m + t] = w[j][t];
+                let base = (j * spec.m + t) * spec.p;
+                xs[base..base + p].copy_from_slice(support[j].row(t));
+            }
+        }
+
+        let inputs = vec![
+            literal_f32(&xqp, &[spec.b as i64, spec.p as i64])?,
+            literal_f32(&xs, &[spec.d as i64, spec.m as i64, spec.p as i64])?,
+            literal_f32(&wp, &[spec.d as i64, spec.m as i64])?,
+            literal_f32(&thetap, &[spec.d as i64])?,
+            literal_scalar(bandwidth),
+        ];
+        let out = exe.execute(&inputs)?;
+        let yq = literal_to_f64(&out[0])?;
+        Ok(yq[..b].to_vec())
+    }
+}

@@ -1,0 +1,189 @@
+//! Sketch application — forming `KS`, `SᵀKS`, `SᵀK²S` and `SᵀKY` without
+//! ever materialising the full `n×n` kernel matrix for sparse sketches.
+//!
+//! This is the paper's §3.3 efficiency argument made concrete:
+//!
+//! * sparse `S` with support `U` (|U| ≤ m·d): `KS` needs only the kernel
+//!   columns `K[:, U]` — `O(n·|U|)` kernel evaluations + `O(n·nnz)` flops —
+//!   then `SᵀKS = Sᵀ(KS)` is another `O(nnz·d)`;
+//! * dense `S` (Gaussian/Rademacher): the full `K` and an `O(n²d)` GEMM are
+//!   unavoidable, which is exactly the gap the paper's Figures 1/3 show.
+
+use super::{Sketch, SparseSketch};
+use crate::kernels::{cross_kernel, kernel_matrix, Kernel};
+use crate::linalg::{matmul, syrk_at_a, Matrix};
+
+/// All sketched quantities the KRR solvers need, with the cost model used
+/// to produce them.
+#[derive(Clone, Debug)]
+pub struct SketchedGram {
+    /// `K S` (n×d).
+    pub ks: Matrix,
+    /// `Sᵀ K S` (d×d, symmetrised).
+    pub stks: Matrix,
+    /// `Sᵀ K² S = (KS)ᵀ(KS)` (d×d).
+    pub stk2s: Matrix,
+    /// Number of kernel evaluations actually performed (cost diagnostic;
+    /// the bench harness reports it next to wall-clock).
+    pub kernel_evals: usize,
+}
+
+/// Compute `K[:, support]` for a sparse sketch and fold the per-column
+/// weights to get `KS` directly: column `j` of `KS` is
+/// `Σ_{(i,w)∈col j} w · K[:, i]`.
+pub fn sketch_kernel_cols(kernel: &Kernel, x: &Matrix, s: &SparseSketch) -> (Matrix, usize) {
+    let n = x.rows();
+    let support = s.support();
+    let landmarks = crate::kernels::gather_rows(x, &support);
+    let kcols = cross_kernel(kernel, x, &landmarks); // n × |U|
+    // position map for the fold
+    let mut pos = std::collections::HashMap::with_capacity(support.len());
+    for (p, &i) in support.iter().enumerate() {
+        pos.insert(i, p);
+    }
+    let mut ks = Matrix::zeros(n, s.d());
+    for (j, col) in (0..s.d()).map(|j| (j, s.col(j))) {
+        for &(i, w) in col {
+            let src = pos[&i];
+            for r in 0..n {
+                ks[(r, j)] += w * kcols[(r, src)];
+            }
+        }
+    }
+    (ks, n * support.len())
+}
+
+/// Form every Gram quantity for the given sketch.
+///
+/// `k_full`: pass a precomputed `K` to share it across sketches in a sweep
+/// (the bench harness does this for dense baselines); `None` lets sparse
+/// sketches use the column fast path and dense sketches build `K` once.
+pub fn sketch_gram(
+    kernel: &Kernel,
+    x: &Matrix,
+    sketch: &Sketch,
+    k_full: Option<&Matrix>,
+) -> SketchedGram {
+    let n = x.rows();
+    let (ks, kernel_evals) = match (sketch, k_full) {
+        (Sketch::Sparse(sp), None) => sketch_kernel_cols(kernel, x, sp),
+        (Sketch::Sparse(sp), Some(k)) => {
+            // K given: KS is a sparse column-combination, zero kernel evals.
+            let mut ks = Matrix::zeros(n, sp.d());
+            for j in 0..sp.d() {
+                for &(i, w) in sp.col(j) {
+                    let kcol_i = k.row(i); // K symmetric: row i = column i
+                    for r in 0..n {
+                        ks[(r, j)] += w * kcol_i[r];
+                    }
+                }
+            }
+            (ks, 0)
+        }
+        (Sketch::Dense(s), maybe_k) => {
+            let owned;
+            let k = match maybe_k {
+                Some(k) => k,
+                None => {
+                    owned = kernel_matrix(kernel, x);
+                    &owned
+                }
+            };
+            (matmul(k, s), if maybe_k.is_some() { 0 } else { n * n })
+        }
+    };
+    let mut stks = sketch.st_mat(&ks);
+    stks.symmetrize();
+    let stk2s = syrk_at_a(&ks);
+    SketchedGram {
+        ks,
+        stks,
+        stk2s,
+        kernel_evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_at_b;
+    use crate::rng::Pcg64;
+    use crate::sketch::{SketchBuilder, SketchKind};
+
+    fn setup(n: usize) -> (Kernel, Matrix, Pcg64) {
+        let mut rng = Pcg64::seed(91);
+        let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        (Kernel::gaussian(1.0), x, rng)
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64, what: &str) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                assert!(
+                    (a[(i, j)] - b[(i, j)]).abs() < tol,
+                    "{what} ({i},{j}): {} vs {}",
+                    a[(i, j)],
+                    b[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_fast_path_matches_dense_math() {
+        let (kernel, x, mut rng) = setup(40);
+        let k = kernel_matrix(&kernel, &x);
+        for kind in [
+            SketchKind::Nystrom,
+            SketchKind::Accumulation { m: 5 },
+            SketchKind::VerySparse { sparsity: Some(4.0) },
+        ] {
+            let s = SketchBuilder::new(kind.clone()).build(40, 7, &mut rng);
+            let g = sketch_gram(&kernel, &x, &s, None);
+            let sd = s.to_dense();
+            let ks_ref = matmul(&k, &sd);
+            assert_close(&g.ks, &ks_ref, 1e-9, &format!("KS {}", kind.name()));
+            let stks_ref = matmul_at_b(&sd, &ks_ref);
+            assert_close(&g.stks, &stks_ref, 1e-9, "StKS");
+            let stk2s_ref = matmul_at_b(&ks_ref, &ks_ref);
+            assert_close(&g.stk2s, &stk2s_ref, 1e-9, "StK2S");
+        }
+    }
+
+    #[test]
+    fn precomputed_k_path_matches() {
+        let (kernel, x, mut rng) = setup(25);
+        let k = kernel_matrix(&kernel, &x);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 3 }).build(25, 6, &mut rng);
+        let with_k = sketch_gram(&kernel, &x, &s, Some(&k));
+        let without = sketch_gram(&kernel, &x, &s, None);
+        assert_close(&with_k.ks, &without.ks, 1e-9, "KS");
+        assert_eq!(with_k.kernel_evals, 0);
+        assert!(without.kernel_evals > 0);
+    }
+
+    #[test]
+    fn dense_sketch_gram() {
+        let (kernel, x, mut rng) = setup(20);
+        let s = SketchBuilder::new(SketchKind::Gaussian).build(20, 5, &mut rng);
+        let g = sketch_gram(&kernel, &x, &s, None);
+        assert_eq!((g.ks.rows(), g.ks.cols()), (20, 5));
+        assert_eq!(g.kernel_evals, 400);
+        // symmetry of StKS
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(g.stks[(i, j)], g.stks[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_evals_scale_with_support_not_n_squared() {
+        let (kernel, x, mut rng) = setup(60);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 2 }).build(60, 4, &mut rng);
+        let g = sketch_gram(&kernel, &x, &s, None);
+        // support ≤ m·d = 8 → evals ≤ 60·8 ≪ 60²
+        assert!(g.kernel_evals <= 60 * 8);
+    }
+}

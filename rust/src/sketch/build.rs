@@ -1,0 +1,275 @@
+//! Sketch constructions — Algorithm 1 of the paper plus every baseline the
+//! evaluation compares against.
+
+use super::sparse::SparseSketch;
+use super::{Sampling, Sketch};
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Which sketch construction to use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SketchKind {
+    /// Classical Nyström: one sub-sampling matrix, *without* random signs
+    /// (the signs cancel in `K_S` anyway — paper §3.1 — but plain Nyström is
+    /// the conventional baseline form).
+    Nystrom,
+    /// The paper's Algorithm 1: accumulation of `m` rescaled, randomly
+    /// signed sub-sampling matrices. `m = 1` is a randomly-signed
+    /// sub-sampling sketch.
+    Accumulation {
+        /// Number of accumulated sub-sampling matrices.
+        m: usize,
+    },
+    /// Dense Gaussian sketch, entries `N(0, 1/d)` — the `m = ∞` extreme.
+    Gaussian,
+    /// Dense Rademacher sketch, entries `±1/√d` (sub-Gaussian baseline).
+    Rademacher,
+    /// Very sparse random projection (Li, Hastie & Church 2006): entries
+    /// `√(s/d)·{+1 w.p. 1/2s, 0 w.p. 1−1/s, −1 w.p. 1/2s}`. The canonical
+    /// choice `s = √n` is applied when `sparsity` is `None`.
+    VerySparse {
+        /// `s` parameter; `None` → `√n`.
+        sparsity: Option<f64>,
+    },
+}
+
+impl SketchKind {
+    /// Stable name for manifests / bench output.
+    pub fn name(&self) -> String {
+        match self {
+            SketchKind::Nystrom => "nystrom".into(),
+            SketchKind::Accumulation { m } => format!("accum_m{m}"),
+            SketchKind::Gaussian => "gaussian".into(),
+            SketchKind::Rademacher => "rademacher".into(),
+            SketchKind::VerySparse { .. } => "verysparse".into(),
+        }
+    }
+}
+
+/// Configured sketch factory: kind + sampling distribution.
+#[derive(Clone, Debug)]
+pub struct SketchBuilder {
+    kind: SketchKind,
+    sampling: Sampling,
+}
+
+impl SketchBuilder {
+    /// Builder with uniform sampling (the paper's default).
+    pub fn new(kind: SketchKind) -> Self {
+        SketchBuilder {
+            kind,
+            sampling: Sampling::Uniform,
+        }
+    }
+
+    /// Override the sampling distribution (e.g. leverage scores).
+    pub fn with_sampling(mut self, sampling: Sampling) -> Self {
+        self.sampling = sampling;
+        self
+    }
+
+    /// The configured kind.
+    pub fn kind(&self) -> &SketchKind {
+        &self.kind
+    }
+
+    /// Draw a sketch `S ∈ ℝ^{n×d}`.
+    pub fn build(&self, n: usize, d: usize, rng: &mut Pcg64) -> Sketch {
+        assert!(n > 0 && d > 0, "sketch: empty dims");
+        match &self.kind {
+            SketchKind::Nystrom => Sketch::Sparse(self.subsample(n, d, 1, false, rng)),
+            SketchKind::Accumulation { m } => {
+                assert!(*m >= 1, "accumulation: m >= 1");
+                Sketch::Sparse(self.subsample(n, d, *m, true, rng))
+            }
+            SketchKind::Gaussian => {
+                let scale = 1.0 / (d as f64).sqrt();
+                Sketch::Dense(Matrix::from_fn(n, d, |_, _| rng.normal() * scale))
+            }
+            SketchKind::Rademacher => {
+                let scale = 1.0 / (d as f64).sqrt();
+                Sketch::Dense(Matrix::from_fn(n, d, |_, _| rng.rademacher() * scale))
+            }
+            SketchKind::VerySparse { sparsity } => {
+                let s = sparsity.unwrap_or_else(|| (n as f64).sqrt()).max(1.0);
+                let mag = (s / d as f64).sqrt();
+                let p_nonzero = 1.0 / s;
+                let mut cols = Vec::with_capacity(d);
+                for _ in 0..d {
+                    let mut col = Vec::new();
+                    for i in 0..n {
+                        let u = rng.uniform();
+                        if u < p_nonzero {
+                            let sign = if u < p_nonzero * 0.5 { 1.0 } else { -1.0 };
+                            col.push((i, sign * mag));
+                        }
+                    }
+                    cols.push(col);
+                }
+                Sketch::Sparse(SparseSketch::new(n, cols))
+            }
+        }
+    }
+
+    /// Shared sub-sampling path: `m` accumulated draws per column, each
+    /// rescaled by `1/√(d·m·p_J)` and (optionally) randomly signed —
+    /// exactly Algorithm 1 in the paper.
+    fn subsample(
+        &self,
+        n: usize,
+        d: usize,
+        m: usize,
+        signed: bool,
+        rng: &mut Pcg64,
+    ) -> SparseSketch {
+        let dm = (d * m) as f64;
+        let mut cols = Vec::with_capacity(d);
+        for _ in 0..d {
+            let mut col = Vec::with_capacity(m);
+            for _ in 0..m {
+                let j = match &self.sampling {
+                    Sampling::Uniform => rng.below(n as u64) as usize,
+                    Sampling::Weighted(t) => t.sample(rng),
+                };
+                let p = self.sampling.prob(j, n);
+                let r = if signed { rng.rademacher() } else { 1.0 };
+                col.push((j, r / (dm * p).sqrt()));
+            }
+            cols.push(col);
+        }
+        SparseSketch::new(n, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_a_bt};
+    use crate::rng::AliasTable;
+
+    /// E[S Sᵀ] = I/… : every construction is normalised so each column has
+    /// E[s sᵀ] = Iₙ/d, hence E[S Sᵀ] = Iₙ. Check empirically.
+    fn empirical_ssT_close_to_identity(kind: SketchKind, n: usize, d: usize, reps: usize, tol: f64) {
+        let mut rng = Pcg64::seed(0xbeef);
+        let builder = SketchBuilder::new(kind);
+        let mut acc = Matrix::zeros(n, n);
+        for _ in 0..reps {
+            let s = builder.build(n, d, &mut rng).to_dense();
+            let sst = matmul_a_bt(&s, &s);
+            acc.axpy(1.0 / reps as f64, &sst);
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (acc[(i, j)] - want).abs() < tol,
+                    "({i},{j}) = {} want {want}",
+                    acc[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nystrom_expectation_identity() {
+        empirical_ssT_close_to_identity(SketchKind::Nystrom, 6, 40, 4000, 0.15);
+    }
+
+    #[test]
+    fn accumulation_expectation_identity() {
+        empirical_ssT_close_to_identity(SketchKind::Accumulation { m: 4 }, 6, 40, 4000, 0.15);
+    }
+
+    #[test]
+    fn gaussian_expectation_identity() {
+        empirical_ssT_close_to_identity(SketchKind::Gaussian, 6, 40, 2000, 0.15);
+    }
+
+    #[test]
+    fn verysparse_expectation_identity() {
+        empirical_ssT_close_to_identity(
+            SketchKind::VerySparse { sparsity: Some(3.0) },
+            6,
+            40,
+            4000,
+            0.15,
+        );
+    }
+
+    #[test]
+    fn nystrom_has_one_nnz_per_column() {
+        let mut rng = Pcg64::seed(81);
+        let s = SketchBuilder::new(SketchKind::Nystrom).build(100, 12, &mut rng);
+        assert_eq!(s.nnz(), 12);
+        if let Sketch::Sparse(sp) = &s {
+            for j in 0..12 {
+                assert_eq!(sp.col(j).len(), 1);
+                // uniform scaling: 1/√(d·1·(1/n)) = √(n/d)
+                let w = sp.col(j)[0].1;
+                assert!((w - (100.0f64 / 12.0).sqrt()).abs() < 1e-12);
+            }
+        } else {
+            panic!("expected sparse");
+        }
+    }
+
+    #[test]
+    fn accumulation_has_m_nnz_per_column_with_signs() {
+        let mut rng = Pcg64::seed(82);
+        let m = 7;
+        let s = SketchBuilder::new(SketchKind::Accumulation { m }).build(200, 9, &mut rng);
+        assert_eq!(s.nnz(), 9 * m);
+        if let Sketch::Sparse(sp) = &s {
+            let expect = (200.0f64 / (9.0 * m as f64)).sqrt();
+            let mut saw_neg = false;
+            for j in 0..9 {
+                for &(_, w) in sp.col(j) {
+                    assert!((w.abs() - expect).abs() < 1e-12);
+                    saw_neg |= w < 0.0;
+                }
+            }
+            assert!(saw_neg, "random signs should produce some negatives");
+        }
+    }
+
+    #[test]
+    fn weighted_sampling_rescales_by_prob() {
+        let mut rng = Pcg64::seed(83);
+        let n = 5;
+        let weights = vec![1.0, 2.0, 3.0, 4.0, 10.0];
+        let table = AliasTable::new(&weights);
+        let b = SketchBuilder::new(SketchKind::Nystrom)
+            .with_sampling(Sampling::Weighted(table.clone()));
+        let s = b.build(n, 50, &mut rng);
+        if let Sketch::Sparse(sp) = &s {
+            for j in 0..50 {
+                let (i, w) = sp.col(j)[0];
+                let want = 1.0 / (50.0 * table.p(i)).sqrt();
+                assert!((w - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn signs_cancel_in_gram() {
+        // SᵀKS with K = I: accumulation sketch gram must be PSD regardless
+        // of signs.
+        let mut rng = Pcg64::seed(84);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 3 })
+            .build(30, 6, &mut rng)
+            .to_dense();
+        let gram = matmul(&s.transpose(), &s);
+        let eig = crate::linalg::eigh(&gram);
+        assert!(eig.w.iter().all(|&w| w > -1e-10));
+    }
+
+    #[test]
+    fn verysparse_default_density_about_sqrt_n() {
+        let mut rng = Pcg64::seed(85);
+        let n = 400; // s = 20 → E[nnz per column] = n/s = 20
+        let s = SketchBuilder::new(SketchKind::VerySparse { sparsity: None })
+            .build(n, 30, &mut rng);
+        let per_col = s.nnz() as f64 / 30.0;
+        assert!((per_col - 20.0).abs() < 6.0, "per_col={per_col}");
+    }
+}

@@ -1,0 +1,228 @@
+//! Per-column COO storage for sparse sketching matrices.
+//!
+//! Column `j` holds `(row, weight)` pairs; an accumulation sketch has
+//! exactly `m` pairs per column (duplicates kept — they are statistically
+//! distinct draws and merging is a measurable but optional optimisation
+//! performed by [`SparseSketch::merged`]).
+
+use crate::linalg::Matrix;
+
+/// Sparse n×d sketching matrix, column-major COO.
+#[derive(Clone, Debug)]
+pub struct SparseSketch {
+    n: usize,
+    /// `cols[j]` = non-zeros of column j as (row index, weight).
+    cols: Vec<Vec<(usize, f64)>>,
+}
+
+impl SparseSketch {
+    /// Construct from raw per-column entries.
+    pub fn new(n: usize, cols: Vec<Vec<(usize, f64)>>) -> Self {
+        debug_assert!(cols
+            .iter()
+            .all(|c| c.iter().all(|&(i, w)| i < n && w.is_finite())));
+        SparseSketch { n, cols }
+    }
+
+    /// Data-space dimension `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Projection dimension `d`.
+    pub fn d(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Total stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.cols.iter().map(|c| c.len()).sum()
+    }
+
+    /// Entries of column `j`.
+    pub fn col(&self, j: usize) -> &[(usize, f64)] {
+        &self.cols[j]
+    }
+
+    /// Sorted, deduplicated list of all sampled row indices (the sketch's
+    /// *support*). `|support| ≤ nnz ≤ m·d`; kernel evaluation against the
+    /// support is what makes the accumulation method `O(n·md)`.
+    pub fn support(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = self
+            .cols
+            .iter()
+            .flat_map(|c| c.iter().map(|&(i, _)| i))
+            .collect();
+        idx.sort_unstable();
+        idx.dedup();
+        idx
+    }
+
+    /// Same sketch with duplicate rows inside each column merged (weights
+    /// summed). Semantically identical; reduces nnz when `m` draws collide.
+    pub fn merged(&self) -> SparseSketch {
+        let cols = self
+            .cols
+            .iter()
+            .map(|c| {
+                let mut c = c.clone();
+                c.sort_unstable_by_key(|&(i, _)| i);
+                let mut out: Vec<(usize, f64)> = Vec::with_capacity(c.len());
+                for (i, w) in c {
+                    match out.last_mut() {
+                        Some((li, lw)) if *li == i => *lw += w,
+                        _ => out.push((i, w)),
+                    }
+                }
+                out.retain(|&(_, w)| w != 0.0);
+                out
+            })
+            .collect();
+        SparseSketch { n: self.n, cols }
+    }
+
+    /// Dense materialisation (diagnostics only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n, self.d());
+        for (j, col) in self.cols.iter().enumerate() {
+            for &(i, w) in col {
+                m[(i, j)] += w;
+            }
+        }
+        m
+    }
+
+    /// `Sᵀ B` for `B ∈ ℝ^{n×c}`: row `j` of the result is
+    /// `Σ_{(i,w)∈col j} w · B[i, :]` — `O(nnz · c)`.
+    pub fn st_mat(&self, b: &Matrix) -> Matrix {
+        assert_eq!(b.rows(), self.n, "st_mat: row mismatch");
+        let c = b.cols();
+        let mut out = Matrix::zeros(self.d(), c);
+        for (j, col) in self.cols.iter().enumerate() {
+            let orow = out.row_mut(j);
+            for &(i, w) in col {
+                let brow = b.row(i);
+                for (o, x) in orow.iter_mut().zip(brow.iter()) {
+                    *o += w * x;
+                }
+            }
+        }
+        out
+    }
+
+    /// `Sᵀ v` — `O(nnz)`.
+    pub fn st_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        self.cols
+            .iter()
+            .map(|col| col.iter().map(|&(i, w)| w * v[i]).sum())
+            .collect()
+    }
+
+    /// `S w` — scatter `O(nnz)`.
+    pub fn s_vec(&self, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.d());
+        let mut out = vec![0.0; self.n];
+        for (j, col) in self.cols.iter().enumerate() {
+            let wj = w[j];
+            for &(i, wt) in col {
+                out[i] += wt * wj;
+            }
+        }
+        out
+    }
+
+    /// Fold the sketch into *landmark weights*: for each support point `u`,
+    /// `beta[u] = Σ_{(j,t): idx=u} coeff[j] · w[j,t]`. Returns
+    /// `(support, beta)` — this is how a trained sketched-KRR model predicts
+    /// with at most `|support|` kernel evaluations per query (paper §3.3).
+    pub fn landmark_weights(&self, coeff: &[f64]) -> (Vec<usize>, Vec<f64>) {
+        assert_eq!(coeff.len(), self.d());
+        let support = self.support();
+        // map row index → dense position
+        let mut pos = std::collections::HashMap::with_capacity(support.len());
+        for (p, &i) in support.iter().enumerate() {
+            pos.insert(i, p);
+        }
+        let mut beta = vec![0.0; support.len()];
+        for (j, col) in self.cols.iter().enumerate() {
+            for &(i, w) in col {
+                beta[pos[&i]] += coeff[j] * w;
+            }
+        }
+        (support, beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> SparseSketch {
+        // n=4, d=2; col0 = 2·e0 + 1·e2, col1 = −1·e2
+        SparseSketch::new(4, vec![vec![(0, 2.0), (2, 1.0)], vec![(2, -1.0)]])
+    }
+
+    #[test]
+    fn dims_and_nnz() {
+        let s = toy();
+        assert_eq!((s.n(), s.d(), s.nnz()), (4, 2, 3));
+        assert_eq!(s.support(), vec![0, 2]);
+    }
+
+    #[test]
+    fn to_dense_matches_definition() {
+        let d = toy().to_dense();
+        assert_eq!(d[(0, 0)], 2.0);
+        assert_eq!(d[(2, 0)], 1.0);
+        assert_eq!(d[(2, 1)], -1.0);
+        assert_eq!(d[(1, 0)], 0.0);
+    }
+
+    #[test]
+    fn st_vec_and_s_vec() {
+        let s = toy();
+        let v = [1.0, 10.0, 100.0, 1000.0];
+        assert_eq!(s.st_vec(&v), vec![102.0, -100.0]);
+        let w = [1.0, 2.0];
+        assert_eq!(s.s_vec(&w), vec![2.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn st_mat_matches_dense() {
+        let s = toy();
+        let b = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let got = s.st_mat(&b);
+        let want = crate::linalg::matmul_at_b(&s.to_dense(), &b);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert_eq!(got[(i, j)], want[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn merged_combines_duplicates() {
+        let s = SparseSketch::new(3, vec![vec![(1, 0.5), (1, 0.25), (0, 1.0)]]);
+        let m = s.merged();
+        assert_eq!(m.nnz(), 2);
+        let d = m.to_dense();
+        assert_eq!(d[(1, 0)], 0.75);
+        assert_eq!(d[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn merged_drops_cancelled_entries() {
+        let s = SparseSketch::new(2, vec![vec![(0, 1.0), (0, -1.0)]]);
+        assert_eq!(s.merged().nnz(), 0);
+    }
+
+    #[test]
+    fn landmark_weights_fold() {
+        let s = toy();
+        let (support, beta) = s.landmark_weights(&[3.0, 5.0]);
+        assert_eq!(support, vec![0, 2]);
+        // beta[0] = 3·2 = 6 ; beta[2] = 3·1 + 5·(−1) = −2
+        assert_eq!(beta, vec![6.0, -2.0]);
+    }
+}

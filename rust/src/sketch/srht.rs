@@ -1,0 +1,186 @@
+//! Two further classical sketches for completeness of the framework
+//! comparison: the Subsampled Randomized Hadamard Transform (SRHT) and
+//! CountSketch (sparse Johnson–Lindenstrauss).
+//!
+//! * **SRHT**: `S = √(n/d)·D·H·Pᵀ/√n` columns — here materialised as a
+//!   dense n×d matrix `(1/√d)·D H[:, idx]` with `H` the Walsh–Hadamard
+//!   matrix (power-of-two padded), `D` random signs, `idx` sampled columns.
+//!   Sub-Gaussian-like rows with `E[SSᵀ] = I`; the classical "fast JL"
+//!   baseline.
+//! * **CountSketch**: every *row* i is assigned one random column `h(i)`
+//!   with sign `s(i)` — exactly one non-zero per row, `E[SSᵀ] = I`. Its
+//!   transpose-apply is `O(n)`; unlike sub-sampling sketches it never
+//!   drops rows, but it collides them.
+//!
+//! Both integrate with [`super::Sketch`] so every bench/diagnostic in the
+//! crate (K-satisfiability, cost ablations, KRR fits) can run over them.
+
+use super::sparse::SparseSketch;
+use super::Sketch;
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Next power of two ≥ x.
+fn next_pow2(x: usize) -> usize {
+    let mut p = 1;
+    while p < x {
+        p <<= 1;
+    }
+    p
+}
+
+/// In-place Walsh–Hadamard transform of a power-of-two-length vector
+/// (unnormalised).
+pub fn fwht(v: &mut [f64]) {
+    let n = v.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let (a, b) = (v[j], v[j + h]);
+                v[j] = a + b;
+                v[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Draw an SRHT sketch as a dense n×d matrix.
+///
+/// Construction: pad to N = 2^k, apply signs `D`, pick `d` random
+/// Hadamard columns, scale by `1/√(d·N/n)`·(1/√n)… normalised so that
+/// `E[s sᵀ] = Iₙ/d` per column (matching every other sketch here).
+pub fn srht(n: usize, d: usize, rng: &mut Pcg64) -> Sketch {
+    let big_n = next_pow2(n);
+    // column c of (D·H) is D ⊙ H[:, c]; we build d of them.
+    let signs: Vec<f64> = (0..n).map(|_| rng.rademacher()).collect();
+    let cols: Vec<usize> = (0..d).map(|_| rng.below(big_n as u64) as usize).collect();
+    let mut s = Matrix::zeros(n, d);
+    // H[i, c] = (−1)^{popcount(i & c)}; entries ±1/√d give E[s sᵀ] = Iₙ/d
+    // per column (matching every other construction in this crate)
+    let scale = 1.0 / (d as f64).sqrt();
+    for i in 0..n {
+        let si = signs[i] * scale;
+        let row = s.row_mut(i);
+        for (j, &c) in cols.iter().enumerate() {
+            let h = if ((i & c).count_ones() & 1) == 0 { 1.0 } else { -1.0 };
+            row[j] = si * h;
+        }
+    }
+    Sketch::Dense(s)
+}
+
+/// Draw a CountSketch as a sparse n×d matrix (one non-zero per *row*).
+pub fn countsketch(n: usize, d: usize, rng: &mut Pcg64) -> Sketch {
+    let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); d];
+    for i in 0..n {
+        let j = rng.below(d as u64) as usize;
+        cols[j].push((i, rng.rademacher()));
+    }
+    Sketch::Sparse(SparseSketch::new(n, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_a_bt;
+
+    #[test]
+    fn fwht_matches_definition() {
+        let mut v = vec![1.0, 0.0, 0.0, 0.0];
+        fwht(&mut v);
+        assert_eq!(v, vec![1.0, 1.0, 1.0, 1.0]);
+        let mut w = vec![1.0, 2.0, 3.0, 4.0];
+        fwht(&mut w);
+        // H4 * [1,2,3,4] = [10, -2, -4, 0]
+        assert_eq!(w, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn fwht_self_inverse_up_to_n() {
+        let mut rng = Pcg64::seed(0x5a);
+        let orig: Vec<f64> = (0..16).map(|_| rng.normal()).collect();
+        let mut v = orig.clone();
+        fwht(&mut v);
+        fwht(&mut v);
+        for (a, b) in v.iter().zip(orig.iter()) {
+            assert!((a / 16.0 - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn srht_expectation_identity() {
+        let mut rng = Pcg64::seed(0x5b);
+        let n = 6;
+        let reps = 3000;
+        let mut acc = Matrix::zeros(n, n);
+        for _ in 0..reps {
+            let Sketch::Dense(s) = srht(n, 24, &mut rng) else { panic!() };
+            let sst = matmul_a_bt(&s, &s);
+            acc.axpy(1.0 / reps as f64, &sst);
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (acc[(i, j)] - want).abs() < 0.15,
+                    "({i},{j}) = {}",
+                    acc[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn countsketch_one_nnz_per_row() {
+        let mut rng = Pcg64::seed(0x5c);
+        let s = countsketch(50, 8, &mut rng);
+        assert_eq!(s.nnz(), 50);
+        let dense = s.to_dense();
+        for i in 0..50 {
+            let nnz = (0..8).filter(|&j| dense[(i, j)] != 0.0).count();
+            assert_eq!(nnz, 1, "row {i}");
+            let val: f64 = (0..8).map(|j| dense[(i, j)].abs()).sum();
+            assert!((val - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn countsketch_expectation_identity() {
+        let mut rng = Pcg64::seed(0x5d);
+        let n = 5;
+        let reps = 4000;
+        let mut acc = Matrix::zeros(n, n);
+        for _ in 0..reps {
+            let s = countsketch(n, 16, &mut rng).to_dense();
+            let sst = matmul_a_bt(&s, &s);
+            acc.axpy(1.0 / reps as f64, &sst);
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((acc[(i, j)] - want).abs() < 0.1, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn both_work_in_sketched_krr() {
+        use crate::kernels::Kernel;
+        use crate::krr::SketchedKrr;
+        let mut rng = Pcg64::seed(0x5e);
+        let n = 60;
+        let x = Matrix::from_fn(n, 2, |_, _| rng.uniform());
+        let y: Vec<f64> = (0..n).map(|i| (4.0 * x[(i, 0)]).sin()).collect();
+        for s in [srht(n, 20, &mut rng), countsketch(n, 20, &mut rng)] {
+            let m = SketchedKrr::fit(Kernel::gaussian(0.4), &x, &y, &s, 1e-4, None)
+                .expect("fit with srht/countsketch");
+            let mse = crate::stats::mse(m.fitted(), &y);
+            assert!(mse < 0.3, "mse {mse}");
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Error metrics used by every figure in the paper.
+//!
+//! The paper's in-sample (semi-)norm is `‖f̂_S − f̂_n‖²_n = (1/n)Σᵢ|f̂_S(xᵢ) −
+//! f̂_n(xᵢ)|²` (the displayed definition omits the `1/n`, but the plotted
+//! errors decay with n, matching the standard empirical-norm convention
+//! also used by Yang et al. 2017 — we follow that convention and note it
+//! here).
+
+/// `(1/n) Σ (a_i − b_i)²` — the approximation error between two in-sample
+/// prediction vectors (e.g. sketched vs exact KRR).
+pub fn in_sample_sq_error(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Mean squared error of predictions vs targets.
+pub fn mse(pred: &[f64], target: &[f64]) -> f64 {
+    in_sample_sq_error(pred, target)
+}
+
+/// Held-out test error (alias of [`mse`] with intention-revealing name).
+pub fn test_error(pred: &[f64], target: &[f64]) -> f64 {
+    mse(pred, target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_for_identical() {
+        assert_eq!(in_sample_sq_error(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn averages_squared_diffs() {
+        // diffs: 1, 3 → (1+9)/2 = 5
+        assert_eq!(in_sample_sq_error(&[1.0, 0.0], &[0.0, 3.0]), 5.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(in_sample_sq_error(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,301 @@
+//! K-satisfiability and incoherence diagnostics.
+
+use crate::linalg::{eigh, op_norm, op_norm_rect, Matrix};
+use crate::sketch::Sketch;
+
+/// Eigendecomposition of `K/n` cached for repeated diagnostics: the bench
+/// harness evaluates many sketches against one dataset.
+#[derive(Clone, Debug)]
+pub struct SpectralView {
+    /// Eigenvalues of `K/n`, descending (σ₁ ≥ … ≥ σₙ).
+    pub sigma: Vec<f64>,
+    /// Matching eigenvectors (columns), i.e. `U` with `K/n = U Σ Uᵀ`.
+    pub u: Matrix,
+    n: usize,
+}
+
+impl SpectralView {
+    /// Decompose `K` (the *unscaled* empirical kernel matrix).
+    pub fn new(k: &Matrix) -> SpectralView {
+        let n = k.rows();
+        let mut kn = k.clone();
+        kn.scale(1.0 / n as f64);
+        kn.symmetrize();
+        let (sigma, u) = eigh(&kn).descending();
+        SpectralView {
+            sigma: sigma.into_iter().map(|s| s.max(0.0)).collect(),
+            u,
+            n,
+        }
+    }
+
+    /// `d_δ = min{i : σᵢ ≤ δ} − 1` — the number of eigenvalues above δ.
+    pub fn d_delta(&self, delta: f64) -> usize {
+        self.sigma.iter().take_while(|&&s| s > delta).count()
+    }
+
+    /// Statistical dimension `Σᵢ σᵢ/(σᵢ+δ)`.
+    pub fn stat_dim(&self, delta: f64) -> f64 {
+        self.sigma.iter().map(|&s| s / (s + delta)).sum()
+    }
+
+    /// Number of data points.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// Statistical dimension straight from a kernel matrix.
+pub fn stat_dim(k: &Matrix, delta: f64) -> f64 {
+    SpectralView::new(k).stat_dim(delta)
+}
+
+/// Outcome of the K-satisfiability check (paper Definition 3).
+#[derive(Clone, Copy, Debug)]
+pub struct KSatReport {
+    /// `‖U₁ᵀ S Sᵀ U₁ − I‖_op` — must be ≤ 1/2.
+    pub top_distortion: f64,
+    /// `‖Sᵀ U₂ Σ₂^{1/2}‖_op` — must be ≤ c·√δ.
+    pub tail_norm: f64,
+    /// `√δ` for reference (so callers can form the ratio).
+    pub sqrt_delta: f64,
+    /// `d_δ` used for the split.
+    pub d_delta: usize,
+    /// Condition 1: top_distortion ≤ 1/2.
+    pub cond1: bool,
+    /// Condition 2 with the conventional constant c = 1.
+    pub cond2: bool,
+}
+
+impl KSatReport {
+    /// Both conditions hold (c = 1).
+    pub fn satisfied(&self) -> bool {
+        self.cond1 && self.cond2
+    }
+}
+
+/// Evaluate K-satisfiability of a sketch for regularisation level `δ`.
+pub fn k_satisfiability(view: &SpectralView, sketch: &Sketch, delta: f64) -> KSatReport {
+    let n = view.n();
+    let dd = view.d_delta(delta).max(1).min(n);
+    let s = sketch.to_dense();
+
+    // U₁ᵀ S  (d_δ × d)
+    let u1ts = {
+        let mut out = Matrix::zeros(dd, s.cols());
+        for r in 0..dd {
+            // row r = (column r of U)ᵀ · S
+            let ucol = view.u.col(r);
+            let v = s.matvec_t(&ucol);
+            out.row_mut(r).copy_from_slice(&v);
+        }
+        out
+    };
+    // G = U₁ᵀSSᵀU₁ − I
+    let mut g = crate::linalg::matmul_a_bt(&u1ts, &u1ts);
+    g.add_diag(-1.0);
+    let top_distortion = op_norm(&g, 300);
+
+    // SᵀU₂Σ₂^{1/2}  (d × (n−d_δ))
+    let tail = {
+        let cols = n - dd;
+        let mut out = Matrix::zeros(s.cols(), cols);
+        for c in 0..cols {
+            let j = dd + c;
+            let ucol = view.u.col(j);
+            let sv = s.matvec_t(&ucol);
+            let w = view.sigma[j].max(0.0).sqrt();
+            for r in 0..s.cols() {
+                out[(r, c)] = sv[r] * w;
+            }
+        }
+        out
+    };
+    let tail_norm = if n > dd {
+        op_norm_rect(&tail, 300)
+    } else {
+        0.0
+    };
+
+    let sqrt_delta = delta.sqrt();
+    KSatReport {
+        top_distortion,
+        tail_norm,
+        sqrt_delta,
+        d_delta: dd,
+        cond1: top_distortion <= 0.5,
+        cond2: tail_norm <= sqrt_delta,
+    }
+}
+
+/// Incoherence `M` (paper Theorem 8):
+///
+/// ```text
+///   M = max{ maxᵢ ‖ψ̃ᵢ‖²/pᵢ , maxᵢ (‖ψᵢ‖² − ‖ψ̃ᵢ‖²)/pᵢ }
+/// ```
+///
+/// where `ψᵢ` is the i-th column of `Ψ_δ = [Σ(Σ + δI)⁻¹]^{1/2} Uᵀ` and `ψ̃ᵢ`
+/// its first `d_δ` coordinates. (`Σ` here holds eigenvalues of `K/n`; the
+/// paper's `nδ` with eigenvalues of `K` is the same quantity.)
+pub fn incoherence(view: &SpectralView, probs: &[f64], delta: f64) -> f64 {
+    let n = view.n();
+    assert_eq!(probs.len(), n);
+    let dd = view.d_delta(delta);
+    // weight per eigendirection: σ_r/(σ_r + δ)
+    let w: Vec<f64> = view.sigma.iter().map(|&s| s / (s + delta)).collect();
+    let mut m = 0.0f64;
+    for i in 0..n {
+        let mut top = 0.0;
+        let mut tail = 0.0;
+        for r in 0..n {
+            let v = view.u[(i, r)];
+            let contrib = w[r] * v * v;
+            if r < dd {
+                top += contrib;
+            } else {
+                tail += contrib;
+            }
+        }
+        let p = probs[i].max(1e-300);
+        m = m.max(top / p).max(tail / p);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{kernel_matrix, Kernel};
+    use crate::rng::Pcg64;
+    use crate::sketch::{SketchBuilder, SketchKind};
+
+    fn uniform_probs(n: usize) -> Vec<f64> {
+        vec![1.0 / n as f64; n]
+    }
+
+    #[test]
+    fn d_delta_and_statdim_monotone() {
+        let mut rng = Pcg64::seed(141);
+        let x = Matrix::from_fn(40, 2, |_, _| rng.uniform());
+        let k = kernel_matrix(&Kernel::gaussian(0.5), &x);
+        let view = SpectralView::new(&k);
+        assert!(view.d_delta(1e-6) >= view.d_delta(1e-2));
+        assert!(view.stat_dim(1e-6) >= view.stat_dim(1e-2));
+        assert!(view.stat_dim(1e-3) <= 40.0);
+    }
+
+    #[test]
+    fn identity_sketch_is_k_satisfiable() {
+        // S = I (d = n) preserves everything: distortion 0, tail bounded by
+        // the spectrum itself.
+        let mut rng = Pcg64::seed(142);
+        let x = Matrix::from_fn(20, 2, |_, _| rng.uniform());
+        let k = kernel_matrix(&Kernel::gaussian(0.7), &x);
+        let view = SpectralView::new(&k);
+        let s = Sketch::Dense(Matrix::eye(20));
+        let delta = 1e-3;
+        let rep = k_satisfiability(&view, &s, delta);
+        assert!(rep.top_distortion < 1e-6, "{}", rep.top_distortion);
+        // tail norm = ‖Σ₂^{1/2}‖ = √σ_{d_δ+1} ≤ √δ
+        assert!(rep.cond2, "tail={} vs √δ={}", rep.tail_norm, rep.sqrt_delta);
+    }
+
+    #[test]
+    fn gaussian_distorts_top_eigenspace_less_than_nystrom_on_incoherent_data() {
+        // two-cluster construction from paper §3.2: high incoherence makes
+        // plain Nyström distort the top eigenspace far more than a Gaussian
+        // sketch at the same d; accumulation with medium m sits in between,
+        // close to Gaussian.
+        // 2 far points out of 80 put an eigendirection (σ ≈ c/n = 0.025 >
+        // δ = 0.02) almost entirely on two coordinates: uniform Nyström
+        // misses both with probability (1−2/80)^d and then loses the whole
+        // direction (distortion 1).
+        let mut rng = Pcg64::seed(143);
+        let n_big = 78;
+        let n_small = 2;
+        let n = n_big + n_small;
+        let x = Matrix::from_fn(n, 2, |i, _| {
+            if i < n_big {
+                2.0 * rng.uniform()
+            } else {
+                30.0 + 0.05 * rng.uniform()
+            }
+        });
+        let k = kernel_matrix(&Kernel::gaussian(1.0), &x);
+        let view = SpectralView::new(&k);
+        let delta = 0.02;
+        let d = 60;
+        let trials = 8;
+        let mean_distortion = |kind: SketchKind| -> f64 {
+            let mut rng = Pcg64::seed(144);
+            (0..trials)
+                .map(|_| {
+                    let s = SketchBuilder::new(kind.clone()).build(n, d, &mut rng);
+                    k_satisfiability(&view, &s, delta).top_distortion
+                })
+                .sum::<f64>()
+                / trials as f64
+        };
+        let nys = mean_distortion(SketchKind::Nystrom);
+        let accum = mean_distortion(SketchKind::Accumulation { m: 8 });
+        let gauss = mean_distortion(SketchKind::Gaussian);
+        assert!(
+            gauss < 0.7 * nys,
+            "gaussian distortion {gauss} should be well below nystrom {nys}"
+        );
+        assert!(
+            accum < 0.8 * nys,
+            "accumulation m=8 distortion {accum} should be well below nystrom {nys}"
+        );
+    }
+
+    #[test]
+    fn incoherence_high_for_unbalanced_clusters_uniform_sampling() {
+        // paper §3.2 example: uniform sampling on unbalanced bimodal data
+        // → M of order n.
+        let mut rng = Pcg64::seed(145);
+        let n_big = 78;
+        let n_small = 2;
+        let n = n_big + n_small;
+        let x = Matrix::from_fn(n, 2, |i, _| {
+            if i < n_big {
+                2.0 * rng.uniform() // diffuse majority, smooth spectrum
+            } else {
+                30.0 + 0.05 * rng.uniform() // tight far minority
+            }
+        });
+        let k = kernel_matrix(&Kernel::gaussian(1.0), &x);
+        let view = SpectralView::new(&k);
+        let delta = 0.02;
+        let m_uniform = incoherence(&view, &uniform_probs(n), delta);
+        // leverage-proportional sampling collapses M towards d_stat
+        let scores = crate::leverage::exact_scores(&k, delta);
+        let total: f64 = scores.iter().sum();
+        let probs: Vec<f64> = scores.iter().map(|s| s / total).collect();
+        let m_lev = incoherence(&view, &probs, delta);
+        let d_stat = view.stat_dim(delta);
+        assert!(
+            m_uniform > 2.0 * m_lev,
+            "uniform M = {m_uniform} should dwarf leverage M = {m_lev}"
+        );
+        // leverage sampling brings M to the order of d_stat (Theorem 8 rmk)
+        assert!(
+            m_lev < 3.0 * d_stat,
+            "leverage M = {m_lev} should be O(d_stat = {d_stat})"
+        );
+        assert!(m_uniform > n as f64 / 4.0, "M = {m_uniform} vs n = {n}");
+    }
+
+    #[test]
+    fn ksat_report_flags() {
+        let rep = KSatReport {
+            top_distortion: 0.4,
+            tail_norm: 0.01,
+            sqrt_delta: 0.1,
+            d_delta: 3,
+            cond1: true,
+            cond2: true,
+        };
+        assert!(rep.satisfied());
+    }
+}

@@ -1,0 +1,10 @@
+//! Statistical diagnostics from the paper's theory:
+//! K-satisfiability (Definition 3), incoherence `M` (Theorem 8),
+//! statistical dimension / `d_δ`, and the error metrics used by every
+//! figure.
+
+mod errors;
+mod ksat;
+
+pub use errors::{in_sample_sq_error, mse, test_error};
+pub use ksat::{incoherence, k_satisfiability, stat_dim, KSatReport, SpectralView};

@@ -1,0 +1,133 @@
+//! Property-testing mini-framework (no `proptest` in the offline image).
+//!
+//! A property is a closure over a [`Gen`] that panics on violation. The
+//! runner executes it across `cases` seeds; on failure it re-runs the same
+//! seed with shrunk size parameters to report the smallest configuration
+//! that still fails. Used by the coordinator/sketch/linalg property suites
+//! (e.g. "`E[S Sᵀ]` scaling holds for every (n, d, m, distribution)").
+
+use crate::rng::Pcg64;
+
+/// Randomised input generator handed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    /// Current size budget; shrinking lowers it.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]` scaled into the current size budget.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Bool with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.uniform() < p
+    }
+
+    /// Choose uniformly from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Vector of normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Positive weights (bounded away from zero).
+    pub fn weights(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| 0.05 + self.rng.uniform()).collect()
+    }
+
+    /// Access the raw RNG (seeding library objects under test).
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` random cases. On panic, retries the failing seed
+/// at smaller sizes and reports the smallest failing size.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let seed = 0xacc0_0000 + case as u64;
+        let run = |size: usize| -> Result<(), String> {
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen {
+                    rng: Pcg64::seed(seed),
+                    size,
+                };
+                prop(&mut g);
+            });
+            result.map_err(|e| {
+                e.downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<panic>".into())
+            })
+        };
+        if let Err(full_msg) = run(64) {
+            // shrink: find smallest failing size budget
+            let mut smallest = (64usize, full_msg);
+            let mut size = 32;
+            while size >= 1 {
+                match run(size) {
+                    Err(m) => {
+                        smallest = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, shrunk size={}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("ints in range", 20, |g| {
+            let x = g.int(3, 10);
+            assert!((3..=10).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 1, |g| {
+            let n = g.int(1, 50);
+            assert!(n == usize::MAX, "n={n} is never MAX");
+        });
+    }
+
+    #[test]
+    fn generator_helpers_sane() {
+        check("helpers", 10, |g| {
+            assert!((0.0..1.0).contains(&g.f64(0.0, 1.0)));
+            let w = g.weights(5);
+            assert!(w.iter().all(|&x| x >= 0.05));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!((1..=3).contains(&c));
+        });
+    }
+}

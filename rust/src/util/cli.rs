@@ -1,0 +1,97 @@
+//! Tiny CLI argument parser (no `clap` offline): positional subcommand plus
+//! `--flag value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order (after the binary name).
+    pub positional: Vec<String>,
+    /// `--key value` or bare `--key` (value `""`).
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value form: next token unless it is another flag
+                    let takes_value = it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    let v = if takes_value {
+                        it.next().unwrap()
+                    } else {
+                        String::new()
+                    };
+                    out.flags.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process args.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Flag as string.
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Flag as usize.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Flag as f64.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Flag present?
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["bench", "fig2", "--n", "4000", "--verbose", "--out=res.json"]);
+        assert_eq!(a.positional, vec!["bench", "fig2"]);
+        assert_eq!(a.usize_or("n", 0), 4000);
+        assert!(a.has("verbose"));
+        assert_eq!(a.str_or("out", ""), "res.json");
+    }
+
+    #[test]
+    fn flag_before_flag_has_empty_value() {
+        let a = parse(&["--a", "--b", "1"]);
+        assert_eq!(a.str_or("a", "x"), "");
+        assert_eq!(a.usize_or("b", 0), 1);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.f64_or("lam", 0.25), 0.25);
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,222 @@
+//! TOML-subset config parser for experiment and service configuration.
+//!
+//! Supports the subset every config in `configs/` uses: `[section]` headers,
+//! `key = value` with string / integer / float / bool / homogeneous-array
+//! values, `#` comments. Dotted keys and nested tables are intentionally
+//! out of scope.
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration: `section → key → value`. Keys outside any
+/// section live under the empty-string section.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    /// Numeric view (ints widen to float).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    /// Integer view.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// String view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// Bool view.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// Array view.
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Config {
+    /// Parse a config document.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            cfg.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+
+    /// `section.key` as f64 with default.
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    /// `section.key` as usize with default.
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i.max(0) as usize)
+            .unwrap_or(default)
+    }
+
+    /// `section.key` as str with default.
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    /// `section.key` as bool with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Section names present.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig2"
+replicates = 30
+
+[sweep]
+n = [1000, 2000, 4000, 8000]
+m = [1, 4, 16]
+gamma = 0.6
+use_pjrt = false
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("", "name", "?"), "fig2");
+        assert_eq!(c.usize_or("", "replicates", 0), 30);
+        assert_eq!(c.f64_or("sweep", "gamma", 0.0), 0.6);
+        assert!(!c.bool_or("sweep", "use_pjrt", true));
+        let ns = c.get("sweep", "n").unwrap().as_arr().unwrap();
+        assert_eq!(ns.len(), 4);
+        assert_eq!(ns[3].as_i64(), Some(8000));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("x", "y", 7), 7);
+        assert_eq!(c.f64_or("x", "y", 1.5), 1.5);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("just words").is_err());
+        assert!(Config::parse("k = ").is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal CSV reader/writer for numeric regression datasets.
+//!
+//! `data::loader` uses this to ingest the real UCI files (RQA/CASP/GAS) when
+//! they are dropped into `data/`; the bench harness uses the writer to dump
+//! figure series for plotting.
+
+use crate::linalg::Matrix;
+
+/// Parse numeric CSV text into a matrix. `skip_header` drops the first
+/// line; non-numeric fields are an error (with row/col context).
+pub fn parse_numeric(text: &str, skip_header: bool) -> Result<Matrix, String> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width = None;
+    for (lineno, line) in text.lines().enumerate() {
+        if lineno == 0 && skip_header {
+            continue;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let vals: Result<Vec<f64>, String> = line
+            .split(',')
+            .enumerate()
+            .map(|(col, f)| {
+                f.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("line {} col {}: not a number: {f:?}", lineno + 1, col + 1))
+            })
+            .collect();
+        let vals = vals?;
+        if let Some(w) = width {
+            if vals.len() != w {
+                return Err(format!("line {}: ragged row ({} vs {w})", lineno + 1, vals.len()));
+            }
+        } else {
+            width = Some(vals.len());
+        }
+        rows.push(vals);
+    }
+    let w = width.ok_or("empty csv")?;
+    let mut m = Matrix::zeros(rows.len(), w);
+    for (i, r) in rows.iter().enumerate() {
+        m.row_mut(i).copy_from_slice(r);
+    }
+    Ok(m)
+}
+
+/// Write a header + rows of f64 columns as CSV.
+pub fn write_csv(path: &str, header: &[&str], rows: &[Vec<f64>]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for r in rows {
+        let line: Vec<String> = r.iter().map(|x| format!("{x}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_with_header() {
+        let m = parse_numeric("a,b\n1,2\n3.5,-4\n", true).unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m[(1, 0)], 3.5);
+        assert_eq!(m[(1, 1)], -4.0);
+    }
+
+    #[test]
+    fn rejects_ragged_and_text() {
+        assert!(parse_numeric("1,2\n3\n", false).is_err());
+        assert!(parse_numeric("1,x\n", false).is_err());
+        assert!(parse_numeric("", false).is_err());
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let m = parse_numeric("1,2\n\n3,4\n", false).unwrap();
+        assert_eq!(m.rows(), 2);
+    }
+}

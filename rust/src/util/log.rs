@@ -1,0 +1,83 @@
+//! Leveled stderr logging with a global level set by `ACCUMKRR_LOG`
+//! (`error|warn|info|debug`, default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return v;
+    }
+    let parsed = match std::env::var("ACCUMKRR_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Override the global level programmatically (tests, CLI `--quiet`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Emit a log line if `l` is enabled.
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if (l as u8) <= level() {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {target}: {msg}");
+    }
+}
+
+/// `info!`-style macros.
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+/// Warning log.
+#[macro_export]
+macro_rules! warnlog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+/// Debug log.
+#[macro_export]
+macro_rules! debuglog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Debug);
+        set_level(Level::Error);
+        log(Level::Debug, "t", format_args!("suppressed"));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small-infrastructure substrate: JSON, config, CLI parsing, timing,
+//! logging, CSV, and a property-testing mini-framework. All hand-rolled —
+//! the offline image ships no serde/clap/proptest.
+
+pub mod check;
+pub mod cli;
+pub mod config;
+pub mod csv;
+pub mod json;
+pub mod log;
+pub mod timer;
+
+pub use json::Json;
+pub use timer::Timer;

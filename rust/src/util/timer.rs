@@ -1,0 +1,117 @@
+//! Wall-clock timing helpers used by the bench harness and the coordinator's
+//! metrics.
+
+use std::time::Instant;
+
+/// A running wall-clock timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start now.
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds elapsed.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let t = self.secs();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.secs())
+}
+
+/// Robust summary of repeated timings (median + IQR are what the bench
+/// harness reports; means are unstable on a shared 1-core box).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TimingStats {
+    pub median: f64,
+    pub p25: f64,
+    pub p75: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+/// Compute [`TimingStats`] from raw samples.
+pub fn timing_stats(samples: &[f64]) -> TimingStats {
+    if samples.is_empty() {
+        return TimingStats::default();
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| -> f64 {
+        let idx = p * (s.len() - 1) as f64;
+        let lo = idx.floor() as usize;
+        let hi = idx.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (idx - lo as f64) * (s[hi] - s[lo])
+        }
+    };
+    TimingStats {
+        median: q(0.5),
+        p25: q(0.25),
+        p75: q(0.75),
+        min: s[0],
+        max: *s.last().unwrap(),
+        n: s.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (x, secs) = timed(|| 41 + 1);
+        assert_eq!(x, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn stats_quartiles() {
+        let s = timing_stats(&[4.0, 1.0, 3.0, 2.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p25, 2.0);
+        assert_eq!(s.p75, 4.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn stats_empty() {
+        assert_eq!(timing_stats(&[]).n, 0);
+    }
+}

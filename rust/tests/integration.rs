@@ -1,0 +1,214 @@
+//! Cross-module integration tests: the full library pipeline (data →
+//! sketch → fit → predict → diagnostics) and the coordinator service stack
+//! (train → batched predict over TCP).
+
+use accumkrr::coordinator::state::{dataset_for, paper_d, paper_lambda};
+use accumkrr::coordinator::{serve, JobScheduler, ModelStore, ServerConfig, TrainRequest};
+use accumkrr::data::{bimodal, normalize_features, train_test_split, BimodalConfig};
+use accumkrr::kernels::{kernel_matrix, Kernel};
+use accumkrr::krr::{falkon, FalkonOptions, KrrModel, SketchedKrr};
+use accumkrr::rng::Pcg64;
+use accumkrr::sketch::{SketchBuilder, SketchKind};
+use accumkrr::stats::{in_sample_sq_error, test_error, SpectralView};
+use accumkrr::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// The paper's full pipeline on bimodal data: with paper-style schedules
+/// for (λ, d), the accumulation method's approximation error sits within a
+/// small factor of Gaussian sketching and far below Nyström, while its
+/// runtime stays near Nyström's.
+#[test]
+fn end_to_end_pipeline_error_ordering() {
+    let n = 400;
+    let mut rng = Pcg64::seed(42);
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let (x, y, _) = bimodal(&cfg, &mut rng);
+    let kern = Kernel::gaussian(1.5 * (n as f64).powf(-1.0 / 7.0));
+    let lambda = 0.5 * (n as f64).powf(-4.0 / 7.0);
+    let d = ((1.3 * (n as f64).powf(3.0 / 7.0)) as usize).max(2);
+    let k = kernel_matrix(&kern, &x);
+    let exact = KrrModel::fit_with_k(kern, &x, &k, &y, lambda).unwrap();
+
+    let reps = 10;
+    let mean_err = |kind: SketchKind| -> f64 {
+        let mut rng = Pcg64::seed(43);
+        (0..reps)
+            .map(|_| {
+                let s = SketchBuilder::new(kind.clone()).build(n, d, &mut rng);
+                let m = SketchedKrr::fit(kern, &x, &y, &s, lambda, Some(&k)).unwrap();
+                in_sample_sq_error(m.fitted(), exact.fitted())
+            })
+            .sum::<f64>()
+            / reps as f64
+    };
+    let e_nys = mean_err(SketchKind::Nystrom);
+    let e_acc = mean_err(SketchKind::Accumulation { m: 8 });
+    let e_gau = mean_err(SketchKind::Gaussian);
+    assert!(
+        e_acc < e_nys,
+        "accumulation {e_acc} should beat nystrom {e_nys}"
+    );
+    assert!(
+        e_acc < 10.0 * e_gau + 1e-9,
+        "accumulation {e_acc} should be within a small factor of gaussian {e_gau}"
+    );
+}
+
+/// K-satisfiability diagnostics agree with observed error: sketches that
+/// satisfy both conditions give lower approximation error on average.
+#[test]
+fn ksat_predicts_approximation_quality() {
+    let n = 250;
+    let mut rng = Pcg64::seed(7);
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let (x, y, _) = bimodal(&cfg, &mut rng);
+    let kern = Kernel::gaussian(0.6);
+    let lambda = 2e-3;
+    let k = kernel_matrix(&kern, &x);
+    let view = SpectralView::new(&k);
+    let exact = KrrModel::fit_with_k(kern, &x, &k, &y, lambda).unwrap();
+    let delta = lambda / 2.0;
+
+    let mut sat_errs = Vec::new();
+    let mut unsat_errs = Vec::new();
+    for trial in 0..24 {
+        // mix of weak and strong sketches
+        let (kind, d) = if trial % 2 == 0 {
+            (SketchKind::Nystrom, 8)
+        } else {
+            (SketchKind::Accumulation { m: 8 }, 48)
+        };
+        let s = SketchBuilder::new(kind).build(n, d, &mut rng);
+        let rep = accumkrr::stats::k_satisfiability(&view, &s, delta);
+        let m = SketchedKrr::fit(kern, &x, &y, &s, lambda, Some(&k)).unwrap();
+        let err = in_sample_sq_error(m.fitted(), exact.fitted());
+        if rep.cond1 {
+            sat_errs.push(err);
+        } else {
+            unsat_errs.push(err);
+        }
+    }
+    if !sat_errs.is_empty() && !unsat_errs.is_empty() {
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            mean(&sat_errs) < mean(&unsat_errs),
+            "cond1-satisfying sketches should have lower error: {} vs {}",
+            mean(&sat_errs),
+            mean(&unsat_errs)
+        );
+    }
+}
+
+/// Falkon and the direct solver agree end-to-end on a real-ish dataset.
+#[test]
+fn falkon_agrees_with_direct_on_rqa() {
+    let mut rng = Pcg64::seed(11);
+    let (mut ds, dx, kern) = dataset_for("rqa", 500, 0.0, &mut rng).unwrap();
+    normalize_features(&mut ds.x);
+    let (train, test) = train_test_split(&ds, 0.2, &mut rng);
+    let d = paper_d(train.n(), dx);
+    let lambda = paper_lambda(train.n(), dx);
+    let s = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(train.n(), d, &mut rng);
+    let direct = SketchedKrr::fit(kern, &train.x, &train.y, &s, lambda, None).unwrap();
+    let fk = falkon(
+        kern,
+        &train.x,
+        &train.y,
+        &s,
+        lambda,
+        FalkonOptions {
+            max_iters: 60,
+            tol: 1e-11,
+        },
+        None,
+    )
+    .unwrap();
+    let e_direct = test_error(&direct.predict(&test.x), &test.y);
+    let e_falkon = test_error(&fk.predict(&kern, &test.x), &test.y);
+    assert!(
+        (e_direct - e_falkon).abs() < 0.05 * (e_direct + e_falkon),
+        "direct {e_direct} vs falkon {e_falkon}"
+    );
+}
+
+/// Full service stack over TCP: train, list, predict (batched), metrics.
+#[test]
+fn coordinator_tcp_service_end_to_end() {
+    let store = Arc::new(ModelStore::new());
+    // pre-train one model through the store API
+    store
+        .train(&TrainRequest {
+            name: "pre".into(),
+            dataset: "bimodal".into(),
+            n: 200,
+            kind: SketchKind::Accumulation { m: 4 },
+            d: 12,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 9,
+        })
+        .unwrap();
+    let addr = serve(
+        store,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        false,
+    )
+    .unwrap();
+
+    let conn = TcpStream::connect(addr).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut request = |line: &str| -> Json {
+        writeln!(writer, "{line}").unwrap();
+        let mut out = String::new();
+        reader.read_line(&mut out).unwrap();
+        Json::parse(&out).unwrap()
+    };
+
+    let r = request(r#"{"op":"train","name":"srv","dataset":"rqa","n":300,"sketch":"accum","m":4,"seed":2}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    let r = request(r#"{"op":"models"}"#);
+    assert_eq!(r.get("models").unwrap().as_arr().unwrap().len(), 2);
+    let r = request(r#"{"op":"predict","model":"srv","x":[[0.1,0.2,0.5,0.3],[1.0,1.0,0.5,0.5],[0.0,0.0,0.1,0.9]]}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("y").unwrap().as_arr().unwrap().len(), 3);
+    let r = request(r#"{"op":"metrics"}"#);
+    assert!(r.get("queries").and_then(|q| q.as_usize()).unwrap() >= 3);
+    let _ = request(r#"{"op":"shutdown"}"#);
+}
+
+/// The job scheduler reproduces identical sweeps across runs (replicate
+/// RNG streams are independent of scheduling).
+#[test]
+fn sweeps_reproducible_across_runs() {
+    let run = || {
+        JobScheduler::new(5).run_sweep(2, 3, |pt, rng| {
+            let cfg = BimodalConfig {
+                n: 60,
+                gamma: 0.5,
+                ..Default::default()
+            };
+            let (x, y, _) = bimodal(&cfg, rng);
+            let s = SketchBuilder::new(SketchKind::Accumulation { m: 2 })
+                .build(60, 6 + pt.setting, rng);
+            let m = SketchedKrr::fit(Kernel::gaussian(0.5), &x, &y, &s, 1e-2, None).unwrap();
+            m.fitted()[0]
+        })
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+}

@@ -1,0 +1,170 @@
+//! PJRT integration: the AOT-compiled JAX/Pallas artifacts, loaded and
+//! executed from Rust, must agree with the native Rust implementation of
+//! the same math. Requires `make artifacts` (skips with a message if the
+//! manifest is absent).
+
+use accumkrr::data::{bimodal, BimodalConfig};
+use accumkrr::kernels::Kernel;
+use accumkrr::krr::SketchedKrr;
+use accumkrr::linalg::Matrix;
+use accumkrr::rng::Pcg64;
+use accumkrr::runtime::ModelRuntime;
+use accumkrr::sketch::{Sketch, SketchBuilder, SketchKind};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("ACCUMKRR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT tests: {dir}/manifest.json missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn problem(n: usize, d: usize) -> (Matrix, Vec<f64>, Sketch, Kernel, f64) {
+    let mut rng = Pcg64::seed(1234);
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let (x, y, _) = bimodal(&cfg, &mut rng);
+    let sketch = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, d, &mut rng);
+    let kern = Kernel::gaussian(0.6);
+    (x, y, sketch, kern, 1e-3)
+}
+
+#[test]
+fn fit_artifact_matches_native_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::open(&dir).expect("open runtime");
+    // n below the bucket (512) to exercise padding
+    let (x, y, sketch, kern, lam) = problem(300, 20);
+    let Sketch::Sparse(sp) = &sketch else { panic!() };
+    let out = rt
+        .fit_sketched("gaussian", &x, &y, sp, lam, kern.bandwidth)
+        .expect("pjrt fit");
+    assert_eq!(out.theta.len(), 20);
+    assert_eq!(out.fitted.len(), 300);
+    let native = SketchedKrr::fit(kern, &x, &y, &sketch, lam, None).expect("native fit");
+    // f32 artifact + CG vs f64 cholesky: compare fitted values loosely
+    let mut max_rel = 0.0f64;
+    for (a, b) in out.fitted.iter().zip(native.fitted().iter()) {
+        let rel = (a - b).abs() / (1.0 + b.abs());
+        max_rel = max_rel.max(rel);
+    }
+    assert!(
+        max_rel < 0.05,
+        "pjrt vs native fitted values diverge: max rel {max_rel}"
+    );
+}
+
+#[test]
+fn fit_artifact_exact_bucket_size() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::open(&dir).expect("open runtime");
+    // exactly the bucket shape: no padding path
+    let (x, y, sketch, kern, lam) = problem(512, 32);
+    let Sketch::Sparse(sp) = &sketch else { panic!() };
+    let out = rt
+        .fit_sketched("gaussian", &x, &y, sp, lam, kern.bandwidth)
+        .expect("pjrt fit");
+    let native = SketchedKrr::fit(kern, &x, &y, &sketch, lam, None).expect("native fit");
+    let err: f64 = out
+        .fitted
+        .iter()
+        .zip(native.fitted().iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / 512.0;
+    assert!(err < 1e-3, "mse between pjrt and native fitted: {err}");
+}
+
+#[test]
+fn predict_artifact_matches_native_predict() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::open(&dir).expect("open runtime");
+    let (x, y, sketch, kern, lam) = problem(300, 20);
+    let native = SketchedKrr::fit(kern, &x, &y, &sketch, lam, None).expect("native fit");
+    let Sketch::Sparse(sp) = &sketch else { panic!() };
+
+    // assemble per-column support + weights for the artifact
+    let mut support = Vec::new();
+    let mut w = Vec::new();
+    for j in 0..sp.d() {
+        let col = sp.col(j);
+        let mut pts = Matrix::zeros(col.len(), x.cols());
+        let mut ws = Vec::with_capacity(col.len());
+        for (t, &(i, wt)) in col.iter().enumerate() {
+            pts.row_mut(t).copy_from_slice(x.row(i));
+            ws.push(wt);
+        }
+        support.push(pts);
+        w.push(ws);
+    }
+    // theta from a PJRT fit
+    let fit = rt
+        .fit_sketched("gaussian", &x, &y, sp, lam, kern.bandwidth)
+        .expect("pjrt fit");
+
+    let mut rng = Pcg64::seed(77);
+    let xq = Matrix::from_fn(40, 3, |_, _| rng.uniform());
+    let got = rt
+        .predict_sketched("gaussian", &xq, &support, &w, &fit.theta, kern.bandwidth)
+        .expect("pjrt predict");
+    assert_eq!(got.len(), 40);
+
+    // native predict with the same theta: fold through the sketch
+    let (sup_idx, beta) = sp.landmark_weights(&fit.theta);
+    let landmarks = accumkrr::kernels::gather_rows(&x, &sup_idx);
+    let kq = accumkrr::kernels::cross_kernel(&kern, &xq, &landmarks);
+    let want = kq.matvec(&beta);
+    for (a, b) in got.iter().zip(want.iter()) {
+        assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+    let _ = native;
+}
+
+#[test]
+fn exact_artifact_matches_native_exact_krr() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::open(&dir).expect("open runtime");
+    let n = 200; // pads into the n=256 exact bucket
+    let mut rng = Pcg64::seed(55);
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let (x, y, _) = bimodal(&cfg, &mut rng);
+    let kern = Kernel::gaussian(0.7);
+    let lam = 5e-3;
+    let out = rt
+        .fit_exact("gaussian", &x, &y, lam, kern.bandwidth)
+        .expect("pjrt exact fit");
+    let native = accumkrr::krr::KrrModel::fit(kern, &x, &y, lam).expect("native exact");
+    let mse: f64 = out
+        .fitted
+        .iter()
+        .zip(native.fitted().iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / n as f64;
+    assert!(mse < 1e-3, "pjrt vs native exact KRR fitted mse {mse}");
+}
+
+#[test]
+fn manifest_lists_all_entry_points() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::open(&dir).expect("open runtime");
+    let entries: std::collections::BTreeSet<&str> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .map(|a| a.entry.as_str())
+        .collect();
+    assert!(entries.contains("fit_sketched"));
+    assert!(entries.contains("predict_sketched"));
+    assert!(entries.contains("fit_exact"));
+    assert!(rt.platform().to_lowercase().contains("cpu") || rt.platform().to_lowercase().contains("host"));
+}

@@ -1,0 +1,199 @@
+//! Property-based tests over the coordinator/sketch/linalg invariants,
+//! using the in-crate `util::check` mini-framework (no proptest offline).
+
+use accumkrr::kernels::{kernel_matrix, Kernel};
+use accumkrr::linalg::{chol_factor, eigh, matmul, matmul_at_b, syrk_at_a, Matrix};
+use accumkrr::sketch::{Sampling, Sketch, SketchBuilder, SketchKind};
+use accumkrr::util::check::{check, Gen};
+
+fn random_kind(g: &mut Gen) -> SketchKind {
+    match g.int(0, 4) {
+        0 => SketchKind::Nystrom,
+        1 => SketchKind::Accumulation { m: g.int(1, 12) },
+        2 => SketchKind::Gaussian,
+        3 => SketchKind::Rademacher,
+        _ => SketchKind::VerySparse {
+            sparsity: Some(g.f64(1.0, 8.0)),
+        },
+    }
+}
+
+/// Every sketch construction: shape, finiteness, and the st_mat/s_vec
+/// adjoint identity ⟨Sᵀb, w⟩ = ⟨b, Sw⟩.
+#[test]
+fn prop_sketch_adjoint_identity() {
+    check("sketch adjoint", 40, |g| {
+        let n = g.int(2, 60);
+        let d = g.int(1, 20);
+        let kind = random_kind(g);
+        let s = SketchBuilder::new(kind).build(n, d, g.rng());
+        assert_eq!((s.n(), s.d()), (n, d));
+        let b: Vec<f64> = g.normals(n);
+        let w: Vec<f64> = g.normals(d);
+        let stb = s.st_vec(&b);
+        let sw = s.s_vec(&w);
+        let lhs: f64 = stb.iter().zip(w.iter()).map(|(a, b)| a * b).sum();
+        let rhs: f64 = b.iter().zip(sw.iter()).map(|(a, b)| a * b).sum();
+        assert!(
+            (lhs - rhs).abs() < 1e-8 * (1.0 + lhs.abs().max(rhs.abs())),
+            "adjoint violated: {lhs} vs {rhs}"
+        );
+    });
+}
+
+/// Sparse fast path ≡ dense math for every sparse construction and any
+/// weighted sampling distribution.
+#[test]
+fn prop_sparse_gram_matches_dense() {
+    check("sparse gram vs dense", 25, |g| {
+        let n = g.int(4, 40);
+        let d = g.int(1, 10);
+        let p = g.int(1, 4);
+        let x = Matrix::from_fn(n, p, |_, _| g.normal());
+        let kern = *g.choose(&[
+            Kernel::gaussian(0.8),
+            Kernel::matern(1.5, 1.0),
+            Kernel::matern(0.5, 1.2),
+        ]);
+        let sampling = if g.bool(0.5) {
+            Sampling::Uniform
+        } else {
+            Sampling::Weighted(accumkrr::rng::AliasTable::new(&g.weights(n)))
+        };
+        let m = g.int(1, 6);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m })
+            .with_sampling(sampling)
+            .build(n, d, g.rng());
+        let gram = accumkrr::sketch::sketch_gram(&kern, &x, &s, None);
+        let k = kernel_matrix(&kern, &x);
+        let sd = s.to_dense();
+        let ks_ref = matmul(&k, &sd);
+        for i in 0..n {
+            for j in 0..d {
+                assert!(
+                    (gram.ks[(i, j)] - ks_ref[(i, j)]).abs() < 1e-8,
+                    "KS mismatch at ({i},{j})"
+                );
+            }
+        }
+        let stks_ref = matmul_at_b(&sd, &ks_ref);
+        for i in 0..d {
+            for j in 0..d {
+                assert!((gram.stks[(i, j)] - stks_ref[(i, j)]).abs() < 1e-8);
+            }
+        }
+    });
+}
+
+/// SᵀKS is PSD for any sketch (K is PSD): its eigenvalues are ≥ −ε.
+#[test]
+fn prop_sketched_gram_psd() {
+    check("SᵀKS psd", 20, |g| {
+        let n = g.int(4, 30);
+        let d = g.int(1, 8);
+        let p = g.int(1, 3);
+        let x = Matrix::from_fn(n, p, |_, _| g.f64(0.0, 2.0));
+        let kern = Kernel::gaussian(g.f64(0.3, 1.5));
+        let kind = random_kind(g);
+        let s = SketchBuilder::new(kind).build(n, d, g.rng());
+        let gram = accumkrr::sketch::sketch_gram(&kern, &x, &s, None);
+        let eig = eigh(&gram.stks);
+        let max = eig.w.last().copied().unwrap_or(0.0).max(1.0);
+        assert!(
+            eig.w.iter().all(|&w| w > -1e-8 * max),
+            "negative eigenvalue in SᵀKS: {:?}",
+            eig.w
+        );
+    });
+}
+
+/// Cholesky solve is an inverse: A·solve(A, b) = b for random SPD A.
+#[test]
+fn prop_chol_solve_inverse() {
+    check("chol solve", 30, |g| {
+        let n = g.int(1, 25);
+        let b = Matrix::from_fn(n + 2, n, |_, _| g.normal());
+        let mut a = syrk_at_a(&b);
+        a.add_diag(g.f64(0.1, 2.0));
+        let rhs: Vec<f64> = g.normals(n);
+        let x = chol_factor(&a).expect("spd").solve(&rhs);
+        let back = a.matvec(&x);
+        for (u, v) in back.iter().zip(rhs.iter()) {
+            assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+        }
+    });
+}
+
+/// eigh reconstructs: ‖A − VΛVᵀ‖∞ small, V orthonormal.
+#[test]
+fn prop_eigh_reconstructs() {
+    check("eigh reconstruct", 20, |g| {
+        let n = g.int(1, 20);
+        let mut a = Matrix::from_fn(n, n, |_, _| g.normal());
+        let at = a.transpose();
+        a.axpy(1.0, &at);
+        a.scale(0.5);
+        let res = eigh(&a);
+        // A v = λ v
+        for j in 0..n {
+            let v = res.v.col(j);
+            let av = a.matvec(&v);
+            for i in 0..n {
+                assert!(
+                    (av[i] - res.w[j] * v[i]).abs() < 1e-7 * (1.0 + res.w[j].abs()),
+                    "eigpair {j}"
+                );
+            }
+        }
+    });
+}
+
+/// The kernel matrix is PSD for all radial kernels over random data:
+/// quadratic forms are non-negative.
+#[test]
+fn prop_kernel_matrix_psd() {
+    check("kernel psd", 25, |g| {
+        let n = g.int(2, 30);
+        let p = g.int(1, 4);
+        let x = Matrix::from_fn(n, p, |_, _| g.normal());
+        let kern = *g.choose(&[
+            Kernel::gaussian(0.7),
+            Kernel::matern(0.5, 1.0),
+            Kernel::matern(1.5, 0.9),
+            Kernel::matern(2.5, 1.1),
+            Kernel::laplacian(1.0),
+        ]);
+        let k = kernel_matrix(&kern, &x);
+        let v: Vec<f64> = g.normals(n);
+        let q: f64 = k.matvec(&v).iter().zip(v.iter()).map(|(a, b)| a * b).sum();
+        assert!(q > -1e-8 * n as f64, "quadratic form negative: {q}");
+    });
+}
+
+/// Landmark folding is exact: predict-via-landmarks == KSθ on training
+/// points for sparse sketches.
+#[test]
+fn prop_landmark_fold_exact() {
+    check("landmark fold", 15, |g| {
+        let n = g.int(6, 40);
+        let d = g.int(1, 8);
+        let m = g.int(1, 5);
+        let p = g.int(1, 3);
+        let x = Matrix::from_fn(n, p, |_, _| g.f64(0.0, 1.0));
+        let y: Vec<f64> = g.normals(n);
+        let kern = Kernel::gaussian(0.6);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m }).build(n, d, g.rng());
+        if let Some(model) =
+            accumkrr::krr::SketchedKrr::fit(kern, &x, &y, &s, 1e-2, None)
+        {
+            let pred = model.predict(&x);
+            for (a, b) in pred.iter().zip(model.fitted().iter()) {
+                assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+            }
+            // landmark count bounded by sketch support
+            if let Sketch::Sparse(sp) = &s {
+                assert!(model.num_landmarks() <= sp.support().len());
+            }
+        }
+    });
+}
