@@ -1,0 +1,81 @@
+//! Adaptive-m accumulation: let the runtime discover how many
+//! sub-sampling terms the data needs instead of fixing `m` up front.
+//!
+//! ```bash
+//! cargo run --release --example adaptive_m
+//! ```
+
+use accumkrr::data::{bimodal, BimodalConfig};
+use accumkrr::kernels::Kernel;
+use accumkrr::krr::{AdaptiveOptions, KrrModel, SketchedKrr};
+use accumkrr::rng::Pcg64;
+use accumkrr::sketch::{SketchBuilder, SketchKind};
+use accumkrr::stats::in_sample_sq_error;
+use accumkrr::util::timer::timed;
+
+fn main() {
+    let n = 1500;
+    let mut rng = Pcg64::seed(17);
+
+    // high-incoherence data: the regime where the right m is largest
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let (x, y, _) = bimodal(&cfg, &mut rng);
+    let lambda = 0.5 * (n as f64).powf(-4.0 / 7.0);
+    let d = (1.5 * (n as f64).powf(3.0 / 7.0)) as usize;
+    let kern = Kernel::gaussian(1.5 * (n as f64).powf(-1.0 / 7.0));
+    println!("n={n}  d={d}  lambda={lambda:.5}");
+
+    let (exact, exact_secs) = timed(|| KrrModel::fit(kern, &x, &y, lambda).unwrap());
+    println!("exact KRR reference:      {exact_secs:>7.3}s");
+
+    // adaptive fit: grows m until θ stabilises, re-using every kernel
+    // evaluation and Gram entry along the way
+    let builder = SketchBuilder::new(SketchKind::Accumulation { m: 1 });
+    let opts = AdaptiveOptions {
+        m_max: 64,
+        rel_tol: 1e-2,
+        ..Default::default()
+    };
+    let mut fit_rng = Pcg64::seed(18);
+    let ((model, trace), ada_secs) = timed(|| {
+        SketchedKrr::fit_adaptive(kern, &x, &y, &builder, d, lambda, &opts, &mut fit_rng)
+            .expect("adaptive fit")
+    });
+    let rep = *model.report();
+    println!(
+        "adaptive fit:             {ada_secs:>7.3}s  → chose m={} in {} rounds \
+         ({} rank updates, {} refactors, {} kernel evals)",
+        rep.m, rep.rounds, rep.rank_updates, rep.refactors, rep.kernel_evals
+    );
+    for r in &trace {
+        println!(
+            "   round m={:<3} Δθ/θ={:<10.3e} {}  {:.4}s",
+            r.m,
+            if r.rel_change.is_finite() { r.rel_change } else { f64::NAN },
+            if r.refactored { "refactor" } else { "rank-upd" },
+            r.secs
+        );
+    }
+    let ada_err = in_sample_sq_error(model.fitted(), exact.fitted());
+    println!("adaptive approx error:    {ada_err:.3e}");
+
+    // the fixed-m alternatives the adaptive loop replaces
+    for m in [1usize, rep.m, 64] {
+        let mut rng = Pcg64::seed(18);
+        let (skrr, secs) = timed(|| {
+            let s = SketchBuilder::new(SketchKind::Accumulation { m }).build(n, d, &mut rng);
+            SketchedKrr::fit(kern, &x, &y, &s, lambda, None).unwrap()
+        });
+        let err = in_sample_sq_error(skrr.fitted(), exact.fitted());
+        println!("fixed m={m:<3}               {secs:>7.3}s  approx error {err:.3e}");
+    }
+    println!(
+        "\nthe adaptive fit lands at fixed-m={} accuracy while paying for the\n\
+         m-sweep only once (incremental Grams + rank-updated solves).",
+        rep.m
+    );
+}

@@ -98,6 +98,7 @@ fn part2_serving() {
             lambda: 0.0, // paper schedule
             bandwidth: 0.0,
             seed: 7,
+            adaptive: None,
         })
         .expect("train");
     let meta = store.get("rqa-accum").unwrap();

@@ -1,0 +1,184 @@
+//! Adaptive-m bench: the incremental accumulation engine versus a sweep of
+//! independent fixed-m refits over the *same* m schedule.
+//!
+//! The comparison isolates exactly what the engine saves: a fixed-m refit
+//! at each schedule point re-evaluates every kernel column, re-folds `KS`,
+//! re-runs the `O(n·d²)` SYRK and re-factorises the d×d system, while the
+//! adaptive fit pays kernel evaluations only at new support points and
+//! folds each appended term into the existing Grams. Results (wall-clock
+//! and the deterministic kernel-eval counts) are emitted to
+//! `BENCH_adaptive.json` for the acceptance gate: total adaptive fit time
+//! must undercut the summed refits.
+
+use super::common::{BenchOpts, Row};
+use crate::data::{bimodal, BimodalConfig};
+use crate::kernels::Kernel;
+use crate::krr::{AdaptiveOptions, SketchedKrr};
+use crate::rng::Pcg64;
+use crate::sketch::{SketchBuilder, SketchKind};
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+
+/// Run the adaptive-vs-refit comparison, dumping `BENCH_adaptive.json`
+/// into the working directory.
+pub fn run_adaptive(opts: &BenchOpts) -> Vec<Row> {
+    run_adaptive_to(opts, "BENCH_adaptive.json")
+}
+
+/// Same as [`run_adaptive`] with an explicit JSON output path (tests point
+/// it at a temp file).
+pub fn run_adaptive_to(opts: &BenchOpts, json_path: &str) -> Vec<Row> {
+    let n = opts.n_max;
+    let cfg = BimodalConfig {
+        n,
+        gamma: 0.5,
+        ..Default::default()
+    };
+    let mut data_rng = Pcg64::seed(opts.seed ^ 0xad);
+    let (x, y, _) = bimodal(&cfg, &mut data_rng);
+    let lambda = 0.5 * (n as f64).powf(-4.0 / 7.0);
+    let kern = Kernel::gaussian(1.5 * (n as f64).powf(-1.0 / 7.0));
+    let d = ((1.5 * (n as f64).powf(3.0 / 7.0)) as usize).max(4);
+    let m_max = if opts.full { 64 } else { 32 };
+    let builder = SketchBuilder::new(SketchKind::Accumulation { m: 1 });
+
+    // 1. adaptive fit across the full schedule (stopping rule disabled) —
+    //    the incremental path the refits are compared against
+    let sweep_opts = AdaptiveOptions {
+        m_max,
+        rel_tol: -1.0,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed(opts.seed ^ 0xada);
+    let t = Timer::start();
+    let (sweep_model, trace) =
+        SketchedKrr::fit_adaptive(kern, &x, &y, &builder, d, lambda, &sweep_opts, &mut rng)
+            .expect("adaptive sweep fit");
+    let adaptive_total = t.secs();
+
+    // 2. independent fixed-m refits over the same schedule, same seed (the
+    //    grown and rebuilt sketches bit-match at every point)
+    let mut refit_secs = Vec::with_capacity(trace.len());
+    let mut refit_evals = 0usize;
+    for round in &trace {
+        let mut rng = Pcg64::seed(opts.seed ^ 0xada);
+        let t = Timer::start();
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: round.m }).build(n, d, &mut rng);
+        let model = SketchedKrr::fit(kern, &x, &y, &s, lambda, None).expect("fixed-m fit");
+        refit_secs.push(t.secs());
+        refit_evals += model.report().kernel_evals;
+    }
+    let refit_total: f64 = refit_secs.iter().sum();
+
+    // 3. what the stopping rule actually picks on this data
+    let run_opts = AdaptiveOptions {
+        m_max,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed(opts.seed ^ 0xada);
+    let (chosen_model, _) =
+        SketchedKrr::fit_adaptive(kern, &x, &y, &builder, d, lambda, &run_opts, &mut rng)
+            .expect("adaptive fit");
+    let chosen = *chosen_model.report();
+
+    let mut rows = Vec::new();
+    for (round, &rs) in trace.iter().zip(refit_secs.iter()) {
+        rows.push(Row::new(
+            &[("fig", "adaptive"), ("phase", "round")],
+            &[
+                ("m", round.m as f64),
+                ("adaptive_secs", round.secs),
+                ("refit_secs", rs),
+                ("rel_change", if round.rel_change.is_finite() { round.rel_change } else { -1.0 }),
+            ],
+        ));
+    }
+    rows.push(Row::new(
+        &[("fig", "adaptive"), ("phase", "total")],
+        &[
+            ("m", m_max as f64),
+            ("adaptive_secs", adaptive_total),
+            ("refit_secs", refit_total),
+            ("rel_change", 0.0),
+        ],
+    ));
+
+    let round_objs: Vec<Json> = trace
+        .iter()
+        .zip(refit_secs.iter())
+        .map(|(r, &rs)| {
+            Json::obj(vec![
+                ("m", Json::from(r.m)),
+                ("adaptive_secs", Json::Num(r.secs)),
+                ("refit_secs", Json::Num(rs)),
+                (
+                    "rel_change",
+                    Json::Num(if r.rel_change.is_finite() { r.rel_change } else { -1.0 }),
+                ),
+                ("refactored", Json::Bool(r.refactored)),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![
+        ("bench", Json::from("adaptive")),
+        ("n", Json::from(n)),
+        ("d", Json::from(d)),
+        ("lambda", Json::Num(lambda)),
+        ("m_max", Json::from(m_max)),
+        ("adaptive_total_secs", Json::Num(adaptive_total)),
+        ("refit_total_secs", Json::Num(refit_total)),
+        (
+            "speedup",
+            Json::Num(refit_total / adaptive_total.max(1e-12)),
+        ),
+        (
+            "adaptive_kernel_evals",
+            Json::from(sweep_model.report().kernel_evals),
+        ),
+        ("refit_kernel_evals", Json::from(refit_evals)),
+        ("chosen_m", Json::from(chosen.m)),
+        ("chosen_rounds", Json::from(chosen.rounds)),
+        ("rounds", Json::Arr(round_objs)),
+    ]);
+    if let Err(e) = std::fs::write(json_path, j.to_string()) {
+        eprintln!("adaptive bench: writing {json_path} failed: {e}");
+    } else {
+        println!("(adaptive comparison written to {json_path})");
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_bench_rows_json_and_eval_savings() {
+        let tmp = std::env::temp_dir().join("accumkrr_bench_adaptive_test.json");
+        let opts = BenchOpts {
+            replicates: 1,
+            n_max: 400,
+            ..Default::default()
+        };
+        let rows = run_adaptive_to(&opts, &tmp.to_string_lossy());
+        // schedule 1,2,4,8,16,32 plus the totals row
+        assert_eq!(rows.len(), 7);
+        let total = rows.last().unwrap();
+        assert_eq!(total.key("phase"), Some("total"));
+        assert!(total.val("adaptive_secs").unwrap() > 0.0);
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let j = Json::parse(&text).unwrap();
+        // deterministic core of the speedup: incremental growth pays
+        // strictly fewer kernel evaluations than the summed refits
+        let a = j
+            .get("adaptive_kernel_evals")
+            .and_then(|v| v.as_usize())
+            .unwrap();
+        let r = j.get("refit_kernel_evals").and_then(|v| v.as_usize()).unwrap();
+        assert!(a < r, "incremental evals {a} must undercut refit sum {r}");
+        let chosen = j.get("chosen_m").and_then(|v| v.as_usize()).unwrap();
+        assert!((1..=32).contains(&chosen));
+        assert_eq!(j.get("rounds").and_then(|v| v.as_arr()).unwrap().len(), 6);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -8,7 +8,7 @@ use super::common::{BenchOpts, Row};
 use crate::data::{bimodal, BimodalConfig};
 use crate::kernels::Kernel;
 use crate::rng::Pcg64;
-use crate::sketch::{sketch_gram, SketchBuilder, SketchKind};
+use crate::sketch::{sketch_gram, SketchBuilder, SketchKind, SketchOps};
 use crate::util::timer::{timed, timing_stats};
 
 /// Run the cost ablation.

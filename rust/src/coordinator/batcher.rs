@@ -215,6 +215,7 @@ mod tests {
                 lambda: 1e-3,
                 bandwidth: 0.0,
                 seed: 5,
+                adaptive: None,
             })
             .unwrap();
         store

@@ -5,7 +5,7 @@
 //! | op        | request fields                                         | reply |
 //! |-----------|--------------------------------------------------------|-------|
 //! | `ping`    | —                                                      | `{"ok":true,"pong":true}` |
-//! | `train`   | `name,dataset,n,sketch,m,d,lambda,bandwidth,seed`      | training metadata |
+//! | `train`   | `name,dataset,n,sketch,m,d,lambda,bandwidth,seed` (+ `m_max,rel_tol` for `sketch:"adaptive"`) | training metadata (+ `adaptive_m,rounds,rank_updates,refactors` telemetry for adaptive fits) |
 //! | `predict` | `model, x: [[f64,…],…]`                                | `{"ok":true,"y":[…]}` |
 //! | `models`  | —                                                      | list of stored models |
 //! | `metrics` | —                                                      | batcher counters |
@@ -16,8 +16,7 @@
 //! clients coalesce.
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
-use crate::coordinator::state::{ModelStore, TrainRequest};
-use crate::sketch::SketchKind;
+use crate::coordinator::state::{parse_sketch_spec, ModelStore, TrainRequest};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -164,13 +163,14 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
     };
     let u = |k: &str, d: usize| req.get(k).and_then(|v| v.as_usize()).unwrap_or(d);
     let f = |k: &str, d: f64| req.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
-    let kind = match s("sketch", "accum").as_str() {
-        "nystrom" => SketchKind::Nystrom,
-        "gaussian" => SketchKind::Gaussian,
-        "rademacher" => SketchKind::Rademacher,
-        "verysparse" => SketchKind::VerySparse { sparsity: None },
-        "accum" => SketchKind::Accumulation { m: u("m", 4).max(1) },
-        other => return err(format!("unknown sketch {other:?}")),
+    let (kind, adaptive) = match parse_sketch_spec(
+        &s("sketch", "accum"),
+        u("m", 4),
+        u("m_max", 64),
+        f("rel_tol", 1e-3),
+    ) {
+        Ok(spec) => spec,
+        Err(e) => return err(e),
     };
     let treq = TrainRequest {
         name: s("name", "default"),
@@ -181,17 +181,28 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
         lambda: f("lambda", 0.0),
         bandwidth: f("bandwidth", 0.0),
         seed: u("seed", 1) as u64,
+        adaptive,
     };
     match store.train(&treq) {
-        Ok(meta) => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("name", Json::Str(treq.name)),
-            ("n_train", Json::from(meta.n_train)),
-            ("train_secs", Json::Num(meta.train_secs)),
-            ("train_mse", Json::Num(meta.train_mse)),
-            ("landmarks", Json::from(meta.model.num_landmarks())),
-            ("sketch", Json::Str(meta.sketch)),
-        ]),
+        Ok(meta) => {
+            let rep = *meta.model.report();
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("name", Json::Str(treq.name)),
+                ("n_train", Json::from(meta.n_train)),
+                ("train_secs", Json::Num(meta.train_secs)),
+                ("train_mse", Json::Num(meta.train_mse)),
+                ("landmarks", Json::from(meta.model.num_landmarks())),
+                ("sketch", Json::Str(meta.sketch)),
+            ];
+            if rep.rounds > 0 {
+                fields.push(("adaptive_m", Json::from(rep.m)));
+                fields.push(("rounds", Json::from(rep.rounds)));
+                fields.push(("rank_updates", Json::from(rep.rank_updates as usize)));
+                fields.push(("refactors", Json::from(rep.refactors as usize)));
+            }
+            Json::obj(fields)
+        }
         Err(e) => err(e),
     }
 }
@@ -263,6 +274,30 @@ mod tests {
         assert_eq!(r.get("models").unwrap().as_arr().unwrap().len(), 1);
         let r = dispatch(r#"{"op":"metrics"}"#, &store, &b, &stop);
         assert_eq!(r.get("queries").and_then(|q| q.as_usize()), Some(2));
+    }
+
+    #[test]
+    fn adaptive_train_surfaces_telemetry() {
+        let (store, b, stop) = setup();
+        let r = dispatch(
+            r#"{"op":"train","name":"ad","dataset":"bimodal","n":150,"sketch":"adaptive","m_max":16,"rel_tol":0.05,"d":10,"lambda":0.001,"seed":6}"#,
+            &store,
+            &b,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let m = r.get("adaptive_m").and_then(|v| v.as_usize()).unwrap();
+        assert!((1..=16).contains(&m), "chosen m = {m}");
+        assert!(r.get("rounds").and_then(|v| v.as_usize()).unwrap() >= 1);
+        assert!(r.get("sketch").and_then(|v| v.as_str()).unwrap().starts_with("adaptive_m"));
+        // the stored model predicts through the batcher like any other
+        let r = dispatch(
+            r#"{"op":"predict","model":"ad","x":[[0.1,0.2,0.3]]}"#,
+            &store,
+            &b,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
     }
 
     #[test]

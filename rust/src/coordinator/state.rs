@@ -2,7 +2,7 @@
 
 use crate::data::{normalize_features, Dataset};
 use crate::kernels::Kernel;
-use crate::krr::SketchedKrr;
+use crate::krr::{AdaptiveOptions, SketchedKrr};
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
 use crate::sketch::{SketchBuilder, SketchKind};
@@ -44,6 +44,12 @@ pub struct TrainRequest {
     pub bandwidth: f64,
     /// RNG seed.
     pub seed: u64,
+    /// Adaptive-m training: grow the accumulation sketch until the
+    /// stopping rule fires instead of building `kind` with a fixed `m`
+    /// (the kind's sampling distribution still applies). The chosen `m`
+    /// is reported through the stored model's
+    /// [`SketchedKrrReport`](crate::krr::SketchedKrrReport).
+    pub adaptive: Option<AdaptiveOptions>,
 }
 
 /// Thread-safe named model registry.
@@ -96,20 +102,62 @@ impl ModelStore {
             paper_lambda(n, dx)
         };
         let t = crate::util::Timer::start();
-        let sketch = SketchBuilder::new(req.kind.clone()).build(n, d, &mut rng);
-        let model = SketchedKrr::fit(kernel, &ds.x, &ds.y, &sketch, lambda, None)
-            .ok_or("sketched fit failed (singular system)")?;
+        let (model, sketch_name) = if let Some(aopts) = &req.adaptive {
+            let builder = SketchBuilder::new(req.kind.clone());
+            let (model, _trace) = SketchedKrr::fit_adaptive(
+                kernel, &ds.x, &ds.y, &builder, d, lambda, aopts, &mut rng,
+            )
+            .ok_or("adaptive sketched fit failed (singular system)")?;
+            let name = format!("adaptive_m{}", model.report().m);
+            (model, name)
+        } else {
+            let sketch = SketchBuilder::new(req.kind.clone()).build(n, d, &mut rng);
+            let model = SketchedKrr::fit(kernel, &ds.x, &ds.y, &sketch, lambda, None)
+                .ok_or("sketched fit failed (singular system)")?;
+            (model, req.kind.name())
+        };
         let train_secs = t.secs();
         let train_mse = crate::stats::mse(model.fitted(), &ds.y);
         let stored = StoredModel {
             model: Arc::new(model),
             n_train: n,
             train_secs,
-            sketch: req.kind.name(),
+            sketch: sketch_name,
             train_mse,
         };
         self.put(&req.name, stored.clone());
         Ok(stored)
+    }
+}
+
+/// Parse a sketch spec name (`nystrom` | `gaussian` | `rademacher` |
+/// `verysparse` | `accum` | `adaptive`) into the kind plus adaptive
+/// options. Shared by the TCP `train` op and the CLI so both surfaces
+/// train identical models from identical arguments: `m` configures
+/// fixed-m accumulation, `m_max`/`rel_tol` the adaptive kind.
+pub fn parse_sketch_spec(
+    name: &str,
+    m: usize,
+    m_max: usize,
+    rel_tol: f64,
+) -> Result<(SketchKind, Option<AdaptiveOptions>), String> {
+    match name {
+        "nystrom" => Ok((SketchKind::Nystrom, None)),
+        "gaussian" => Ok((SketchKind::Gaussian, None)),
+        "rademacher" => Ok((SketchKind::Rademacher, None)),
+        "verysparse" => Ok((SketchKind::VerySparse { sparsity: None }, None)),
+        "accum" => Ok((SketchKind::Accumulation { m: m.max(1) }, None)),
+        // the adaptive job kind: m is discovered at runtime, bounded by
+        // m_max, with the relative-change stopping tolerance rel_tol
+        "adaptive" => Ok((
+            SketchKind::Accumulation { m: 1 },
+            Some(AdaptiveOptions {
+                m_max: m_max.max(1),
+                rel_tol,
+                ..Default::default()
+            }),
+        )),
+        other => Err(format!("unknown sketch {other:?}")),
     }
 }
 
@@ -239,6 +287,7 @@ mod tests {
             lambda: 1e-3,
             bandwidth: 0.0,
             seed: 3,
+            adaptive: None,
         };
         let meta = store.train(&req).unwrap();
         assert_eq!(meta.n_train, 200);
@@ -246,6 +295,45 @@ mod tests {
         let got = store.get("m1").unwrap();
         assert_eq!(got.sketch, "accum_m4");
         assert_eq!(store.list().len(), 1);
+    }
+
+    #[test]
+    fn adaptive_train_reports_chosen_m() {
+        let store = ModelStore::new();
+        let req = TrainRequest {
+            name: "ad".into(),
+            dataset: "bimodal".into(),
+            n: 200,
+            kind: SketchKind::Accumulation { m: 1 },
+            d: 12,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 4,
+            adaptive: Some(AdaptiveOptions {
+                m_max: 16,
+                rel_tol: 0.05,
+                ..Default::default()
+            }),
+        };
+        let meta = store.train(&req).unwrap();
+        let rep = *meta.model.report();
+        assert!(rep.m >= 1 && rep.m <= 16, "{rep:?}");
+        assert!(rep.rounds >= 1);
+        assert_eq!(meta.sketch, format!("adaptive_m{}", rep.m));
+        assert!(meta.train_mse.is_finite());
+    }
+
+    #[test]
+    fn sketch_spec_parsing_shared_by_cli_and_server() {
+        let (k, a) = parse_sketch_spec("accum", 6, 64, 1e-3).unwrap();
+        assert_eq!(k, SketchKind::Accumulation { m: 6 });
+        assert!(a.is_none());
+        let (k, a) = parse_sketch_spec("adaptive", 4, 32, 0.01).unwrap();
+        assert_eq!(k, SketchKind::Accumulation { m: 1 });
+        let a = a.unwrap();
+        assert_eq!(a.m_max, 32);
+        assert!((a.rel_tol - 0.01).abs() < 1e-15);
+        assert!(parse_sketch_spec("nope", 1, 1, 0.0).is_err());
     }
 
     #[test]
@@ -260,6 +348,7 @@ mod tests {
             lambda: 1e-2,
             bandwidth: 0.0,
             seed: 1,
+            adaptive: None,
         };
         assert!(store.train(&req).is_err());
     }

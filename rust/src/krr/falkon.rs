@@ -16,7 +16,7 @@
 
 use crate::kernels::{gather_rows, Kernel};
 use crate::linalg::{chol_factor, CholFactor, Matrix};
-use crate::sketch::{sketch_gram, Sketch};
+use crate::sketch::{sketch_gram, Sketch, SketchOps};
 
 /// Falkon solver options.
 #[derive(Clone, Copy, Debug)]

@@ -11,7 +11,7 @@
 
 use crate::kernels::Kernel;
 use crate::linalg::{chol_factor, eigh, matmul, syrk_at_a, Matrix};
-use crate::sketch::{sketch_gram, Sketch};
+use crate::sketch::{sketch_gram, Sketch, SketchOps};
 
 /// Result of sketched kernel PCA.
 #[derive(Clone, Debug)]

@@ -4,7 +4,10 @@
 //!   (paper eq. 2), `O(n³)`.
 //! * [`SketchedKrr`] — the sketched estimator
 //!   `f̂_S(x) = k(x,X) S (SᵀK²S + nλ SᵀKS)⁻¹ SᵀKY` (paper eq. 3), `O(nd²)`
-//!   once the sketch Grams are formed.
+//!   once the sketch Grams are formed. [`SketchedKrr::fit_adaptive`] grows
+//!   the accumulation sketch at runtime (incremental Grams + rank-updated
+//!   Cholesky) until a [`StoppingRule`](crate::stats::StoppingRule) picks
+//!   the data-dependent `m`.
 //! * [`falkon`] — the Falkon baseline (Rudi et al. 2017): preconditioned
 //!   conjugate gradients with early stopping, generalised to take any
 //!   sketch from this crate (paper §3.3 discusses exactly this pairing).
@@ -21,4 +24,4 @@ pub use exact::KrrModel;
 pub use falkon::{falkon, FalkonOptions, FalkonResult};
 pub use kkmeans::{kernel_kmeans, lloyd, KernelKmeans};
 pub use kpca::{sketched_kpca, SketchedKpca};
-pub use sketched::{SketchedKrr, SketchedKrrReport};
+pub use sketched::{AdaptiveOptions, AdaptiveRound, SketchedKrr, SketchedKrrReport};

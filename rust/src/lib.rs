@@ -12,6 +12,16 @@
 //!   sketching at close to Nyström cost, because
 //!   `KS = Σᵢ K S₍ᵢ₎` costs `O(nmd)` rather than `O(n²d)`.
 //!
+//! Since optimal sampling probabilities are rarely available in practice,
+//! the right `m` is data-dependent — so accumulation is implemented as the
+//! system's **incremental runtime loop**, not just a constructor
+//! parameter: [`sketch::AccumSketch`] grows term by term (bit-matching a
+//! one-shot build from the same RNG stream), [`sketch::IncrementalGram`]
+//! folds each term into `KS`/`SᵀKS`/`SᵀK²S` without a rebuild,
+//! [`linalg::CholFactor`] supports rank up/down-dates of the `d×d` solve,
+//! and [`krr::SketchedKrr::fit_adaptive`] grows `m` until a
+//! [`stats::StoppingRule`] fires.
+//!
 //! The crate is organised in three layers:
 //!
 //! * **Substrates** (built from scratch — the offline image only ships the
@@ -19,10 +29,12 @@
 //! * **Core statistical library**: [`kernels`], [`sketch`], [`leverage`],
 //!   [`krr`], [`stats`], [`data`].
 //! * **System layer**: [`runtime`] (PJRT execution of AOT-compiled JAX/Pallas
-//!   artifacts), [`coordinator`] (experiment scheduler, prediction server,
-//!   dynamic batcher), [`bench`] (paper figure regeneration harness).
+//!   artifacts), [`coordinator`] (experiment scheduler, prediction server
+//!   with an adaptive-fit job kind, dynamic batcher), [`bench`] (paper
+//!   figure regeneration plus the adaptive-vs-refit comparison).
 //!
-//! See `DESIGN.md` for the full inventory and the per-experiment index.
+//! See `DESIGN.md` (repo root) for the full inventory, the incremental
+//! accumulation data flow, and the per-experiment index.
 
 pub mod bench;
 pub mod coordinator;
@@ -39,7 +51,7 @@ pub mod stats;
 pub mod util;
 
 pub use kernels::Kernel;
-pub use krr::{KrrModel, SketchedKrr};
+pub use krr::{AdaptiveOptions, KrrModel, SketchedKrr};
 pub use linalg::Matrix;
 pub use rng::Pcg64;
-pub use sketch::{Sketch, SketchKind};
+pub use sketch::{AccumSketch, Sketch, SketchKind, SketchOps};

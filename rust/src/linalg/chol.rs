@@ -126,6 +126,132 @@ impl CholFactor {
     pub fn inverse(&self) -> Matrix {
         self.solve_mat(&Matrix::eye(self.n()))
     }
+
+    /// Scale the factored matrix: `A → α²·A` via `L → α·L`. The
+    /// incremental accumulation engine uses this when appending a sketch
+    /// term rescales all earlier terms by `α = √(m/m′) < 1`.
+    pub fn scale(&mut self, alpha: f64) {
+        assert!(alpha > 0.0 && alpha.is_finite(), "chol scale: alpha > 0");
+        for v in self.l.data_mut().iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Givens-style update sweep for `A → A + work·workᵀ`, starting at
+    /// column `start` (entries of `work` before `start` must be zero).
+    fn update_from(&mut self, work: &mut [f64], start: usize) {
+        let n = self.n();
+        for k in start..n {
+            let wk = work[k];
+            if wk == 0.0 {
+                // rotation is the identity; nothing to fold
+                continue;
+            }
+            let lkk = self.l[(k, k)];
+            let r = (lkk * lkk + wk * wk).sqrt();
+            let c = r / lkk;
+            let s = wk / lkk;
+            self.l[(k, k)] = r;
+            for i in (k + 1)..n {
+                let lik = (self.l[(i, k)] + s * work[i]) / c;
+                work[i] = c * work[i] - s * lik;
+                self.l[(i, k)] = lik;
+            }
+        }
+    }
+
+    /// Rank-1 update `A → A + v·vᵀ` in `O(n²)` (LINPACK `dchud`-style
+    /// sweep) — always succeeds: adding a PSD term preserves
+    /// positive-definiteness.
+    pub fn rank1_update(&mut self, v: &[f64]) {
+        assert_eq!(v.len(), self.n(), "rank1_update: dim");
+        let mut work = v.to_vec();
+        self.update_from(&mut work, 0);
+    }
+
+    /// Rank-1 downdate `A → A − v·vᵀ` in `O(n²)` (hyperbolic-rotation
+    /// sweep). Returns `false` — leaving the factor *unchanged* — when the
+    /// downdated matrix is not positive-definite to working precision;
+    /// callers fall back to re-factorisation (or reject the downdate).
+    pub fn rank1_downdate(&mut self, v: &[f64]) -> bool {
+        let n = self.n();
+        assert_eq!(v.len(), n, "rank1_downdate: dim");
+        let backup = self.l.clone();
+        let mut work = v.to_vec();
+        for k in 0..n {
+            let wk = work[k];
+            if wk == 0.0 {
+                continue;
+            }
+            let lkk = self.l[(k, k)];
+            let d2 = lkk * lkk - wk * wk;
+            if d2 <= 0.0 || !d2.is_finite() {
+                self.l = backup;
+                return false;
+            }
+            let r = d2.sqrt();
+            let c = r / lkk;
+            let s = wk / lkk;
+            self.l[(k, k)] = r;
+            for i in (k + 1)..n {
+                let lik = (self.l[(i, k)] - s * work[i]) / c;
+                work[i] = c * work[i] - s * lik;
+                self.l[(i, k)] = lik;
+            }
+        }
+        true
+    }
+
+    /// Rank-k update/downdate `A → A + Σᵢ σᵢ·vᵢvᵢᵀ` with `σᵢ ∈ {+1, −1}`
+    /// (`vᵢ` = columns of `cols`; a zero `σᵢ` skips its column). Updates
+    /// are applied before downdates so every intermediate matrix stays PD
+    /// whenever the final one is (each intermediate equals the final
+    /// matrix plus a PSD sum of the remaining downdates). Returns `false`
+    /// — restoring the original factor — if a downdate still loses
+    /// positive-definiteness (the final matrix itself is not PD to working
+    /// precision); callers then re-factorise with jitter.
+    pub fn rank_update(&mut self, cols: &Matrix, sigma: &[f64]) -> bool {
+        let n = self.n();
+        assert_eq!(cols.rows(), n, "rank_update: rows");
+        assert_eq!(cols.cols(), sigma.len(), "rank_update: sigma len");
+        let backup = self.l.clone();
+        for (j, &s) in sigma.iter().enumerate() {
+            if s > 0.0 {
+                self.rank1_update(&cols.col(j));
+            }
+        }
+        for (j, &s) in sigma.iter().enumerate() {
+            if s < 0.0 && !self.rank1_downdate(&cols.col(j)) {
+                self.l = backup;
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Diagonal jitter update `A → A + ε·I` applied directly to the factor
+    /// (n sparse rank-1 updates with `√ε·eₖ`, each starting its sweep at
+    /// `k`). Costs `O(n³/3)` — same order as re-factorising — but needs
+    /// only `L`: the adaptive KRR loop uses it when a rank-update's
+    /// downdates lose positive-definiteness by a numerical hair, bumping
+    /// the factored system and retrying before paying for a rebuild of
+    /// `A` and a fresh factorisation.
+    pub fn diag_update(&mut self, eps: f64) {
+        assert!(eps >= 0.0 && eps.is_finite(), "diag_update: eps >= 0");
+        if eps == 0.0 {
+            return;
+        }
+        let n = self.n();
+        let se = eps.sqrt();
+        let mut work = vec![0.0; n];
+        for k in 0..n {
+            for w in work.iter_mut() {
+                *w = 0.0;
+            }
+            work[k] = se;
+            self.update_from(&mut work, k);
+        }
+    }
 }
 
 /// One-shot SPD solve.
@@ -200,6 +326,145 @@ mod tests {
     fn logdet_identity_zero() {
         let f = chol_factor(&Matrix::eye(5)).unwrap();
         assert!(f.logdet().abs() < 1e-12);
+    }
+
+    fn outer(v: &[f64]) -> Matrix {
+        Matrix::from_fn(v.len(), v.len(), |i, j| v[i] * v[j])
+    }
+
+    fn assert_factors_close(a: &CholFactor, b: &CholFactor, tol: f64, what: &str) {
+        assert_eq!(a.n(), b.n());
+        for i in 0..a.n() {
+            for j in 0..=i {
+                assert!(
+                    (a.l()[(i, j)] - b.l()[(i, j)]).abs() < tol,
+                    "{what} ({i},{j}): {} vs {}",
+                    a.l()[(i, j)],
+                    b.l()[(i, j)]
+                );
+            }
+        }
+    }
+
+    /// Property: rank-1 update matches full re-factorisation of `A + vvᵀ`
+    /// (the Cholesky factor of a PD matrix is unique, so factors compare
+    /// entrywise).
+    #[test]
+    fn rank1_update_matches_refactorisation() {
+        for seed in 0..8u64 {
+            let mut r = Pcg64::seed(0xc401 + seed);
+            let n = 4 + (seed as usize % 9);
+            let a = random_spd(&mut r, n);
+            let v: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let mut up = chol_factor(&a).unwrap();
+            up.rank1_update(&v);
+            let mut plus = a.clone();
+            plus.axpy(1.0, &outer(&v));
+            let re = chol_factor(&plus).unwrap();
+            assert_factors_close(&up, &re, 1e-8, "rank1 update");
+        }
+    }
+
+    /// Property: downdating the update recovers the original factor.
+    #[test]
+    fn rank1_downdate_matches_refactorisation() {
+        for seed in 0..8u64 {
+            let mut r = Pcg64::seed(0xc402 + seed);
+            let n = 4 + (seed as usize % 9);
+            let a = random_spd(&mut r, n);
+            let v: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let mut plus = a.clone();
+            plus.axpy(1.0, &outer(&v));
+            let mut down = chol_factor(&plus).unwrap();
+            assert!(down.rank1_downdate(&v), "downdate must succeed");
+            let re = chol_factor(&a).unwrap();
+            assert_factors_close(&down, &re, 1e-7, "rank1 downdate");
+        }
+    }
+
+    #[test]
+    fn failed_downdate_leaves_factor_unchanged() {
+        let mut r = Pcg64::seed(0xc403);
+        let a = random_spd(&mut r, 7);
+        let mut f = chol_factor(&a).unwrap();
+        let before = f.l().clone();
+        // v far too large: A − vvᵀ is indefinite
+        let v: Vec<f64> = (0..7).map(|_| 100.0 + r.uniform()).collect();
+        assert!(!f.rank1_downdate(&v));
+        assert_eq!(f.l().data(), before.data(), "factor must be restored");
+        // and the factor still solves the original system
+        let b: Vec<f64> = (0..7).map(|_| r.normal()).collect();
+        let x = f.solve(&b);
+        let back = a.matvec(&x);
+        for (u, w) in back.iter().zip(b.iter()) {
+            assert!((u - w).abs() < 1e-8);
+        }
+    }
+
+    /// Property: mixed rank-k up/down-date matches re-factorisation of
+    /// `A + Σ σᵢvᵢvᵢᵀ`.
+    #[test]
+    fn rank_k_update_matches_refactorisation() {
+        for seed in 0..6u64 {
+            let mut r = Pcg64::seed(0xc404 + seed);
+            let n = 6 + (seed as usize % 5);
+            let k = 3;
+            let a = random_spd(&mut r, n);
+            // keep downdate vectors small so the result stays PD
+            let cols = Matrix::from_fn(n, k, |_, j| r.normal() * if j == 1 { 0.05 } else { 1.0 });
+            let sigma = [1.0, -1.0, 1.0];
+            let mut target = a.clone();
+            for (j, &s) in sigma.iter().enumerate() {
+                target.axpy(s, &outer(&cols.col(j)));
+            }
+            let mut f = chol_factor(&a).unwrap();
+            assert!(f.rank_update(&cols, &sigma), "rank-k must succeed");
+            let re = chol_factor(&target).unwrap();
+            assert_factors_close(&f, &re, 1e-7, "rank-k update");
+        }
+    }
+
+    #[test]
+    fn rank_update_zero_sigma_skips_column() {
+        let mut r = Pcg64::seed(0xc407);
+        let a = random_spd(&mut r, 6);
+        let cols = Matrix::from_fn(6, 2, |_, _| r.normal());
+        let mut f = chol_factor(&a).unwrap();
+        // σ = 0 must be a no-op for its column, not a downdate
+        assert!(f.rank_update(&cols, &[1.0, 0.0]));
+        let mut target = a.clone();
+        target.axpy(1.0, &outer(&cols.col(0)));
+        let re = chol_factor(&target).unwrap();
+        assert_factors_close(&f, &re, 1e-8, "zero sigma skip");
+    }
+
+    #[test]
+    fn scale_matches_scaled_refactorisation() {
+        let mut r = Pcg64::seed(0xc405);
+        let a = random_spd(&mut r, 9);
+        let mut f = chol_factor(&a).unwrap();
+        f.scale(2.0);
+        let mut a4 = a.clone();
+        a4.scale(4.0);
+        let re = chol_factor(&a4).unwrap();
+        assert_factors_close(&f, &re, 1e-9, "scale");
+    }
+
+    /// The jitter-bump path: `diag_update(ε)` equals re-factorising
+    /// `A + ε·I`.
+    #[test]
+    fn diag_update_matches_add_diag_refactorisation() {
+        for seed in 0..4u64 {
+            let mut r = Pcg64::seed(0xc406 + seed);
+            let n = 5 + seed as usize;
+            let a = random_spd(&mut r, n);
+            let mut f = chol_factor(&a).unwrap();
+            f.diag_update(0.37);
+            let mut bumped = a.clone();
+            bumped.add_diag(0.37);
+            let re = chol_factor(&bumped).unwrap();
+            assert_factors_close(&f, &re, 1e-8, "diag update");
+        }
     }
 
     #[test]

@@ -62,26 +62,39 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C = Aᵀ · B` without materialising the transpose.
+/// `C = Aᵀ · B` without materialising the transpose, parallelised over
+/// row panels of `C`. Each panel streams the rows of `A` and `B` once
+/// (p-major inner order), so the per-element accumulation order is
+/// identical to the serial loop — results are bitwise independent of the
+/// thread count.
 pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
-    // C[i,:] += A[p,i] * B[p,:]   — stream rows of A and B together.
-    for p in 0..k {
-        let arow = a.row(p);
-        let brow = b.row(p);
-        for i in 0..m {
-            let aval = arow[i];
-            if aval == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += aval * bv;
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let adat = a.data();
+    let bdat = b.data();
+    let cdat = c.data_mut();
+    pool::scope_chunks(cdat, n * PANEL, |panel_idx, chunk| {
+        let r0 = panel_idx * PANEL;
+        let rows = chunk.len() / n;
+        // C[i,:] += A[p,i] * B[p,:] — stream rows of A and B together.
+        for p in 0..k {
+            let arow = &adat[p * m..(p + 1) * m];
+            let brow = &bdat[p * n..(p + 1) * n];
+            for (local_i, crow) in chunk.chunks_mut(n).enumerate().take(rows) {
+                let aval = arow[r0 + local_i];
+                if aval == 0.0 {
+                    continue;
+                }
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += aval * bv;
+                }
             }
         }
-    }
+    });
     c
 }
 
@@ -112,24 +125,35 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C = Aᵀ · A` (symmetric rank-k update), computing only the upper triangle
-/// and mirroring. Used for `SᵀK²S = (KS)ᵀ(KS)`.
+/// `C = Aᵀ · A` (symmetric rank-k update), computing only the upper
+/// triangle and mirroring, parallelised over row panels of `C`. Used for
+/// `SᵀK²S = (KS)ᵀ(KS)`. The p-major accumulation order matches the serial
+/// loop exactly, so results are bitwise independent of the thread count.
 pub fn syrk_at_a(a: &Matrix) -> Matrix {
     let (k, n) = (a.rows(), a.cols());
     let mut c = Matrix::zeros(n, n);
-    for p in 0..k {
-        let row = a.row(p);
-        for i in 0..n {
-            let v = row[i];
-            if v == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for j in i..n {
-                crow[j] += v * row[j];
+    if n == 0 || k == 0 {
+        return c;
+    }
+    let adat = a.data();
+    let cdat = c.data_mut();
+    pool::scope_chunks(cdat, n * PANEL, |panel_idx, chunk| {
+        let r0 = panel_idx * PANEL;
+        let rows = chunk.len() / n;
+        for p in 0..k {
+            let row = &adat[p * n..(p + 1) * n];
+            for (local_i, crow) in chunk.chunks_mut(n).enumerate().take(rows) {
+                let i = r0 + local_i;
+                let v = row[i];
+                if v == 0.0 {
+                    continue;
+                }
+                for j in i..n {
+                    crow[j] += v * row[j];
+                }
             }
         }
-    }
+    });
     // mirror
     for i in 0..n {
         for j in (i + 1)..n {
@@ -217,5 +241,34 @@ mod tests {
         let b = Matrix::zeros(3, 4);
         let c = matmul(&a, &b);
         assert_eq!((c.rows(), c.cols()), (0, 4));
+        let atb = matmul_at_b(&a, &Matrix::zeros(0, 4));
+        assert_eq!((atb.rows(), atb.cols()), (3, 4));
+        let s = syrk_at_a(&Matrix::zeros(0, 3));
+        assert_eq!((s.rows(), s.cols()), (3, 3));
+    }
+
+    /// The p-major accumulation order makes the parallel row-panel split
+    /// bitwise identical to the serial path.
+    #[test]
+    fn at_b_and_syrk_parallel_match_serial_exactly() {
+        use crate::pool;
+        let _guard = pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut r = Pcg64::seed(0x9002);
+        // > PANEL output rows so the pool actually splits
+        let a = randm(&mut r, 150, 70);
+        let b = randm(&mut r, 150, 33);
+        let big = randm(&mut r, 90, 130);
+        let before = pool::num_threads();
+        pool::set_num_threads(1);
+        let atb_serial = matmul_at_b(&a, &b);
+        let syrk_serial = syrk_at_a(&big);
+        pool::set_num_threads(4);
+        let atb_par = matmul_at_b(&a, &b);
+        let syrk_par = syrk_at_a(&big);
+        pool::set_num_threads(before);
+        assert_eq!(atb_serial.data(), atb_par.data());
+        assert_eq!(syrk_serial.data(), syrk_par.data());
     }
 }

@@ -1,10 +1,11 @@
 //! `accumkrr` — CLI launcher for the accumulation-sketch KRR framework.
 //!
 //! ```text
-//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost> [--replicates N]
+//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive> [--replicates N]
 //!          [--n-max N] [--seed S] [--csv PATH] [--full]
 //! accumkrr train --name M --dataset rqa --n 2000 --sketch accum --m 4
 //!          [--d D] [--lambda L] [--bandwidth B] [--seed S] [--save PATH]
+//! accumkrr train --sketch adaptive [--m-max M] [--rel-tol T]  # adaptive m
 //! accumkrr serve [--addr 127.0.0.1:7878]
 //! accumkrr info [--artifacts DIR]
 //! accumkrr gen-data --dataset rqa --n 1000 --out data.csv [--seed S]
@@ -13,7 +14,6 @@
 use accumkrr::bench::{self, BenchOpts};
 use accumkrr::coordinator::state::{model_to_json, ModelStore, TrainRequest};
 use accumkrr::coordinator::{serve, ServerConfig};
-use accumkrr::sketch::SketchKind;
 use accumkrr::util::cli::Args;
 use std::sync::Arc;
 
@@ -79,16 +79,15 @@ fn cmd_bench(args: &Args) -> i32 {
 }
 
 fn cmd_train(args: &Args) -> i32 {
-    let kind = match args.str_or("sketch", "accum") {
-        "nystrom" => SketchKind::Nystrom,
-        "gaussian" => SketchKind::Gaussian,
-        "rademacher" => SketchKind::Rademacher,
-        "verysparse" => SketchKind::VerySparse { sparsity: None },
-        "accum" => SketchKind::Accumulation {
-            m: args.usize_or("m", 4).max(1),
-        },
-        other => {
-            eprintln!("train: unknown sketch {other:?}");
+    let (kind, adaptive) = match accumkrr::coordinator::state::parse_sketch_spec(
+        args.str_or("sketch", "accum"),
+        args.usize_or("m", 4),
+        args.usize_or("m-max", 64),
+        args.f64_or("rel-tol", 1e-3),
+    ) {
+        Ok(spec) => spec,
+        Err(e) => {
+            eprintln!("train: {e}");
             return 2;
         }
     };
@@ -101,6 +100,7 @@ fn cmd_train(args: &Args) -> i32 {
         lambda: args.f64_or("lambda", 0.0),
         bandwidth: args.f64_or("bandwidth", 0.0),
         seed: args.usize_or("seed", 1) as u64,
+        adaptive,
     };
     let store = ModelStore::new();
     match store.train(&req) {
@@ -114,6 +114,13 @@ fn cmd_train(args: &Args) -> i32 {
                 meta.train_mse,
                 meta.train_secs
             );
+            let rep = *meta.model.report();
+            if rep.rounds > 0 {
+                println!(
+                    "adaptive: chose m={} in {} rounds ({} rank updates, {} refactors, {} kernel evals)",
+                    rep.m, rep.rounds, rep.rank_updates, rep.refactors, rep.kernel_evals
+                );
+            }
             if let Some(path) = args.flags.get("save") {
                 let j = model_to_json(&meta.model);
                 if let Err(e) = std::fs::write(path, j.to_string()) {

@@ -16,6 +16,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 static CACHED: AtomicUsize = AtomicUsize::new(0);
 
+/// Serialises tests that mutate the process-global worker count via
+/// [`set_num_threads`] — without it, concurrently running tests race on
+/// the shared setting and a "serial" baseline can silently run parallel.
+#[cfg(test)]
+pub(crate) static TEST_THREADS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Number of worker threads to use.
 pub fn num_threads() -> usize {
     let c = CACHED.load(Ordering::Relaxed);
@@ -142,6 +148,7 @@ mod tests {
 
     #[test]
     fn multithreaded_path_covers_all_chunks() {
+        let _guard = TEST_THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         // force >1 workers even on a 1-core box, then restore
         let before = num_threads();
         set_num_threads(4);
@@ -161,6 +168,7 @@ mod tests {
     fn multithreaded_gemm_matches_serial() {
         use crate::linalg::{matmul, Matrix};
         use crate::rng::Pcg64;
+        let _guard = TEST_THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let mut r = Pcg64::seed(0x9001);
         let a = Matrix::from_fn(130, 40, |_, _| r.normal());
         let b = Matrix::from_fn(40, 50, |_, _| r.normal());

@@ -1,0 +1,297 @@
+//! Growable accumulation sketch — the paper's `S = Σ_{i=1}^{m} S₍ᵢ₎` as a
+//! *runtime* object instead of a constructor parameter.
+//!
+//! [`AccumSketch`] stores the raw draws of every sub-sampling term
+//! `S₍ᵢ₎` (per column: a sampled row index and a Rademacher sign) and
+//! materialises the accumulated sketch at the *current* term count `m`.
+//! Because each entry's weight `r/√(d·m·p)` depends on `m`, appending a
+//! term implicitly rescales all earlier terms by `√(m/(m+1))`; storing the
+//! m-free draw `(index, sign)` and recomputing the weight on
+//! materialisation makes that rescaling exact — growing a sketch from 1 to
+//! `m` terms is **bit-identical** to a one-shot
+//! [`SketchKind::Accumulation { m }`](super::SketchKind) build from the
+//! same RNG stream (both consume draws in term-major order: for each term,
+//! for each column, index then sign).
+//!
+//! This is the substrate of the incremental accumulation engine: the
+//! adaptive KRR loop ([`crate::krr::SketchedKrr::fit_adaptive`]) appends
+//! terms until a stopping rule fires, and
+//! [`IncrementalGram`](super::IncrementalGram) folds each appended term
+//! into the sketched Gram matrices without a rebuild.
+
+use super::{Sampling, Sketch, SketchOps, SparseSketch};
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// One raw sub-sampling draw: sampled row index + Rademacher sign (the
+/// `1/√(d·m·p)` rescaling is applied at materialisation time, where `m` is
+/// known).
+type RawEntry = (usize, f64);
+
+/// A growable accumulation sketch `S = Σ_{i=1}^{m} S₍ᵢ₎` over `n` points
+/// with projection dimension `d`.
+#[derive(Clone, Debug)]
+pub struct AccumSketch {
+    n: usize,
+    d: usize,
+    sampling: Sampling,
+    signed: bool,
+    /// `terms[i][j]` = (row index, sign) of term `i`'s single non-zero in
+    /// column `j`.
+    terms: Vec<Vec<RawEntry>>,
+    /// Materialised sparse view at the current `m` (kept in sync by the
+    /// grow operations).
+    sparse: SparseSketch,
+}
+
+impl AccumSketch {
+    /// Empty sketch (`m = 0`) with uniform sampling.
+    pub fn new(n: usize, d: usize) -> AccumSketch {
+        assert!(n > 0 && d > 0, "accum sketch: empty dims");
+        AccumSketch {
+            n,
+            d,
+            sampling: Sampling::Uniform,
+            signed: true,
+            terms: Vec::new(),
+            sparse: SparseSketch::new(n, vec![Vec::new(); d]),
+        }
+    }
+
+    /// Override the sampling distribution (e.g. leverage scores).
+    pub fn with_sampling(mut self, sampling: Sampling) -> AccumSketch {
+        assert!(self.terms.is_empty(), "set sampling before growing");
+        self.sampling = sampling;
+        self
+    }
+
+    /// Disable the Rademacher signs (classical Nyström at `m = 1`).
+    pub fn unsigned(mut self) -> AccumSketch {
+        assert!(self.terms.is_empty(), "set signedness before growing");
+        self.signed = false;
+        self
+    }
+
+    /// Number of accumulated terms `m` so far.
+    pub fn m(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Sampling distribution used for the draws.
+    pub fn sampling(&self) -> &Sampling {
+        &self.sampling
+    }
+
+    /// Stable name for manifests / bench output (`accum_m{m}`), consistent
+    /// with [`SketchKind::Accumulation`](super::SketchKind).
+    pub fn name(&self) -> String {
+        format!("accum_m{}", self.m())
+    }
+
+    /// Append one sub-sampling term `S₍ᵢ₎`, drawing `d` (index, sign)
+    /// pairs from `rng` in column order — exactly the draws a one-shot
+    /// build consumes for its `i`-th term.
+    pub fn append_term(&mut self, rng: &mut Pcg64) {
+        self.push_raw_term(rng);
+        self.rebuild();
+    }
+
+    /// Grow to `m` terms (no-op if already at or beyond `m`). Equivalent
+    /// to calling [`append_term`](Self::append_term) in a loop but only
+    /// materialises once.
+    pub fn grow_to(&mut self, m: usize, rng: &mut Pcg64) {
+        if m <= self.terms.len() {
+            return;
+        }
+        while self.terms.len() < m {
+            self.push_raw_term(rng);
+        }
+        self.rebuild();
+    }
+
+    fn push_raw_term(&mut self, rng: &mut Pcg64) {
+        let mut term = Vec::with_capacity(self.d);
+        for _ in 0..self.d {
+            let j = match &self.sampling {
+                Sampling::Uniform => rng.below(self.n as u64) as usize,
+                Sampling::Weighted(t) => t.sample(rng),
+            };
+            let r = if self.signed { rng.rademacher() } else { 1.0 };
+            term.push((j, r));
+        }
+        self.terms.push(term);
+    }
+
+    /// Entries of term `i` at the *current* scaling: `(column, row,
+    /// weight)` with `weight = sign/√(d·m·p_row)`. Consumed by
+    /// [`IncrementalGram`](super::IncrementalGram) when folding appended
+    /// terms into the Gram matrices.
+    pub fn term_entries(&self, i: usize) -> Vec<(usize, usize, f64)> {
+        let dm = (self.d * self.m()) as f64;
+        self.terms[i]
+            .iter()
+            .enumerate()
+            .map(|(col, &(row, sign))| {
+                let p = self.sampling.prob(row, self.n);
+                (col, row, sign / (dm * p).sqrt())
+            })
+            .collect()
+    }
+
+    /// Rebuild the materialised sparse view at the current `m`. Weights
+    /// use the same expression as the one-shot builder
+    /// (`sign / √((d·m)·p)`), so grown and one-shot sketches bit-match.
+    fn rebuild(&mut self) {
+        let m = self.terms.len();
+        let dm = (self.d * m) as f64;
+        let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::with_capacity(m); self.d];
+        for term in &self.terms {
+            for (col, &(row, sign)) in term.iter().enumerate() {
+                let p = self.sampling.prob(row, self.n);
+                cols[col].push((row, sign / (dm * p).sqrt()));
+            }
+        }
+        self.sparse = SparseSketch::new(self.n, cols);
+    }
+
+    /// The materialised sparse sketch at the current `m`.
+    pub fn sparse(&self) -> &SparseSketch {
+        &self.sparse
+    }
+
+    /// Clone into the [`Sketch`] enum (for APIs taking any sketch).
+    pub fn as_sketch(&self) -> Sketch {
+        Sketch::Sparse(self.sparse.clone())
+    }
+}
+
+impl SketchOps for AccumSketch {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn nnz(&self) -> usize {
+        self.sparse.nnz()
+    }
+
+    fn to_dense(&self) -> Matrix {
+        self.sparse.to_dense()
+    }
+
+    fn st_mat(&self, b: &Matrix) -> Matrix {
+        self.sparse.st_mat(b)
+    }
+
+    fn st_vec(&self, v: &[f64]) -> Vec<f64> {
+        self.sparse.st_vec(v)
+    }
+
+    fn s_vec(&self, w: &[f64]) -> Vec<f64> {
+        self.sparse.s_vec(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{SketchBuilder, SketchKind};
+
+    /// The tentpole determinism contract: growing 1 → m bit-matches a
+    /// one-shot `Accumulation { m }` build from the same RNG stream.
+    #[test]
+    fn grown_sketch_bit_matches_one_shot() {
+        let (n, d, m) = (120, 9, 8);
+        let mut rng_grow = Pcg64::seed(0x51de);
+        let mut rng_shot = Pcg64::seed(0x51de);
+        let mut acc = AccumSketch::new(n, d);
+        for _ in 0..m {
+            acc.append_term(&mut rng_grow);
+        }
+        let shot = SketchBuilder::new(SketchKind::Accumulation { m }).build(n, d, &mut rng_shot);
+        let Sketch::Sparse(shot) = shot else {
+            panic!("accumulation builds sparse")
+        };
+        assert_eq!(acc.m(), m);
+        for j in 0..d {
+            let a = acc.sparse().col(j);
+            let b = shot.col(j);
+            assert_eq!(a.len(), b.len(), "col {j} nnz");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.0, y.0, "col {j} index");
+                assert_eq!(x.1.to_bits(), y.1.to_bits(), "col {j} weight bits");
+            }
+        }
+        // and the RNG streams are in the same position afterwards
+        assert_eq!(rng_grow.next_u64(), rng_shot.next_u64());
+    }
+
+    #[test]
+    fn grow_to_matches_append_loop() {
+        let mut r1 = Pcg64::seed(77);
+        let mut r2 = Pcg64::seed(77);
+        let mut a = AccumSketch::new(50, 6);
+        let mut b = AccumSketch::new(50, 6);
+        a.grow_to(5, &mut r1);
+        for _ in 0..5 {
+            b.append_term(&mut r2);
+        }
+        assert_eq!(a.sparse().nnz(), b.sparse().nnz());
+        for j in 0..6 {
+            assert_eq!(a.sparse().col(j), b.sparse().col(j));
+        }
+    }
+
+    #[test]
+    fn rescaling_shrinks_earlier_terms() {
+        let mut rng = Pcg64::seed(3);
+        let mut acc = AccumSketch::new(40, 4);
+        acc.append_term(&mut rng);
+        let w1 = acc.sparse().col(0)[0].1.abs();
+        acc.append_term(&mut rng);
+        let w2 = acc.sparse().col(0)[0].1.abs();
+        // same raw draw, rescaled by √(1/2)
+        assert!((w2 - w1 / 2f64.sqrt()).abs() < 1e-12, "{w2} vs {w1}/√2");
+    }
+
+    #[test]
+    fn term_entries_match_materialised_columns() {
+        let mut rng = Pcg64::seed(4);
+        let mut acc = AccumSketch::new(30, 5);
+        acc.grow_to(3, &mut rng);
+        for i in 0..3 {
+            for (col, row, w) in acc.term_entries(i) {
+                let &(r, wv) = &acc.sparse().col(col)[i];
+                assert_eq!(r, row);
+                assert_eq!(wv.to_bits(), w.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_sketch_has_zero_terms() {
+        let acc = AccumSketch::new(10, 3);
+        assert_eq!(acc.m(), 0);
+        assert_eq!(acc.nnz(), 0);
+        assert_eq!(acc.name(), "accum_m0");
+    }
+
+    #[test]
+    fn sketch_ops_delegate_to_sparse_view() {
+        let mut rng = Pcg64::seed(5);
+        let mut acc = AccumSketch::new(25, 4);
+        acc.grow_to(2, &mut rng);
+        let dense = acc.to_dense();
+        let v: Vec<f64> = (0..25).map(|i| i as f64).collect();
+        let via_acc = acc.st_vec(&v);
+        let via_dense = dense.matvec_t(&v);
+        for (a, b) in via_acc.iter().zip(via_dense.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        assert_eq!(SketchOps::n(&acc), 25);
+        assert_eq!(SketchOps::d(&acc), 4);
+    }
+}

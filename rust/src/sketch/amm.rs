@@ -8,7 +8,7 @@
 //! `O(k·n·c)` — the same m/d trade-off as in KRR: m controls the variance
 //! contributed by high-incoherence rows, d the overall rank budget.
 
-use super::Sketch;
+use super::{Sketch, SketchOps};
 use crate::linalg::{matmul, Matrix};
 
 /// `A·B ≈ (A S)(Sᵀ B)` through the sketch.

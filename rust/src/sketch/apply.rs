@@ -9,9 +9,10 @@
 //! * dense `S` (Gaussian/Rademacher): the full `K` and an `O(n²d)` GEMM are
 //!   unavoidable, which is exactly the gap the paper's Figures 1/3 show.
 
-use super::{Sketch, SparseSketch};
+use super::{AccumSketch, Sketch, SketchOps, SparseSketch};
 use crate::kernels::{cross_kernel, kernel_matrix, Kernel};
-use crate::linalg::{matmul, syrk_at_a, Matrix};
+use crate::linalg::{chol_factor, matmul, matmul_at_b, syrk_at_a, Matrix};
+use std::collections::HashMap;
 
 /// All sketched quantities the KRR solvers need, with the cost model used
 /// to produce them.
@@ -103,6 +104,275 @@ pub fn sketch_gram(
     }
 }
 
+/// The factored form of one accumulation step's effect on the solver
+/// matrix `A = SᵀK²S + nλ·SᵀKS`, produced by [`IncrementalGram::sync`].
+///
+/// With `S_new = α·S_old + T` (T = the appended terms, α = `√(m/m′)` the
+/// rescaling of earlier terms) and `δ` distinct support rows in `T`,
+///
+/// ```text
+///   A_new = α²·A_old + Σ_u (g_u c_uᵀ + c_u g_uᵀ) + C·(G_UU + nλ·K_UU)·Cᵀ
+/// ```
+///
+/// where `c_u` is column `u` of `C` (the new-term weight pattern),
+/// `g_u = a_u + nλ·b_u` with `a_u = (α·KS_old)ᵀ k_u` and `b_u` the
+/// `u`-th support row of `α·KS_old`. [`AppendDelta::factor_update`] turns
+/// this into `3δ` signed rank-1 vectors for
+/// [`CholFactor::rank_update`](crate::linalg::CholFactor::rank_update), so
+/// the `d×d` factor is *updated* (`O(δ·d²)`) instead of re-factorised
+/// (`O(d³)`) — a win whenever the appended support is small relative to
+/// `d` (single-term growth at small n, or concentrated weighted sampling).
+#[derive(Clone, Debug)]
+pub struct AppendDelta {
+    /// Rescaling `α = √(m_old/m_new)` applied to the previous Grams
+    /// (0 when the sketch was empty before the append).
+    pub alpha: f64,
+    /// `d×δ` new-term weight pattern: `C[j, u] = Σ_t w_{t,j}·[row = u]`.
+    pub c: Matrix,
+    /// `d×δ`: `a_u = (α·KS_old)ᵀ·k_u` per distinct support row.
+    pub a_cols: Matrix,
+    /// `δ×d`: support rows of `α·KS_old`.
+    pub b_rows: Matrix,
+    /// `δ×δ` kernel-column Gram `k_uᵀ k_v` (= `[K²]_{uv}`).
+    pub guu: Matrix,
+    /// `δ×δ` kernel values `K(x_u, x_v)`.
+    pub kuu: Matrix,
+}
+
+impl AppendDelta {
+    /// Number of distinct support rows `δ` the append touched.
+    pub fn support_len(&self) -> usize {
+        self.c.cols()
+    }
+
+    /// Number of signed rank-1 vectors [`factor_update`](Self::factor_update)
+    /// produces (`3δ`) — callers compare `rank() · d²` against the
+    /// `d³/3` re-factorisation cost to pick a strategy.
+    pub fn rank(&self) -> usize {
+        3 * self.support_len()
+    }
+
+    /// Signed rank-1 vectors `(columns, σ)` such that
+    /// `A_new = α²·A_old + Σᵢ σᵢ vᵢvᵢᵀ` for the ridge level `nl = n·λ`.
+    /// Returns `None` when the small `δ×δ` PSD block fails to factor
+    /// (numerically rank-deficient batch — duplicate support rows); the
+    /// caller falls back to re-factorisation from the exact Grams.
+    pub fn factor_update(&self, nl: f64) -> Option<(Matrix, Vec<f64>)> {
+        let d = self.c.rows();
+        let k = self.support_len();
+        // PSD block W = G_UU + nλ·K_UU = M·Mᵀ
+        let mut w = self.guu.clone();
+        w.axpy(nl, &self.kuu);
+        w.symmetrize();
+        let m = chol_factor(&w)?;
+        let cm = matmul(&self.c, m.l()); // d×δ, C·M
+        let inv_sqrt2 = 1.0 / 2f64.sqrt();
+        let mut cols = Matrix::zeros(d, 3 * k);
+        let mut sigma = vec![1.0; 3 * k];
+        for u in 0..k {
+            for i in 0..d {
+                let g = self.a_cols[(i, u)] + nl * self.b_rows[(u, i)];
+                let c = self.c[(i, u)];
+                // g cᵀ + c gᵀ = ½[(g+c)(g+c)ᵀ − (g−c)(g−c)ᵀ]
+                cols[(i, 3 * u)] = (g + c) * inv_sqrt2;
+                cols[(i, 3 * u + 1)] = (g - c) * inv_sqrt2;
+                cols[(i, 3 * u + 2)] = cm[(i, u)];
+            }
+            sigma[3 * u + 1] = -1.0;
+        }
+        Some((cols, sigma))
+    }
+}
+
+/// Incrementally accumulated sketched Grams: the engine behind
+/// [`SketchedKrr::fit_adaptive`](crate::krr::SketchedKrr::fit_adaptive).
+///
+/// Where [`sketch_gram`] rebuilds `KS`, `SᵀKS`, `SᵀK²S` from scratch for
+/// every sketch, this struct *grows* them as terms are appended to an
+/// [`AccumSketch`]:
+///
+/// * kernel columns are cached per support row, so appending terms costs
+///   kernel evaluations only at **new** support points;
+/// * `KS` and `SᵀKS` are updated in `O(n·d)` / `O(δ·d²)` per append
+///   (δ = distinct support rows appended);
+/// * `SᵀK²S` is updated with two thin GEMMs against the `n×δ` panel of
+///   appended kernel columns — `O(n·d·δ)`, versus the `O(n·d²)` SYRK plus
+///   `O(n·m·d)` re-fold a rebuild pays.
+///
+/// The matching [`AppendDelta`] additionally lets the solver up/down-date
+/// its Cholesky factor instead of re-factorising.
+#[derive(Clone, Debug)]
+pub struct IncrementalGram {
+    kernel: Kernel,
+    n: usize,
+    d: usize,
+    m_done: usize,
+    /// Cache of kernel columns `K[:, u]`, keyed by support row.
+    kcols: HashMap<usize, Vec<f64>>,
+    ks: Matrix,
+    stks: Matrix,
+    stk2s: Matrix,
+    kernel_evals: usize,
+}
+
+impl IncrementalGram {
+    /// Empty accumulator for an `n×d` sketch under `kernel`.
+    pub fn new(kernel: Kernel, n: usize, d: usize) -> IncrementalGram {
+        IncrementalGram {
+            kernel,
+            n,
+            d,
+            m_done: 0,
+            kcols: HashMap::new(),
+            ks: Matrix::zeros(n, d),
+            stks: Matrix::zeros(d, d),
+            stk2s: Matrix::zeros(d, d),
+            kernel_evals: 0,
+        }
+    }
+
+    /// Terms folded in so far.
+    pub fn m(&self) -> usize {
+        self.m_done
+    }
+
+    /// Current `K·S` (n×d).
+    pub fn ks(&self) -> &Matrix {
+        &self.ks
+    }
+
+    /// Current `Sᵀ·K·S` (d×d).
+    pub fn stks(&self) -> &Matrix {
+        &self.stks
+    }
+
+    /// Current `Sᵀ·K²·S` (d×d).
+    pub fn stk2s(&self) -> &Matrix {
+        &self.stk2s
+    }
+
+    /// Kernel evaluations performed so far (only new support rows cost).
+    pub fn kernel_evals(&self) -> usize {
+        self.kernel_evals
+    }
+
+    /// Right-hand side `SᵀKY = (KS)ᵀy` at the current `m` — `O(n·d)`.
+    pub fn rhs(&self, y: &[f64]) -> Vec<f64> {
+        self.ks.matvec_t(y)
+    }
+
+    /// Snapshot into the one-shot [`SketchedGram`] shape the solvers take.
+    pub fn snapshot(&self) -> SketchedGram {
+        SketchedGram {
+            ks: self.ks.clone(),
+            stks: self.stks.clone(),
+            stk2s: self.stk2s.clone(),
+            kernel_evals: self.kernel_evals,
+        }
+    }
+
+    /// Fold every term the sketch has grown past this accumulator's count
+    /// into the Grams. Returns `None` when the sketch has no new terms,
+    /// otherwise the [`AppendDelta`] describing the step for the solver.
+    pub fn sync(&mut self, x: &Matrix, sketch: &AccumSketch) -> Option<AppendDelta> {
+        assert_eq!(x.rows(), self.n, "incremental gram: n mismatch");
+        assert_eq!(SketchOps::n(sketch), self.n, "incremental gram: sketch n");
+        assert_eq!(SketchOps::d(sketch), self.d, "incremental gram: sketch d");
+        let m_new = sketch.m();
+        if m_new <= self.m_done {
+            return None;
+        }
+        let m_old = self.m_done;
+        let alpha = ((m_old as f64) / (m_new as f64)).sqrt();
+
+        // gather batch entries (weights already at the final-m scaling)
+        // and the distinct support rows, in first-appearance order
+        let mut rows: Vec<usize> = Vec::new();
+        let mut pos: HashMap<usize, usize> = HashMap::new();
+        let mut entries: Vec<(usize, usize, f64)> = Vec::new();
+        for t in m_old..m_new {
+            for (col, row, w) in sketch.term_entries(t) {
+                if !pos.contains_key(&row) {
+                    pos.insert(row, rows.len());
+                    rows.push(row);
+                }
+                entries.push((col, row, w));
+            }
+        }
+        let delta_k = rows.len();
+
+        // cache kernel columns for rows not seen before
+        let missing: Vec<usize> = rows
+            .iter()
+            .copied()
+            .filter(|r| !self.kcols.contains_key(r))
+            .collect();
+        if !missing.is_empty() {
+            let landmarks = crate::kernels::gather_rows(x, &missing);
+            let fresh = cross_kernel(&self.kernel, x, &landmarks); // n × |missing|
+            for (c, &row) in missing.iter().enumerate() {
+                self.kcols.insert(row, fresh.col(c));
+            }
+            self.kernel_evals += self.n * missing.len();
+        }
+
+        // C (d×δ): per-column weight against each distinct support row
+        let mut c = Matrix::zeros(self.d, delta_k);
+        for &(col, row, w) in &entries {
+            c[(col, pos[&row])] += w;
+        }
+        // Kb (n×δ): cached kernel columns of the batch support
+        let mut kb = Matrix::zeros(self.n, delta_k);
+        for (u, row) in rows.iter().enumerate() {
+            let kcol = &self.kcols[row];
+            for i in 0..self.n {
+                kb[(i, u)] = kcol[i];
+            }
+        }
+
+        // rescale earlier terms: S_old → α·S_old
+        self.ks.scale(alpha);
+        self.stks.scale(alpha * alpha);
+        self.stk2s.scale(alpha * alpha);
+
+        // P = α·KS_old pieces the update formulas share
+        let a_cols = matmul_at_b(&self.ks, &kb); // d×δ : Pᵀ·k_u
+        let b_rows = Matrix::from_fn(delta_k, self.d, |u, j| self.ks[(rows[u], j)]);
+        let guu = syrk_at_a(&kb); // δ×δ : k_uᵀ k_v (symmetric — triangle + mirror)
+        let kuu = Matrix::from_fn(delta_k, delta_k, |u, v| self.kcols[&rows[v]][rows[u]]);
+
+        let ct = c.transpose();
+        let kt = matmul(&kb, &ct); // n×d : K·T
+
+        // SᵀK²S ← α²·old + Pᵀkt + (Pᵀkt)ᵀ + C·G_UU·Cᵀ
+        let cross = matmul(&a_cols, &ct);
+        self.stk2s.axpy(1.0, &cross);
+        self.stk2s.axpy(1.0, &cross.transpose());
+        self.stk2s.axpy(1.0, &matmul(&matmul(&c, &guu), &ct));
+        self.stk2s.symmetrize();
+
+        // SᵀKS ← α²·old + C·b_rows + (C·b_rows)ᵀ + C·K_UU·Cᵀ
+        let cb = matmul(&c, &b_rows);
+        self.stks.axpy(1.0, &cb);
+        self.stks.axpy(1.0, &cb.transpose());
+        self.stks.axpy(1.0, &matmul(&matmul(&c, &kuu), &ct));
+        self.stks.symmetrize();
+
+        // KS ← α·old + K·T
+        self.ks.axpy(1.0, &kt);
+
+        self.m_done = m_new;
+        Some(AppendDelta {
+            alpha,
+            c,
+            a_cols,
+            b_rows,
+            guu,
+            kuu,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,5 +455,87 @@ mod tests {
         let g = sketch_gram(&kernel, &x, &s, None);
         // support ≤ m·d = 8 → evals ≤ 60·8 ≪ 60²
         assert!(g.kernel_evals <= 60 * 8);
+    }
+
+    /// Tentpole contract: growing term by term accumulates the same Grams
+    /// a one-shot rebuild computes (the underlying sketches bit-match, so
+    /// the Grams agree to accumulation round-off).
+    #[test]
+    fn incremental_gram_matches_one_shot_rebuild() {
+        let (kernel, x, rng) = setup(50);
+        let d = 6;
+        let mut grow_rng = rng.clone();
+        let mut acc = crate::sketch::AccumSketch::new(50, d);
+        let mut inc = IncrementalGram::new(kernel, 50, d);
+        for m in [1usize, 2, 4, 7] {
+            acc.grow_to(m, &mut grow_rng);
+            let delta = inc.sync(&x, &acc).expect("new terms");
+            assert!(delta.support_len() >= 1);
+            // one-shot from the same stream position the growth started at
+            let mut shot_rng = rng.clone();
+            let shot =
+                SketchBuilder::new(SketchKind::Accumulation { m }).build(50, d, &mut shot_rng);
+            let g = sketch_gram(&kernel, &x, &shot, None);
+            assert_close(&inc.snapshot().ks, &g.ks, 1e-8, &format!("KS m={m}"));
+            assert_close(&inc.snapshot().stks, &g.stks, 1e-8, &format!("StKS m={m}"));
+            assert_close(&inc.snapshot().stk2s, &g.stk2s, 1e-8, &format!("StK2S m={m}"));
+        }
+        // second sync with no growth is a no-op
+        assert!(inc.sync(&x, &acc).is_none());
+    }
+
+    /// Kernel columns are cached: re-sampled support rows cost no new
+    /// kernel evaluations (weighted sampling concentrated on 3 rows).
+    #[test]
+    fn incremental_gram_caches_kernel_columns() {
+        let (kernel, x, mut rng) = setup(40);
+        let mut weights = vec![0.0; 40];
+        weights[3] = 1.0;
+        weights[17] = 1.0;
+        weights[29] = 1.0;
+        let table = crate::rng::AliasTable::new(&weights);
+        let d = 8;
+        let mut acc = crate::sketch::AccumSketch::new(40, d)
+            .with_sampling(crate::sketch::Sampling::Weighted(table));
+        let mut inc = IncrementalGram::new(kernel, 40, d);
+        acc.grow_to(1, &mut rng);
+        let _ = inc.sync(&x, &acc);
+        let evals_after_first = inc.kernel_evals();
+        assert!(evals_after_first <= 40 * 3);
+        acc.grow_to(6, &mut rng);
+        let _ = inc.sync(&x, &acc);
+        // support cannot exceed the 3 weighted rows → no new evals
+        assert_eq!(inc.kernel_evals(), evals_after_first);
+    }
+
+    /// `AppendDelta::factor_update` reproduces the dense solver-matrix
+    /// step: `A_new = α²·A_old + Σ σᵢ vᵢvᵢᵀ`.
+    #[test]
+    fn append_delta_factors_the_solver_update() {
+        let (kernel, x, mut rng) = setup(35);
+        let d = 5;
+        let nl = 0.7;
+        let mut acc = crate::sketch::AccumSketch::new(35, d);
+        let mut inc = IncrementalGram::new(kernel, 35, d);
+        let mut a_old = Matrix::zeros(d, d);
+        for m in [1usize, 3, 5] {
+            acc.grow_to(m, &mut rng);
+            let delta = inc.sync(&x, &acc).unwrap();
+            let (cols, sigma) = delta.factor_update(nl).expect("PD small block");
+            let mut a_step = a_old.clone();
+            a_step.scale(delta.alpha * delta.alpha);
+            for (j, &s) in sigma.iter().enumerate() {
+                let v = cols.col(j);
+                for i in 0..d {
+                    for jj in 0..d {
+                        a_step[(i, jj)] += s * v[i] * v[jj];
+                    }
+                }
+            }
+            let mut a_new = inc.stk2s().clone();
+            a_new.axpy(nl, inc.stks());
+            assert_close(&a_step, &a_new, 1e-7, &format!("A update m={m}"));
+            a_old = a_new;
+        }
     }
 }

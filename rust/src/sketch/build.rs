@@ -2,7 +2,7 @@
 //! evaluation compares against.
 
 use super::sparse::SparseSketch;
-use super::{Sampling, Sketch};
+use super::{AccumSketch, Sampling, Sketch};
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
 
@@ -34,14 +34,24 @@ pub enum SketchKind {
 }
 
 impl SketchKind {
-    /// Stable name for manifests / bench output.
+    /// Stable name for manifests / bench output. Parameterised kinds
+    /// include their parameter (`accum_m4`, `verysparse_s20`) so bench
+    /// manifests distinguish sweep settings.
     pub fn name(&self) -> String {
         match self {
             SketchKind::Nystrom => "nystrom".into(),
             SketchKind::Accumulation { m } => format!("accum_m{m}"),
             SketchKind::Gaussian => "gaussian".into(),
             SketchKind::Rademacher => "rademacher".into(),
-            SketchKind::VerySparse { .. } => "verysparse".into(),
+            SketchKind::VerySparse { sparsity: Some(s) } => {
+                if s.fract() == 0.0 {
+                    format!("verysparse_s{}", *s as u64)
+                } else {
+                    format!("verysparse_s{s}")
+                }
+            }
+            // s defaults to √n, which is unknown until build time
+            SketchKind::VerySparse { sparsity: None } => "verysparse_sauto".into(),
         }
     }
 }
@@ -74,13 +84,27 @@ impl SketchBuilder {
     }
 
     /// Draw a sketch `S ∈ ℝ^{n×d}`.
+    ///
+    /// Sub-sampling kinds (Nyström / accumulation) are built by growing an
+    /// [`AccumSketch`] term by term, so a one-shot `Accumulation { m }`
+    /// build is *defined* to bit-match a sketch grown 1 → m from the same
+    /// RNG stream (draws are consumed term-major: for each term, for each
+    /// column, index then sign).
     pub fn build(&self, n: usize, d: usize, rng: &mut Pcg64) -> Sketch {
         assert!(n > 0 && d > 0, "sketch: empty dims");
         match &self.kind {
-            SketchKind::Nystrom => Sketch::Sparse(self.subsample(n, d, 1, false, rng)),
+            SketchKind::Nystrom => {
+                let mut acc = AccumSketch::new(n, d)
+                    .with_sampling(self.sampling.clone())
+                    .unsigned();
+                acc.grow_to(1, rng);
+                acc.as_sketch()
+            }
             SketchKind::Accumulation { m } => {
                 assert!(*m >= 1, "accumulation: m >= 1");
-                Sketch::Sparse(self.subsample(n, d, *m, true, rng))
+                let mut acc = AccumSketch::new(n, d).with_sampling(self.sampling.clone());
+                acc.grow_to(*m, rng);
+                acc.as_sketch()
             }
             SketchKind::Gaussian => {
                 let scale = 1.0 / (d as f64).sqrt();
@@ -111,33 +135,12 @@ impl SketchBuilder {
         }
     }
 
-    /// Shared sub-sampling path: `m` accumulated draws per column, each
-    /// rescaled by `1/√(d·m·p_J)` and (optionally) randomly signed —
-    /// exactly Algorithm 1 in the paper.
-    fn subsample(
-        &self,
-        n: usize,
-        d: usize,
-        m: usize,
-        signed: bool,
-        rng: &mut Pcg64,
-    ) -> SparseSketch {
-        let dm = (d * m) as f64;
-        let mut cols = Vec::with_capacity(d);
-        for _ in 0..d {
-            let mut col = Vec::with_capacity(m);
-            for _ in 0..m {
-                let j = match &self.sampling {
-                    Sampling::Uniform => rng.below(n as u64) as usize,
-                    Sampling::Weighted(t) => t.sample(rng),
-                };
-                let p = self.sampling.prob(j, n);
-                let r = if signed { rng.rademacher() } else { 1.0 };
-                col.push((j, r / (dm * p).sqrt()));
-            }
-            cols.push(col);
-        }
-        SparseSketch::new(n, cols)
+    /// Start an empty growable accumulation sketch with this builder's
+    /// sampling distribution — the entry point of the adaptive-m loop,
+    /// which appends terms until a stopping rule fires instead of fixing
+    /// `m` up front.
+    pub fn grower(&self, n: usize, d: usize) -> AccumSketch {
+        AccumSketch::new(n, d).with_sampling(self.sampling.clone())
     }
 }
 
@@ -146,6 +149,7 @@ mod tests {
     use super::*;
     use crate::linalg::{matmul, matmul_a_bt};
     use crate::rng::AliasTable;
+    use crate::sketch::SketchOps;
 
     /// E[S Sᵀ] = I/… : every construction is normalised so each column has
     /// E[s sᵀ] = Iₙ/d, hence E[S Sᵀ] = Iₙ. Check empirically.
@@ -194,6 +198,20 @@ mod tests {
             4000,
             0.15,
         );
+    }
+
+    #[test]
+    fn names_include_parameters() {
+        assert_eq!(SketchKind::Accumulation { m: 8 }.name(), "accum_m8");
+        assert_eq!(
+            SketchKind::VerySparse { sparsity: Some(20.0) }.name(),
+            "verysparse_s20"
+        );
+        assert_eq!(
+            SketchKind::VerySparse { sparsity: Some(2.5) }.name(),
+            "verysparse_s2.5"
+        );
+        assert_eq!(SketchKind::VerySparse { sparsity: None }.name(), "verysparse_sauto");
     }
 
     #[test]

@@ -13,6 +13,8 @@
 
 use super::sparse::SparseSketch;
 use super::Sketch;
+#[cfg(test)]
+use super::SketchOps;
 use crate::rng::Pcg64;
 
 /// Block-local sketch type.

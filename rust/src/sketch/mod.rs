@@ -1,4 +1,5 @@
-//! Sketching matrices — the paper's core contribution.
+//! Sketching matrices — the paper's core contribution, organised around an
+//! **incremental accumulation engine**.
 //!
 //! A sketching matrix `S ∈ ℝ^{n×d}` approximates the KRR problem through
 //! `K_S = KS (SᵀKS)⁻¹ SᵀK`. This module implements the paper's unified
@@ -10,14 +11,35 @@
 //! ```
 //!
 //! which recovers the Nyström method at `m = 1` and a sub-Gaussian sketch as
-//! `m → ∞`. All constructions are normalised so `E[S Sᵀ] = Iₙ·(d/n·…)`
-//! column-wise: every column satisfies `E[s sᵀ] = Iₙ/d`.
+//! `m → ∞`. All constructions are normalised so every column satisfies
+//! `E[s sᵀ] = Iₙ/d`, hence `E[S Sᵀ] = Iₙ`.
+//!
+//! The module is built from three pieces (see `DESIGN.md` §2 for the data
+//! flow):
+//!
+//! * **[`SketchOps`]** — the operations every sketch representation
+//!   supports (`SᵀB`, `Sᵀv`, `Sw`, densification, shape). Implemented by
+//!   [`SparseSketch`] (per-column COO), dense [`Matrix`] sketches
+//!   (Gaussian / Rademacher baselines), the [`Sketch`] enum that unifies
+//!   them, and [`AccumSketch`]. Generic code dispatches through the trait
+//!   instead of matching on the enum at every call site.
+//! * **[`AccumSketch`]** — a *growable* accumulation sketch: terms are
+//!   appended one at a time (with the `1/√(d·m·p)` rescaling of earlier
+//!   terms applied exactly), so the right `m` can be discovered at runtime
+//!   instead of fixed up front. Growing 1 → m bit-matches a one-shot
+//!   [`SketchKind::Accumulation`] build from the same RNG stream.
+//! * **[`IncrementalGram`]** — accumulates the sketched Gram quantities
+//!   `KS`, `SᵀKS`, `SᵀK²S` term by term (caching kernel columns, so each
+//!   appended term costs `O(n·d)` plus kernel evaluations only at *new*
+//!   support points), and hands the solver a factored low-rank delta for
+//!   Cholesky up/down-dating.
 //!
 //! Sparse sketches are stored in a per-column COO layout ([`SparseSketch`])
 //! so application costs `O(n·m·d)` (paper §3.3) instead of the dense
 //! `O(n²d)`; dense sketches ([`Matrix`]) cover the Gaussian / Rademacher
 //! baselines the paper compares against.
 
+mod accum;
 mod amm;
 mod apply;
 mod build;
@@ -25,8 +47,9 @@ mod localized;
 mod sparse;
 mod srht;
 
+pub use accum::AccumSketch;
 pub use amm::{amm_rel_error, approx_matmul};
-pub use apply::{sketch_gram, sketch_kernel_cols, SketchedGram};
+pub use apply::{sketch_gram, sketch_kernel_cols, AppendDelta, IncrementalGram, SketchedGram};
 pub use build::{SketchBuilder, SketchKind};
 pub use localized::{localized, LocalKind};
 pub use sparse::SparseSketch;
@@ -56,6 +79,69 @@ impl Sampling {
     }
 }
 
+/// The operations every sketch representation supports. Code that only
+/// needs to *apply* a sketch takes `&impl SketchOps` (or dispatches through
+/// [`Sketch`]) instead of matching on the storage enum — new
+/// representations ([`AccumSketch`], future streaming variants) plug in by
+/// implementing this trait.
+pub trait SketchOps {
+    /// Number of data points `n`.
+    fn n(&self) -> usize;
+
+    /// Projection dimension `d`.
+    fn d(&self) -> usize;
+
+    /// Total non-zeros (density diagnostic; `≈ m·d` for accumulation
+    /// sketches, `n·d` for dense ones).
+    fn nnz(&self) -> usize;
+
+    /// Dense `n×d` materialisation (diagnostics / K-satisfiability checks;
+    /// never on the training path for sparse sketches).
+    fn to_dense(&self) -> Matrix;
+
+    /// `Sᵀ B` for a tall `n×c` matrix `B`, in `O(nnz·c)` for sparse.
+    fn st_mat(&self, b: &Matrix) -> Matrix;
+
+    /// `Sᵀ v` for an n-vector.
+    fn st_vec(&self, v: &[f64]) -> Vec<f64>;
+
+    /// `S w` for a d-vector (maps sketch coefficients back to data space).
+    fn s_vec(&self, w: &[f64]) -> Vec<f64>;
+}
+
+/// Dense `n×d` sketches (Gaussian / Rademacher baselines) are plain
+/// matrices; the trait impl gives them the same application API as the
+/// sparse constructions.
+impl SketchOps for Matrix {
+    fn n(&self) -> usize {
+        self.rows()
+    }
+
+    fn d(&self) -> usize {
+        self.cols()
+    }
+
+    fn nnz(&self) -> usize {
+        self.data().iter().filter(|&&x| x != 0.0).count()
+    }
+
+    fn to_dense(&self) -> Matrix {
+        self.clone()
+    }
+
+    fn st_mat(&self, b: &Matrix) -> Matrix {
+        crate::linalg::matmul_at_b(self, b)
+    }
+
+    fn st_vec(&self, v: &[f64]) -> Vec<f64> {
+        self.matvec_t(v)
+    }
+
+    fn s_vec(&self, w: &[f64]) -> Vec<f64> {
+        self.matvec(w)
+    }
+}
+
 /// A materialised sketching matrix.
 #[derive(Clone, Debug)]
 pub enum Sketch {
@@ -65,59 +151,53 @@ pub enum Sketch {
     Dense(Matrix),
 }
 
-impl Sketch {
-    /// Number of data points `n`.
-    pub fn n(&self) -> usize {
+/// The enum dispatches each operation to its variant's [`SketchOps`] impl —
+/// the single `match` in the library, instead of one per method per call
+/// site.
+impl SketchOps for Sketch {
+    fn n(&self) -> usize {
         match self {
             Sketch::Sparse(s) => s.n(),
-            Sketch::Dense(m) => m.rows(),
+            Sketch::Dense(m) => SketchOps::n(m),
         }
     }
 
-    /// Projection dimension `d`.
-    pub fn d(&self) -> usize {
+    fn d(&self) -> usize {
         match self {
             Sketch::Sparse(s) => s.d(),
-            Sketch::Dense(m) => m.cols(),
+            Sketch::Dense(m) => SketchOps::d(m),
         }
     }
 
-    /// Total non-zeros (density diagnostic; `≈ m·d` for accumulation
-    /// sketches, `n·d` for dense ones).
-    pub fn nnz(&self) -> usize {
+    fn nnz(&self) -> usize {
         match self {
             Sketch::Sparse(s) => s.nnz(),
-            Sketch::Dense(m) => m.data().iter().filter(|&&x| x != 0.0).count(),
+            Sketch::Dense(m) => SketchOps::nnz(m),
         }
     }
 
-    /// Dense `n×d` materialisation (diagnostics / K-satisfiability checks;
-    /// never on the training path for sparse sketches).
-    pub fn to_dense(&self) -> Matrix {
+    fn to_dense(&self) -> Matrix {
         match self {
             Sketch::Sparse(s) => s.to_dense(),
             Sketch::Dense(m) => m.clone(),
         }
     }
 
-    /// `Sᵀ B` for a tall `n×c` matrix `B`, in `O(nnz·c)` for sparse.
-    pub fn st_mat(&self, b: &Matrix) -> Matrix {
+    fn st_mat(&self, b: &Matrix) -> Matrix {
         match self {
             Sketch::Sparse(s) => s.st_mat(b),
-            Sketch::Dense(m) => crate::linalg::matmul_at_b(m, b),
+            Sketch::Dense(m) => SketchOps::st_mat(m, b),
         }
     }
 
-    /// `Sᵀ v` for an n-vector.
-    pub fn st_vec(&self, v: &[f64]) -> Vec<f64> {
+    fn st_vec(&self, v: &[f64]) -> Vec<f64> {
         match self {
             Sketch::Sparse(s) => s.st_vec(v),
             Sketch::Dense(m) => m.matvec_t(v),
         }
     }
 
-    /// `S w` for a d-vector (maps sketch coefficients back to data space).
-    pub fn s_vec(&self, w: &[f64]) -> Vec<f64> {
+    fn s_vec(&self, w: &[f64]) -> Vec<f64> {
         match self {
             Sketch::Sparse(s) => s.s_vec(w),
             Sketch::Dense(m) => m.matvec(w),
@@ -158,5 +238,18 @@ mod tests {
         let s = SketchBuilder::new(SketchKind::Gaussian).build(20, 5, &mut rng);
         let w = vec![1.0; 5];
         assert_eq!(s.s_vec(&w).len(), 20);
+    }
+
+    #[test]
+    fn trait_object_dispatch_works() {
+        let mut rng = Pcg64::seed(73);
+        let sparse = SketchBuilder::new(SketchKind::Nystrom).build(30, 5, &mut rng);
+        let dense = SketchBuilder::new(SketchKind::Gaussian).build(30, 5, &mut rng);
+        let sketches: Vec<&dyn SketchOps> = vec![&sparse, &dense];
+        for s in sketches {
+            assert_eq!(s.n(), 30);
+            assert_eq!(s.d(), 5);
+            assert_eq!(s.st_vec(&vec![1.0; 30]).len(), 5);
+        }
     }
 }

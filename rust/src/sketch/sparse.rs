@@ -5,6 +5,7 @@
 //! distinct draws and merging is a measurable but optional optimisation
 //! performed by [`SparseSketch::merged`]).
 
+use super::SketchOps;
 use crate::linalg::Matrix;
 
 /// Sparse n×d sketching matrix, column-major COO.
@@ -151,6 +152,39 @@ impl SparseSketch {
             }
         }
         (support, beta)
+    }
+}
+
+/// Trait impl delegates to the inherent methods (which stay public — the
+/// COO-specific extras like [`SparseSketch::support`] and
+/// [`SparseSketch::landmark_weights`] have no dense counterpart).
+impl SketchOps for SparseSketch {
+    fn n(&self) -> usize {
+        SparseSketch::n(self)
+    }
+
+    fn d(&self) -> usize {
+        SparseSketch::d(self)
+    }
+
+    fn nnz(&self) -> usize {
+        SparseSketch::nnz(self)
+    }
+
+    fn to_dense(&self) -> Matrix {
+        SparseSketch::to_dense(self)
+    }
+
+    fn st_mat(&self, b: &Matrix) -> Matrix {
+        SparseSketch::st_mat(self, b)
+    }
+
+    fn st_vec(&self, v: &[f64]) -> Vec<f64> {
+        SparseSketch::st_vec(self, v)
+    }
+
+    fn s_vec(&self, w: &[f64]) -> Vec<f64> {
+        SparseSketch::s_vec(self, w)
     }
 }
 

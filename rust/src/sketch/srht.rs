@@ -17,6 +17,8 @@
 
 use super::sparse::SparseSketch;
 use super::Sketch;
+#[cfg(test)]
+use super::SketchOps;
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
 

@@ -1,0 +1,137 @@
+//! Stopping rules for the adaptive-m accumulation loop.
+//!
+//! Optimal sampling probabilities are rarely available in practice, so the
+//! right number of accumulated terms `m` is data-dependent: the adaptive
+//! KRR loop ([`crate::krr::SketchedKrr::fit_adaptive`]) grows the sketch
+//! and stops when the solution stabilises. Two criteria are combined:
+//!
+//! * **relative change** — `‖θ_new − θ_old‖ / ‖θ_new‖` below `rel_tol`
+//!   for `patience` consecutive rounds (the estimator has converged in the
+//!   metric that matters: its own coefficients);
+//! * **AMM-error proxy** — the accumulation sketch's sub-sampling variance
+//!   decays as `√(n/(d·m))` (paper §3/§5: each column is an average of
+//!   `m` rescaled indicator draws, so the `E[SSᵀ] − I` fluctuation and the
+//!   AMM error both shrink at the Monte-Carlo rate in `d·m`); once the
+//!   proxy is below `amm_tol`, more terms cannot move the estimator by
+//!   more than the target accuracy.
+
+/// Relative ℓ₂ change `‖cur − prev‖ / max(‖cur‖, ε)` between two solution
+/// vectors (ε guards the all-zero solution).
+pub fn rel_change(prev: &[f64], cur: &[f64]) -> f64 {
+    assert_eq!(prev.len(), cur.len(), "rel_change: length mismatch");
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (a, b) in prev.iter().zip(cur.iter()) {
+        num += (b - a) * (b - a);
+        den += b * b;
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Theory-based proxy for the accumulation sketch's remaining error at `m`
+/// terms: `√(n/(d·m))`, the Monte-Carlo rate of the `d·m` sub-sampling
+/// draws that make up the sketch.
+pub fn amm_error_proxy(n: usize, d: usize, m: usize) -> f64 {
+    assert!(n > 0 && d > 0 && m > 0);
+    (n as f64 / (d * m) as f64).sqrt()
+}
+
+/// Stateful stopping rule for the adaptive accumulation loop.
+#[derive(Clone, Debug)]
+pub struct StoppingRule {
+    rel_tol: f64,
+    patience: usize,
+    min_m: usize,
+    amm_tol: Option<f64>,
+    hits: usize,
+}
+
+impl StoppingRule {
+    /// Rule firing after `patience` consecutive rounds with relative
+    /// change below `rel_tol` (and at least 2 accumulated terms).
+    pub fn new(rel_tol: f64, patience: usize) -> StoppingRule {
+        StoppingRule {
+            rel_tol,
+            patience: patience.max(1),
+            min_m: 2,
+            amm_tol: None,
+            hits: 0,
+        }
+    }
+
+    /// Don't stop before `m` terms have been accumulated.
+    pub fn with_min_m(mut self, m: usize) -> StoppingRule {
+        self.min_m = m.max(1);
+        self
+    }
+
+    /// Also stop once [`amm_error_proxy`] drops below `tol`.
+    pub fn with_amm_tol(mut self, tol: f64) -> StoppingRule {
+        self.amm_tol = Some(tol);
+        self
+    }
+
+    /// Record one round (current term count `m`, observed relative change,
+    /// current [`amm_error_proxy`]); returns `true` when the loop should
+    /// stop.
+    pub fn observe(&mut self, m: usize, rel_change: f64, amm_proxy: f64) -> bool {
+        if rel_change <= self.rel_tol {
+            self.hits += 1;
+        } else {
+            self.hits = 0;
+        }
+        if m < self.min_m {
+            return false;
+        }
+        if self.hits >= self.patience {
+            return true;
+        }
+        matches!(self.amm_tol, Some(t) if amm_proxy <= t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_change_basic() {
+        assert_eq!(rel_change(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        // ‖(0,1)−(1,0)‖/‖(0,1)‖ = √2
+        let c = rel_change(&[1.0, 0.0], &[0.0, 1.0]);
+        assert!((c - 2f64.sqrt()).abs() < 1e-12);
+        // zero current vector guarded
+        assert!(rel_change(&[1.0], &[0.0]).is_finite());
+    }
+
+    #[test]
+    fn proxy_decays_with_m_and_d() {
+        let p1 = amm_error_proxy(1000, 20, 1);
+        let p4 = amm_error_proxy(1000, 20, 4);
+        assert!((p1 / p4 - 2.0).abs() < 1e-12, "quadruple m halves the proxy");
+        assert!(amm_error_proxy(1000, 80, 1) < p1);
+    }
+
+    #[test]
+    fn patience_requires_consecutive_quiet_rounds() {
+        let mut r = StoppingRule::new(1e-2, 2);
+        assert!(!r.observe(2, 1e-3, 1.0)); // quiet ×1
+        assert!(!r.observe(3, 5e-1, 1.0)); // loud resets
+        assert!(!r.observe(4, 1e-3, 1.0)); // quiet ×1
+        assert!(r.observe(5, 1e-3, 1.0)); // quiet ×2 → stop
+    }
+
+    #[test]
+    fn min_m_blocks_early_stop() {
+        let mut r = StoppingRule::new(1e-2, 1).with_min_m(8);
+        assert!(!r.observe(2, 0.0, 1.0));
+        assert!(r.observe(8, 0.0, 1.0));
+    }
+
+    #[test]
+    fn amm_tol_stops_independently_of_change() {
+        let mut r = StoppingRule::new(1e-9, 1).with_amm_tol(0.5);
+        assert!(!r.observe(2, 1.0, 0.9));
+        assert!(r.observe(3, 1.0, 0.4)); // change still loud, proxy quiet
+    }
+}

@@ -1,7 +1,7 @@
 //! K-satisfiability and incoherence diagnostics.
 
 use crate::linalg::{eigh, op_norm, op_norm_rect, Matrix};
-use crate::sketch::Sketch;
+use crate::sketch::{Sketch, SketchOps};
 
 /// Eigendecomposition of `K/n` cached for repeated diagnostics: the bench
 /// harness evaluates many sketches against one dataset.

@@ -1,10 +1,12 @@
 //! Statistical diagnostics from the paper's theory:
 //! K-satisfiability (Definition 3), incoherence `M` (Theorem 8),
-//! statistical dimension / `d_δ`, and the error metrics used by every
-//! figure.
+//! statistical dimension / `d_δ`, the error metrics used by every figure,
+//! and the stopping rules driving the adaptive-m accumulation loop.
 
+mod adapt;
 mod errors;
 mod ksat;
 
+pub use adapt::{amm_error_proxy, rel_change, StoppingRule};
 pub use errors::{in_sample_sq_error, mse, test_error};
 pub use ksat::{incoherence, k_satisfiability, stat_dim, KSatReport, SpectralView};

@@ -156,6 +156,7 @@ fn coordinator_tcp_service_end_to_end() {
             lambda: 1e-3,
             bandwidth: 0.0,
             seed: 9,
+            adaptive: None,
         })
         .unwrap();
     let addr = serve(

@@ -3,7 +3,7 @@
 
 use accumkrr::kernels::{kernel_matrix, Kernel};
 use accumkrr::linalg::{chol_factor, eigh, matmul, matmul_at_b, syrk_at_a, Matrix};
-use accumkrr::sketch::{Sampling, Sketch, SketchBuilder, SketchKind};
+use accumkrr::sketch::{Sampling, Sketch, SketchBuilder, SketchKind, SketchOps};
 use accumkrr::util::check::{check, Gen};
 
 fn random_kind(g: &mut Gen) -> SketchKind {
