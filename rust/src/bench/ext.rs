@@ -14,7 +14,7 @@ use crate::kernels::{kernel_matrix, Kernel, RffKrr};
 use crate::krr::{sketched_kpca, KrrModel, SketchedKrr};
 use crate::linalg::Matrix;
 use crate::sketch::{countsketch, srht, Sketch, SketchBuilder, SketchKind};
-use crate::stats::{in_sample_sq_error, SpectralView};
+use crate::stats::{in_sample_sq_error, top_sigma};
 use crate::util::timer::Timer;
 
 fn build_named(name: &str, n: usize, d: usize, rng: &mut crate::rng::Pcg64) -> Sketch {
@@ -138,8 +138,8 @@ pub fn run_ext_kpca(opts: &BenchOpts) -> Vec<Row> {
     let results = sched.run_sweep(families.len(), opts.replicates, |pt, rng| {
         let (x, _, _) = bimodal(&cfg, rng);
         let k = kernel_matrix(&kern, &x);
-        let view = SpectralView::new(&k);
-        let exact_mass: f64 = view.sigma[..r].iter().sum();
+        // only the top-r spectral mass is consumed → partial eigensolver
+        let exact_mass: f64 = top_sigma(&k, r).iter().sum();
         let s = build_named(families[pt.setting], n, d, rng);
         let got = sketched_kpca(&kern, &x, &s, r)
             .map(|res| res.eigenvalues.iter().sum::<f64>())

@@ -1,37 +1,50 @@
-//! Micro-benchmarks of the L3 hot paths: GEMM, kernel-matrix assembly,
-//! sparse sketch application, Cholesky, Falkon iteration. Hand-rolled
-//! harness (criterion is unavailable in the offline image): warmup + N
-//! timed reps, median/IQR reported. This is the §Perf measurement tool —
-//! before/after numbers in EXPERIMENTS.md come from here.
+//! Micro-benchmarks of the L3 hot paths: GEMM (all four packed variants'
+//! driver), radial kernel-matrix assembly, the partial eigensolver, sparse
+//! sketch application, Cholesky, end-to-end fits. Hand-rolled harness
+//! (criterion is unavailable in the offline image): warmup + N timed reps,
+//! median/IQR reported — and dumped machine-readably to
+//! `BENCH_hotpath.json` so the repo's perf trajectory accumulates across
+//! PRs. This is the §Perf measurement tool — before/after numbers in
+//! EXPERIMENTS.md come from here.
+//!
+//! Knobs: `ACCUMKRR_BENCH_REPS` (timed reps, default 7),
+//! `ACCUMKRR_BENCH_QUICK` (any value but "0": toy shapes — the unit-test
+//! plumbing mode; CI deliberately runs the *full* paper-sweep shapes at
+//! 1 rep so the uploaded artifact carries the real cases),
+//! `ACCUMKRR_THREADS` (pin the pool for stable timings).
 
 use crate::data::{bimodal, BimodalConfig};
-use crate::kernels::{kernel_matrix, Kernel};
-use crate::linalg::{chol_factor, matmul, Matrix};
+use crate::kernels::{kernel_cols, kernel_matrix, Kernel};
+use crate::linalg::{chol_factor, matmul, matmul_at_b, partial_eigh, Matrix};
 use crate::rng::Pcg64;
 use crate::sketch::{sketch_gram, SketchBuilder, SketchKind};
+use crate::util::json::Json;
 use crate::util::timer::{timed, timing_stats, TimingStats};
 
 /// One benchmark case.
 struct Case {
-    name: &'static str,
+    name: String,
     /// flop estimate for the throughput column (0 = skip).
     flops: f64,
     run: Box<dyn FnMut()>,
 }
 
-fn report(name: &str, flops: f64, stats: TimingStats) {
-    let gflops = if flops > 0.0 && stats.median > 0.0 {
-        flops / stats.median / 1e9
-    } else {
-        0.0
-    };
+struct CaseResult {
+    name: String,
+    flops: f64,
+    stats: TimingStats,
+    gflops: f64,
+}
+
+fn report(r: &CaseResult) {
     println!(
-        "{name:>28}  median {:>9.3} ms  iqr [{:>8.3}, {:>8.3}]  {:>7.2} gflop/s  (n={})",
-        stats.median * 1e3,
-        stats.p25 * 1e3,
-        stats.p75 * 1e3,
-        gflops,
-        stats.n
+        "{:>32}  median {:>9.3} ms  iqr [{:>8.3}, {:>8.3}]  {:>7.2} gflop/s  (n={})",
+        r.name,
+        r.stats.median * 1e3,
+        r.stats.p25 * 1e3,
+        r.stats.p75 * 1e3,
+        r.gflops,
+        r.stats.n
     );
 }
 
@@ -41,32 +54,51 @@ pub fn hotpath_main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(7usize);
-    let mut rng = Pcg64::seed(0xb5);
+    let quick = std::env::var("ACCUMKRR_BENCH_QUICK")
+        .map(|v| v != "0")
+        .unwrap_or(false);
+    run_hotpath_to("BENCH_hotpath.json", reps, quick);
+}
 
-    // shared inputs
-    let n = 1500;
-    let p = 3;
-    let d = 40;
+/// The full paper-sweep-shaped case set (`quick = false`) or a miniature
+/// set exercising the same code paths (`quick = true`, used by the unit
+/// test so debug builds stay fast).
+fn build_cases(quick: bool, rng: &mut Pcg64) -> Vec<Case> {
+    // shapes from the paper's sweeps: n = 1500 bimodal points in p = 3,
+    // sketch width d = 40; 512³ as the canonical square-GEMM point
+    let (gemm_n, n, d, chol_n, eig_k, nys_u) = if quick {
+        (48usize, 96usize, 8usize, 32usize, 4usize, 12usize)
+    } else {
+        (512, 1500, 40, 256, 10, 160)
+    };
+    let p = 3usize;
     let cfg = BimodalConfig {
         n,
         gamma: 0.5,
         ..Default::default()
     };
-    let (x, y, _) = bimodal(&cfg, &mut rng);
+    let (x, y, _) = bimodal(&cfg, rng);
     let kern = Kernel::gaussian(0.5);
     let k = kernel_matrix(&kern, &x);
-    let a = Matrix::from_fn(512, 512, |_, _| rng.normal());
-    let b = Matrix::from_fn(512, 512, |_, _| rng.normal());
-    let mut spd = crate::linalg::syrk_at_a(&Matrix::from_fn(300, 256, |_, _| rng.normal()));
+    let mut kn = k.clone();
+    kn.scale(1.0 / n as f64);
+    kn.symmetrize();
+    let a = Matrix::from_fn(gemm_n, gemm_n, |_, _| rng.normal());
+    let b = Matrix::from_fn(gemm_n, gemm_n, |_, _| rng.normal());
+    let ks_like = Matrix::from_fn(n, d, |_, _| rng.normal());
+    let mut spd = crate::linalg::syrk_at_a(&Matrix::from_fn(chol_n + 44, chol_n, |_, _| {
+        rng.normal()
+    }));
     spd.add_diag(1.0);
-    let accum_sketch = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, d, &mut rng);
-    let gauss_sketch = SketchBuilder::new(SketchKind::Gaussian).build(n, d, &mut rng);
+    let accum_sketch = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, d, rng);
+    let gauss_sketch = SketchBuilder::new(SketchKind::Gaussian).build(n, d, rng);
+    let landmark_idx: Vec<usize> = (0..nys_u).map(|i| (i * 7) % n).collect();
     let lam = 1e-3;
 
     let mut cases: Vec<Case> = vec![
         Case {
-            name: "gemm 512^3",
-            flops: 2.0 * 512f64.powi(3),
+            name: format!("matmul {gemm_n}^3"),
+            flops: 2.0 * (gemm_n as f64).powi(3),
             run: Box::new({
                 let (a, b) = (a.clone(), b.clone());
                 move || {
@@ -75,7 +107,27 @@ pub fn hotpath_main() {
             }),
         },
         Case {
-            name: "kernel_matrix n=1500 p=3",
+            name: format!("matmul_at_b (KS)ᵀ(KS) {n}x{d}"),
+            flops: 2.0 * (n * d * d) as f64,
+            run: Box::new({
+                let ks = ks_like.clone();
+                move || {
+                    std::hint::black_box(matmul_at_b(&ks, &ks));
+                }
+            }),
+        },
+        Case {
+            name: format!("syrk_at_a {n}x{d}"),
+            flops: (n * d * d) as f64,
+            run: Box::new({
+                let ks = ks_like.clone();
+                move || {
+                    std::hint::black_box(crate::linalg::syrk_at_a(&ks));
+                }
+            }),
+        },
+        Case {
+            name: format!("kernel_matrix n={n} p={p}"),
             flops: (n * n) as f64 * (2.0 * p as f64 + 8.0),
             run: Box::new({
                 let x = x.clone();
@@ -85,7 +137,38 @@ pub fn hotpath_main() {
             }),
         },
         Case {
-            name: "sketch_gram accum m=4",
+            name: format!("kernel_cols n={n} u={nys_u}"),
+            flops: (n * nys_u) as f64 * (2.0 * p as f64 + 8.0),
+            run: Box::new({
+                let x = x.clone();
+                let idx = landmark_idx.clone();
+                move || {
+                    std::hint::black_box(kernel_cols(&kern, &x, &idx));
+                }
+            }),
+        },
+        Case {
+            name: format!("partial_eigh n={n} k={eig_k}"),
+            flops: 0.0,
+            run: Box::new({
+                let kn = kn.clone();
+                move || {
+                    std::hint::black_box(partial_eigh(&kn, eig_k));
+                }
+            }),
+        },
+        Case {
+            name: format!("cholesky {chol_n}"),
+            flops: (chol_n as f64).powi(3) / 3.0,
+            run: Box::new({
+                let spd = spd.clone();
+                move || {
+                    std::hint::black_box(chol_factor(&spd).unwrap());
+                }
+            }),
+        },
+        Case {
+            name: "sketch_gram accum m=4".to_string(),
             flops: 0.0,
             run: Box::new({
                 let x = x.clone();
@@ -96,7 +179,7 @@ pub fn hotpath_main() {
             }),
         },
         Case {
-            name: "sketch_gram gaussian (K given)",
+            name: "sketch_gram gaussian (K given)".to_string(),
             flops: 2.0 * (n * n * d) as f64,
             run: Box::new({
                 let x = x.clone();
@@ -107,18 +190,10 @@ pub fn hotpath_main() {
                 }
             }),
         },
-        Case {
-            name: "cholesky 256",
-            flops: 256f64.powi(3) / 3.0,
-            run: Box::new({
-                let spd = spd.clone();
-                move || {
-                    std::hint::black_box(chol_factor(&spd).unwrap());
-                }
-            }),
-        },
-        Case {
-            name: "sketched fit end-to-end",
+    ];
+    if !quick {
+        cases.push(Case {
+            name: "sketched fit end-to-end".to_string(),
             flops: 0.0,
             run: Box::new({
                 let x = x.clone();
@@ -130,9 +205,9 @@ pub fn hotpath_main() {
                     );
                 }
             }),
-        },
-        Case {
-            name: "falkon fit end-to-end",
+        });
+        cases.push(Case {
+            name: "falkon fit end-to-end".to_string(),
             flops: 0.0,
             run: Box::new({
                 let x = x.clone();
@@ -153,10 +228,23 @@ pub fn hotpath_main() {
                     );
                 }
             }),
-        },
-    ];
+        });
+    }
+    cases
+}
 
-    println!("hotpath micro-benchmarks (reps={reps}, 1 warmup)");
+/// Run the harness, print the table, and write the machine-readable dump
+/// (per-case median/IQR/gflops) to `json_path`. Returns the JSON document
+/// so tests can assert on it without re-reading the file.
+pub fn run_hotpath_to(json_path: &str, reps: usize, quick: bool) -> Json {
+    let reps = reps.max(1);
+    let mut rng = Pcg64::seed(0xb5);
+    let mut cases = build_cases(quick, &mut rng);
+    println!(
+        "hotpath micro-benchmarks (reps={reps}, 1 warmup, {} mode)",
+        if quick { "quick" } else { "full" }
+    );
+    let mut results = Vec::with_capacity(cases.len());
     for case in cases.iter_mut() {
         (case.run)(); // warmup
         let mut samples = Vec::with_capacity(reps);
@@ -164,6 +252,87 @@ pub fn hotpath_main() {
             let ((), t) = timed(|| (case.run)());
             samples.push(t);
         }
-        report(case.name, case.flops, timing_stats(&samples));
+        let stats = timing_stats(&samples);
+        let gflops = if case.flops > 0.0 && stats.median > 0.0 {
+            case.flops / stats.median / 1e9
+        } else {
+            0.0
+        };
+        let r = CaseResult {
+            name: case.name.clone(),
+            flops: case.flops,
+            stats,
+            gflops,
+        };
+        report(&r);
+        results.push(r);
+    }
+
+    let case_objs: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::from(r.name.as_str())),
+                ("flops", Json::Num(r.flops)),
+                ("median_secs", Json::Num(r.stats.median)),
+                ("p25_secs", Json::Num(r.stats.p25)),
+                ("p75_secs", Json::Num(r.stats.p75)),
+                ("min_secs", Json::Num(r.stats.min)),
+                ("max_secs", Json::Num(r.stats.max)),
+                ("gflops", Json::Num(r.gflops)),
+                ("reps", Json::from(r.stats.n)),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![
+        ("bench", Json::from("hotpath")),
+        ("mode", Json::from(if quick { "quick" } else { "full" })),
+        ("reps", Json::from(reps)),
+        ("threads", Json::from(crate::pool::num_threads())),
+        ("cases", Json::Arr(case_objs)),
+    ]);
+    if let Err(e) = std::fs::write(json_path, j.to_string()) {
+        eprintln!("hotpath bench: writing {json_path} failed: {e}");
+    } else {
+        println!("(hotpath results written to {json_path})");
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The quick mode exercises the same code paths at toy shapes and the
+    /// JSON dump round-trips with every per-case field present.
+    #[test]
+    fn quick_mode_emits_parseable_json() {
+        let tmp = std::env::temp_dir().join("accumkrr_bench_hotpath_test.json");
+        let j = run_hotpath_to(&tmp.to_string_lossy(), 1, true);
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("hotpath"));
+        assert_eq!(j.get("mode").and_then(|v| v.as_str()), Some("quick"));
+        let cases = j.get("cases").and_then(|v| v.as_arr()).unwrap();
+        assert!(cases.len() >= 8, "expected the full quick case set");
+        for c in cases {
+            assert!(c.get("name").and_then(|v| v.as_str()).is_some());
+            for field in ["median_secs", "p25_secs", "p75_secs", "gflops"] {
+                let v = c.get(field).and_then(|v| v.as_f64()).unwrap();
+                assert!(v >= 0.0, "{field} must be present and non-negative");
+            }
+            assert!(c.get("median_secs").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(c.get("reps").and_then(|v| v.as_usize()), Some(1));
+        }
+        // the tentpole cases are present by name
+        let names: Vec<&str> = cases
+            .iter()
+            .filter_map(|c| c.get("name").and_then(|v| v.as_str()))
+            .collect();
+        assert!(names.iter().any(|n| n.starts_with("matmul ")));
+        assert!(names.iter().any(|n| n.starts_with("kernel_matrix")));
+        assert!(names.iter().any(|n| n.starts_with("partial_eigh")));
+        std::fs::remove_file(&tmp).ok();
     }
 }

@@ -18,7 +18,7 @@ mod thm8;
 pub use adaptive::{run_adaptive, run_adaptive_to};
 pub use common::{print_table, BenchOpts, Row};
 pub use ext::{run_ext_amm, run_ext_kpca, run_ext_sketches};
-pub use hotpath::hotpath_main;
+pub use hotpath::{hotpath_main, run_hotpath_to};
 pub use cost::run_cost;
 pub use fig1::run_fig1;
 pub use fig2::run_fig2;

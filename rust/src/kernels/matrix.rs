@@ -1,13 +1,17 @@
 //! Tiled empirical kernel-matrix assembly.
 //!
-//! For radial kernels the pairwise squared distances over a tile are
-//! expanded as `‖x‖² + ‖y‖² − 2·xyᵀ`, turning the inner loop into a small
-//! GEMM (the same schedule the L1 Pallas kernel uses on TPU: the cross term
-//! feeds the MXU, the kernel map is elementwise VPU work). Non-radial
-//! kernels fall back to direct evaluation.
+//! For radial kernels the pairwise squared distances are expanded as
+//! `‖x‖² + ‖y‖² − 2·xyᵀ`: the cross term is one call into the packed
+//! micro-kernel GEMM core (`linalg::matmul_a_bt`), and the distances are
+//! finished + mapped in a second, elementwise parallel pass (the same
+//! schedule the L1 Pallas kernel uses on TPU: the cross term feeds the
+//! MXU, the kernel map is VPU work). The two passes stay split so the
+//! distance arithmetic vectorises independently of the transcendental,
+//! which itself goes through the batched `Kernel::map_sq_dist` (fast
+//! vectorizable exp). Non-radial kernels fall back to direct evaluation.
 
 use super::functions::Kernel;
-use crate::linalg::Matrix;
+use crate::linalg::{matmul_a_bt, Matrix};
 use crate::pool;
 
 /// Row-tile height for the parallel split. One tile's working set is
@@ -29,55 +33,48 @@ pub fn kernel_matrix(kernel: &Kernel, x: &Matrix) -> Matrix {
 pub fn cross_kernel(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "cross_kernel: feature dims differ");
     let (na, nb, p) = (a.rows(), b.rows(), a.cols());
-    let mut k = Matrix::zeros(na, nb);
     if na == 0 || nb == 0 {
-        return k;
+        return Matrix::zeros(na, nb);
     }
     if kernel.is_radial() {
         // precompute row squared norms
         let anorm: Vec<f64> = (0..na).map(|i| sqnorm(a.row(i))).collect();
         let bnorm: Vec<f64> = (0..nb).map(|j| sqnorm(b.row(j))).collect();
-        let adat = a.data();
-        let bdat = b.data();
+        // pass 0: the cross term A·Bᵀ through the packed GEMM core; the
+        // result buffer *is* the kernel matrix, transformed in place
+        let mut k = matmul_a_bt(a, b);
         let kern = *kernel;
         pool::scope_chunks(k.data_mut(), TILE * nb, |tile_idx, chunk| {
             let r0 = tile_idx * TILE;
             for (li, krow) in chunk.chunks_mut(nb).enumerate() {
-                let i = r0 + li;
-                let arow = &adat[i * p..(i + 1) * p];
-                let an = anorm[i];
-                // pass 1 (vectorizable): d²(i, j) = ‖a_i‖² + ‖b_j‖² −
-                // 2·a_i·b_j into the output row; pass 2: the (exp-bound)
-                // kernel map. Splitting the passes lets the distance loop
-                // vectorize independently of the transcendental.
-                for (j, kv) in krow.iter_mut().enumerate() {
-                    let brow = &bdat[j * p..(j + 1) * p];
-                    let mut ip = 0.0;
-                    for (u, v) in arow.iter().zip(brow.iter()) {
-                        ip += u * v;
-                    }
-                    *kv = an + bnorm[j] - 2.0 * ip;
+                let an = anorm[r0 + li];
+                // pass 1 (vectorizable): fold the norms into
+                // d²(i, j) = ‖a_i‖² + ‖b_j‖² − 2·a_i·b_j over the GEMM row;
+                // pass 2: the batched (exp-bound) kernel map. Splitting
+                // the passes lets the distance loop vectorize
+                // independently of the transcendental.
+                for (kv, bn) in krow.iter_mut().zip(bnorm.iter()) {
+                    *kv = an + bn - 2.0 * *kv;
                 }
-                for kv in krow.iter_mut() {
-                    *kv = kern.eval_sq_dist(*kv);
-                }
+                kern.map_sq_dist(krow);
             }
         });
-    } else {
-        let adat = a.data();
-        let bdat = b.data();
-        let kern = *kernel;
-        pool::scope_chunks(k.data_mut(), TILE * nb, |tile_idx, chunk| {
-            let r0 = tile_idx * TILE;
-            for (li, krow) in chunk.chunks_mut(nb).enumerate() {
-                let i = r0 + li;
-                let arow = &adat[i * p..(i + 1) * p];
-                for (j, kv) in krow.iter_mut().enumerate() {
-                    *kv = kern.eval(arow, &bdat[j * p..(j + 1) * p]);
-                }
-            }
-        });
+        return k;
     }
+    let mut k = Matrix::zeros(na, nb);
+    let adat = a.data();
+    let bdat = b.data();
+    let kern = *kernel;
+    pool::scope_chunks(k.data_mut(), TILE * nb, |tile_idx, chunk| {
+        let r0 = tile_idx * TILE;
+        for (li, krow) in chunk.chunks_mut(nb).enumerate() {
+            let i = r0 + li;
+            let arow = &adat[i * p..(i + 1) * p];
+            for (j, kv) in krow.iter_mut().enumerate() {
+                *kv = kern.eval(arow, &bdat[j * p..(j + 1) * p]);
+            }
+        }
+    });
     k
 }
 
@@ -204,5 +201,30 @@ mod tests {
         let x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 0.0, 0.0]);
         assert_eq!(kernel_diag(&Kernel::gaussian(1.0), &x), vec![1.0, 1.0]);
         assert_eq!(kernel_diag(&Kernel::linear(), &x), vec![5.0, 0.0]);
+    }
+
+    /// Assembly through the packed GEMM + elementwise passes is bitwise
+    /// independent of the thread count (same guarantee as the GEMM core:
+    /// fixed chunk boundaries, one owner per output row).
+    #[test]
+    fn cross_kernel_parallel_matches_serial_exactly() {
+        use crate::pool;
+        let _guard = pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut r = Pcg64::seed(0x9003);
+        // > TILE rows so the elementwise pass actually splits, and big
+        // enough that the cross term takes the packed (parallel) path
+        let a = randx(&mut r, 300, 5);
+        let b = randx(&mut r, 150, 5);
+        let before = pool::num_threads();
+        for kern in [Kernel::gaussian(0.8), Kernel::matern(1.5, 1.0), Kernel::polynomial(1.5, 2)] {
+            pool::set_num_threads(1);
+            let serial = cross_kernel(&kern, &a, &b);
+            pool::set_num_threads(4);
+            let parallel = cross_kernel(&kern, &a, &b);
+            assert_eq!(serial.data(), parallel.data(), "{}", kern.name());
+        }
+        pool::set_num_threads(before);
     }
 }

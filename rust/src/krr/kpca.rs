@@ -10,7 +10,7 @@
 //! eigenproblem; eigenvectors lift back as `V = C L⁻ᵀ Q Λ^{-1/2}/√n`.
 
 use crate::kernels::Kernel;
-use crate::linalg::{chol_factor, eigh, matmul, syrk_at_a, Matrix};
+use crate::linalg::{chol_factor, matmul, partial_eigh, syrk_at_a, Matrix};
 use crate::sketch::{sketch_gram, Sketch, SketchOps};
 
 /// Result of sketched kernel PCA.
@@ -56,9 +56,12 @@ pub fn sketched_kpca(
     let mut m = y;
     m.scale(1.0 / n as f64);
     m.symmetrize();
-    let (vals, vecs) = eigh(&m).descending();
+    // only the top-r pairs of the d×d pencil are consumed: the partial
+    // eigensolver takes over for large d (it falls back to the full dense
+    // solver below its small-n cutoff — see DESIGN.md §4.2)
+    let pe = partial_eigh(&m, r);
+    let (vals, q) = (pe.w, pe.v);
     // lift: V = C L⁻ᵀ Q Λ^{-1/2} / √n
-    let q = vecs.slice(0, d, 0, r);
     let linv_t_q = back_sub_t_mat(l.l(), &q); // L⁻ᵀ Q
     let mut v = matmul(&gram.ks, &linv_t_q);
     for j in 0..r {
@@ -133,6 +136,36 @@ mod tests {
                 kpca.eigenvalues[j],
                 view.sigma[j]
             );
+        }
+    }
+
+    /// Same exactness contract as `full_sketch_recovers_exact_spectrum`,
+    /// but at a pencil size (d = n = 120 > the dense-fallback cutoff)
+    /// where the partial eigensolver actually engages.
+    #[test]
+    fn partial_pencil_matches_exact_spectrum_large_d() {
+        let mut rng = Pcg64::seed(0xce);
+        let n = 120;
+        let x = Matrix::from_fn(n, 2, |_, _| rng.uniform());
+        let kern = Kernel::gaussian(0.7);
+        let s = Sketch::Dense(Matrix::eye(n));
+        let kpca = sketched_kpca(&kern, &x, &s, 5).unwrap();
+        let k = kernel_matrix(&kern, &x);
+        let view = SpectralView::new(&k);
+        for j in 0..5 {
+            assert!(
+                (kpca.eigenvalues[j] - view.sigma[j]).abs() < 1e-6 * (1.0 + view.sigma[j]),
+                "eig {j}: {} vs {}",
+                kpca.eigenvalues[j],
+                view.sigma[j]
+            );
+        }
+        let g = matmul(&kpca.components.transpose(), &kpca.components);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g[(i, j)] - want).abs() < 1e-6, "({i},{j}) = {}", g[(i, j)]);
+            }
         }
     }
 

@@ -1,167 +1,267 @@
-//! Blocked matrix multiplication kernels.
+//! Packed micro-kernel GEMM core.
 //!
-//! Cache-blocked, `i-k-j` loop order (row-major friendly: the inner loop
-//! streams both B's row and C's row), with an optional thread-pool split
-//! over row panels. This is the L3 hot path for `K·S_dense`, `SᵀK²S` and
-//! the Gaussian-sketch baseline; the sparse accumulation path lives in
-//! `sketch::apply`.
+//! All four dense products — `A·B`, `A·Bᵀ`, `Aᵀ·B` and the SYRK `Aᵀ·A` —
+//! dispatch through one register-blocked driver: an `MR×NR` accumulator
+//! tile held in locals, the B operand packed once into contiguous `kc×NR`
+//! strips, the A panel packed per row-panel task into `MR×kc` strips, and
+//! `MC`/`KC`/`NC` cache blocking around the micro-kernel. This is the L3
+//! hot path for `K·S_dense`, `SᵀK²S`, the radial kernel-assembly cross
+//! term (`kernels::matrix::cross_kernel`) and the partial eigensolver
+//! ([`crate::linalg::partial_eigh`]); the sparse accumulation path lives
+//! in `sketch::apply`. Before/after medians for the packed rewrite are
+//! recorded in EXPERIMENTS.md §Perf (measured by `bench::hotpath`).
+//!
+//! Determinism: every element of C is produced inside exactly one
+//! row-panel chunk, and within a chunk the loop structure (`kc` blocks
+//! outer, micro-tiles inner, `p` ascending inside the micro-kernel) is
+//! fixed. Chunk boundaries depend only on the `MC` constant, never on the
+//! worker count, so **all** variants are bitwise independent of the
+//! thread count — the contract the `at_b`/`syrk` callers rely on.
 
 use super::Matrix;
 use crate::pool;
 
-/// Row-panel height a single task works on. 64 rows × (k ≤ a few thousand)
-/// keeps the A-panel in L2 while C stays write-streamed.
-const PANEL: usize = 64;
-/// k-blocking: the B block of `KB × cols` must stay cache-resident.
-const KBLOCK: usize = 256;
+/// Micro-tile rows: the accumulator holds `MR×NR` partial sums in locals.
+const MR: usize = 4;
+/// Micro-tile columns (one or two SIMD vectors per accumulator row).
+const NR: usize = 8;
+/// Row-panel height a single task works on (the `mc` of the blocking
+/// scheme; also the parallel split unit, so it must not depend on the
+/// worker count).
+const MC: usize = 64;
+/// k-blocking: one packed `KC×NR` B strip plus the `MC×KC` A panel stay
+/// cache-resident while a row panel sweeps its tiles.
+const KC: usize = 256;
+/// Column blocking inside a task: bounds the active packed-B window to
+/// `KC×NC` (L2-sized) while the panel's tiles stream over it.
+const NC: usize = 512;
+/// Below this `m·n·k` the packing + tile plumbing costs more than it
+/// saves; a plain serial i-k-j loop wins (rank-1-ish updates in
+/// `IncrementalGram` hit this constantly).
+const SMALL_FLOPS: usize = 8192;
 
 /// `C = A · B`.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul: inner dims");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Matrix::zeros(m, n);
-    let bdat = b.data();
-    let adat = a.data();
-    // split C's rows into panels, execute panels on the pool
-    let cdat = c.data_mut();
-    pool::scope_chunks(cdat, n * PANEL, |panel_idx, chunk| {
-        let r0 = panel_idx * PANEL;
-        for kk in (0..k).step_by(KBLOCK) {
-            let kend = (kk + KBLOCK).min(k);
-            for (local_i, crow) in chunk.chunks_mut(n).enumerate() {
-                let i = r0 + local_i;
-                let arow = &adat[i * k..(i + 1) * k];
-                // 4-way k-unroll: one pass over crow consumes four B rows,
-                // quartering the C-row read/write traffic (§Perf: 6.7 →
-                // see EXPERIMENTS.md for the measured delta).
-                let mut p = kk;
-                while p + 4 <= kend {
-                    let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
-                    let b0 = &bdat[p * n..p * n + n];
-                    let b1 = &bdat[(p + 1) * n..(p + 1) * n + n];
-                    let b2 = &bdat[(p + 2) * n..(p + 2) * n + n];
-                    let b3 = &bdat[(p + 3) * n..(p + 3) * n + n];
-                    for j in 0..n {
-                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                    }
-                    p += 4;
-                }
-                while p < kend {
-                    let aval = arow[p];
-                    if aval != 0.0 {
-                        let brow = &bdat[p * n..(p + 1) * n];
-                        for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                            *cv += aval * bv;
-                        }
-                    }
-                    p += 1;
-                }
-            }
-        }
-    });
-    c
+    let (ad, bd) = (a.data(), b.data());
+    gemm_packed(m, k, n, |i, p| ad[i * k + p], |p, j| bd[p * n + j], false)
 }
 
-/// `C = Aᵀ · B` without materialising the transpose, parallelised over
-/// row panels of `C`. Each panel streams the rows of `A` and `B` once
-/// (p-major inner order), so the per-element accumulation order is
-/// identical to the serial loop — results are bitwise independent of the
-/// thread count.
-pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
-    let (k, m, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Matrix::zeros(m, n);
-    if m == 0 || n == 0 || k == 0 {
-        return c;
-    }
-    let adat = a.data();
-    let bdat = b.data();
-    let cdat = c.data_mut();
-    pool::scope_chunks(cdat, n * PANEL, |panel_idx, chunk| {
-        let r0 = panel_idx * PANEL;
-        let rows = chunk.len() / n;
-        // C[i,:] += A[p,i] * B[p,:] — stream rows of A and B together.
-        for p in 0..k {
-            let arow = &adat[p * m..(p + 1) * m];
-            let brow = &bdat[p * n..(p + 1) * n];
-            for (local_i, crow) in chunk.chunks_mut(n).enumerate().take(rows) {
-                let aval = arow[r0 + local_i];
-                if aval == 0.0 {
-                    continue;
-                }
-                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                    *cv += aval * bv;
-                }
-            }
-        }
-    });
-    c
-}
-
-/// `C = A · Bᵀ` (dot-product form; B's rows are contiguous).
+/// `C = A · Bᵀ` (`a`: m×k, `b`: n×k) without materialising the transpose.
 pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    let mut c = Matrix::zeros(m, n);
-    let n_cols = n;
-    let adat = a.data();
-    let bdat = b.data();
-    let cdat = c.data_mut();
-    pool::scope_chunks(cdat, n_cols * PANEL, |panel_idx, chunk| {
-        let r0 = panel_idx * PANEL;
-        for (local_i, crow) in chunk.chunks_mut(n_cols).enumerate() {
-            let i = r0 + local_i;
-            let arow = &adat[i * k..(i + 1) * k];
-            for (j, cv) in crow.iter_mut().enumerate() {
-                let brow = &bdat[j * k..(j + 1) * k];
-                let mut s = 0.0;
-                for (x, y) in arow.iter().zip(brow.iter()) {
-                    s += x * y;
+    let (ad, bd) = (a.data(), b.data());
+    gemm_packed(m, k, n, |i, p| ad[i * k + p], |p, j| bd[j * k + p], false)
+}
+
+/// `C = Aᵀ · B` (`a`: k×m, `b`: k×n) without materialising the transpose.
+/// Results are bitwise independent of the thread count (see module docs).
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let (ad, bd) = (a.data(), b.data());
+    gemm_packed(m, k, n, |i, p| ad[p * m + i], |p, j| bd[p * n + j], false)
+}
+
+/// `C = Aᵀ · A` (symmetric rank-k update), computing only micro-tiles that
+/// touch the upper triangle and mirroring below the diagonal afterwards
+/// with a cache-blocked transposed copy (no scalar `c[(i,j)]` sweep).
+/// Used for `SᵀK²S = (KS)ᵀ(KS)`. Bitwise independent of the thread count.
+pub fn syrk_at_a(a: &Matrix) -> Matrix {
+    let (k, n) = (a.rows(), a.cols());
+    let ad = a.data();
+    let mut c = gemm_packed(n, k, n, |i, p| ad[p * n + i], |p, j| ad[p * n + j], true);
+    mirror_lower_from_upper(&mut c);
+    c
+}
+
+/// The shared packed driver: `C[m×n] += Σ_p a_at(i,p)·b_at(p,j)` with the
+/// operands described by index closures (monomorphised per variant, so
+/// packing compiles to direct loads). `upper_only` skips micro-tiles that
+/// lie entirely below the diagonal (SYRK); the caller mirrors.
+fn gemm_packed<FA, FB>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_at: FA,
+    b_at: FB,
+    upper_only: bool,
+) -> Matrix
+where
+    FA: Fn(usize, usize) -> f64 + Sync,
+    FB: Fn(usize, usize) -> f64 + Sync,
+{
+    if m == 0 || n == 0 || k == 0 {
+        return Matrix::zeros(m, n);
+    }
+    if m * n * k <= SMALL_FLOPS {
+        return gemm_small(m, k, n, &a_at, &b_at, upper_only);
+    }
+    let n_strips = (n + NR - 1) / NR;
+    let n_pad = n_strips * NR;
+    // Pack all of B once: per KC block, NR-column strips, k-major inside a
+    // strip (NR contiguous values per k step, zero-padded tail columns).
+    // Strip s of block kk starts at kk·n_pad + s·kc·NR.
+    let mut bpack = vec![0.0f64; k * n_pad];
+    {
+        let b_at = &b_at;
+        pool::scope_chunks(&mut bpack, KC * n_pad, |kb, block| {
+            let kk = kb * KC;
+            let kc = block.len() / n_pad;
+            for s in 0..n_strips {
+                let j0 = s * NR;
+                let jn = NR.min(n - j0);
+                let strip = &mut block[s * kc * NR..(s + 1) * kc * NR];
+                for p in 0..kc {
+                    let dst = &mut strip[p * NR..(p + 1) * NR];
+                    for t in 0..jn {
+                        dst[t] = b_at(kk + p, j0 + t);
+                    }
                 }
-                *cv = s;
             }
+        });
+    }
+    let mut c = Matrix::zeros(m, n);
+    let cdat = c.data_mut();
+    let a_at = &a_at;
+    let bpack = &bpack;
+    pool::scope_chunks(cdat, MC * n, |panel_idx, chunk| {
+        let r0 = panel_idx * MC;
+        let rows = chunk.len() / n;
+        let row_strips = (rows + MR - 1) / MR;
+        let mut apack = vec![0.0f64; row_strips * MR * KC.min(k)];
+        let mut kk = 0usize;
+        while kk < k {
+            let kc = KC.min(k - kk);
+            // pack the A panel: MR-row strips, k-major inside a strip
+            // (MR contiguous values per k step, zero-padded tail rows)
+            for rs in 0..row_strips {
+                let i0 = rs * MR;
+                let rn = MR.min(rows - i0);
+                let strip = &mut apack[rs * MR * kc..(rs + 1) * MR * kc];
+                for p in 0..kc {
+                    let dst = &mut strip[p * MR..(p + 1) * MR];
+                    for r in 0..rn {
+                        dst[r] = a_at(r0 + i0 + r, kk + p);
+                    }
+                    for d in dst[rn..].iter_mut() {
+                        *d = 0.0;
+                    }
+                }
+            }
+            let bblock = &bpack[kk * n_pad..kk * n_pad + kc * n_pad];
+            let mut jj = 0usize;
+            while jj < n_pad {
+                let jend = (jj + NC).min(n_pad);
+                for rs in 0..row_strips {
+                    let i0 = rs * MR;
+                    let rn = MR.min(rows - i0);
+                    let gi = r0 + i0; // global top row of this tile
+                    let astrip = &apack[rs * MR * kc..(rs + 1) * MR * kc];
+                    let mut s = jj / NR;
+                    while s * NR < jend {
+                        let j0 = s * NR;
+                        if upper_only && j0 + NR <= gi {
+                            // tile entirely below the diagonal: the mirror
+                            // pass fills it from the transpose
+                            s += 1;
+                            continue;
+                        }
+                        let bstrip = &bblock[s * kc * NR..(s + 1) * kc * NR];
+                        let mut acc = [[0.0f64; NR]; MR];
+                        micro_kernel(kc, astrip, bstrip, &mut acc);
+                        let jn = NR.min(n - j0);
+                        for r in 0..rn {
+                            let base = (i0 + r) * n + j0;
+                            let crow = &mut chunk[base..base + jn];
+                            for (cv, av) in crow.iter_mut().zip(acc[r][..jn].iter()) {
+                                *cv += *av;
+                            }
+                        }
+                        s += 1;
+                    }
+                }
+                jj = jend;
+            }
+            kk += kc;
         }
     });
     c
 }
 
-/// `C = Aᵀ · A` (symmetric rank-k update), computing only the upper
-/// triangle and mirroring, parallelised over row panels of `C`. Used for
-/// `SᵀK²S = (KS)ᵀ(KS)`. The p-major accumulation order matches the serial
-/// loop exactly, so results are bitwise independent of the thread count.
-pub fn syrk_at_a(a: &Matrix) -> Matrix {
-    let (k, n) = (a.rows(), a.cols());
-    let mut c = Matrix::zeros(n, n);
-    if n == 0 || k == 0 {
-        return c;
-    }
-    let adat = a.data();
-    let cdat = c.data_mut();
-    pool::scope_chunks(cdat, n * PANEL, |panel_idx, chunk| {
-        let r0 = panel_idx * PANEL;
-        let rows = chunk.len() / n;
-        for p in 0..k {
-            let row = &adat[p * n..(p + 1) * n];
-            for (local_i, crow) in chunk.chunks_mut(n).enumerate().take(rows) {
-                let i = r0 + local_i;
-                let v = row[i];
-                if v == 0.0 {
-                    continue;
-                }
-                for j in i..n {
-                    crow[j] += v * row[j];
-                }
+/// The register-blocked heart: `acc[r][t] += Σ_p a[p·MR+r] · b[p·NR+t]`.
+/// Both operands arrive packed and zero-padded, so the loops are
+/// branch-free at fixed trip counts and the `t` loop vectorises.
+#[inline(always)]
+fn micro_kernel(kc: usize, a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for p in 0..kc {
+        let av = &a[p * MR..(p + 1) * MR];
+        let bv = &b[p * NR..(p + 1) * NR];
+        for r in 0..MR {
+            let ar = av[r];
+            for (cv, bt) in acc[r].iter_mut().zip(bv.iter()) {
+                *cv += ar * *bt;
             }
         }
-    });
-    // mirror
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let v = c[(i, j)];
-            c[(j, i)] = v;
+    }
+}
+
+/// Serial i-k-j fallback for tiny products where packing overhead loses.
+fn gemm_small<FA, FB>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_at: &FA,
+    b_at: &FB,
+    upper_only: bool,
+) -> Matrix
+where
+    FA: Fn(usize, usize) -> f64,
+    FB: Fn(usize, usize) -> f64,
+{
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let row = c.row_mut(i);
+        let j0 = if upper_only { i.min(n) } else { 0 };
+        for p in 0..k {
+            let av = a_at(i, p);
+            if av == 0.0 {
+                continue;
+            }
+            for (j, cv) in row.iter_mut().enumerate().skip(j0) {
+                *cv += av * b_at(p, j);
+            }
         }
     }
     c
+}
+
+/// Mirror the strict upper triangle into the lower one with a cache-blocked
+/// transposed copy on the raw buffer — `TB×TB` blocks keep both the source
+/// rows and the destination rows resident, unlike a whole-matrix column
+/// sweep.
+fn mirror_lower_from_upper(c: &mut Matrix) {
+    let n = c.rows();
+    const TB: usize = 48;
+    let d = c.data_mut();
+    let mut bi = 0;
+    while bi < n {
+        let iend = (bi + TB).min(n);
+        let mut bj = 0;
+        while bj <= bi {
+            let jend = (bj + TB).min(n);
+            for i in bi..iend {
+                let jmax = jend.min(i);
+                for j in bj..jmax {
+                    d[i * n + j] = d[j * n + i];
+                }
+            }
+            bj += TB;
+        }
+        bi += TB;
+    }
 }
 
 #[cfg(test)]
@@ -206,6 +306,63 @@ mod tests {
         }
     }
 
+    /// Micro-kernel edge shapes: m < MR, n < NR, k < 4, 1×1, tall-skinny,
+    /// KC- and MC-boundary crossings — every variant against the naive
+    /// reference.
+    #[test]
+    fn edge_shapes_all_variants_match_naive() {
+        let mut r = Pcg64::seed(25);
+        for &(m, k, n) in &[
+            (1, 1, 1),    // degenerate
+            (3, 2, 5),    // m < MR, k < 4
+            (9, 3, 7),    // n < NR, k < 4
+            (5, 4, 8),    // exact NR boundary, MR+1 rows
+            (4, 300, 9),  // crosses KC = 256, ragged columns
+            (3, 2000, 2), // packed path with m < MR AND n < NR tails
+            (66, 2, 70),  // packed path with k < 4
+            (130, 70, 7), // packed path with n < NR, crosses MC
+            (200, 3, 2),  // tall-skinny, tiny k (serial small path)
+            (6, 70, 130), // wide, ragged strip tail
+            (65, 33, 9),  // crosses the MC row-panel boundary
+        ] {
+            let a = randm(&mut r, m, k);
+            let b = randm(&mut r, k, n);
+            assert!(
+                close(&matmul(&a, &b), &naive(&a, &b), 1e-9),
+                "matmul {m}x{k}x{n}"
+            );
+            let bt_src = randm(&mut r, n, k);
+            assert!(
+                close(
+                    &matmul_a_bt(&a, &bt_src),
+                    &naive(&a, &bt_src.transpose()),
+                    1e-9
+                ),
+                "a_bt {m}x{k}x{n}"
+            );
+            let at_src = randm(&mut r, k, m);
+            assert!(
+                close(
+                    &matmul_at_b(&at_src, &b),
+                    &naive(&at_src.transpose(), &b),
+                    1e-9
+                ),
+                "at_b {m}x{k}x{n}"
+            );
+            let sy_src = randm(&mut r, k, n);
+            let sy = syrk_at_a(&sy_src);
+            assert!(
+                close(&sy, &naive(&sy_src.transpose(), &sy_src), 1e-9),
+                "syrk {k}x{n}"
+            );
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(sy[(i, j)], sy[(j, i)], "syrk symmetry {k}x{n}");
+                }
+            }
+        }
+    }
+
     #[test]
     fn at_b_matches() {
         let mut r = Pcg64::seed(22);
@@ -247,8 +404,9 @@ mod tests {
         assert_eq!((s.rows(), s.cols()), (3, 3));
     }
 
-    /// The p-major accumulation order makes the parallel row-panel split
-    /// bitwise identical to the serial path.
+    /// Every element of C is produced inside one fixed-boundary row-panel
+    /// chunk, so the parallel split is bitwise identical to the serial
+    /// path — for the packed paths of all four variants.
     #[test]
     fn at_b_and_syrk_parallel_match_serial_exactly() {
         use crate::pool;
@@ -256,19 +414,26 @@ mod tests {
             .lock()
             .unwrap_or_else(|e| e.into_inner());
         let mut r = Pcg64::seed(0x9002);
-        // > PANEL output rows so the pool actually splits
+        // > MC output rows so the pool actually splits
         let a = randm(&mut r, 150, 70);
         let b = randm(&mut r, 150, 33);
         let big = randm(&mut r, 90, 130);
+        let wide = randm(&mut r, 130, 80);
         let before = pool::num_threads();
         pool::set_num_threads(1);
         let atb_serial = matmul_at_b(&a, &b);
         let syrk_serial = syrk_at_a(&big);
+        let mm_serial = matmul(&big, &wide);
+        let abt_serial = matmul_a_bt(&big, &wide.transpose());
         pool::set_num_threads(4);
         let atb_par = matmul_at_b(&a, &b);
         let syrk_par = syrk_at_a(&big);
+        let mm_par = matmul(&big, &wide);
+        let abt_par = matmul_a_bt(&big, &wide.transpose());
         pool::set_num_threads(before);
         assert_eq!(atb_serial.data(), atb_par.data());
         assert_eq!(syrk_serial.data(), syrk_par.data());
+        assert_eq!(mm_serial.data(), mm_par.data());
+        assert_eq!(abt_serial.data(), abt_par.data());
     }
 }

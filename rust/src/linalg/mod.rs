@@ -1,11 +1,14 @@
 //! Dense linear-algebra substrate (no external BLAS/LAPACK in this image).
 //!
-//! Everything the sketched-KRR stack needs: a row-major [`Matrix`], blocked
-//! GEMM/SYRK ([`gemm`]), Cholesky factorisation and SPD solves ([`chol`]),
-//! triangular solves, a symmetric eigendecomposition (Householder
-//! tridiagonalisation + implicit-shift QL, [`eig`]) used by the
-//! K-satisfiability / incoherence diagnostics, and operator-norm estimation
-//! by power iteration ([`norms`]).
+//! Everything the sketched-KRR stack needs: a row-major [`Matrix`], a
+//! packed-micro-kernel GEMM/SYRK core ([`gemm`] — one register-blocked
+//! kernel behind all four product variants), Cholesky factorisation and
+//! SPD solves ([`chol`]), triangular solves, a symmetric
+//! eigendecomposition (Householder tridiagonalisation + implicit-shift
+//! QL, [`eig`]) used by the K-satisfiability / incoherence diagnostics, a
+//! partial top-k eigensolver ([`partial_eigh`] — blocked subspace
+//! iteration for the spectral application paths), and operator-norm
+//! estimation by power iteration ([`norms`]).
 
 mod chol;
 mod eig;
@@ -14,7 +17,8 @@ mod matrix;
 mod norms;
 
 pub use chol::{chol_factor, chol_solve, chol_solve_many, CholFactor};
-pub use eig::{eigh, EighResult};
+pub use eig::{eigh, partial_eigh, EighResult, PartialEigh};
+pub(crate) use eig::partial_eigh_warm;
 pub use gemm::{matmul, matmul_at_b, matmul_a_bt, syrk_at_a};
 pub use matrix::Matrix;
 pub use norms::{fro_norm, op_norm, op_norm_rect};

@@ -8,6 +8,12 @@
 //!   then `SᵀKS = Sᵀ(KS)` is another `O(nnz·d)`;
 //! * dense `S` (Gaussian/Rademacher): the full `K` and an `O(n²d)` GEMM are
 //!   unavoidable, which is exactly the gap the paper's Figures 1/3 show.
+//!
+//! All dense products here (`K·S`, the SYRK for `SᵀK²S`, the thin
+//! incremental-update GEMMs) run on the packed micro-kernel core in
+//! `linalg::gemm`; tiny per-append products fall into its serial
+//! small-matrix path, so `IncrementalGram::sync` pays no packing overhead
+//! on single-term growth.
 
 use super::{AccumSketch, Sketch, SketchOps, SparseSketch};
 use crate::kernels::{cross_kernel, kernel_matrix, Kernel};

@@ -1,7 +1,41 @@
 //! K-satisfiability and incoherence diagnostics.
+//!
+//! Two routes to the K-satisfiability check: the original
+//! [`k_satisfiability`] consumes a full [`SpectralView`] (an `O(n³)`
+//! dense eigendecomposition — still required by [`incoherence`] and the
+//! statistical dimension, which sum over the whole spectrum), and
+//! [`k_satisfiability_topk`], which resolves only the eigenpairs above δ
+//! with [`partial_eigh`] and folds the tail condition algebraically, so
+//! the diagnostic scales to n where the dense solver does not.
 
-use crate::linalg::{eigh, op_norm, op_norm_rect, Matrix};
+use crate::linalg::{
+    eigh, matmul, matmul_a_bt, matmul_at_b, op_norm, op_norm_rect, partial_eigh,
+    partial_eigh_warm, Matrix,
+};
 use crate::sketch::{Sketch, SketchOps};
+
+/// `K/n`, symmetrised — the operator every spectral diagnostic
+/// decomposes (shared by [`SpectralView::new`], [`k_satisfiability_topk`]
+/// and [`top_sigma`]).
+fn kn_normalized(k: &Matrix) -> Matrix {
+    let mut kn = k.clone();
+    kn.scale(1.0 / k.rows() as f64);
+    kn.symmetrize();
+    kn
+}
+
+/// `U₁ᵀ S` (`dd × d`): the top-`dd` eigenvector block applied to the
+/// sketch — row `r` is `(column r of U)ᵀ · S`. Shared by both
+/// K-satisfiability routes.
+fn u1_t_s(u: &Matrix, dd: usize, s: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(dd, s.cols());
+    for r in 0..dd {
+        let ucol = u.col(r);
+        let v = s.matvec_t(&ucol);
+        out.row_mut(r).copy_from_slice(&v);
+    }
+    out
+}
 
 /// Eigendecomposition of `K/n` cached for repeated diagnostics: the bench
 /// harness evaluates many sketches against one dataset.
@@ -18,9 +52,7 @@ impl SpectralView {
     /// Decompose `K` (the *unscaled* empirical kernel matrix).
     pub fn new(k: &Matrix) -> SpectralView {
         let n = k.rows();
-        let mut kn = k.clone();
-        kn.scale(1.0 / n as f64);
-        kn.symmetrize();
+        let kn = kn_normalized(k);
         let (sigma, u) = eigh(&kn).descending();
         SpectralView {
             sigma: sigma.into_iter().map(|s| s.max(0.0)).collect(),
@@ -80,17 +112,7 @@ pub fn k_satisfiability(view: &SpectralView, sketch: &Sketch, delta: f64) -> KSa
     let dd = view.d_delta(delta).max(1).min(n);
     let s = sketch.to_dense();
 
-    // U₁ᵀ S  (d_δ × d)
-    let u1ts = {
-        let mut out = Matrix::zeros(dd, s.cols());
-        for r in 0..dd {
-            // row r = (column r of U)ᵀ · S
-            let ucol = view.u.col(r);
-            let v = s.matvec_t(&ucol);
-            out.row_mut(r).copy_from_slice(&v);
-        }
-        out
-    };
+    let u1ts = u1_t_s(&view.u, dd, &s);
     // G = U₁ᵀSSᵀU₁ − I
     let mut g = crate::linalg::matmul_a_bt(&u1ts, &u1ts);
     g.add_diag(-1.0);
@@ -126,6 +148,96 @@ pub fn k_satisfiability(view: &SpectralView, sketch: &Sketch, delta: f64) -> KSa
         cond1: top_distortion <= 0.5,
         cond2: tail_norm <= sqrt_delta,
     }
+}
+
+/// K-satisfiability from the **top spectrum only** — the
+/// partial-eigensolver route for large `n`.
+///
+/// Only the eigenpairs with `σ > δ` are resolved (the block is grown
+/// geometrically until the smallest resolved eigenvalue clears the cut);
+/// the tail condition never needs `U₂` explicitly because
+///
+/// ```text
+///   (SᵀU₂Σ₂^{1/2})(SᵀU₂Σ₂^{1/2})ᵀ = Sᵀ(K/n)S − (U₁ᵀS)ᵀ Σ₁ (U₁ᵀS)
+/// ```
+///
+/// so `tail_norm² = λ_max` of that `d×d` difference. Matches
+/// [`k_satisfiability`] to power-iteration tolerance (`top_distortion`
+/// depends only on the span of `U₁`, which both solvers agree on), while
+/// replacing the `O(n³)` dense eigendecomposition with `O(n²·d_δ)` work.
+pub fn k_satisfiability_topk(k: &Matrix, sketch: &Sketch, delta: f64) -> KSatReport {
+    let n = k.rows();
+    assert_eq!(n, k.cols(), "k_satisfiability_topk: square kernel");
+    let kn = kn_normalized(k);
+    // resolve eigenpairs until the spectrum drops below δ (the U₁/U₂ cut);
+    // each enlargement warm-starts from the previous round's Ritz vectors
+    let mut r = 16usize.min(n).max(1);
+    let mut warm: Option<Matrix> = None;
+    let (sigma, u) = loop {
+        let pe = partial_eigh_warm(&kn, r, warm.as_ref());
+        if r >= n || pe.w.last().map_or(true, |&w| w <= delta) {
+            let clamped: Vec<f64> = pe.w.into_iter().map(|s| s.max(0.0)).collect();
+            break (clamped, pe.v);
+        }
+        r = if pe.is_complete() {
+            // the solver already fell back to a full dense decomposition:
+            // jump straight to r = n so one final dense solve finishes the
+            // job instead of re-paying it once per doubling
+            n
+        } else {
+            (2 * r).min(n)
+        };
+        warm = Some(pe.v);
+    };
+    let dd = sigma
+        .iter()
+        .take_while(|&&s| s > delta)
+        .count()
+        .max(1)
+        .min(sigma.len());
+    let s = sketch.to_dense();
+    let u1ts = u1_t_s(&u, dd, &s);
+    // G = U₁ᵀSSᵀU₁ − I
+    let mut g = matmul_a_bt(&u1ts, &u1ts);
+    g.add_diag(-1.0);
+    let top_distortion = op_norm(&g, 300);
+
+    // tail Gram: Sᵀ(K/n)S − (U₁ᵀS)ᵀ Σ₁ (U₁ᵀS)
+    let kns = matmul(&kn, &s);
+    let mut tail_gram = matmul_at_b(&s, &kns);
+    let mut w1 = u1ts.clone();
+    for row in 0..dd {
+        let sig = sigma[row];
+        for v in w1.row_mut(row).iter_mut() {
+            *v *= sig;
+        }
+    }
+    tail_gram.axpy(-1.0, &matmul_at_b(&u1ts, &w1));
+    tail_gram.symmetrize();
+    let tail_norm = op_norm(&tail_gram, 300).max(0.0).sqrt();
+
+    let sqrt_delta = delta.sqrt();
+    KSatReport {
+        top_distortion,
+        tail_norm,
+        sqrt_delta,
+        d_delta: dd,
+        cond1: top_distortion <= 0.5,
+        cond2: tail_norm <= sqrt_delta,
+    }
+}
+
+/// Top-`r` eigenvalues of `K/n` (descending, clamped at 0) through the
+/// partial eigensolver — for consumers that need only leading spectral
+/// mass (e.g. the KPCA recovery benches) and should not pay `O(n³)`.
+pub fn top_sigma(k: &Matrix, r: usize) -> Vec<f64> {
+    let n = k.rows();
+    let kn = kn_normalized(k);
+    partial_eigh(&kn, r.min(n))
+        .w
+        .into_iter()
+        .map(|s| s.max(0.0))
+        .collect()
 }
 
 /// Incoherence `M` (paper Theorem 8):
@@ -284,6 +396,53 @@ mod tests {
             "leverage M = {m_lev} should be O(d_stat = {d_stat})"
         );
         assert!(m_uniform > n as f64 / 4.0, "M = {m_uniform} vs n = {n}");
+    }
+
+    /// The partial-spectrum route reproduces the full-eigendecomposition
+    /// report: identical U₁/U₂ split, and both operator norms to
+    /// power-iteration tolerance (top_distortion depends only on the span
+    /// of U₁; the tail Gram identity is exact).
+    #[test]
+    fn topk_route_matches_full_k_satisfiability() {
+        let mut rng = Pcg64::seed(146);
+        let n = 150;
+        let x = Matrix::from_fn(n, 2, |_, _| rng.uniform());
+        let k = kernel_matrix(&Kernel::gaussian(0.6), &x);
+        let view = SpectralView::new(&k);
+        // δ in the middle of the σ₅/σ₆ gap so d_δ is unambiguous
+        let delta = 0.5 * (view.sigma[5] + view.sigma[6]);
+        let mut srng = Pcg64::seed(147);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, 30, &mut srng);
+        let full = k_satisfiability(&view, &s, delta);
+        let part = k_satisfiability_topk(&k, &s, delta);
+        assert_eq!(full.d_delta, part.d_delta, "U₁/U₂ split must agree");
+        assert!(
+            (full.top_distortion - part.top_distortion).abs()
+                < 2e-3 * (1.0 + full.top_distortion),
+            "distortion {} vs {}",
+            full.top_distortion,
+            part.top_distortion
+        );
+        // looser than top_distortion: the two routes power-iterate
+        // *different* operators for the tail, so their convergence errors
+        // are independent
+        assert!(
+            (full.tail_norm - part.tail_norm).abs() < 1e-2 * (1.0 + full.tail_norm),
+            "tail {} vs {}",
+            full.tail_norm,
+            part.tail_norm
+        );
+        assert_eq!(full.sqrt_delta, part.sqrt_delta);
+        // top-σ helper agrees with the dense spectrum
+        let top = top_sigma(&k, 6);
+        for j in 0..6 {
+            assert!(
+                (top[j] - view.sigma[j]).abs() < 1e-8 * (1.0 + view.sigma[j]),
+                "σ{j}: {} vs {}",
+                top[j],
+                view.sigma[j]
+            );
+        }
     }
 
     #[test]

@@ -9,4 +9,7 @@ mod ksat;
 
 pub use adapt::{amm_error_proxy, rel_change, StoppingRule};
 pub use errors::{in_sample_sq_error, mse, test_error};
-pub use ksat::{incoherence, k_satisfiability, stat_dim, KSatReport, SpectralView};
+pub use ksat::{
+    incoherence, k_satisfiability, k_satisfiability_topk, stat_dim, top_sigma, KSatReport,
+    SpectralView,
+};
