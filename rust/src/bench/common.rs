@@ -16,6 +16,12 @@ pub struct BenchOpts {
     pub csv: Option<String>,
     /// Run at full paper scale (overrides n_max upwards).
     pub full: bool,
+    /// Streamed-assembly mode (`--streamed`): sketched fits never receive
+    /// a shared precomputed `K` — every Gram goes through the row-tiled
+    /// `GramOperator`, so sketch-side peak memory is `O(tile·n + n·d)`.
+    /// Exact-KRR reference fits still assemble `K` where a figure needs
+    /// the dense baseline (that cost is the baseline's, not the method's).
+    pub streamed: bool,
 }
 
 impl Default for BenchOpts {
@@ -26,6 +32,7 @@ impl Default for BenchOpts {
             seed: 20210217,
             csv: None,
             full: false,
+            streamed: false,
         }
     }
 }

@@ -45,8 +45,10 @@ pub fn run_fig1(opts: &BenchOpts) -> Vec<Row> {
                     // dense sketches get the shared K (the n²d multiply is
                     // theirs to pay); sparse sketches use the O(nmd) path,
                     // paying their own kernel evaluations as the paper's
-                    // runtime comparison requires.
-                    let shared_k = matches!(kind, SketchKind::Gaussian).then_some(&k);
+                    // runtime comparison requires. --streamed drops the
+                    // share: every fit goes through the Gram operator.
+                    let shared_k = (!opts.streamed && matches!(kind, SketchKind::Gaussian))
+                        .then_some(&k);
                     let (result, secs) = timed(|| {
                         let s = SketchBuilder::new(kind.clone()).build(n, d, rng);
                         SketchedKrr::fit(kern, &x, &y, &s, lambda, shared_k)

@@ -50,7 +50,9 @@ pub fn run_fig2(opts: &BenchOpts) -> Vec<Row> {
         } else {
             SketchKind::Accumulation { m }
         };
-        let shared_k = matches!(kind, SketchKind::Gaussian).then_some(&k);
+        // --streamed: no shared K — dense sketches stream K·S through the
+        // Gram operator instead of borrowing the baseline's assembly
+        let shared_k = (!opts.streamed && matches!(kind, SketchKind::Gaussian)).then_some(&k);
         let s = SketchBuilder::new(kind).build(n, d, rng);
         let skrr = SketchedKrr::fit(kern, &x, &y, &s, lambda, shared_k).expect("sketched fit");
         let approx_err = in_sample_sq_error(skrr.fitted(), exact.fitted());

@@ -11,14 +11,19 @@
 //! `ACCUMKRR_BENCH_QUICK` (any value but "0": toy shapes — the unit-test
 //! plumbing mode; CI deliberately runs the *full* paper-sweep shapes at
 //! 1 rep so the uploaded artifact carries the real cases),
+//! `ACCUMKRR_BENCH_STREAMED_ONLY` (any value but "0": run *only* the
+//! streamed Gram-operator case, allocating no dense `K` anywhere in the
+//! harness — the mode the EXPERIMENTS.md peak-RSS sublinearity check
+//! needs, since `VmHWM` is a process-wide high-water mark),
 //! `ACCUMKRR_THREADS` (pin the pool for stable timings).
 
 use crate::data::{bimodal, BimodalConfig};
-use crate::kernels::{kernel_cols, kernel_matrix, Kernel};
+use crate::kernels::{kernel_cols, kernel_matrix, GramOperator, Kernel};
 use crate::linalg::{chol_factor, matmul, matmul_at_b, partial_eigh, Matrix};
 use crate::rng::Pcg64;
 use crate::sketch::{sketch_gram, SketchBuilder, SketchKind};
 use crate::util::json::Json;
+use crate::util::mem::peak_rss_bytes;
 use crate::util::timer::{timed, timing_stats, TimingStats};
 
 /// One benchmark case.
@@ -34,16 +39,22 @@ struct CaseResult {
     flops: f64,
     stats: TimingStats,
     gflops: f64,
+    /// Process peak RSS (MB) sampled right after the case's reps — a
+    /// monotone high-water mark (see `util::mem::peak_rss_bytes`), so the
+    /// interesting signal is whether the *streamed* cases move it versus
+    /// the dense-assembly cases that precede them. 0 when unavailable.
+    peak_rss_mb: f64,
 }
 
 fn report(r: &CaseResult) {
     println!(
-        "{:>32}  median {:>9.3} ms  iqr [{:>8.3}, {:>8.3}]  {:>7.2} gflop/s  (n={})",
+        "{:>36}  median {:>9.3} ms  iqr [{:>8.3}, {:>8.3}]  {:>7.2} gflop/s  rss {:>7.1} MB  (n={})",
         r.name,
         r.stats.median * 1e3,
         r.stats.p25 * 1e3,
         r.stats.p75 * 1e3,
         r.gflops,
+        r.peak_rss_mb,
         r.stats.n
     );
 }
@@ -62,8 +73,10 @@ pub fn hotpath_main() {
 
 /// The full paper-sweep-shaped case set (`quick = false`) or a miniature
 /// set exercising the same code paths (`quick = true`, used by the unit
-/// test so debug builds stay fast).
-fn build_cases(quick: bool, rng: &mut Pcg64) -> Vec<Case> {
+/// test so debug builds stay fast). `streamed_only` emits just the
+/// Gram-operator case and allocates **no** dense `K` in the harness, so
+/// the process peak RSS reflects the streamed path alone.
+fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
     // shapes from the paper's sweeps: n = 1500 bimodal points in p = 3,
     // sketch width d = 40; 512³ as the canonical square-GEMM point
     let (gemm_n, n, d, chol_n, eig_k, nys_u) = if quick {
@@ -79,6 +92,26 @@ fn build_cases(quick: bool, rng: &mut Pcg64) -> Vec<Case> {
     };
     let (x, y, _) = bimodal(&cfg, rng);
     let kern = Kernel::gaussian(0.5);
+    let b_thin = Matrix::from_fn(n, d, |_, _| rng.normal());
+    // streamed-assembly case: K·B through the row-tiled Gram operator —
+    // the memory-model flagship (O(tile·n + n·d) peak instead of the n²
+    // a dense assemble-then-GEMM pays); the RSS column tracks it across
+    // PRs, and the dense comparator is the `matmul K·B dense` case plus
+    // the `kernel_matrix` assembly it would also pay
+    let gram_case = Case {
+        name: format!("gram_op K·B streamed n={n} d={d}"),
+        flops: (n * n) as f64 * (2.0 * p as f64 + 8.0) + 2.0 * (n * n * d) as f64,
+        run: Box::new({
+            let x = x.clone();
+            let b = b_thin.clone();
+            move || {
+                std::hint::black_box(GramOperator::new(kern, &x).matmul(&b));
+            }
+        }),
+    };
+    if streamed_only {
+        return vec![gram_case];
+    }
     let k = kernel_matrix(&kern, &x);
     let mut kn = k.clone();
     kn.scale(1.0 / n as f64);
@@ -167,6 +200,22 @@ fn build_cases(quick: bool, rng: &mut Pcg64) -> Vec<Case> {
                 }
             }),
         },
+        gram_case,
+        Case {
+            // the streamed case's dense comparator: same K·B product off
+            // the prebuilt K (EXPERIMENTS.md's throughput gate sums this
+            // with the kernel_matrix assembly case for the full dense
+            // route's cost)
+            name: format!("matmul K·B dense n={n} d={d}"),
+            flops: 2.0 * (n * n * d) as f64,
+            run: Box::new({
+                let k = k.clone();
+                let b = b_thin.clone();
+                move || {
+                    std::hint::black_box(matmul(&k, &b));
+                }
+            }),
+        },
         Case {
             name: "sketch_gram accum m=4".to_string(),
             flops: 0.0,
@@ -238,11 +287,15 @@ fn build_cases(quick: bool, rng: &mut Pcg64) -> Vec<Case> {
 /// so tests can assert on it without re-reading the file.
 pub fn run_hotpath_to(json_path: &str, reps: usize, quick: bool) -> Json {
     let reps = reps.max(1);
+    let streamed_only = std::env::var("ACCUMKRR_BENCH_STREAMED_ONLY")
+        .map(|v| v != "0")
+        .unwrap_or(false);
     let mut rng = Pcg64::seed(0xb5);
-    let mut cases = build_cases(quick, &mut rng);
+    let mut cases = build_cases(quick, streamed_only, &mut rng);
     println!(
-        "hotpath micro-benchmarks (reps={reps}, 1 warmup, {} mode)",
-        if quick { "quick" } else { "full" }
+        "hotpath micro-benchmarks (reps={reps}, 1 warmup, {} mode{})",
+        if quick { "quick" } else { "full" },
+        if streamed_only { ", streamed-only" } else { "" }
     );
     let mut results = Vec::with_capacity(cases.len());
     for case in cases.iter_mut() {
@@ -258,11 +311,13 @@ pub fn run_hotpath_to(json_path: &str, reps: usize, quick: bool) -> Json {
         } else {
             0.0
         };
+        let peak_rss_mb = peak_rss_bytes().map_or(0.0, |b| b as f64 / (1024.0 * 1024.0));
         let r = CaseResult {
             name: case.name.clone(),
             flops: case.flops,
             stats,
             gflops,
+            peak_rss_mb,
         };
         report(&r);
         results.push(r);
@@ -280,15 +335,19 @@ pub fn run_hotpath_to(json_path: &str, reps: usize, quick: bool) -> Json {
                 ("min_secs", Json::Num(r.stats.min)),
                 ("max_secs", Json::Num(r.stats.max)),
                 ("gflops", Json::Num(r.gflops)),
+                ("peak_rss_mb", Json::Num(r.peak_rss_mb)),
                 ("reps", Json::from(r.stats.n)),
             ])
         })
         .collect();
+    let final_rss = peak_rss_bytes().map_or(0.0, |b| b as f64 / (1024.0 * 1024.0));
     let j = Json::obj(vec![
         ("bench", Json::from("hotpath")),
         ("mode", Json::from(if quick { "quick" } else { "full" })),
+        ("streamed_only", Json::Bool(streamed_only)),
         ("reps", Json::from(reps)),
         ("threads", Json::from(crate::pool::num_threads())),
+        ("peak_rss_mb", Json::Num(final_rss)),
         ("cases", Json::Arr(case_objs)),
     ]);
     if let Err(e) = std::fs::write(json_path, j.to_string()) {
@@ -318,7 +377,7 @@ mod tests {
         assert!(cases.len() >= 8, "expected the full quick case set");
         for c in cases {
             assert!(c.get("name").and_then(|v| v.as_str()).is_some());
-            for field in ["median_secs", "p25_secs", "p75_secs", "gflops"] {
+            for field in ["median_secs", "p25_secs", "p75_secs", "gflops", "peak_rss_mb"] {
                 let v = c.get(field).and_then(|v| v.as_f64()).unwrap();
                 assert!(v >= 0.0, "{field} must be present and non-negative");
             }
@@ -333,6 +392,20 @@ mod tests {
         assert!(names.iter().any(|n| n.starts_with("matmul ")));
         assert!(names.iter().any(|n| n.starts_with("kernel_matrix")));
         assert!(names.iter().any(|n| n.starts_with("partial_eigh")));
+        assert!(names.iter().any(|n| n.starts_with("gram_op K·B streamed")));
+        assert!(names.iter().any(|n| n.starts_with("matmul K·B dense")));
+        assert!(j.get("peak_rss_mb").and_then(|v| v.as_f64()).is_some());
         std::fs::remove_file(&tmp).ok();
+    }
+
+    /// Streamed-only mode emits exactly the Gram-operator case — the
+    /// harness allocates no dense K, so its peak RSS is the streamed
+    /// path's (EXPERIMENTS.md's sublinearity protocol relies on this).
+    #[test]
+    fn streamed_only_case_set_is_just_the_operator() {
+        let mut rng = Pcg64::seed(0xb6);
+        let cases = build_cases(true, true, &mut rng);
+        assert_eq!(cases.len(), 1);
+        assert!(cases[0].name.starts_with("gram_op K·B streamed"));
     }
 }

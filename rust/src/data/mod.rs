@@ -1,5 +1,5 @@
 //! Datasets: the paper's synthetic bimodal generator, simulated UCI
-//! surrogates (see DESIGN.md §5 substitutions), a CSV loader for the real
+//! surrogates (see `data::ucisim` for the substitutions), a CSV loader for the real
 //! files, and preprocessing (normalisation, train/test splits).
 
 mod loader;

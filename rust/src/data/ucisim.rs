@@ -1,4 +1,4 @@
-//! Simulated surrogates for the paper's three UCI datasets (DESIGN.md §5).
+//! Simulated surrogates for the paper's three UCI datasets.
 //!
 //! The offline image does not bundle the UCI files, so Figures 3–5 run on
 //! synthetic datasets matched to the originals in (rows, features), feature

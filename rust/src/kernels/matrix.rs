@@ -11,7 +11,7 @@
 //! vectorizable exp). Non-radial kernels fall back to direct evaluation.
 
 use super::functions::Kernel;
-use crate::linalg::{matmul_a_bt, Matrix};
+use crate::linalg::{matmul_a_bt, mirror_lower_from_upper, syrk_a_at_upper, Matrix};
 use crate::pool;
 
 /// Row-tile height for the parallel split. One tile's working set is
@@ -19,46 +19,103 @@ use crate::pool;
 /// shapes in the paper's sweeps.
 const TILE: usize = 128;
 
+/// Diagnostic instrumentation for the streamed-pipeline contract: records
+/// the largest **square self-assembly** (`cross_kernel` with `a is b`,
+/// i.e. a full `n×n` Gram materialisation) seen on the calling thread.
+/// Streamed code paths (`GramOperator`, sketched fits, BLESS, top-k
+/// K-satisfiability) are asserted to keep this below the dataset size —
+/// the "never allocates `n×n`" acceptance gate, enforced by tests without
+/// a custom allocator. Thread-local so concurrently running tests cannot
+/// pollute each other's readings.
+pub mod assembly_guard {
+    use std::cell::Cell;
+
+    thread_local! {
+        static MAX_SQUARE: Cell<usize> = Cell::new(0);
+    }
+
+    /// Reset the calling thread's high-water mark to zero.
+    pub fn reset() {
+        MAX_SQUARE.with(|c| c.set(0));
+    }
+
+    /// Largest square self-assembly since the last [`reset`] (0 = none).
+    pub fn max_square() -> usize {
+        MAX_SQUARE.with(|c| c.get())
+    }
+
+    pub(crate) fn record(n: usize) {
+        MAX_SQUARE.with(|c| c.set(c.get().max(n)));
+    }
+}
+
 /// Full symmetric empirical kernel matrix `K[i,j] = k(xᵢ, xⱼ)` for the rows
-/// of `x` (`n × p`).
+/// of `x` (`n × p`). Dense consumers only — anything that merely needs
+/// `K`-products should stream through
+/// [`GramOperator`](super::GramOperator) instead of paying `O(n²)` memory.
 pub fn kernel_matrix(kernel: &Kernel, x: &Matrix) -> Matrix {
     cross_kernel(kernel, x, x)
 }
 
 /// Rectangular cross-kernel `K[i,j] = k(aᵢ, bⱼ)` (`a`: `na × p`, `b`:
 /// `nb × p`). This is the single assembly routine; `kernel_matrix` is the
-/// square case (the symmetric savings are deliberately not exploited — the
-/// tile GEMM is faster in practice than a triangular gather, and it keeps
-/// one code path to optimise/verify).
+/// square case. When `a` and `b` are *the same matrix* (pointer equality —
+/// the `kernel_matrix` route), only the upper triangle is assembled and
+/// mapped: the cross term goes through the upper-tile SYRK, the norm fold
+/// and the transcendental kernel map run on `j ≥ i` only, and the lower
+/// triangle is mirrored with the cache-blocked transposed copy — ~2× less
+/// GEMM *and* ~2× fewer `exp` evaluations, bitwise identical to the full
+/// rectangular computation (which is exactly symmetric: every `(i,j)` /
+/// `(j,i)` pair sums the same products in the same order).
 pub fn cross_kernel(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "cross_kernel: feature dims differ");
     let (na, nb, p) = (a.rows(), b.rows(), a.cols());
     if na == 0 || nb == 0 {
         return Matrix::zeros(na, nb);
     }
+    let square = std::ptr::eq(a, b);
+    if square {
+        assembly_guard::record(na);
+    }
     if kernel.is_radial() {
         // precompute row squared norms
         let anorm: Vec<f64> = (0..na).map(|i| sqnorm(a.row(i))).collect();
-        let bnorm: Vec<f64> = (0..nb).map(|j| sqnorm(b.row(j))).collect();
-        // pass 0: the cross term A·Bᵀ through the packed GEMM core; the
-        // result buffer *is* the kernel matrix, transformed in place
-        let mut k = matmul_a_bt(a, b);
+        let bnorm: Vec<f64> = if square {
+            anorm.clone()
+        } else {
+            (0..nb).map(|j| sqnorm(b.row(j))).collect()
+        };
+        // pass 0: the cross term A·Bᵀ through the packed GEMM core (upper
+        // tiles only in the symmetric case); the result buffer *is* the
+        // kernel matrix, transformed in place
+        let mut k = if square {
+            syrk_a_at_upper(a)
+        } else {
+            matmul_a_bt(a, b)
+        };
         let kern = *kernel;
         pool::scope_chunks(k.data_mut(), TILE * nb, |tile_idx, chunk| {
             let r0 = tile_idx * TILE;
             for (li, krow) in chunk.chunks_mut(nb).enumerate() {
-                let an = anorm[r0 + li];
+                let i = r0 + li;
+                let an = anorm[i];
                 // pass 1 (vectorizable): fold the norms into
                 // d²(i, j) = ‖a_i‖² + ‖b_j‖² − 2·a_i·b_j over the GEMM row;
                 // pass 2: the batched (exp-bound) kernel map. Splitting
                 // the passes lets the distance loop vectorize
-                // independently of the transcendental.
-                for (kv, bn) in krow.iter_mut().zip(bnorm.iter()) {
+                // independently of the transcendental. Symmetric case:
+                // j ≥ i only — the mirror below fills the rest.
+                let j0 = if square { i } else { 0 };
+                let tail = &mut krow[j0..];
+                for (kv, bn) in tail.iter_mut().zip(bnorm[j0..].iter()) {
                     *kv = an + bn - 2.0 * *kv;
                 }
-                kern.map_sq_dist(krow);
+                kern.map_sq_dist(tail);
             }
         });
+        if square {
+            mirror_lower_from_upper(&mut k);
+        }
         return k;
     }
     let mut k = Matrix::zeros(na, nb);
@@ -70,11 +127,15 @@ pub fn cross_kernel(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Matrix {
         for (li, krow) in chunk.chunks_mut(nb).enumerate() {
             let i = r0 + li;
             let arow = &adat[i * p..(i + 1) * p];
-            for (j, kv) in krow.iter_mut().enumerate() {
+            let j0 = if square { i } else { 0 };
+            for (j, kv) in krow.iter_mut().enumerate().skip(j0) {
                 *kv = kern.eval(arow, &bdat[j * p..(j + 1) * p]);
             }
         }
     });
+    if square {
+        mirror_lower_from_upper(&mut k);
+    }
     k
 }
 
@@ -201,6 +262,47 @@ mod tests {
         let x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 0.0, 0.0]);
         assert_eq!(kernel_diag(&Kernel::gaussian(1.0), &x), vec![1.0, 1.0]);
         assert_eq!(kernel_diag(&Kernel::linear(), &x), vec![5.0, 0.0]);
+    }
+
+    /// The symmetric fast path (`a is b`: upper-tile SYRK, `j ≥ i` kernel
+    /// map, cache-blocked mirror) is **bitwise** the rectangular
+    /// computation it shortcuts — checked by defeating the pointer
+    /// equality with a clone. Covers the GEMM-routed radial path, the
+    /// direct-eval path, and shapes on both sides of the small-flops
+    /// cutoff.
+    #[test]
+    fn symmetric_fast_path_matches_rectangular_assembly_bitwise() {
+        let mut r = Pcg64::seed(0x9004);
+        for &n in &[9usize, 30, 200] {
+            let x = randx(&mut r, n, 4);
+            let x2 = x.clone();
+            for kern in [
+                Kernel::gaussian(0.8),
+                Kernel::matern(1.5, 1.0),
+                Kernel::laplacian(0.9),
+                Kernel::polynomial(1.5, 2),
+            ] {
+                let fast = kernel_matrix(&kern, &x); // a is b: triangle + mirror
+                let full = cross_kernel(&kern, &x, &x2); // distinct refs: full rectangle
+                assert_eq!(fast.data(), full.data(), "{} n={n}", kern.name());
+            }
+        }
+    }
+
+    /// The guard sees square self-assemblies and nothing else.
+    #[test]
+    fn assembly_guard_records_square_assembly_only() {
+        assembly_guard::reset();
+        let mut r = Pcg64::seed(0x9005);
+        let a = randx(&mut r, 40, 3);
+        let b = randx(&mut r, 25, 3);
+        let _ = cross_kernel(&Kernel::gaussian(1.0), &a, &b);
+        let _ = kernel_cols(&Kernel::gaussian(1.0), &a, &[1, 5, 7]);
+        assert_eq!(assembly_guard::max_square(), 0, "rectangular must not record");
+        let _ = kernel_matrix(&Kernel::gaussian(1.0), &a);
+        assert_eq!(assembly_guard::max_square(), 40);
+        assembly_guard::reset();
+        assert_eq!(assembly_guard::max_square(), 0);
     }
 
     /// Assembly through the packed GEMM + elementwise passes is bitwise

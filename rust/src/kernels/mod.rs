@@ -1,16 +1,29 @@
-//! Kernel functions and empirical kernel-matrix assembly.
+//! Kernel functions, empirical kernel-matrix assembly, and the row-tiled
+//! implicit Gram operator.
 //!
 //! The paper's experiments use the Gaussian (RBF) kernel (Figure 2) and the
 //! Matérn family with ν ∈ {1/2, 3/2} (Figures 1, 3–5); Laplacian,
 //! polynomial and linear kernels round out the library for downstream use.
 //! Kernel-matrix assembly ([`kernel_matrix`], [`cross_kernel`]) is tiled
 //! and runs on the thread pool — it is one of the two L3 hot paths (the
-//! other is sketch application).
+//! other is sketch application). Square self-assembly exploits symmetry
+//! (upper tiles + mirror, ~2× cheaper).
+//!
+//! [`GramOperator`] is the streamed alternative to materialising `K`: it
+//! assembles `K[tile, :]` on the fly and exposes `K·B`, gathered columns,
+//! `diag(K)` and the sketched Grams with `O(tile·n + n·d)` peak memory —
+//! the memory model every training/diagnostic path routes through (see
+//! DESIGN.md §5). [`assembly_guard`] instruments the "never allocates
+//! `n×n`" contract for tests.
 
 mod functions;
 mod matrix;
+mod operator;
 mod rff;
 
 pub use functions::{Kernel, KernelKind};
-pub use matrix::{cross_kernel, gather_rows, kernel_cols, kernel_diag, kernel_matrix};
+pub use matrix::{
+    assembly_guard, cross_kernel, gather_rows, kernel_cols, kernel_diag, kernel_matrix,
+};
+pub use operator::{GramOperator, DEFAULT_TILE};
 pub use rff::{RandomFourierFeatures, RffKrr};

@@ -1,0 +1,456 @@
+//! Row-tiled implicit Gram operator — the streamed heart of the pipeline.
+//!
+//! The paper's whole argument is that accumulation makes the *effective*
+//! problem `d×d`; the one thing that must never happen on the way there is
+//! materialising the `n×n` kernel matrix. [`GramOperator`] assembles
+//! `K[tile, :]` on the fly (one row tile at a time, through the same
+//! GEMM-routed [`cross_kernel`] that dense assembly uses) and exposes the
+//! products the rest of the system actually consumes:
+//!
+//! * `K·B` / `Kᵀ·B` ([`matmul`](GramOperator::matmul) — identical for the
+//!   symmetric Gram) for dense-sketch application and subspace iteration,
+//! * gathered column blocks `K[:, idx]` ([`columns`](GramOperator::columns))
+//!   for Nyström / landmark / BLESS paths,
+//! * `K·S`, `SᵀKS`, `SᵀK²S` against a [`Sketch`]
+//!   ([`ks`](GramOperator::ks), [`stks`](GramOperator::stks),
+//!   [`stk2s`](GramOperator::stk2s)) — the sketched-KRR Grams,
+//! * `diag(K)` ([`diag`](GramOperator::diag)),
+//! * the [`SymOp`] impl, which feeds
+//!   [`partial_eigh_op`](crate::linalg::partial_eigh_op) so top-k spectral
+//!   consumers (KPCA pencil, K-satisfiability) iterate `K/n` implicitly.
+//!
+//! Peak memory is `O(tile·n + n·d)` — the tile panel plus the thin
+//! factors — instead of `O(n²)`, which is what flips the system's scaling
+//! ceiling from RAM to arithmetic.
+//!
+//! # Determinism rule
+//!
+//! Results are **bitwise independent of the tile size and the thread
+//! count**. Two disciplines buy that (same spirit as the GEMM core's
+//! fixed row panels, DESIGN.md §5):
+//!
+//! 1. tile assembly is per-row independent: each row of `K[tile, :]` is
+//!    produced by the same GEMM + norm-fold + kernel-map sequence whatever
+//!    tile it lands in (the packed GEMM's per-element accumulation order
+//!    depends only on the inner dimension, and `p ≤ KC` always holds for
+//!    feature matrices);
+//! 2. every output row of a product has exactly one owner, and its
+//!    accumulation order is fixed: `out[i, :] = Σⱼ K[i,j]·B[j, :]` with
+//!    `j` strictly ascending, regardless of how rows are grouped into
+//!    tiles or distributed over workers.
+//!
+//! The streamed products therefore differ from the dense
+//! `kernel_matrix` + packed-GEMM route only by floating-point grouping
+//! (and not at all for `n ≤ KC`); equality tests pin both routes together.
+
+use super::functions::Kernel;
+use super::matrix::{cross_kernel, gather_rows, kernel_diag, kernel_matrix};
+use crate::linalg::{syrk_at_a, Matrix, SymOp};
+use crate::pool;
+use crate::sketch::{Sketch, SketchOps, SparseSketch};
+use std::collections::HashMap;
+
+/// Default row-tile height: matches the assembly tile in
+/// `kernels::matrix` (L2-resident working set at the paper's widths).
+pub const DEFAULT_TILE: usize = 128;
+
+/// Row-tiled implicit Gram matrix `α·K` over the rows of `x` (`n×p`).
+/// Cheap to copy — it owns only the kernel, a data reference, and the
+/// schedule knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct GramOperator<'a> {
+    kernel: Kernel,
+    x: &'a Matrix,
+    tile: usize,
+    scale: f64,
+}
+
+impl<'a> GramOperator<'a> {
+    /// Operator for the un-scaled Gram `K` of `x` under `kernel`.
+    pub fn new(kernel: Kernel, x: &'a Matrix) -> GramOperator<'a> {
+        GramOperator {
+            kernel,
+            x,
+            tile: DEFAULT_TILE,
+            scale: 1.0,
+        }
+    }
+
+    /// Override the tile height (results are bitwise unaffected — this is
+    /// a memory/performance knob and a test axis, not a semantic one).
+    pub fn with_tile(mut self, tile: usize) -> GramOperator<'a> {
+        assert!(tile >= 1, "gram operator: tile >= 1");
+        self.tile = tile;
+        self
+    }
+
+    /// The same operator representing `alpha·(current)` — e.g.
+    /// `op.scaled(1.0 / n as f64)` is the `K/n` every spectral diagnostic
+    /// decomposes.
+    pub fn scaled(mut self, alpha: f64) -> GramOperator<'a> {
+        self.scale *= alpha;
+        self
+    }
+
+    /// Number of data points `n` (the operator is `n×n`).
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Kernel behind the operator.
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Data matrix the Gram is implicit over.
+    pub fn data(&self) -> &Matrix {
+        self.x
+    }
+
+    /// `diag(α·K)` — `O(n)` evaluations, no assembly.
+    pub fn diag(&self) -> Vec<f64> {
+        let mut d = kernel_diag(&self.kernel, self.x);
+        if self.scale != 1.0 {
+            for v in d.iter_mut() {
+                *v *= self.scale;
+            }
+        }
+        d
+    }
+
+    /// Gathered column block `α·K[:, idx]` (`n × |idx|`) — the Nyström /
+    /// landmark fast path, `O(n·|idx|)` evaluations and memory.
+    pub fn columns(&self, idx: &[usize]) -> Matrix {
+        let landmarks = gather_rows(self.x, idx);
+        let mut c = cross_kernel(&self.kernel, self.x, &landmarks);
+        if self.scale != 1.0 {
+            c.scale(self.scale);
+        }
+        c
+    }
+
+    /// Streamed `α·K·B` for a tall `n×c` block, never holding more than
+    /// one `tile×n` panel of `K`. Since the Gram is symmetric this is also
+    /// `Kᵀ·B`. See the module docs for the fixed accumulation schedule
+    /// that makes the result bitwise tile- and thread-invariant.
+    ///
+    /// The tile product is a hand-rolled per-row axpy sweep rather than a
+    /// call into the packed GEMM **on purpose**: the GEMM's small-flops
+    /// cutoff and `KC` grouping make its per-element accumulation order
+    /// depend on the tile height once `n > KC`, which would break the
+    /// tile-size-invariance contract. The sweep vectorises over `B`'s
+    /// contiguous rows, and for radial kernels at the paper's `p` the
+    /// panel *assembly* (transcendental-bound) dominates the product
+    /// anyway — see the `gram_op` vs dense `K·B` hotpath cases.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        let n = self.n();
+        assert_eq!(b.rows(), n, "gram operator: K·B row mismatch");
+        let c = b.cols();
+        let mut out = Matrix::zeros(n, c);
+        if c == 0 || n == 0 {
+            return out;
+        }
+        let bd = b.data();
+        let scale = self.scale;
+        let mut r0 = 0usize;
+        while r0 < n {
+            let r1 = (r0 + self.tile).min(n);
+            // assemble K[r0..r1, :] — the only K storage that ever exists
+            let xt = self.x.slice(r0, r1, 0, self.x.cols());
+            let kt = cross_kernel(&self.kernel, &xt, self.x);
+            let out_chunk = &mut out.data_mut()[r0 * c..r1 * c];
+            // one owner per output row; j ascending inside a row
+            pool::scope_chunks(out_chunk, c, |li, orow| {
+                let krow = kt.row(li);
+                for (j, &kv) in krow.iter().enumerate() {
+                    let brow = &bd[j * c..(j + 1) * c];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += kv * bv;
+                    }
+                }
+                if scale != 1.0 {
+                    for o in orow.iter_mut() {
+                        *o *= scale;
+                    }
+                }
+            });
+            r0 = r1;
+        }
+        out
+    }
+
+    /// Streamed `α·K·v` matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let kv = self.matmul(&Matrix::col_vec(v));
+        kv.data().to_vec()
+    }
+
+    /// `α·K·S` plus the kernel-evaluation count. Sparse sketches take the
+    /// support-column path (`O(n·|U|)` evaluations, the paper's §3.3
+    /// argument); dense sketches stream row tiles (`O(n²)` evaluations —
+    /// unavoidable — but `O(tile·n)` memory instead of the dense `O(n²)`).
+    pub fn ks(&self, sketch: &Sketch) -> (Matrix, usize) {
+        match sketch {
+            Sketch::Sparse(sp) => self.ks_sparse(sp),
+            Sketch::Dense(s) => (self.matmul(s), self.n() * self.n()),
+        }
+    }
+
+    /// `Sᵀ·(α·K)·S` from a previously computed `ks`, symmetrised.
+    pub fn stks(&self, sketch: &Sketch, ks: &Matrix) -> Matrix {
+        let mut m = sketch.st_mat(ks);
+        m.symmetrize();
+        m
+    }
+
+    /// `Sᵀ·(α·K)²·S = (KS)ᵀ(KS)` from a previously computed `ks`.
+    pub fn stk2s(&self, ks: &Matrix) -> Matrix {
+        syrk_at_a(ks)
+    }
+
+    /// Support-column `K·S` for a sparse sketch: column `j` of `KS` is
+    /// `Σ_{(i,w)∈col j} w · K[:, i]` over the gathered support block.
+    /// (Crate-visible so `sketch::sketch_kernel_cols` can delegate.)
+    pub(crate) fn ks_sparse(&self, sp: &SparseSketch) -> (Matrix, usize) {
+        let n = self.n();
+        assert_eq!(SketchOps::n(sp), n, "gram operator: sketch n mismatch");
+        let support = sp.support();
+        let kcols = self.columns(&support); // n × |U|
+        let mut pos = HashMap::with_capacity(support.len());
+        for (p, &i) in support.iter().enumerate() {
+            pos.insert(i, p);
+        }
+        let mut ks = Matrix::zeros(n, sp.d());
+        for j in 0..sp.d() {
+            for &(i, w) in sp.col(j) {
+                let src = pos[&i];
+                for r in 0..n {
+                    ks[(r, j)] += w * kcols[(r, src)];
+                }
+            }
+        }
+        (ks, n * support.len())
+    }
+}
+
+/// Feeds [`partial_eigh_op`](crate::linalg::partial_eigh_op): subspace
+/// iteration sees `α·K` through tile-streamed products;
+/// [`materialize`](SymOp::materialize) (small-n / stalled-iteration
+/// fallbacks only) is the one route back to a dense assembly.
+impl SymOp for GramOperator<'_> {
+    fn dim(&self) -> usize {
+        self.n()
+    }
+
+    fn apply(&self, b: &Matrix) -> Matrix {
+        self.matmul(b)
+    }
+
+    fn materialize(&self) -> Matrix {
+        let mut k = kernel_matrix(&self.kernel, self.x);
+        if self.scale != 1.0 {
+            k.scale(self.scale);
+        }
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::assembly_guard;
+    use crate::linalg::{matmul, matmul_at_b, partial_eigh_op};
+    use crate::rng::Pcg64;
+    use crate::sketch::{SketchBuilder, SketchKind};
+
+    fn setup(n: usize, seed: u64) -> (Kernel, Matrix, Pcg64) {
+        let mut rng = Pcg64::seed(seed);
+        let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        (Kernel::gaussian(0.8), x, rng)
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64, what: &str) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{what}: shape");
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                assert!(
+                    (a[(i, j)] - b[(i, j)]).abs() < tol,
+                    "{what} ({i},{j}): {} vs {}",
+                    a[(i, j)],
+                    b[(i, j)]
+                );
+            }
+        }
+    }
+
+    /// Streamed `K·B` equals the dense assemble-then-GEMM route. The two
+    /// differ only by FP grouping (not at all while `n ≤ KC`), so the
+    /// tolerance is tight.
+    #[test]
+    fn streamed_matmul_matches_dense() {
+        for &n in &[35usize, 220, 300] {
+            let (kern, x, mut rng) = setup(n, 0x0901);
+            let b = Matrix::from_fn(n, 7, |_, _| rng.normal());
+            let k = kernel_matrix(&kern, &x);
+            let dense = matmul(&k, &b);
+            let streamed = GramOperator::new(kern, &x).matmul(&b);
+            assert_close(&streamed, &dense, 1e-10 * n as f64, &format!("K·B n={n}"));
+        }
+    }
+
+    /// The determinism rule: bitwise identical output across tile sizes
+    /// {1 row, odd, default, n} and thread counts {1, 4}.
+    #[test]
+    fn bitwise_invariant_across_tile_sizes_and_threads() {
+        let _guard = pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let (kern, x, mut rng) = setup(301, 0x0902);
+        let b = Matrix::from_fn(301, 5, |_, _| rng.normal());
+        let before = pool::num_threads();
+        pool::set_num_threads(1);
+        let reference = GramOperator::new(kern, &x).matmul(&b);
+        for &tile in &[1usize, 37, DEFAULT_TILE, 301] {
+            for &threads in &[1usize, 4] {
+                pool::set_num_threads(threads);
+                let got = GramOperator::new(kern, &x).with_tile(tile).matmul(&b);
+                assert_eq!(
+                    got.data(),
+                    reference.data(),
+                    "tile={tile} threads={threads}"
+                );
+            }
+        }
+        pool::set_num_threads(before);
+    }
+
+    /// Sketched Grams through the operator equal the dense-K reference for
+    /// sparse and dense sketch kinds alike.
+    #[test]
+    fn sketched_products_match_dense_reference() {
+        let (kern, x, mut rng) = setup(60, 0x0903);
+        let k = kernel_matrix(&kern, &x);
+        let op = GramOperator::new(kern, &x);
+        for kind in [
+            SketchKind::Nystrom,
+            SketchKind::Accumulation { m: 4 },
+            SketchKind::Gaussian,
+        ] {
+            let s = SketchBuilder::new(kind.clone()).build(60, 9, &mut rng);
+            let (ks, evals) = op.ks(&s);
+            let sd = s.to_dense();
+            let ks_ref = matmul(&k, &sd);
+            assert_close(&ks, &ks_ref, 1e-9, &format!("KS {}", kind.name()));
+            let stks = op.stks(&s, &ks);
+            let stks_ref = matmul_at_b(&sd, &ks_ref);
+            assert_close(&stks, &stks_ref, 1e-9, "StKS");
+            let stk2s = op.stk2s(&ks);
+            let stk2s_ref = matmul_at_b(&ks_ref, &ks_ref);
+            assert_close(&stk2s, &stk2s_ref, 1e-8, "StK2S");
+            match kind {
+                SketchKind::Gaussian => assert_eq!(evals, 60 * 60),
+                _ => assert!(evals <= 60 * s.nnz()),
+            }
+        }
+    }
+
+    /// `diag` and `columns` agree with the assembled matrix; `scaled`
+    /// composes into every product.
+    #[test]
+    fn diag_columns_and_scaling() {
+        let (kern, x, mut rng) = setup(40, 0x0904);
+        let k = kernel_matrix(&kern, &x);
+        let op = GramOperator::new(kern, &x).scaled(1.0 / 40.0);
+        let d = op.diag();
+        let cols = op.columns(&[3, 17, 17, 29]);
+        for i in 0..40 {
+            assert!((d[i] - k[(i, i)] / 40.0).abs() < 1e-14);
+            for (c, &j) in [3usize, 17, 17, 29].iter().enumerate() {
+                assert!((cols[(i, c)] - k[(i, j)] / 40.0).abs() < 1e-14);
+            }
+        }
+        let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let kv = op.matvec(&v);
+        let mut kn = k.clone();
+        kn.scale(1.0 / 40.0);
+        let want = kn.matvec(&v);
+        for (a, b) in kv.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-11, "{a} vs {b}");
+        }
+    }
+
+    /// `partial_eigh_op` over the streamed `K/n` matches the dense top
+    /// spectrum — the route KPCA and top-k K-satisfiability take.
+    #[test]
+    fn partial_eigh_over_operator_matches_dense_spectrum() {
+        let (_, x, _) = setup(150, 0x0905);
+        // wide bandwidth → fast spectral decay, so the subspace iteration
+        // converges well inside its budget and never falls back to dense
+        let kern = Kernel::gaussian(1.5);
+        let k = kernel_matrix(&kern, &x);
+        let view = crate::stats::SpectralView::new(&k);
+        let op = GramOperator::new(kern, &x).scaled(1.0 / 150.0);
+        assembly_guard::reset();
+        let pe = partial_eigh_op(&op, 6);
+        assert!(
+            assembly_guard::max_square() < 150,
+            "streamed eigensolve must not assemble K (saw {})",
+            assembly_guard::max_square()
+        );
+        for j in 0..6 {
+            assert!(
+                (pe.w[j] - view.sigma[j]).abs() < 1e-8 * (1.0 + view.sigma[j]),
+                "σ{j}: {} vs {}",
+                pe.w[j],
+                view.sigma[j]
+            );
+        }
+    }
+
+    /// Acceptance gate for the whole pipeline: every streamed consumer —
+    /// one-shot sketched fits (sparse *and* dense sketches), the adaptive
+    /// fit, KPCA, kernel k-means, BLESS, and top-k K-satisfiability — runs
+    /// without a single full `n×n` assembly (the guard tracks square
+    /// self-assemblies on this thread; sub-blocks like BLESS's `K_JJ` stay
+    /// far below `n`).
+    #[test]
+    fn streamed_consumers_never_assemble_full_k() {
+        let n = 120;
+        let (_, x, mut rng) = setup(n, 0x0906);
+        // wide bandwidth keeps the K-sat partial eigensolve comfortably in
+        // its streamed regime (σ₁₆ ≪ δ at the first block size)
+        let kern = Kernel::gaussian(1.5);
+        let y: Vec<f64> = (0..n).map(|i| (x[(i, 0)] + 0.1 * (i as f64)).sin()).collect();
+        let lam = 1e-3;
+        assembly_guard::reset();
+
+        let sp = SketchBuilder::new(SketchKind::Accumulation { m: 3 }).build(n, 8, &mut rng);
+        let _ = crate::krr::SketchedKrr::fit(kern, &x, &y, &sp, lam, None).unwrap();
+        let dn = SketchBuilder::new(SketchKind::Gaussian).build(n, 8, &mut rng);
+        let _ = crate::krr::SketchedKrr::fit(kern, &x, &y, &dn, lam, None).unwrap();
+
+        let builder = SketchBuilder::new(SketchKind::Accumulation { m: 1 });
+        let opts = crate::krr::AdaptiveOptions {
+            m_max: 4,
+            rel_tol: -1.0,
+            ..Default::default()
+        };
+        let _ =
+            crate::krr::SketchedKrr::fit_adaptive(kern, &x, &y, &builder, 8, lam, &opts, &mut rng)
+                .unwrap();
+
+        let _ = crate::krr::sketched_kpca(&kern, &x, &sp, 4).unwrap();
+        let _ = crate::krr::kernel_kmeans(&kern, &x, &sp, 2, 4, 10, &mut rng).unwrap();
+        let _ = crate::leverage::bless(&kern, &x, lam, 10, 2.0, &mut rng);
+
+        let op = GramOperator::new(kern, &x);
+        let _ = crate::stats::k_satisfiability_topk_streamed(&op, &sp, 0.05);
+        let _ = crate::stats::top_sigma_streamed(&op, 4);
+
+        assert!(
+            assembly_guard::max_square() < n,
+            "streamed pipeline assembled a square of size {} (n = {n})",
+            assembly_guard::max_square()
+        );
+    }
+}

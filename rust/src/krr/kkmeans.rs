@@ -6,7 +6,8 @@
 //! Kernel k-means in the sketched feature space: the sketched KPCA scores
 //! (`krr::sketched_kpca`) embed the data into `ℝ^r` where ordinary Lloyd
 //! iterations run in `O(n·r·k)` per step — the kernel matrix is never
-//! materialised beyond the `O(n·m·d)` sketch application, and the d×d
+//! materialised (KPCA's Grams stream through the row-tiled
+//! `kernels::GramOperator`, `O(tile·n + n·d)` peak memory), and the d×d
 //! spectral step inherits KPCA's partial-eigensolver routing
 //! (`linalg::partial_eigh`) since only the top-r pairs are embedded.
 

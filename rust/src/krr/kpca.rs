@@ -10,8 +10,8 @@
 //! eigenproblem; eigenvectors lift back as `V = C L⁻ᵀ Q Λ^{-1/2}/√n`.
 
 use crate::kernels::Kernel;
-use crate::linalg::{chol_factor, matmul, partial_eigh, syrk_at_a, Matrix};
-use crate::sketch::{sketch_gram, Sketch, SketchOps};
+use crate::linalg::{chol_factor, matmul, partial_eigh, Matrix};
+use crate::sketch::{sketch_gram, Sketch, SketchOps, SketchedGram};
 
 /// Result of sketched kernel PCA.
 #[derive(Clone, Debug)]
@@ -23,16 +23,24 @@ pub struct SketchedKpca {
     pub components: Matrix,
 }
 
-/// Compute the top-`r` sketched kernel principal components.
+/// Compute the top-`r` sketched kernel principal components. The Grams
+/// stream through the row-tiled Gram operator (`sketch_gram` with no
+/// shared K), so the `n×n` kernel matrix is never materialised; the
+/// spectral work happens on the `d×d` pencil.
 pub fn sketched_kpca(
     kernel: &Kernel,
     x: &Matrix,
     sketch: &Sketch,
     r: usize,
 ) -> Option<SketchedKpca> {
-    let n = x.rows();
     let gram = sketch_gram(kernel, x, sketch, None);
-    let d = sketch.d();
+    kpca_from_gram(&gram, sketch.d(), x.rows(), r)
+}
+
+/// The d×d pencil + lift, from already-formed sketched Grams (separated
+/// so tests can pin the streamed and dense-K gram routes to the same
+/// spectrum).
+fn kpca_from_gram(gram: &SketchedGram, d: usize, n: usize, r: usize) -> Option<SketchedKpca> {
     let r = r.min(d);
     // W = SᵀKS = LLᵀ (jitter if columns collided)
     let mut w = gram.stks.clone();
@@ -48,10 +56,10 @@ pub fn sketched_kpca(
             }
         }
     };
-    // M = L⁻¹ (CᵀC) L⁻ᵀ / n  (d×d, symmetric PSD)
-    let ctc = syrk_at_a(&gram.ks); // CᵀC = SᵀK²S
+    // M = L⁻¹ (CᵀC) L⁻ᵀ / n  (d×d, symmetric PSD); CᵀC = SᵀK²S is
+    // already formed in the gram
     // solve L Z = CᵀC, then L Y = Zᵀ → Y = L⁻¹ (CᵀC) L⁻ᵀ
-    let z = forward_sub_mat(l.l(), &ctc);
+    let z = forward_sub_mat(l.l(), &gram.stk2s);
     let y = forward_sub_mat(l.l(), &z.transpose());
     let mut m = y;
     m.scale(1.0 / n as f64);
@@ -187,6 +195,38 @@ mod tests {
                     g[(i, j)]
                 );
             }
+        }
+    }
+
+    /// The streamed-gram pencil and the dense-K-gram pencil resolve the
+    /// same spectrum and (up to sign) the same components — the operator
+    /// route changes memory, not results.
+    #[test]
+    fn streamed_pencil_matches_dense_k_pencil() {
+        let mut rng = Pcg64::seed(0xcf);
+        let n = 70;
+        let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        let kern = Kernel::gaussian(1.0);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, 16, &mut rng);
+        let streamed = sketch_gram(&kern, &x, &s, None);
+        let k = kernel_matrix(&kern, &x);
+        let dense = sketch_gram(&kern, &x, &s, Some(&k));
+        let r = 4;
+        let a = kpca_from_gram(&streamed, 16, n, r).unwrap();
+        let b = kpca_from_gram(&dense, 16, n, r).unwrap();
+        for j in 0..r {
+            assert!(
+                (a.eigenvalues[j] - b.eigenvalues[j]).abs()
+                    < 1e-9 * (1.0 + b.eigenvalues[j].abs()),
+                "pencil eig {j}: {} vs {}",
+                a.eigenvalues[j],
+                b.eigenvalues[j]
+            );
+            let mut dot = 0.0;
+            for i in 0..n {
+                dot += a.components[(i, j)] * b.components[(i, j)];
+            }
+            assert!(dot.abs() > 1.0 - 1e-7, "component {j}: |cos| = {}", dot.abs());
         }
     }
 

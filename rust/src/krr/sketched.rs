@@ -164,8 +164,12 @@ impl SketchedKrr {
         }
     }
 
-    /// Fit the sketched estimator. `k_full` optionally shares a precomputed
-    /// kernel matrix across fits (bench sweeps).
+    /// Fit the sketched estimator. With `k_full = None` (the production
+    /// path) every Gram quantity streams through the row-tiled
+    /// [`GramOperator`](crate::kernels::GramOperator) — no `n×n`
+    /// allocation for sparse *or* dense sketches, peak memory
+    /// `O(tile·n + n·d)`. `k_full` optionally shares a precomputed kernel
+    /// matrix across fits (bench sweeps that amortise one assembly).
     pub fn fit(
         kernel: Kernel,
         x: &Matrix,

@@ -9,19 +9,26 @@
 //! estimated through a growing landmark set while the regularisation is
 //! annealed down to the target λ.
 
-use crate::kernels::{cross_kernel, gather_rows, kernel_diag, kernel_matrix, Kernel};
+use crate::kernels::{GramOperator, Kernel};
 use crate::linalg::{chol_factor, Matrix};
 use crate::rng::{AliasTable, Pcg64};
 
 /// Exact ridge leverage scores `ℓᵢ = (K(K+nλI)⁻¹)ᵢᵢ = 1 − nλ·[(K+nλI)⁻¹]ᵢᵢ`.
+///
+/// Exactness is inherently dense (the caller owns the `n×n` K — this is
+/// the small-n reference, [`bless`] is the scalable route), but the
+/// diagonal of the resolvent comes from triangular solves on the Cholesky
+/// factor (`CholFactor::inv_diag`: `(A⁻¹)ᵢᵢ = ‖L⁻¹eᵢ‖²`) — no explicit
+/// inverse, which used to cost a second `n×n` allocation and a
+/// GEMM-sized extra pass of back-substitutions.
 pub fn exact_scores(k: &Matrix, lambda: f64) -> Vec<f64> {
     let n = k.rows();
     let nl = n as f64 * lambda;
     let mut a = k.clone();
     a.add_diag(nl);
     let fac = chol_factor(&a).expect("K + nλI must be PD for λ > 0");
-    let inv = fac.inverse();
-    (0..n).map(|i| (1.0 - nl * inv[(i, i)]).clamp(0.0, 1.0)).collect()
+    let diag = fac.inv_diag();
+    (0..n).map(|i| (1.0 - nl * diag[i]).clamp(0.0, 1.0)).collect()
 }
 
 /// Statistical dimension `d_stat = Σᵢ ℓᵢ` — the theoretical lower bound on
@@ -70,7 +77,10 @@ pub fn bless(
 ) -> BlessResult {
     let n = x.rows();
     assert!(n > 0 && lambda > 0.0);
-    let diag = kernel_diag(kernel, x);
+    // every kernel quantity streams off the Gram operator: the full n×n
+    // matrix is never assembled, only n×s landmark panels
+    let op = GramOperator::new(*kernel, x);
+    let diag = op.diag();
     let mut kernel_evals = 0usize;
 
     // initial estimates: uniform
@@ -96,10 +106,11 @@ pub fn bless(
         // J = [n] this reduces to the exact identity ℓᵢ = (1/nλ)(kᵢᵢ −
         // kᵢ(K+nλI)⁻¹kᵢ); with |J| = s the sλ_h shift keeps the per-subset
         // regularisation proportional to its size (BLESS's rescaling).
-        let xj = gather_rows(x, &j);
-        let kjj = kernel_matrix(kernel, &xj);
-        kernel_evals += s * s;
-        let mut a = kjj;
+        // One streamed n×s panel serves both: K_JJ is its rows at J (the
+        // s² landmark-vs-landmark evals the old subset assembly re-paid).
+        let kxj = op.columns(&j); // n × s
+        kernel_evals += n * s;
+        let mut a = Matrix::from_fn(s, s, |u, v| kxj[(j[u], v)]);
         a.add_diag(s as f64 * lam_h);
         let fac = match chol_factor(&a) {
             Some(f) => f,
@@ -111,8 +122,6 @@ pub fn bless(
         };
 
         // estimate scores for all points
-        let kxj = cross_kernel(kernel, x, &xj); // n × s
-        kernel_evals += n * s;
         let mut new_scores = vec![0.0; n];
         for i in 0..n {
             let ki = kxj.row(i);
@@ -139,6 +148,7 @@ pub fn bless(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::kernel_matrix;
     use crate::rng::Pcg64;
 
     /// Two-cluster data where the paper's §3.2 failure case lives: a small
@@ -171,6 +181,30 @@ mod tests {
         }).sum();
         let got = stat_dim_from_scores(&scores);
         assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    /// The triangular-solve route (`CholFactor::inv_diag`) produces the
+    /// same scores as the explicit-inverse formula it replaced.
+    #[test]
+    fn exact_scores_match_explicit_inverse_route() {
+        let x = clustered(25, 4, 137);
+        let k = kernel_matrix(&Kernel::gaussian(0.5), &x);
+        let lam = 1e-3;
+        let got = exact_scores(&k, lam);
+        let n = k.rows();
+        let nl = n as f64 * lam;
+        let mut a = k.clone();
+        a.add_diag(nl);
+        let inv = crate::linalg::chol_factor(&a).unwrap().inverse();
+        for i in 0..n {
+            let want = (1.0 - nl * inv[(i, i)]).clamp(0.0, 1.0);
+            assert!(
+                (got[i] - want).abs() < 1e-10,
+                "score {i}: {} vs {}",
+                got[i],
+                want
+            );
+        }
     }
 
     #[test]

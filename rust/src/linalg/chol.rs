@@ -127,6 +127,37 @@ impl CholFactor {
         self.solve_mat(&Matrix::eye(self.n()))
     }
 
+    /// Diagonal of `A⁻¹` without forming the inverse: with `A = LLᵀ`,
+    /// `(A⁻¹)ᵢᵢ = eᵢᵀL⁻ᵀL⁻¹eᵢ = ‖L⁻¹eᵢ‖²`, one *forward* solve per
+    /// column. The solve for `eᵢ` starts at row `i` (everything above is
+    /// zero), so the total is `O(n³/6)` — a third of the
+    /// [`inverse`](Self::inverse)-then-read-the-diagonal route's forward
+    /// + backward sweeps — and the working set is one n-vector instead of
+    /// a second n×n matrix. This is what ridge leverage scores consume
+    /// (`leverage::exact_scores`).
+    pub fn inv_diag(&self) -> Vec<f64> {
+        let n = self.n();
+        let mut out = vec![0.0; n];
+        let mut z = vec![0.0; n];
+        for i in 0..n {
+            // forward solve L z = eᵢ; z[j] = 0 for j < i by triangularity
+            z[i] = 1.0 / self.l[(i, i)];
+            let mut s2 = z[i] * z[i];
+            for r in (i + 1)..n {
+                let row = self.l.row(r);
+                let mut s = 0.0;
+                for (lv, zv) in row[i..r].iter().zip(z[i..r].iter()) {
+                    s -= lv * zv;
+                }
+                let zr = s / row[r];
+                z[r] = zr;
+                s2 += zr * zr;
+            }
+            out[i] = s2;
+        }
+        out
+    }
+
     /// Scale the factored matrix: `A → α²·A` via `L → α·L`. The
     /// incremental accumulation engine uses this when appending a sketch
     /// term rescales all earlier terms by `α = √(m/m′) < 1`.
@@ -464,6 +495,29 @@ mod tests {
             bumped.add_diag(0.37);
             let re = chol_factor(&bumped).unwrap();
             assert_factors_close(&f, &re, 1e-8, "diag update");
+        }
+    }
+
+    /// `inv_diag` agrees with the explicit inverse's diagonal (the route
+    /// it replaces in `leverage::exact_scores`).
+    #[test]
+    fn inv_diag_matches_explicit_inverse() {
+        for seed in 0..4u64 {
+            let mut r = Pcg64::seed(0xd1a6 + seed);
+            let n = 5 + 3 * seed as usize;
+            let a = random_spd(&mut r, n);
+            let f = chol_factor(&a).unwrap();
+            let inv = f.inverse();
+            let d = f.inv_diag();
+            assert_eq!(d.len(), n);
+            for i in 0..n {
+                assert!(
+                    (d[i] - inv[(i, i)]).abs() < 1e-10 * (1.0 + inv[(i, i)].abs()),
+                    "diag {i}: {} vs {}",
+                    d[i],
+                    inv[(i, i)]
+                );
+            }
         }
     }
 

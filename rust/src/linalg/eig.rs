@@ -222,6 +222,39 @@ fn tqli(d: &mut [f64], e: &mut [f64], z: &mut Matrix) {
     }
 }
 
+/// A symmetric linear operator the partial eigensolver can drive without
+/// a materialised matrix. Subspace iteration only ever needs `A·B`
+/// products against a thin block, so an implicit operator (e.g. the
+/// row-tiled Gram operator in `kernels::operator`) plugs in with `O(n·b)`
+/// working memory; [`materialize`](SymOp::materialize) backs the dense
+/// fallbacks (small n, oversized block, stalled iteration), which are the
+/// only places the full matrix is ever formed.
+pub trait SymOp {
+    /// Operator order `n` (the matrix is `n×n`).
+    fn dim(&self) -> usize;
+
+    /// `A · B` for an `n×b` block.
+    fn apply(&self, b: &Matrix) -> Matrix;
+
+    /// Dense materialisation for the full-`eigh` fallback paths.
+    fn materialize(&self) -> Matrix;
+}
+
+/// A dense symmetric matrix is trivially a [`SymOp`].
+impl SymOp for Matrix {
+    fn dim(&self) -> usize {
+        self.rows()
+    }
+
+    fn apply(&self, b: &Matrix) -> Matrix {
+        matmul(self, b)
+    }
+
+    fn materialize(&self) -> Matrix {
+        self.clone()
+    }
+}
+
 /// Result of [`partial_eigh`]: the top-`k` eigenpairs, **descending**
 /// (the paper's σ₁ ≥ σ₂ ≥ … convention, unlike [`eigh`]'s ascending `w`).
 #[derive(Clone, Debug)]
@@ -280,17 +313,23 @@ const PARTIAL_STALL_ITERS: usize = 12;
 /// internal seed) and bitwise independent of the thread count (the GEMMs
 /// it is built on are).
 pub fn partial_eigh(a: &Matrix, k: usize) -> PartialEigh {
-    partial_eigh_warm(a, k, None)
+    assert_eq!(a.rows(), a.cols(), "partial_eigh: square required");
+    partial_eigh_op_warm(a, k, None)
 }
 
-/// [`partial_eigh`] with an optional warm-start basis: up to `block`
+/// [`partial_eigh`] over any [`SymOp`] — the entry point for implicit
+/// operators (streamed kernel Grams) that must never materialise `n×n`.
+pub fn partial_eigh_op<O: SymOp>(a: &O, k: usize) -> PartialEigh {
+    partial_eigh_op_warm(a, k, None)
+}
+
+/// [`partial_eigh_op`] with an optional warm-start basis: up to `block`
 /// leading columns of `warm` seed the iteration (remaining directions are
 /// filled randomly). Used by block-growing consumers (`stats::ksat`) so
 /// each enlargement resumes from the previous round's Ritz vectors
 /// instead of rediscovering them from a cold random block.
-pub(crate) fn partial_eigh_warm(a: &Matrix, k: usize, warm: Option<&Matrix>) -> PartialEigh {
-    let n = a.rows();
-    assert_eq!(n, a.cols(), "partial_eigh: square required");
+pub fn partial_eigh_op_warm<O: SymOp>(a: &O, k: usize, warm: Option<&Matrix>) -> PartialEigh {
+    let n = a.dim();
     let k = k.min(n);
     if k == 0 {
         return PartialEigh {
@@ -301,7 +340,7 @@ pub(crate) fn partial_eigh_warm(a: &Matrix, k: usize, warm: Option<&Matrix>) -> 
     }
     let block = (k + (k / 2).clamp(4, 16)).min(n);
     if n <= PARTIAL_MIN_N || 2 * block >= n {
-        let (w, v) = eigh(a).descending();
+        let (w, v) = eigh(&a.materialize()).descending();
         return PartialEigh {
             w: w[..k].to_vec(),
             v: v.slice(0, n, 0, k),
@@ -325,7 +364,7 @@ pub(crate) fn partial_eigh_warm(a: &Matrix, k: usize, warm: Option<&Matrix>) -> 
     let mut best_resid = f64::INFINITY;
     let mut stalled = 0usize;
     for _iter in 0..PARTIAL_MAX_ITERS {
-        let av = matmul(a, &v);
+        let av = a.apply(&v);
         let mut small = matmul_at_b(&v, &av);
         small.symmetrize();
         let (ritz, q) = eigh(&small).descending();
@@ -369,7 +408,7 @@ pub(crate) fn partial_eigh_warm(a: &Matrix, k: usize, warm: Option<&Matrix>) -> 
     }
     // Stalled or out of iterations: pay for the dense solver rather than
     // hand back silently-unconverged pairs.
-    let (wf, vf) = eigh(a).descending();
+    let (wf, vf) = eigh(&a.materialize()).descending();
     PartialEigh {
         w: wf[..k].to_vec(),
         v: vf.slice(0, n, 0, k),

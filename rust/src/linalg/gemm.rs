@@ -77,6 +77,27 @@ pub fn syrk_at_a(a: &Matrix) -> Matrix {
     c
 }
 
+/// `C = A · Aᵀ` (row-Gram SYRK), upper micro-tiles + mirror — same
+/// discipline as [`syrk_at_a`], for the other orientation. This is the
+/// symmetric kernel-assembly fast path: `cross_kernel(k, x, x)` feeds its
+/// `−2·X·Xᵀ` cross term through it at half the GEMM cost.
+pub fn syrk_a_at(a: &Matrix) -> Matrix {
+    let mut c = syrk_a_at_upper(a);
+    mirror_lower_from_upper(&mut c);
+    c
+}
+
+/// Upper-triangle-only `A · Aᵀ`: micro-tiles entirely below the diagonal
+/// are left zero (tiles straddling it are computed in full). The square
+/// kernel-assembly path maps the kernel over `j ≥ i` only and mirrors
+/// *after* the transcendental pass, halving that dominant cost — hence
+/// the mirror is deferred to the caller.
+pub(crate) fn syrk_a_at_upper(a: &Matrix) -> Matrix {
+    let (m, k) = (a.rows(), a.cols());
+    let ad = a.data();
+    gemm_packed(m, k, m, |i, p| ad[i * k + p], |p, j| ad[j * k + p], true)
+}
+
 /// The shared packed driver: `C[m×n] += Σ_p a_at(i,p)·b_at(p,j)` with the
 /// operands described by index closures (monomorphised per variant, so
 /// packing compiles to direct loads). `upper_only` skips micro-tiles that
@@ -241,8 +262,9 @@ where
 /// Mirror the strict upper triangle into the lower one with a cache-blocked
 /// transposed copy on the raw buffer — `TB×TB` blocks keep both the source
 /// rows and the destination rows resident, unlike a whole-matrix column
-/// sweep.
-fn mirror_lower_from_upper(c: &mut Matrix) {
+/// sweep. Shared by the SYRK variants and the symmetric kernel-assembly
+/// fast path (`kernels::matrix::cross_kernel` on `a is b`).
+pub(crate) fn mirror_lower_from_upper(c: &mut Matrix) {
     let n = c.rows();
     const TB: usize = 48;
     let d = c.data_mut();
@@ -388,6 +410,28 @@ mod tests {
         for i in 0..12 {
             for j in 0..12 {
                 assert_eq!(c[(i, j)], c[(j, i)]);
+            }
+        }
+    }
+
+    /// `syrk_a_at` matches `A·Aᵀ` via the general path, and its upper
+    /// triangle is **bitwise** what `matmul_a_bt(a, a)` produces — the
+    /// contract the symmetric kernel-assembly fast path relies on
+    /// (skipping below-diagonal tiles must not perturb the kept ones).
+    #[test]
+    fn syrk_a_at_matches_general_product_bitwise_on_upper() {
+        let mut r = Pcg64::seed(26);
+        for &(m, k) in &[(1usize, 1usize), (7, 3), (40, 12), (130, 5), (150, 70)] {
+            let a = randm(&mut r, m, k);
+            let full = matmul_a_bt(&a, &a);
+            let sy = syrk_a_at(&a);
+            for i in 0..m {
+                for j in 0..m {
+                    assert_eq!(sy[(i, j)], sy[(j, i)], "symmetry {m}x{k}");
+                    if j >= i {
+                        assert_eq!(sy[(i, j)], full[(i, j)], "upper bitwise {m}x{k}");
+                    }
+                }
             }
         }
     }

@@ -7,8 +7,9 @@
 //! eigendecomposition (Householder tridiagonalisation + implicit-shift
 //! QL, [`eig`]) used by the K-satisfiability / incoherence diagnostics, a
 //! partial top-k eigensolver ([`partial_eigh`] — blocked subspace
-//! iteration for the spectral application paths), and operator-norm
-//! estimation by power iteration ([`norms`]).
+//! iteration for the spectral application paths, driveable by implicit
+//! operators through the [`SymOp`] trait), and operator-norm estimation
+//! by power iteration ([`norms`]).
 
 mod chol;
 mod eig;
@@ -17,8 +18,10 @@ mod matrix;
 mod norms;
 
 pub use chol::{chol_factor, chol_solve, chol_solve_many, CholFactor};
-pub use eig::{eigh, partial_eigh, EighResult, PartialEigh};
-pub(crate) use eig::partial_eigh_warm;
-pub use gemm::{matmul, matmul_at_b, matmul_a_bt, syrk_at_a};
+pub use eig::{
+    eigh, partial_eigh, partial_eigh_op, partial_eigh_op_warm, EighResult, PartialEigh, SymOp,
+};
+pub(crate) use gemm::{mirror_lower_from_upper, syrk_a_at_upper};
+pub use gemm::{matmul, matmul_at_b, matmul_a_bt, syrk_a_at, syrk_at_a};
 pub use matrix::Matrix;
 pub use norms::{fro_norm, op_norm, op_norm_rect};

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive> [--replicates N]
-//!          [--n-max N] [--seed S] [--csv PATH] [--full]
+//!          [--n-max N] [--seed S] [--csv PATH] [--full] [--streamed]
 //! accumkrr train --name M --dataset rqa --n 2000 --sketch accum --m 4
 //!          [--d D] [--lambda L] [--bandwidth B] [--seed S] [--save PATH]
 //! accumkrr train --sketch adaptive [--m-max M] [--rel-tol T]  # adaptive m
@@ -10,6 +10,11 @@
 //! accumkrr info [--artifacts DIR]
 //! accumkrr gen-data --dataset rqa --n 1000 --out data.csv [--seed S]
 //! ```
+
+// Same rationale as the lib.rs crate-level allows: keep the CI
+// `clippy -D warnings` gate about correctness, not CLI-plumbing style.
+#![allow(unknown_lints)]
+#![allow(clippy::uninlined_format_args, clippy::too_many_arguments)]
 
 use accumkrr::bench::{self, BenchOpts};
 use accumkrr::coordinator::state::{model_to_json, ModelStore, TrainRequest};
@@ -57,6 +62,7 @@ fn bench_opts(args: &Args) -> BenchOpts {
             .cloned()
             .or_else(|| cfg.get("bench", "csv").and_then(|v| v.as_str().map(String::from))),
         full: args.has("full") || cfg.bool_or("bench", "full", false),
+        streamed: args.has("streamed") || cfg.bool_or("bench", "streamed", false),
     }
 }
 

@@ -1,13 +1,17 @@
 //! Sketch application — forming `KS`, `SᵀKS`, `SᵀK²S` and `SᵀKY` without
-//! ever materialising the full `n×n` kernel matrix for sparse sketches.
+//! **ever** materialising the full `n×n` kernel matrix.
 //!
-//! This is the paper's §3.3 efficiency argument made concrete:
+//! This is the paper's §3.3 efficiency argument made concrete, routed
+//! through the row-tiled [`GramOperator`]:
 //!
 //! * sparse `S` with support `U` (|U| ≤ m·d): `KS` needs only the kernel
 //!   columns `K[:, U]` — `O(n·|U|)` kernel evaluations + `O(n·nnz)` flops —
 //!   then `SᵀKS = Sᵀ(KS)` is another `O(nnz·d)`;
-//! * dense `S` (Gaussian/Rademacher): the full `K` and an `O(n²d)` GEMM are
-//!   unavoidable, which is exactly the gap the paper's Figures 1/3 show.
+//! * dense `S` (Gaussian/Rademacher): the `O(n²d)` arithmetic is
+//!   unavoidable (the gap the paper's Figures 1/3 show), but the operator
+//!   streams `K[tile, :]·S` so peak memory stays `O(tile·n + n·d)` — the
+//!   full `K` only ever exists when a caller explicitly shares one across
+//!   a sweep via `k_full`.
 //!
 //! All dense products here (`K·S`, the SYRK for `SᵀK²S`, the thin
 //! incremental-update GEMMs) run on the packed micro-kernel core in
@@ -16,7 +20,7 @@
 //! on single-term growth.
 
 use super::{AccumSketch, Sketch, SketchOps, SparseSketch};
-use crate::kernels::{cross_kernel, kernel_matrix, Kernel};
+use crate::kernels::{GramOperator, Kernel};
 use crate::linalg::{chol_factor, matmul, matmul_at_b, syrk_at_a, Matrix};
 use std::collections::HashMap;
 
@@ -37,44 +41,31 @@ pub struct SketchedGram {
 
 /// Compute `K[:, support]` for a sparse sketch and fold the per-column
 /// weights to get `KS` directly: column `j` of `KS` is
-/// `Σ_{(i,w)∈col j} w · K[:, i]`.
+/// `Σ_{(i,w)∈col j} w · K[:, i]`. Thin wrapper over the operator's
+/// support-column path.
 pub fn sketch_kernel_cols(kernel: &Kernel, x: &Matrix, s: &SparseSketch) -> (Matrix, usize) {
-    let n = x.rows();
-    let support = s.support();
-    let landmarks = crate::kernels::gather_rows(x, &support);
-    let kcols = cross_kernel(kernel, x, &landmarks); // n × |U|
-    // position map for the fold
-    let mut pos = std::collections::HashMap::with_capacity(support.len());
-    for (p, &i) in support.iter().enumerate() {
-        pos.insert(i, p);
-    }
-    let mut ks = Matrix::zeros(n, s.d());
-    for (j, col) in (0..s.d()).map(|j| (j, s.col(j))) {
-        for &(i, w) in col {
-            let src = pos[&i];
-            for r in 0..n {
-                ks[(r, j)] += w * kcols[(r, src)];
-            }
-        }
-    }
-    (ks, n * support.len())
+    GramOperator::new(*kernel, x).ks_sparse(s)
 }
 
 /// Form every Gram quantity for the given sketch.
 ///
 /// `k_full`: pass a precomputed `K` to share it across sketches in a sweep
-/// (the bench harness does this for dense baselines); `None` lets sparse
-/// sketches use the column fast path and dense sketches build `K` once.
+/// (the bench harness does this for dense baselines); `None` streams
+/// everything through a [`GramOperator`] — the column fast path for sparse
+/// sketches, row tiles for dense ones — so **no** `n×n` matrix is ever
+/// allocated.
 pub fn sketch_gram(
     kernel: &Kernel,
     x: &Matrix,
     sketch: &Sketch,
     k_full: Option<&Matrix>,
 ) -> SketchedGram {
+    let Some(k) = k_full else {
+        return sketch_gram_streamed(&GramOperator::new(*kernel, x), sketch);
+    };
     let n = x.rows();
-    let (ks, kernel_evals) = match (sketch, k_full) {
-        (Sketch::Sparse(sp), None) => sketch_kernel_cols(kernel, x, sp),
-        (Sketch::Sparse(sp), Some(k)) => {
+    let (ks, kernel_evals) = match sketch {
+        Sketch::Sparse(sp) => {
             // K given: KS is a sparse column-combination, zero kernel evals.
             let mut ks = Matrix::zeros(n, sp.d());
             for j in 0..sp.d() {
@@ -87,21 +78,26 @@ pub fn sketch_gram(
             }
             (ks, 0)
         }
-        (Sketch::Dense(s), maybe_k) => {
-            let owned;
-            let k = match maybe_k {
-                Some(k) => k,
-                None => {
-                    owned = kernel_matrix(kernel, x);
-                    &owned
-                }
-            };
-            (matmul(k, s), if maybe_k.is_some() { 0 } else { n * n })
-        }
+        Sketch::Dense(s) => (matmul(k, s), 0),
     };
     let mut stks = sketch.st_mat(&ks);
     stks.symmetrize();
     let stk2s = syrk_at_a(&ks);
+    SketchedGram {
+        ks,
+        stks,
+        stk2s,
+        kernel_evals,
+    }
+}
+
+/// [`sketch_gram`] against an existing [`GramOperator`] (callers that
+/// stream several sketched computations over one dataset build the
+/// operator once). Peak memory `O(tile·n + n·d)`.
+pub fn sketch_gram_streamed(op: &GramOperator, sketch: &Sketch) -> SketchedGram {
+    let (ks, kernel_evals) = op.ks(sketch);
+    let stks = op.stks(sketch, &ks);
+    let stk2s = op.stk2s(&ks);
     SketchedGram {
         ks,
         stks,
@@ -307,15 +303,17 @@ impl IncrementalGram {
         }
         let delta_k = rows.len();
 
-        // cache kernel columns for rows not seen before
+        // cache kernel columns for rows not seen before — streamed off the
+        // operator's gathered-column path (tile-assembled, never touches a
+        // dense K); the cache is `O(n·|support|)`, support ≤ m·d ≪ n
         let missing: Vec<usize> = rows
             .iter()
             .copied()
             .filter(|r| !self.kcols.contains_key(r))
             .collect();
         if !missing.is_empty() {
-            let landmarks = crate::kernels::gather_rows(x, &missing);
-            let fresh = cross_kernel(&self.kernel, x, &landmarks); // n × |missing|
+            let op = GramOperator::new(self.kernel, x);
+            let fresh = op.columns(&missing); // n × |missing|
             for (c, &row) in missing.iter().enumerate() {
                 self.kcols.insert(row, fresh.col(c));
             }
@@ -382,6 +380,7 @@ impl IncrementalGram {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::kernel_matrix;
     use crate::linalg::matmul_at_b;
     use crate::rng::Pcg64;
     use crate::sketch::{SketchBuilder, SketchKind};

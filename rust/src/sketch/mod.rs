@@ -49,7 +49,10 @@ mod srht;
 
 pub use accum::AccumSketch;
 pub use amm::{amm_rel_error, approx_matmul};
-pub use apply::{sketch_gram, sketch_kernel_cols, AppendDelta, IncrementalGram, SketchedGram};
+pub use apply::{
+    sketch_gram, sketch_gram_streamed, sketch_kernel_cols, AppendDelta, IncrementalGram,
+    SketchedGram,
+};
 pub use build::{SketchBuilder, SketchKind};
 pub use localized::{localized, LocalKind};
 pub use sparse::SparseSketch;

@@ -8,9 +8,10 @@
 //! with [`partial_eigh`] and folds the tail condition algebraically, so
 //! the diagnostic scales to n where the dense solver does not.
 
+use crate::kernels::GramOperator;
 use crate::linalg::{
-    eigh, matmul, matmul_a_bt, matmul_at_b, op_norm, op_norm_rect, partial_eigh,
-    partial_eigh_warm, Matrix,
+    eigh, matmul_a_bt, matmul_at_b, op_norm, op_norm_rect, partial_eigh, partial_eigh_op,
+    partial_eigh_op_warm, Matrix, SymOp,
 };
 use crate::sketch::{Sketch, SketchOps};
 
@@ -166,15 +167,43 @@ pub fn k_satisfiability(view: &SpectralView, sketch: &Sketch, delta: f64) -> KSa
 /// depends only on the span of `U₁`, which both solvers agree on), while
 /// replacing the `O(n³)` dense eigendecomposition with `O(n²·d_δ)` work.
 pub fn k_satisfiability_topk(k: &Matrix, sketch: &Sketch, delta: f64) -> KSatReport {
-    let n = k.rows();
-    assert_eq!(n, k.cols(), "k_satisfiability_topk: square kernel");
+    assert_eq!(k.rows(), k.cols(), "k_satisfiability_topk: square kernel");
     let kn = kn_normalized(k);
+    k_satisfiability_topk_impl(&kn, sketch, delta)
+}
+
+/// [`k_satisfiability_topk`] against a streamed [`GramOperator`] — the
+/// large-n route: subspace iteration and the `Sᵀ(K/n)S` tail product
+/// consume `K/n` through `O(tile·n)` row panels instead of a dense
+/// matrix. Reports match the dense entry point to power-iteration
+/// tolerance (the algebra is shared, only the FP grouping of the
+/// products differs).
+///
+/// Caveat: if the spectrum above `δ` is so wide that the resolved block
+/// grows to `2b ≥ n`, or the iteration stalls on a clustered spectrum,
+/// the partial eigensolver takes its **dense fallback** and assembles
+/// `K` after all (converged answers beat memory purity; see
+/// [`SymOp::materialize`]). That event is observable through
+/// `kernels::assembly_guard` — callers for whom `n×n` is fatal should
+/// check it, or pick `δ` so `d_δ ≪ n`.
+pub fn k_satisfiability_topk_streamed(
+    op: &GramOperator,
+    sketch: &Sketch,
+    delta: f64,
+) -> KSatReport {
+    let kn = op.scaled(1.0 / op.n() as f64);
+    k_satisfiability_topk_impl(&kn, sketch, delta)
+}
+
+/// Shared body: `kn` is the (implicit or dense) normalised operator `K/n`.
+fn k_satisfiability_topk_impl<O: SymOp>(kn: &O, sketch: &Sketch, delta: f64) -> KSatReport {
+    let n = kn.dim();
     // resolve eigenpairs until the spectrum drops below δ (the U₁/U₂ cut);
     // each enlargement warm-starts from the previous round's Ritz vectors
     let mut r = 16usize.min(n).max(1);
     let mut warm: Option<Matrix> = None;
     let (sigma, u) = loop {
-        let pe = partial_eigh_warm(&kn, r, warm.as_ref());
+        let pe = partial_eigh_op_warm(kn, r, warm.as_ref());
         if r >= n || pe.w.last().map_or(true, |&w| w <= delta) {
             let clamped: Vec<f64> = pe.w.into_iter().map(|s| s.max(0.0)).collect();
             break (clamped, pe.v);
@@ -203,7 +232,7 @@ pub fn k_satisfiability_topk(k: &Matrix, sketch: &Sketch, delta: f64) -> KSatRep
     let top_distortion = op_norm(&g, 300);
 
     // tail Gram: Sᵀ(K/n)S − (U₁ᵀS)ᵀ Σ₁ (U₁ᵀS)
-    let kns = matmul(&kn, &s);
+    let kns = kn.apply(&s);
     let mut tail_gram = matmul_at_b(&s, &kns);
     let mut w1 = u1ts.clone();
     for row in 0..dd {
@@ -234,6 +263,18 @@ pub fn top_sigma(k: &Matrix, r: usize) -> Vec<f64> {
     let n = k.rows();
     let kn = kn_normalized(k);
     partial_eigh(&kn, r.min(n))
+        .w
+        .into_iter()
+        .map(|s| s.max(0.0))
+        .collect()
+}
+
+/// [`top_sigma`] against a streamed [`GramOperator`]: `O(n·b)` working
+/// memory per iteration instead of an `O(n²)` dense `K/n`.
+pub fn top_sigma_streamed(op: &GramOperator, r: usize) -> Vec<f64> {
+    let n = op.n();
+    let kn = op.scaled(1.0 / n as f64);
+    partial_eigh_op(&kn, r.min(n))
         .w
         .into_iter()
         .map(|s| s.max(0.0))
@@ -435,6 +476,54 @@ mod tests {
         assert_eq!(full.sqrt_delta, part.sqrt_delta);
         // top-σ helper agrees with the dense spectrum
         let top = top_sigma(&k, 6);
+        for j in 0..6 {
+            assert!(
+                (top[j] - view.sigma[j]).abs() < 1e-8 * (1.0 + view.sigma[j]),
+                "σ{j}: {} vs {}",
+                top[j],
+                view.sigma[j]
+            );
+        }
+    }
+
+    /// The streamed route (Gram operator, no dense K anywhere) reproduces
+    /// the dense top-k report: identical U₁/U₂ split, operator norms to
+    /// power-iteration tolerance.
+    #[test]
+    fn streamed_route_matches_dense_topk() {
+        let mut rng = Pcg64::seed(148);
+        let n = 150;
+        let x = Matrix::from_fn(n, 2, |_, _| rng.uniform());
+        let kern = Kernel::gaussian(0.6);
+        let k = kernel_matrix(&kern, &x);
+        let view = SpectralView::new(&k);
+        let delta = 0.5 * (view.sigma[5] + view.sigma[6]);
+        let mut srng = Pcg64::seed(149);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, 30, &mut srng);
+        let dense = k_satisfiability_topk(&k, &s, delta);
+        let op = crate::kernels::GramOperator::new(kern, &x);
+        crate::kernels::assembly_guard::reset();
+        let streamed = k_satisfiability_topk_streamed(&op, &s, delta);
+        assert!(
+            crate::kernels::assembly_guard::max_square() < n,
+            "streamed k-sat must not assemble K"
+        );
+        assert_eq!(dense.d_delta, streamed.d_delta, "U₁/U₂ split must agree");
+        assert!(
+            (dense.top_distortion - streamed.top_distortion).abs()
+                < 2e-3 * (1.0 + dense.top_distortion),
+            "distortion {} vs {}",
+            dense.top_distortion,
+            streamed.top_distortion
+        );
+        assert!(
+            (dense.tail_norm - streamed.tail_norm).abs() < 1e-2 * (1.0 + dense.tail_norm),
+            "tail {} vs {}",
+            dense.tail_norm,
+            streamed.tail_norm
+        );
+        // streamed top-σ agrees with the dense spectrum too
+        let top = top_sigma_streamed(&op, 6);
         for j in 0..6 {
             assert!(
                 (top[j] - view.sigma[j]).abs() < 1e-8 * (1.0 + view.sigma[j]),

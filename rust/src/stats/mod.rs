@@ -10,6 +10,6 @@ mod ksat;
 pub use adapt::{amm_error_proxy, rel_change, StoppingRule};
 pub use errors::{in_sample_sq_error, mse, test_error};
 pub use ksat::{
-    incoherence, k_satisfiability, k_satisfiability_topk, stat_dim, top_sigma, KSatReport,
-    SpectralView,
+    incoherence, k_satisfiability, k_satisfiability_topk, k_satisfiability_topk_streamed,
+    stat_dim, top_sigma, top_sigma_streamed, KSatReport, SpectralView,
 };

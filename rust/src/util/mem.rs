@@ -1,0 +1,34 @@
+//! Process-memory introspection for the bench harness (no external
+//! crates: reads the procfs status file directly).
+
+/// Peak resident set size of the current process in bytes (`VmHWM` from
+/// `/proc/self/status`). Linux-only; returns `None` elsewhere or when the
+/// field is missing. Note the semantics: a **monotone high-water mark**
+/// for the whole process — later measurements can only grow, so per-case
+/// bench readings record the trajectory, not an isolated footprint (the
+/// hard "streamed code never allocates n×n" guarantee is test-enforced by
+/// `kernels::assembly_guard` instead).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_rss_readable_on_linux() {
+        // non-Linux (or sandboxed procfs): None is the documented result
+        if let Some(b) = peak_rss_bytes() {
+            // a live test process has touched well over a page
+            assert!(b > 4096, "implausible peak RSS {b}");
+        }
+    }
+}

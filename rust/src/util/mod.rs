@@ -8,6 +8,7 @@ pub mod config;
 pub mod csv;
 pub mod json;
 pub mod log;
+pub mod mem;
 pub mod timer;
 
 pub use json::Json;
