@@ -9,8 +9,8 @@ fn main() {
         ..Default::default()
     };
     for id in [
-        "fig1", "fig2", "fig3", "fig4", "fig5", "thm8", "cost", "ext-sketches",
-        "ext-amm", "ext-kpca",
+        "fig1", "fig2", "fig3", "fig4", "fig5", "thm8", "cost", "cluster",
+        "ext-sketches", "ext-amm", "ext-kpca",
     ] {
         let rows = bench::run(id, &quick).expect("bench");
         bench::print_table(id, &rows, &None);

@@ -1,0 +1,230 @@
+//! Clustering bench: streamed vs dense Laplacian spectral clustering.
+//!
+//! The acceptance comparison for the `cluster::` workload
+//! (EXPERIMENTS.md §Clustering): one dataset, three routes —
+//!
+//! 1. **streamed** — `cluster::SpectralClustering::fit` through the
+//!    Laplacian operator (peak memory `O(tile·n + n·k)`);
+//! 2. **adaptive** — the accumulation-sketched pencil with runtime-chosen
+//!    `m`;
+//! 3. **dense** — materialise `K`, build `2I − L_sym` densely, same
+//!    partial eigensolver, same deterministic k-means (the `O(n²)`-memory
+//!    comparator).
+//!
+//! The streamed fit runs **first** so the process peak-RSS sample taken
+//! after it reflects the streamed path alone (`VmHWM` is a monotone
+//! high-water mark — see `util::mem::peak_rss_bytes`); the dense
+//! comparator then necessarily drags the mark up by its two `n×n`
+//! matrices. Results go to `BENCH_cluster.json`: per-route seconds and
+//! `peak_rss_mb`, ARI of each route against the generator's ground
+//! truth, the streamed-vs-dense label agreement (ARI) and embedding
+//! subspace angle — the "same answer, `O(n)` memory" acceptance pair.
+
+use super::common::{BenchOpts, Row};
+use crate::cluster::{
+    adjusted_rand_index, dense_shifted_laplacian, lloyd_kmeans, max_principal_sine,
+    row_normalize, EmbedMethod, SpectralClustering, SpectralOptions, LAPLACIAN_SHIFT,
+};
+use crate::data::blobs;
+use crate::kernels::{kernel_matrix, Kernel};
+use crate::linalg::partial_eigh;
+use crate::rng::Pcg64;
+use crate::util::json::Json;
+use crate::util::mem::peak_rss_bytes;
+use crate::util::timer::Timer;
+
+/// Run the clustering comparison at the acceptance shape (`--n-max 4096`
+/// reproduces the gate; `--full` doubles it), dumping
+/// `BENCH_cluster.json` into the working directory.
+pub fn run_cluster(opts: &BenchOpts) -> Vec<Row> {
+    run_cluster_to(opts, "BENCH_cluster.json")
+}
+
+/// Same as [`run_cluster`] with an explicit JSON output path (tests
+/// point it at a temp file and a small `n_max`).
+pub fn run_cluster_to(opts: &BenchOpts, json_path: &str) -> Vec<Row> {
+    let n = if opts.full { 8192 } else { opts.n_max };
+    let k = 3usize;
+    let mut rng = Pcg64::seed(opts.seed ^ 0xc1);
+    let (x, truth) = blobs(n, k, 6.0, 0.3, &mut rng);
+    let kern = Kernel::gaussian(1.5);
+    let rss_mb =
+        || peak_rss_bytes().map(|b| b as f64 / (1024.0 * 1024.0)).unwrap_or(0.0);
+
+    // 1. streamed operator route FIRST (monotone-RSS ordering, see the
+    //    module docs)
+    let t = Timer::start();
+    let streamed = SpectralClustering::fit(
+        kern,
+        &x,
+        &SpectralOptions {
+            k,
+            ..Default::default()
+        },
+        &mut rng,
+    )
+    .expect("streamed spectral fit");
+    let streamed_secs = t.secs();
+    let streamed_rss = rss_mb();
+    let streamed_ari = adjusted_rand_index(&streamed.labels, &truth);
+
+    // 2. adaptive sketched pencil (sparse accumulation sketch, runtime m)
+    let d = crate::cluster::default_sketch_width(k, k, n);
+    let t = Timer::start();
+    let adaptive = SpectralClustering::fit(
+        kern,
+        &x,
+        &SpectralOptions {
+            k,
+            method: EmbedMethod::Adaptive {
+                d,
+                m_max: 16,
+                rel_tol: 5e-2,
+            },
+            ..Default::default()
+        },
+        &mut rng,
+    )
+    .expect("adaptive spectral fit");
+    let adaptive_secs = t.secs();
+    let adaptive_rss = rss_mb();
+    let adaptive_ari = adjusted_rand_index(&adaptive.labels, &truth);
+    let chosen_m = adaptive.chosen_m.unwrap_or(0);
+
+    // 3. dense comparator: the same pipeline with K materialised
+    let t = Timer::start();
+    let kd = kernel_matrix(&kern, &x);
+    let (shifted, _deg) = dense_shifted_laplacian(&kd, LAPLACIAN_SHIFT);
+    let pe = partial_eigh(&shifted, k);
+    let pts = row_normalize(&pe.v, k);
+    let km = lloyd_kmeans(&pts, k, 100);
+    let dense_secs = t.secs();
+    let dense_rss = rss_mb();
+    let dense_ari = adjusted_rand_index(&km.labels, &truth);
+
+    // agreement between the streamed and dense routes
+    let cross_ari = adjusted_rand_index(&streamed.labels, &km.labels);
+    let subspace_sin = max_principal_sine(&streamed.embedding, &pe.v);
+
+    let rows = vec![
+        Row::new(
+            &[("fig", "cluster"), ("route", "streamed")],
+            &[
+                ("n", n as f64),
+                ("secs", streamed_secs),
+                ("peak_rss_mb", streamed_rss),
+                ("ari", streamed_ari),
+            ],
+        ),
+        Row::new(
+            &[("fig", "cluster"), ("route", "adaptive")],
+            &[
+                ("n", n as f64),
+                ("secs", adaptive_secs),
+                ("peak_rss_mb", adaptive_rss),
+                ("ari", adaptive_ari),
+            ],
+        ),
+        Row::new(
+            &[("fig", "cluster"), ("route", "dense")],
+            &[
+                ("n", n as f64),
+                ("secs", dense_secs),
+                ("peak_rss_mb", dense_rss),
+                ("ari", dense_ari),
+            ],
+        ),
+    ];
+
+    let j = Json::obj(vec![
+        ("bench", Json::from("cluster")),
+        ("n", Json::from(n)),
+        ("k", Json::from(k)),
+        ("d", Json::from(d)),
+        (
+            "streamed",
+            Json::obj(vec![
+                ("secs", Json::Num(streamed_secs)),
+                ("peak_rss_mb", Json::Num(streamed_rss)),
+                ("ari_vs_truth", Json::Num(streamed_ari)),
+            ]),
+        ),
+        (
+            "adaptive",
+            Json::obj(vec![
+                ("secs", Json::Num(adaptive_secs)),
+                ("peak_rss_mb", Json::Num(adaptive_rss)),
+                ("ari_vs_truth", Json::Num(adaptive_ari)),
+                ("chosen_m", Json::from(chosen_m)),
+            ]),
+        ),
+        (
+            "dense",
+            Json::obj(vec![
+                ("secs", Json::Num(dense_secs)),
+                ("peak_rss_mb", Json::Num(dense_rss)),
+                ("ari_vs_truth", Json::Num(dense_ari)),
+            ]),
+        ),
+        ("ari_streamed_vs_dense", Json::Num(cross_ari)),
+        ("subspace_sin_max", Json::Num(subspace_sin)),
+    ]);
+    if let Err(e) = std::fs::write(json_path, j.to_string()) {
+        eprintln!("cluster bench: writing {json_path} failed: {e}");
+    } else {
+        println!("(cluster comparison written to {json_path})");
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The deterministic core of the acceptance gate at a debug-friendly
+    /// shape: streamed and dense routes agree (labels + subspace), the
+    /// streamed peak-RSS sample (taken before the dense `n×n`
+    /// allocations) does not exceed the dense one, and the JSON artifact
+    /// carries every field EXPERIMENTS.md names.
+    #[test]
+    fn cluster_bench_rows_json_and_agreement() {
+        let tmp = std::env::temp_dir().join("accumkrr_bench_cluster_test.json");
+        let opts = BenchOpts {
+            n_max: 240,
+            ..Default::default()
+        };
+        let rows = run_cluster_to(&opts, &tmp.to_string_lossy());
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].key("route"), Some("streamed"));
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let cross = j
+            .get("ari_streamed_vs_dense")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(cross >= 0.95, "streamed vs dense ARI {cross}");
+        let sine = j.get("subspace_sin_max").and_then(|v| v.as_f64()).unwrap();
+        assert!(sine < 1e-6, "subspace sin {sine}");
+        let s_rss = j
+            .get("streamed")
+            .and_then(|v| v.get("peak_rss_mb"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        let d_rss = j
+            .get("dense")
+            .and_then(|v| v.get("peak_rss_mb"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(
+            s_rss <= d_rss,
+            "streamed RSS {s_rss} must not exceed dense RSS {d_rss}"
+        );
+        let m = j
+            .get("adaptive")
+            .and_then(|v| v.get("chosen_m"))
+            .and_then(|v| v.as_usize())
+            .unwrap();
+        assert!(m >= 1, "chosen m {m}");
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -5,6 +5,7 @@
 //! <id>`) exposes full-scale knobs.
 
 mod adaptive;
+mod cluster;
 mod common;
 mod cost;
 mod ext;
@@ -16,6 +17,7 @@ mod hotpath;
 mod thm8;
 
 pub use adaptive::{run_adaptive, run_adaptive_to};
+pub use cluster::{run_cluster, run_cluster_to};
 pub use common::{print_table, BenchOpts, Row};
 pub use ext::{run_ext_amm, run_ext_kpca, run_ext_sketches};
 pub use hotpath::{hotpath_main, run_hotpath_to};
@@ -27,9 +29,11 @@ pub use fig5::run_fig5;
 pub use thm8::run_thm8;
 
 /// Dispatch a bench by id (`fig1`, `fig2`, `fig3`, `fig4`, `fig5`, `thm8`,
-/// `cost`, `adaptive`). `fig4` is `fig3` over all three datasets;
-/// `adaptive` compares the incremental accumulation engine against
-/// fixed-m refits and emits `BENCH_adaptive.json`.
+/// `cost`, `adaptive`, `cluster`). `fig4` is `fig3` over all three
+/// datasets; `adaptive` compares the incremental accumulation engine
+/// against fixed-m refits and emits `BENCH_adaptive.json`; `cluster`
+/// compares streamed vs dense Laplacian spectral clustering and emits
+/// `BENCH_cluster.json`.
 pub fn run(id: &str, opts: &BenchOpts) -> Result<Vec<Row>, String> {
     match id {
         "fig1" => Ok(run_fig1(opts)),
@@ -40,11 +44,12 @@ pub fn run(id: &str, opts: &BenchOpts) -> Result<Vec<Row>, String> {
         "thm8" => Ok(run_thm8(opts)),
         "cost" => Ok(run_cost(opts)),
         "adaptive" => Ok(run_adaptive(opts)),
+        "cluster" => Ok(run_cluster(opts)),
         "ext-sketches" => Ok(run_ext_sketches(opts)),
         "ext-amm" => Ok(run_ext_amm(opts)),
         "ext-kpca" => Ok(run_ext_kpca(opts)),
         other => Err(format!(
-            "unknown bench id {other:?} (try fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|ext-sketches|ext-amm|ext-kpca)"
+            "unknown bench id {other:?} (try fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|cluster|ext-sketches|ext-amm|ext-kpca)"
         )),
     }
 }

@@ -1,0 +1,233 @@
+//! Deterministic Lloyd k-means over a spectral embedding.
+//!
+//! Spectral clustering's final step clusters the `n×k` embedding rows.
+//! Randomised k-means++ would make the *whole* pipeline's output depend
+//! on an RNG stream even though the embedding itself is deterministic
+//! (bitwise tile- and thread-invariant, see `kernels::operator`), so this
+//! implementation is deterministic end to end, in the same spirit as the
+//! GEMM core's fixed accumulation schedules:
+//!
+//! * **seeding** is the derandomised k-means++ (farthest-point / maximin)
+//!   rule: the first centre is the point farthest from the data mean,
+//!   each next centre the point maximising the distance to its nearest
+//!   chosen centre — the `D²` rule with the argmax replacing the random
+//!   draw. Ties break to the lowest index.
+//! * **assignment** is per-row independent (one owner per point, centres
+//!   scanned in ascending order, ties to the lower centre id), so it can
+//!   run on the worker pool and stay bitwise thread-invariant.
+//! * **updates** accumulate centre sums serially in ascending row order —
+//!   fixed FP grouping, whatever the thread count did during assignment.
+
+use crate::linalg::Matrix;
+use crate::pool;
+
+/// Result of [`kmeans`].
+#[derive(Clone, Debug)]
+pub struct KmeansFit {
+    /// Cluster id per input row.
+    pub labels: Vec<usize>,
+    /// Final centres (`k×p`).
+    pub centers: Matrix,
+    /// Within-cluster sum of squared distances at the final assignment.
+    pub inertia: f64,
+    /// Lloyd iterations run (assignment+update rounds).
+    pub iters: usize,
+}
+
+/// Squared Euclidean distance between two rows.
+fn sqd(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Derandomised k-means++ seeding: indices of `k` distinct rows.
+fn seed_indices(points: &Matrix, k: usize) -> Vec<usize> {
+    let (n, p) = (points.rows(), points.cols());
+    // data mean (serial, ascending — fixed grouping)
+    let mut mean = vec![0.0; p];
+    for i in 0..n {
+        for (m, v) in mean.iter_mut().zip(points.row(i).iter()) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut chosen = Vec::with_capacity(k);
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for i in 0..n {
+        let d = sqd(points.row(i), &mean);
+        if d > best.0 {
+            best = (d, i);
+        }
+    }
+    chosen.push(best.1);
+    // min squared distance to the chosen set, updated incrementally
+    let mut dist2: Vec<f64> = (0..n)
+        .map(|i| sqd(points.row(i), points.row(chosen[0])))
+        .collect();
+    while chosen.len() < k {
+        let mut far = (f64::NEG_INFINITY, 0usize);
+        for (i, &d) in dist2.iter().enumerate() {
+            if d > far.0 {
+                far = (d, i);
+            }
+        }
+        chosen.push(far.1);
+        let c = *chosen.last().unwrap();
+        for i in 0..n {
+            let d = sqd(points.row(i), points.row(c));
+            if d < dist2[i] {
+                dist2[i] = d;
+            }
+        }
+    }
+    chosen
+}
+
+/// Deterministic Lloyd k-means (see the module docs for the determinism
+/// contract). `k` must satisfy `1 ≤ k ≤ n`.
+pub fn kmeans(points: &Matrix, k: usize, max_iters: usize) -> KmeansFit {
+    let (n, p) = (points.rows(), points.cols());
+    assert!(k >= 1 && k <= n, "kmeans: need 1 <= k <= n (k={k}, n={n})");
+    let seeds = seed_indices(points, k);
+    let mut centers = Matrix::zeros(k, p);
+    for (c, &i) in seeds.iter().enumerate() {
+        centers.row_mut(c).copy_from_slice(points.row(i));
+    }
+    let mut labels = vec![0usize; n];
+    let mut iters = 0usize;
+    for it in 0..max_iters.max(1) {
+        iters = it + 1;
+        // assignment: per-row independent, bitwise thread-invariant
+        let assigned = {
+            let centers = &centers;
+            pool::parallel_map(n, |i| {
+                let row = points.row(i);
+                let mut best = (f64::INFINITY, 0usize);
+                for c in 0..k {
+                    let d = sqd(row, centers.row(c));
+                    if d < best.0 {
+                        best = (d, c);
+                    }
+                }
+                best.1
+            })
+        };
+        let changed = assigned != labels;
+        labels = assigned;
+        if !changed && it > 0 {
+            break;
+        }
+        // update: serial, ascending row order — fixed FP grouping
+        let mut counts = vec![0usize; k];
+        let mut sums = Matrix::zeros(k, p);
+        for i in 0..n {
+            counts[labels[i]] += 1;
+            let srow = sums.row_mut(labels[i]);
+            for (s, v) in srow.iter_mut().zip(points.row(i).iter()) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f64;
+                for (cv, sv) in centers.row_mut(c).iter_mut().zip(sums.row(c).iter()) {
+                    *cv = sv * inv;
+                }
+            } else {
+                // deterministic empty-cluster rescue: move the centre to
+                // the point farthest from its current centre
+                let mut far = (f64::NEG_INFINITY, 0usize);
+                for i in 0..n {
+                    let d = sqd(points.row(i), centers.row(labels[i]));
+                    if d > far.0 {
+                        far = (d, i);
+                    }
+                }
+                centers.row_mut(c).copy_from_slice(points.row(far.1));
+            }
+        }
+    }
+    let mut inertia = 0.0;
+    for i in 0..n {
+        inertia += sqd(points.row(i), centers.row(labels[i]));
+    }
+    KmeansFit {
+        labels,
+        centers,
+        inertia,
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn perfect_split_zero_inertia() {
+        let pts = Matrix::from_fn(40, 2, |i, _| if i % 2 == 0 { 0.0 } else { 5.0 });
+        let fit = kmeans(&pts, 2, 50);
+        assert!(fit.inertia < 1e-12, "inertia {}", fit.inertia);
+        // both clusters used, labels follow the parity pattern
+        assert_ne!(fit.labels[0], fit.labels[1]);
+        for i in 2..40 {
+            assert_eq!(fit.labels[i], fit.labels[i % 2]);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs_and_thread_counts() {
+        let _guard = pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut rng = Pcg64::seed(0x5eed);
+        let pts = Matrix::from_fn(120, 3, |_, _| rng.normal());
+        let before = pool::num_threads();
+        pool::set_num_threads(1);
+        let a = kmeans(&pts, 4, 100);
+        for &threads in &[1usize, 4] {
+            pool::set_num_threads(threads);
+            let b = kmeans(&pts, 4, 100);
+            assert_eq!(a.labels, b.labels, "threads={threads}");
+            assert_eq!(a.centers.data(), b.centers.data(), "threads={threads}");
+            assert_eq!(a.inertia.to_bits(), b.inertia.to_bits(), "threads={threads}");
+        }
+        pool::set_num_threads(before);
+    }
+
+    #[test]
+    fn seeding_picks_spread_points() {
+        // three tight far-apart groups: maximin seeding must take one
+        // point from each before Lloyd even starts
+        let pts = Matrix::from_fn(30, 1, |i, _| match i % 3 {
+            0 => 0.0 + i as f64 * 1e-4,
+            1 => 100.0 + i as f64 * 1e-4,
+            _ => -100.0 + i as f64 * 1e-4,
+        });
+        let seeds = seed_indices(&pts, 3);
+        let groups: std::collections::HashSet<usize> = seeds.iter().map(|&i| i % 3).collect();
+        assert_eq!(groups.len(), 3, "seeds {seeds:?} missed a group");
+    }
+
+    #[test]
+    fn k_equals_one_and_k_equals_n() {
+        let mut rng = Pcg64::seed(0x5eee);
+        let pts = Matrix::from_fn(8, 2, |_, _| rng.normal());
+        let one = kmeans(&pts, 1, 10);
+        assert!(one.labels.iter().all(|&l| l == 0));
+        let all = kmeans(&pts, 8, 10);
+        // n distinct points, n centres → every cluster is a singleton
+        let mut seen: Vec<usize> = all.labels.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 8);
+        assert!(all.inertia < 1e-12);
+    }
+}

@@ -1,0 +1,375 @@
+//! Streamed normalized-Laplacian operator.
+//!
+//! Spectral clustering needs the bottom eigenvectors of the normalized
+//! graph Laplacian `L_sym = I − D^{-1/2} K D^{-1/2}` of the kernel
+//! similarity graph — an `n×n` object the streamed pipeline must never
+//! materialise. [`LaplacianOperator`] wraps the row-tiled
+//! [`GramOperator`]: the degree vector `d = K·1` is accumulated in **one
+//! streamed pass** at construction, and every Laplacian action is then
+//! two row scalings around a streamed `K·B` product:
+//!
+//! ```text
+//!   L_sym·B = B − D^{-1/2} K (D^{-1/2} B)
+//! ```
+//!
+//! so peak memory stays `O(tile·n + n·b)` — the Gram operator's tile
+//! panel plus the thin block.
+//!
+//! # Bottom-k via the shift trick
+//!
+//! The subspace iteration behind
+//! [`partial_eigh_op`](crate::linalg::partial_eigh_op) converges to the
+//! **top** of a spectrum, and `L_sym`'s spectrum lies in `[0, 2]`. The
+//! bottom-k pairs are therefore extracted from the shifted operator
+//! `c·I − L_sym` with `c = 2`: it is PSD, its top-k eigenvectors are
+//! exactly `L_sym`'s bottom-k, and eigenvalues map back as
+//! `λ(L_sym) = c − λ(shifted)`. [`ShiftedLaplacian`] implements
+//! [`SymOp`] so the partial eigensolver drives it directly (DESIGN.md
+//! §7).
+//!
+//! # Determinism
+//!
+//! Degrees come from the Gram operator's `K·1` (bitwise tile- and
+//! thread-invariant by the operator's fixed accumulation schedule), and
+//! the scalings are elementwise — so every Laplacian product, and hence
+//! the whole spectral embedding, inherits the pipeline's bitwise
+//! invariance across tile sizes and thread counts.
+
+use crate::kernels::GramOperator;
+use crate::linalg::{Matrix, SymOp};
+use crate::sketch::{Sketch, SparseSketch};
+
+/// The shift constant `c` for the bottom-k trick: `spec(L_sym) ⊆ [0, 2]`
+/// makes `2I − L_sym = I + D^{-1/2} K D^{-1/2}` positive semi-definite.
+pub const LAPLACIAN_SHIFT: f64 = 2.0;
+
+/// Implicit normalized Laplacian of the kernel similarity graph over the
+/// rows of the wrapped operator's data. Never materialises `K` or `L`.
+#[derive(Clone, Debug)]
+pub struct LaplacianOperator<'a> {
+    gram: GramOperator<'a>,
+    /// Degrees `d_i = Σⱼ K[i,j]` (one streamed pass at construction).
+    degrees: Vec<f64>,
+    /// `1/√d_i`, precomputed for the row scalings.
+    inv_sqrt_deg: Vec<f64>,
+}
+
+impl<'a> LaplacianOperator<'a> {
+    /// Build the Laplacian view of a Gram operator, accumulating the
+    /// degree vector `d = K·1` in a single streamed pass. Requires all
+    /// degrees strictly positive (always true for strictly positive
+    /// kernels like the Gaussian, whose diagonal alone contributes 1).
+    pub fn new(gram: GramOperator<'a>) -> LaplacianOperator<'a> {
+        let ones = vec![1.0; gram.n()];
+        let degrees = gram.matvec(&ones);
+        let inv_sqrt_deg: Vec<f64> = degrees
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| {
+                assert!(
+                    d > 0.0,
+                    "laplacian: non-positive degree {d} at row {i} (disconnected vertex)"
+                );
+                1.0 / d.sqrt()
+            })
+            .collect();
+        LaplacianOperator {
+            gram,
+            degrees,
+            inv_sqrt_deg,
+        }
+    }
+
+    /// Number of graph vertices `n`.
+    pub fn n(&self) -> usize {
+        self.gram.n()
+    }
+
+    /// Degree vector `d = K·1`.
+    pub fn degrees(&self) -> &[f64] {
+        &self.degrees
+    }
+
+    /// The wrapped Gram operator.
+    pub fn gram(&self) -> &GramOperator<'a> {
+        &self.gram
+    }
+
+    /// Scale row `i` of `b` by `1/√d_i`, in place (the `D^{-1/2}·B`
+    /// half-step; crate-visible for the sketched-pencil path).
+    pub(crate) fn scale_rows(&self, b: &mut Matrix) {
+        for (i, &s) in self.inv_sqrt_deg.iter().enumerate() {
+            for v in b.row_mut(i).iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Normalized-affinity action `N·B = D^{-1/2} K (D^{-1/2} B)` — one
+    /// streamed `K·B` between two elementwise row scalings.
+    pub fn apply_norm_affinity(&self, b: &Matrix) -> Matrix {
+        assert_eq!(b.rows(), self.n(), "laplacian: N·B row mismatch");
+        let mut scaled = b.clone();
+        self.scale_rows(&mut scaled);
+        let mut out = self.gram.matmul(&scaled);
+        self.scale_rows(&mut out);
+        out
+    }
+
+    /// Normalized-Laplacian action `L_sym·B = B − N·B`, streamed.
+    pub fn apply_lsym(&self, b: &Matrix) -> Matrix {
+        let nb = self.apply_norm_affinity(b);
+        let mut out = b.clone();
+        out.axpy(-1.0, &nb);
+        out
+    }
+
+    /// The shifted operator `c·I − L_sym` (use
+    /// [`LAPLACIAN_SHIFT`] for the PSD bottom-k extraction).
+    pub fn shifted(&self, c: f64) -> ShiftedLaplacian<'_, 'a> {
+        ShiftedLaplacian { lap: self, c }
+    }
+
+    /// `D^{-1/2}·S` as a sketch of the same kind: the degree-normalised
+    /// sketch `T` with which every sketched-pencil Gram over `N` is a
+    /// plain sketched Gram over `K` (`SᵀNS = TᵀKT`,
+    /// `N·S = D^{-1/2}·K·T`). Sparse sketches stay sparse — only the
+    /// stored weights change — so the support-column fast path (and its
+    /// `O(n·|U|)` kernel-evaluation count) is preserved.
+    pub fn normalized_sketch(&self, s: &Sketch) -> Sketch {
+        match s {
+            Sketch::Sparse(sp) => {
+                let cols: Vec<Vec<(usize, f64)>> = (0..sp.d())
+                    .map(|j| {
+                        sp.col(j)
+                            .iter()
+                            .map(|&(i, w)| (i, w * self.inv_sqrt_deg[i]))
+                            .collect()
+                    })
+                    .collect();
+                Sketch::Sparse(SparseSketch::new(self.n(), cols))
+            }
+            Sketch::Dense(m) => {
+                let mut t = m.clone();
+                self.scale_rows(&mut t);
+                Sketch::Dense(t)
+            }
+        }
+    }
+}
+
+/// `c·I − L_sym` as a [`SymOp`]: the operator
+/// [`partial_eigh_op`](crate::linalg::partial_eigh_op) iterates to get
+/// the bottom-k Laplacian eigenpairs without assembling anything `n×n`.
+/// The [`materialize`](SymOp::materialize) escape hatch (dense-fallback
+/// paths of the partial eigensolver only: small `n`, oversized block, or
+/// a stalled iteration) assembles `K` once and is the one route back to
+/// `O(n²)` memory — observable via `kernels::assembly_guard`, exactly
+/// like the Gram operator's own fallback.
+#[derive(Clone, Debug)]
+pub struct ShiftedLaplacian<'l, 'a> {
+    lap: &'l LaplacianOperator<'a>,
+    c: f64,
+}
+
+impl SymOp for ShiftedLaplacian<'_, '_> {
+    fn dim(&self) -> usize {
+        self.lap.n()
+    }
+
+    /// `(c·I − L_sym)·B = (c−1)·B + N·B`.
+    fn apply(&self, b: &Matrix) -> Matrix {
+        let mut out = self.lap.apply_norm_affinity(b);
+        out.axpy(self.c - 1.0, b);
+        out
+    }
+
+    fn materialize(&self) -> Matrix {
+        // one dense-assembly implementation for both the fallback and
+        // the test/bench reference (degrees from dense row sums equal
+        // the streamed pass — pinned by streamed_lsym_matches_dense)
+        dense_shifted_laplacian(&self.lap.gram.materialize(), self.c).0
+    }
+}
+
+/// Dense reference: `(c·I − L_sym, degrees)` from an already-assembled
+/// kernel matrix. Used by the streamed-vs-dense equality tests and the
+/// `BENCH_cluster` dense comparator — **not** by any streamed path.
+pub fn dense_shifted_laplacian(k: &Matrix, c: f64) -> (Matrix, Vec<f64>) {
+    let n = k.rows();
+    assert_eq!(n, k.cols(), "dense_shifted_laplacian: square required");
+    let degrees: Vec<f64> = (0..n).map(|i| k.row(i).iter().sum()).collect();
+    let isd: Vec<f64> = degrees
+        .iter()
+        .map(|&d| {
+            assert!(d > 0.0, "dense laplacian: non-positive degree {d}");
+            1.0 / d.sqrt()
+        })
+        .collect();
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            m[(i, j)] = isd[i] * k[(i, j)] * isd[j];
+        }
+        m[(i, i)] += c - 1.0;
+    }
+    m.symmetrize();
+    (m, degrees)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{kernel_matrix, Kernel, DEFAULT_TILE};
+    use crate::linalg::matmul;
+    use crate::pool;
+    use crate::rng::Pcg64;
+    use crate::sketch::{SketchBuilder, SketchKind, SketchOps};
+
+    fn setup(n: usize, seed: u64) -> (Kernel, Matrix, Pcg64) {
+        let mut rng = Pcg64::seed(seed);
+        let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        (Kernel::gaussian(0.9), x, rng)
+    }
+
+    /// Degrees from the streamed pass equal dense row sums, and the
+    /// streamed `L_sym·B` equals the dense-assembled reference.
+    #[test]
+    fn streamed_lsym_matches_dense() {
+        for &n in &[40usize, 250] {
+            let (kern, x, mut rng) = setup(n, 0x1101);
+            let b = Matrix::from_fn(n, 5, |_, _| rng.normal());
+            let k = kernel_matrix(&kern, &x);
+            let (shifted_dense, deg_dense) = dense_shifted_laplacian(&k, LAPLACIAN_SHIFT);
+            let gram = GramOperator::new(kern, &x);
+            let lap = LaplacianOperator::new(gram);
+            for i in 0..n {
+                assert!(
+                    (lap.degrees()[i] - deg_dense[i]).abs() < 1e-10 * n as f64,
+                    "degree {i}: {} vs {}",
+                    lap.degrees()[i],
+                    deg_dense[i]
+                );
+            }
+            // dense L_sym·B = (c·B − shifted_dense·B) at c = LAPLACIAN_SHIFT
+            let sd_b = matmul(&shifted_dense, &b);
+            let streamed = lap.apply_lsym(&b);
+            for i in 0..n {
+                for j in 0..5 {
+                    let dense_val = LAPLACIAN_SHIFT * b[(i, j)] - sd_b[(i, j)];
+                    assert!(
+                        (streamed[(i, j)] - dense_val).abs() < 1e-9 * n as f64,
+                        "L·B ({i},{j}) n={n}: {} vs {}",
+                        streamed[(i, j)],
+                        dense_val
+                    );
+                }
+            }
+            // shifted apply agrees with the dense shifted matrix too
+            let shifted_streamed = lap.shifted(LAPLACIAN_SHIFT).apply(&b);
+            for i in 0..n {
+                for j in 0..5 {
+                    assert!(
+                        (shifted_streamed[(i, j)] - sd_b[(i, j)]).abs() < 1e-9 * n as f64,
+                        "(cI−L)·B ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The determinism contract: degrees and Laplacian products are
+    /// bitwise identical across tile sizes and thread counts.
+    #[test]
+    fn degrees_and_products_bitwise_invariant() {
+        let _guard = pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let (kern, x, mut rng) = setup(201, 0x1102);
+        let b = Matrix::from_fn(201, 4, |_, _| rng.normal());
+        let before = pool::num_threads();
+        pool::set_num_threads(1);
+        let reference = LaplacianOperator::new(GramOperator::new(kern, &x));
+        let ref_apply = reference.apply_lsym(&b);
+        for &tile in &[1usize, 37, DEFAULT_TILE, 201] {
+            for &threads in &[1usize, 4] {
+                pool::set_num_threads(threads);
+                let lap = LaplacianOperator::new(GramOperator::new(kern, &x).with_tile(tile));
+                assert_eq!(
+                    lap.degrees(),
+                    reference.degrees(),
+                    "degrees tile={tile} threads={threads}"
+                );
+                let got = lap.apply_lsym(&b);
+                assert_eq!(
+                    got.data(),
+                    ref_apply.data(),
+                    "L·B tile={tile} threads={threads}"
+                );
+            }
+        }
+        pool::set_num_threads(before);
+    }
+
+    /// Row sums of `L_sym` are *not* zero in general, but `L_sym` must
+    /// annihilate the √degree vector: `L_sym·(D^{1/2}·1) = 0` — the
+    /// defining property of the normalized Laplacian's bottom eigenpair.
+    #[test]
+    fn sqrt_degree_vector_is_null_vector() {
+        let (kern, x, _) = setup(80, 0x1103);
+        let lap = LaplacianOperator::new(GramOperator::new(kern, &x));
+        let v = Matrix::from_fn(80, 1, |i, _| lap.degrees()[i].sqrt());
+        let lv = lap.apply_lsym(&v);
+        let scale = lap.degrees().iter().fold(0.0f64, |m, &d| m.max(d.sqrt()));
+        for i in 0..80 {
+            assert!(
+                lv[(i, 0)].abs() < 1e-10 * scale,
+                "null vector residual {} at {i}",
+                lv[(i, 0)]
+            );
+        }
+    }
+
+    /// `normalized_sketch` really is `D^{-1/2}·S` for sparse and dense
+    /// sketches alike (checked through densification).
+    #[test]
+    fn normalized_sketch_matches_dense_scaling() {
+        let (kern, x, mut rng) = setup(50, 0x1104);
+        let lap = LaplacianOperator::new(GramOperator::new(kern, &x));
+        for kind in [SketchKind::Accumulation { m: 3 }, SketchKind::Gaussian] {
+            let s = SketchBuilder::new(kind).build(50, 7, &mut rng);
+            let t = lap.normalized_sketch(&s);
+            let sd = s.to_dense();
+            let td = t.to_dense();
+            for i in 0..50 {
+                let isd = 1.0 / lap.degrees()[i].sqrt();
+                for j in 0..7 {
+                    assert!(
+                        (td[(i, j)] - sd[(i, j)] * isd).abs() < 1e-14,
+                        "T ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The dense `materialize` fallback agrees with the streamed apply.
+    #[test]
+    fn materialize_matches_streamed_apply() {
+        let (kern, x, mut rng) = setup(60, 0x1105);
+        let b = Matrix::from_fn(60, 3, |_, _| rng.normal());
+        let lap = LaplacianOperator::new(GramOperator::new(kern, &x));
+        let shifted = lap.shifted(LAPLACIAN_SHIFT);
+        let dense = shifted.materialize();
+        let want = matmul(&dense, &b);
+        let got = shifted.apply(&b);
+        for i in 0..60 {
+            for j in 0..3 {
+                assert!(
+                    (got[(i, j)] - want[(i, j)]).abs() < 1e-10 * 60.0,
+                    "materialize ({i},{j})"
+                );
+            }
+        }
+    }
+}

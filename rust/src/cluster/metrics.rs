@@ -1,0 +1,98 @@
+//! Clustering agreement metrics.
+//!
+//! The adjusted Rand index (ARI) is the acceptance metric for the
+//! spectral-clustering workload (EXPERIMENTS.md §Clustering): it counts
+//! pair-assignment agreements between two labelings, corrected for
+//! chance, so it is invariant to label permutation — exactly what a
+//! clustering comparison needs (k-means label ids are arbitrary).
+
+/// Adjusted Rand index between two labelings of the same points.
+///
+/// `1.0` = identical partitions (up to label permutation), `≈ 0` =
+/// agreement at chance level, negative = worse than chance. Degenerate
+/// inputs where the correction denominator vanishes (e.g. both sides one
+/// single cluster, or both all-singletons) are perfect agreements of
+/// trivial partitions and return `1.0` by convention.
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len(), "ari: labelings must cover the same points");
+    let n = a.len();
+    if n <= 1 {
+        return 1.0;
+    }
+    let ka = a.iter().max().map_or(0, |&m| m + 1);
+    let kb = b.iter().max().map_or(0, |&m| m + 1);
+    // contingency table + marginals
+    let mut table = vec![0u64; ka * kb];
+    let mut rows = vec![0u64; ka];
+    let mut cols = vec![0u64; kb];
+    for (&ai, &bi) in a.iter().zip(b.iter()) {
+        table[ai * kb + bi] += 1;
+        rows[ai] += 1;
+        cols[bi] += 1;
+    }
+    let comb2 = |x: u64| -> f64 { (x as f64) * (x as f64 - 1.0) / 2.0 };
+    let index: f64 = table.iter().map(|&c| comb2(c)).sum();
+    let sum_rows: f64 = rows.iter().map(|&c| comb2(c)).sum();
+    let sum_cols: f64 = cols.iter().map(|&c| comb2(c)).sum();
+    let total = comb2(n as u64);
+    let expected = sum_rows * sum_cols / total;
+    let max_index = 0.5 * (sum_rows + sum_cols);
+    let denom = max_index - expected;
+    if denom.abs() < 1e-12 {
+        return 1.0;
+    }
+    (index - expected) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_and_permuted_labelings_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert_eq!(adjusted_rand_index(&a, &a), 1.0);
+        // permuting the label ids must not change the score
+        let b = vec![2, 2, 0, 0, 1, 1];
+        assert_eq!(adjusted_rand_index(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn independent_labelings_score_near_zero() {
+        // a checkerboard split vs a half split on 40 points: every pair
+        // relation is as often preserved as broken
+        let a: Vec<usize> = (0..40).map(|i| i % 2).collect();
+        let b: Vec<usize> = (0..40).map(|i| (i / 20) % 2).collect();
+        let s = adjusted_rand_index(&a, &b);
+        assert!(s.abs() < 0.1, "chance-level ARI, got {s}");
+    }
+
+    #[test]
+    fn partial_agreement_is_between() {
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 1, 1];
+        let s = adjusted_rand_index(&a, &b);
+        assert!(s > 0.0 && s < 1.0, "partial ARI, got {s}");
+    }
+
+    #[test]
+    fn degenerate_partitions() {
+        // both one cluster: denominator 0 → 1.0 by convention
+        assert_eq!(adjusted_rand_index(&[0, 0, 0], &[0, 0, 0]), 1.0);
+        // all singletons on both sides: same convention
+        assert_eq!(adjusted_rand_index(&[0, 1, 2], &[2, 1, 0]), 1.0);
+        assert_eq!(adjusted_rand_index(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn known_small_value() {
+        // classic worked example: n=6, a = {0,0,0,1,1,1}, b = {0,0,1,1,2,2}
+        // contingency [[2,1,0],[0,1,2]]; index = 2, sum_rows = 6,
+        // sum_cols = 3, total = 15, expected = 1.2, max = 4.5
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 2, 2];
+        let s = adjusted_rand_index(&a, &b);
+        let want = (2.0 - 1.2) / (4.5 - 1.2);
+        assert!((s - want).abs() < 1e-12, "{s} vs {want}");
+    }
+}

@@ -1,0 +1,40 @@
+//! Sketched spectral clustering — the paper's second headline
+//! application (abstract: "matrix inversion in kernel ridge regression
+//! **and eigendecomposition in spectral clustering**"), built on the
+//! streamed operator infrastructure:
+//!
+//! * [`laplacian`] — [`LaplacianOperator`]: the normalized graph
+//!   Laplacian `L_sym = I − D^{-1/2} K D^{-1/2}` kept implicit over the
+//!   row-tiled `kernels::GramOperator` (degrees in one streamed pass,
+//!   bottom-k eigenpairs via the `2I − L_sym` shift trick through
+//!   `linalg::partial_eigh_op`).
+//! * [`spectral`] — [`SpectralClustering::fit`]: embedding (operator
+//!   iteration, fixed accumulation-sketch pencil, or adaptive-m pencil
+//!   with a `stats::StoppingRule`), Ng–Jordan–Weiss rounding, labels.
+//! * [`kmeans`] — deterministic Lloyd k-means (derandomised k-means++
+//!   seeding, per-row fixed-order accumulation) so the whole pipeline is
+//!   bitwise tile- and thread-invariant.
+//! * [`metrics`] — the adjusted Rand index, the workload's acceptance
+//!   metric.
+//!
+//! Peak memory of a fit is `O(tile·n + n·k)` — no `n×n` object is ever
+//! materialised (enforced by `kernels::assembly_guard` tests here and in
+//! the pipeline test). The coordinator exposes the workload as the
+//! `cluster` TCP job kind; `bench cluster` emits `BENCH_cluster.json`
+//! (streamed vs dense Laplacian, peak RSS, ARI). See DESIGN.md §7 and
+//! EXPERIMENTS.md §Clustering.
+
+pub mod kmeans;
+pub mod laplacian;
+pub mod metrics;
+pub mod spectral;
+
+pub use kmeans::{kmeans as lloyd_kmeans, KmeansFit};
+pub use laplacian::{
+    dense_shifted_laplacian, LaplacianOperator, ShiftedLaplacian, LAPLACIAN_SHIFT,
+};
+pub use metrics::adjusted_rand_index;
+pub use spectral::{
+    cluster_sizes, default_sketch_width, max_principal_sine, row_normalize, subspace_change,
+    EmbedMethod, SpectralClustering, SpectralOptions,
+};

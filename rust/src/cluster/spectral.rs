@@ -1,0 +1,592 @@
+//! Sketched spectral clustering on the streamed Laplacian operator.
+//!
+//! The paper's abstract names **eigendecomposition in spectral
+//! clustering** as the second headline application of accumulative
+//! sub-sampling (next to matrix inversion in KRR). This module is that
+//! workload, end to end, without ever materialising an `n×n` matrix:
+//!
+//! 1. **Graph + degrees** — the kernel similarity graph stays implicit in
+//!    a [`LaplacianOperator`] over the row-tiled
+//!    [`GramOperator`](crate::kernels::GramOperator); degrees `d = K·1`
+//!    are accumulated in one streamed pass.
+//! 2. **Embedding** — the bottom-`r` eigenvectors of
+//!    `L_sym = I − D^{-1/2} K D^{-1/2}`, by one of
+//!    * [`EmbedMethod::Operator`]: subspace iteration on the shifted
+//!      operator `2I − L_sym` through
+//!      [`partial_eigh_op`](crate::linalg::partial_eigh_op) — the
+//!      "exact" streamed route, `O(tile·n + n·b)` memory;
+//!    * [`EmbedMethod::Sketched`]: the accumulation-sketch pencil — the
+//!      `d×d` eigenproblem of `N_S = NS (SᵀNS)⁻¹ SᵀN` over the
+//!      normalized affinity `N`, reusing the KPCA `SᵀA²S` factorisation
+//!      (`krr::kpca`); sparse sketches keep the support-column fast path
+//!      (`O(n·|U|)` kernel evaluations);
+//!    * [`EmbedMethod::Adaptive`]: the sketched pencil with the number
+//!      of accumulated terms `m` discovered at runtime — an
+//!      [`AccumSketch`] grows term by term and a
+//!      [`StoppingRule`](crate::stats::StoppingRule) fires once the
+//!      embedded subspace stabilises (the clustering analogue of
+//!      `SketchedKrr::fit_adaptive`).
+//! 3. **Rounding** — rows of the embedding are unit-normalised
+//!    (Ng–Jordan–Weiss) and clustered by the deterministic Lloyd
+//!    k-means in [`super::kmeans`].
+//!
+//! Every step is bitwise tile- and thread-invariant (streamed products,
+//! elementwise scalings, fixed-order k-means accumulation), so a fit is
+//! reproducible across machines and pool sizes. See DESIGN.md §7 for the
+//! decision rule between the operator and pencil routes.
+
+use super::kmeans::kmeans;
+use super::laplacian::{LaplacianOperator, LAPLACIAN_SHIFT};
+use crate::kernels::{GramOperator, Kernel};
+use crate::krr::kpca_from_gram;
+use crate::linalg::{eigh, matmul_at_b, partial_eigh_op, syrk_at_a, Matrix};
+use crate::rng::Pcg64;
+use crate::sketch::{AccumSketch, Sketch, SketchBuilder, SketchKind, SketchOps, SketchedGram};
+use crate::stats::{amm_error_proxy, StoppingRule};
+
+/// How the bottom-`r` Laplacian eigenvectors are computed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EmbedMethod {
+    /// Streamed subspace iteration on `2I − L_sym` (no sketching): the
+    /// reference route, exact up to the eigensolver's residual tolerance.
+    Operator,
+    /// Fixed accumulation sketch with `d` columns and `m` terms; the
+    /// embedding comes from the `d×d` sketched pencil.
+    Sketched {
+        /// Sketch width (projection dimension).
+        d: usize,
+        /// Accumulated sub-sampling terms.
+        m: usize,
+    },
+    /// Accumulation sketch grown term by term until the embedded
+    /// subspace stabilises (relative change below `rel_tol`, see
+    /// [`StoppingRule`](crate::stats::StoppingRule)) or `m_max` is hit.
+    Adaptive {
+        /// Sketch width (projection dimension).
+        d: usize,
+        /// Hard cap on accumulated terms.
+        m_max: usize,
+        /// Subspace-change stopping tolerance.
+        rel_tol: f64,
+    },
+}
+
+/// Options for [`SpectralClustering::fit`].
+#[derive(Clone, Debug)]
+pub struct SpectralOptions {
+    /// Number of clusters.
+    pub k: usize,
+    /// Embedding dimension `r` (0 → `k`). Must be ≥ `k`; widths beyond
+    /// `k` are useful for eigengap-based model selection (the
+    /// coordinator's `cluster` job embeds once at `k_max + 1` and sweeps
+    /// `k`).
+    pub embed_dim: usize,
+    /// Embedding route.
+    pub method: EmbedMethod,
+    /// Lloyd iteration cap for the final rounding step.
+    pub kmeans_iters: usize,
+    /// Gram-operator row-tile override (0 → default). A memory/perf
+    /// knob only: results are bitwise unaffected.
+    pub tile: usize,
+}
+
+impl Default for SpectralOptions {
+    fn default() -> Self {
+        SpectralOptions {
+            k: 2,
+            embed_dim: 0,
+            method: EmbedMethod::Operator,
+            kmeans_iters: 100,
+            tile: 0,
+        }
+    }
+}
+
+/// A fitted spectral clustering.
+#[derive(Clone, Debug)]
+pub struct SpectralClustering {
+    /// Cluster id per data row.
+    pub labels: Vec<usize>,
+    /// Spectral embedding (`n×r`): bottom-`r` (approximate) eigenvectors
+    /// of `L_sym`, orthonormal columns, **not** row-normalised (the
+    /// k-means rounding normalises its own copy).
+    pub embedding: Matrix,
+    /// Bottom-`r` eigenvalues of `L_sym`, ascending. Exact (to solver
+    /// tolerance) for [`EmbedMethod::Operator`]; the sketched pencil's
+    /// approximation otherwise.
+    pub eigenvalues: Vec<f64>,
+    /// Vertex degrees `d = K·1` from the streamed pass.
+    pub degrees: Vec<f64>,
+    /// Accumulated sketch terms actually used (`None` for the operator
+    /// route; the stopping rule's choice for the adaptive route).
+    pub chosen_m: Option<usize>,
+    /// Lloyd iterations of the rounding step.
+    pub kmeans_iters: usize,
+    /// Final within-cluster sum of squares in the normalised embedding.
+    pub inertia: f64,
+}
+
+impl SpectralClustering {
+    /// Fit a spectral clustering of the rows of `x` under the kernel
+    /// similarity graph. `rng` feeds sketch construction only — the
+    /// [`EmbedMethod::Operator`] route draws nothing and is fully
+    /// deterministic. Returns `None` when the sketched pencil is too
+    /// ill-conditioned to factor at every attempted `m` (never happens
+    /// on the operator route).
+    pub fn fit(
+        kernel: Kernel,
+        x: &Matrix,
+        opts: &SpectralOptions,
+        rng: &mut Pcg64,
+    ) -> Option<SpectralClustering> {
+        let n = x.rows();
+        let k = opts.k;
+        assert!(k >= 1 && k <= n, "cluster: need 1 <= k <= n (k={k}, n={n})");
+        let r = (if opts.embed_dim == 0 { k } else { opts.embed_dim }).min(n);
+        assert!(r >= k, "cluster: embed_dim {r} must be >= k {k}");
+        let mut gram = GramOperator::new(kernel, x);
+        if opts.tile > 0 {
+            gram = gram.with_tile(opts.tile);
+        }
+        let lap = LaplacianOperator::new(gram);
+        let (embedding, eigenvalues, chosen_m) = match opts.method {
+            EmbedMethod::Operator => {
+                let pe = partial_eigh_op(&lap.shifted(LAPLACIAN_SHIFT), r);
+                let vals: Vec<f64> = pe.w.iter().map(|&w| LAPLACIAN_SHIFT - w).collect();
+                (pe.v, vals, None)
+            }
+            EmbedMethod::Sketched { d, m } => {
+                assert!(r <= d, "cluster: sketch width {d} must be >= embed_dim {r}");
+                let m = m.max(1);
+                let s =
+                    SketchBuilder::new(SketchKind::Accumulation { m }).build(n, d, rng);
+                let (emb, vals) = pencil_embedding(&lap, &s, r)?;
+                (emb, vals, Some(m))
+            }
+            EmbedMethod::Adaptive { d, m_max, rel_tol } => {
+                assert!(r <= d, "cluster: sketch width {d} must be >= embed_dim {r}");
+                adaptive_pencil_embedding(&lap, d, m_max.max(1), rel_tol, r, rng)?
+            }
+        };
+        let points = row_normalize(&embedding, k.min(embedding.cols()));
+        let km = kmeans(&points, k, opts.kmeans_iters);
+        Some(SpectralClustering {
+            labels: km.labels,
+            embedding,
+            eigenvalues,
+            degrees: lap.degrees().to_vec(),
+            chosen_m,
+            kmeans_iters: km.iters,
+            inertia: km.inertia,
+        })
+    }
+}
+
+/// Embedding from the sketched pencil over the normalized affinity
+/// `N = D^{-1/2} K D^{-1/2}`: with `T = D^{-1/2} S`, the Grams the KPCA
+/// pencil needs are `NS = D^{-1/2}·(K·T)` (support-column fast path for
+/// sparse sketches), `SᵀNS = Tᵀ K T` and `SᵀN²S = (NS)ᵀ(NS)` — then
+/// `krr`'s `L⁻¹(SᵀN²S)L⁻ᵀ` factorisation yields the top-`r`
+/// eigenpairs of `N_S`, whose eigenvectors approximate `L_sym`'s bottom
+/// eigenvectors. Returns `(embedding, bottom eigenvalues of L_sym)`.
+fn pencil_embedding(
+    lap: &LaplacianOperator,
+    sketch: &Sketch,
+    r: usize,
+) -> Option<(Matrix, Vec<f64>)> {
+    let n = lap.n();
+    let d = sketch.d();
+    let t = lap.normalized_sketch(sketch);
+    let (kt, kernel_evals) = lap.gram().ks(&t);
+    let mut ns = kt;
+    lap.scale_rows(&mut ns); // NS = D^{-1/2} (K T)
+    let mut stks = sketch.st_mat(&ns); // SᵀNS = TᵀKT
+    stks.symmetrize();
+    let stk2s = syrk_at_a(&ns); // SᵀN²S
+    let gram = SketchedGram {
+        ks: ns,
+        stks,
+        stk2s,
+        kernel_evals,
+    };
+    let kp = kpca_from_gram(&gram, d, n, r)?;
+    // kpca eigenvalues are of N_S/n; L_sym's bottom spectrum is 1 − λ(N)
+    let vals: Vec<f64> = kp.eigenvalues.iter().map(|&v| 1.0 - v * n as f64).collect();
+    Some((kp.components, vals))
+}
+
+/// Grow an [`AccumSketch`] term by term, recomputing the pencil
+/// embedding after each append, until the embedded subspace stabilises.
+/// The change metric is the normalised projector distance
+/// `‖P_old − P_new‖_F / √(2r)` ([`subspace_change`]), fed to the same
+/// [`StoppingRule`] (with the `√(n/(d·m))` accumulation-variance proxy)
+/// that ends the adaptive KRR loop. A pencil that fails to factor at
+/// some `m` (near-singular `SᵀNS` at low term counts) is skipped, not
+/// fatal — more terms only improve conditioning.
+fn adaptive_pencil_embedding(
+    lap: &LaplacianOperator,
+    d: usize,
+    m_max: usize,
+    rel_tol: f64,
+    r: usize,
+    rng: &mut Pcg64,
+) -> Option<(Matrix, Vec<f64>, Option<usize>)> {
+    let n = lap.n();
+    let mut grower = AccumSketch::new(n, d);
+    let mut rule = StoppingRule::new(rel_tol, 1).with_min_m(2);
+    let mut prev: Option<Matrix> = None;
+    let mut last: Option<(Matrix, Vec<f64>, usize)> = None;
+    for m in 1..=m_max {
+        grower.append_term(rng);
+        let s = grower.as_sketch();
+        let Some((emb, vals)) = pencil_embedding(lap, &s, r) else {
+            continue;
+        };
+        let change = match &prev {
+            Some(p) if p.cols() == emb.cols() => subspace_change(p, &emb),
+            _ => f64::INFINITY,
+        };
+        prev = Some(emb.clone());
+        last = Some((emb, vals, m));
+        if rule.observe(m, change, amm_error_proxy(n, d, m)) {
+            break;
+        }
+    }
+    last.map(|(e, v, m)| (e, v, Some(m)))
+}
+
+/// Normalised projector distance `‖A Aᵀ − B Bᵀ‖_F / √(2r)` between two
+/// `n×r` orthonormal bases — `0` for identical subspaces, `1` for
+/// orthogonal ones; invariant to basis rotation (which is why it, and
+/// not a column-wise difference, is the adaptive loop's change metric:
+/// near-degenerate cluster eigenvalues make individual eigenvectors
+/// spin freely while the subspace converges).
+pub fn subspace_change(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!(a.rows(), b.rows(), "subspace_change: row mismatch");
+    assert_eq!(a.cols(), b.cols(), "subspace_change: rank mismatch");
+    let r = a.cols();
+    if r == 0 {
+        return 0.0;
+    }
+    let g = matmul_at_b(a, b);
+    let s: f64 = g.data().iter().map(|v| v * v).sum();
+    ((2.0 * r as f64 - 2.0 * s).max(0.0) / (2.0 * r as f64)).sqrt()
+}
+
+/// Sine of the largest principal angle between two equal-rank
+/// orthonormal bases: `√(1 − σ_min(AᵀB)²)`. This is the "subspace angle"
+/// of the acceptance gate (streamed embedding vs dense reference).
+pub fn max_principal_sine(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!(a.rows(), b.rows(), "principal angle: row mismatch");
+    assert_eq!(a.cols(), b.cols(), "principal angle: rank mismatch");
+    if a.cols() == 0 {
+        return 0.0;
+    }
+    let g = matmul_at_b(a, b);
+    let mut gtg = matmul_at_b(&g, &g);
+    gtg.symmetrize();
+    let sigma_min_sq = eigh(&gtg).w[0].max(0.0);
+    (1.0 - sigma_min_sq.min(1.0)).sqrt()
+}
+
+/// First `cols` columns of `emb` with each row scaled to unit norm
+/// (Ng–Jordan–Weiss rounding); all-zero rows stay zero.
+pub fn row_normalize(emb: &Matrix, cols: usize) -> Matrix {
+    let n = emb.rows();
+    let c = cols.min(emb.cols());
+    let mut out = Matrix::zeros(n, c);
+    for i in 0..n {
+        let row = &emb.row(i)[..c];
+        let nrm = row.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let inv = if nrm > 1e-300 { 1.0 / nrm } else { 0.0 };
+        for (o, &v) in out.row_mut(i).iter_mut().zip(row.iter()) {
+            *o = v * inv;
+        }
+    }
+    out
+}
+
+/// Default accumulation-sketch width for a `k`-cluster embedding of
+/// rank `r` over `n` points: `max(4k, 32, r)` capped at `n`. One policy
+/// shared by the coordinator's `cluster` job and the bench so they
+/// always measure the same configuration.
+pub fn default_sketch_width(k: usize, r: usize, n: usize) -> usize {
+    (4 * k).max(32).max(r).min(n)
+}
+
+/// Cluster sizes under `k` clusters (labels outside `0..k` are a bug and
+/// panic via the index).
+pub fn cluster_sizes(labels: &[usize], k: usize) -> Vec<usize> {
+    let mut sizes = vec![0usize; k];
+    for &l in labels {
+        sizes[l] += 1;
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::adjusted_rand_index;
+    use crate::cluster::laplacian::dense_shifted_laplacian;
+    use crate::data::blobs;
+    use crate::kernels::{assembly_guard, kernel_matrix, DEFAULT_TILE};
+    use crate::linalg::partial_eigh;
+    use crate::pool;
+
+    /// Well-separated blobs: tight clusters far apart, wide-ish
+    /// bandwidth → clean spectral gap after the k-th eigenvalue, so the
+    /// operator route's subspace iteration converges without fallback.
+    fn blob_setup(n: usize, seed: u64) -> (Kernel, Matrix, Vec<usize>, Pcg64) {
+        let mut rng = Pcg64::seed(seed);
+        let (x, truth) = blobs(n, 3, 6.0, 0.3, &mut rng);
+        (Kernel::gaussian(1.5), x, truth, rng)
+    }
+
+    /// Acceptance: streamed operator embedding equals the dense-assembly
+    /// reference — eigenvalues to 1e-9, subspace angle < 1e-6 at equal
+    /// rank.
+    #[test]
+    fn operator_embedding_matches_dense_reference() {
+        let (kern, x, _, mut rng) = blob_setup(160, 0x1201);
+        let opts = SpectralOptions {
+            k: 3,
+            ..Default::default()
+        };
+        let fit = SpectralClustering::fit(kern, &x, &opts, &mut rng).unwrap();
+        let k = kernel_matrix(&kern, &x);
+        let (shifted, deg) = dense_shifted_laplacian(&k, LAPLACIAN_SHIFT);
+        let pe = partial_eigh(&shifted, 3);
+        for j in 0..3 {
+            let dense_val = LAPLACIAN_SHIFT - pe.w[j];
+            assert!(
+                (fit.eigenvalues[j] - dense_val).abs() < 1e-9,
+                "λ{j}: {} vs {}",
+                fit.eigenvalues[j],
+                dense_val
+            );
+            // bottom Laplacian eigenvalues of a connected graph: λ₁ ≈ 0
+            assert!(fit.eigenvalues[j] > -1e-9 && fit.eigenvalues[j] < 2.0);
+        }
+        let sine = max_principal_sine(&fit.embedding, &pe.v);
+        assert!(sine < 1e-6, "subspace angle sin = {sine}");
+        for (a, b) in fit.degrees.iter().zip(deg.iter()) {
+            assert!((a - b).abs() < 1e-9, "degrees {a} vs {b}");
+        }
+    }
+
+    /// Acceptance: ARI ≥ 0.95 on well-separated blobs for the streamed
+    /// operator route (and the fixed-m sketched route close behind).
+    #[test]
+    fn blobs_ari_meets_acceptance() {
+        let (kern, x, truth, mut rng) = blob_setup(180, 0x1202);
+        let fit = SpectralClustering::fit(
+            kern,
+            &x,
+            &SpectralOptions {
+                k: 3,
+                ..Default::default()
+            },
+            &mut rng,
+        )
+        .unwrap();
+        let ari = adjusted_rand_index(&fit.labels, &truth);
+        assert!(ari >= 0.95, "operator ARI {ari}");
+        assert_eq!(cluster_sizes(&fit.labels, 3).iter().sum::<usize>(), 180);
+        let sk = SpectralClustering::fit(
+            kern,
+            &x,
+            &SpectralOptions {
+                k: 3,
+                method: EmbedMethod::Sketched { d: 24, m: 4 },
+                ..Default::default()
+            },
+            &mut rng,
+        )
+        .unwrap();
+        let ari_sk = adjusted_rand_index(&sk.labels, &truth);
+        assert!(ari_sk >= 0.9, "sketched ARI {ari_sk}");
+        assert_eq!(sk.chosen_m, Some(4));
+    }
+
+    /// The whole clustering fit — operator route *and* sparse sketched
+    /// pencil — never assembles an `n×n` matrix (the tentpole's memory
+    /// contract, same guard as the Gram-operator pipeline test).
+    #[test]
+    fn fit_never_assembles_n_by_n() {
+        let n = 150;
+        let (kern, x, _, mut rng) = blob_setup(n, 0x1203);
+        assembly_guard::reset();
+        let _ = SpectralClustering::fit(
+            kern,
+            &x,
+            &SpectralOptions {
+                k: 3,
+                ..Default::default()
+            },
+            &mut rng,
+        )
+        .unwrap();
+        let _ = SpectralClustering::fit(
+            kern,
+            &x,
+            &SpectralOptions {
+                k: 3,
+                method: EmbedMethod::Adaptive {
+                    d: 20,
+                    m_max: 6,
+                    rel_tol: 1e-3,
+                },
+                ..Default::default()
+            },
+            &mut rng,
+        )
+        .unwrap();
+        assert!(
+            assembly_guard::max_square() < n,
+            "cluster::fit assembled a square of size {} (n = {n})",
+            assembly_guard::max_square()
+        );
+    }
+
+    /// Determinism: labels, embedding and eigenvalues are bitwise
+    /// identical across tile sizes and thread counts (operator route —
+    /// no RNG involved at all).
+    #[test]
+    fn fit_bitwise_invariant_across_tiles_and_threads() {
+        let _guard = pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let (kern, x, _, mut rng) = blob_setup(150, 0x1204);
+        let before = pool::num_threads();
+        pool::set_num_threads(1);
+        let fit_with = |tile: usize, rng: &mut Pcg64| {
+            SpectralClustering::fit(
+                kern,
+                &x,
+                &SpectralOptions {
+                    k: 3,
+                    tile,
+                    ..Default::default()
+                },
+                rng,
+            )
+            .unwrap()
+        };
+        let reference = fit_with(0, &mut rng);
+        for &tile in &[1usize, DEFAULT_TILE, 150] {
+            for &threads in &[1usize, 4] {
+                pool::set_num_threads(threads);
+                let got = fit_with(tile, &mut rng);
+                assert_eq!(got.labels, reference.labels, "tile={tile} threads={threads}");
+                assert_eq!(
+                    got.embedding.data(),
+                    reference.embedding.data(),
+                    "embedding tile={tile} threads={threads}"
+                );
+                assert_eq!(
+                    got.eigenvalues, reference.eigenvalues,
+                    "eigenvalues tile={tile} threads={threads}"
+                );
+            }
+        }
+        pool::set_num_threads(before);
+    }
+
+    /// With the identity sketch (`d = n`) the pencil is exact: its
+    /// embedding must match the operator route's eigenvalues and span.
+    #[test]
+    fn identity_sketch_pencil_recovers_exact_bottom_spectrum() {
+        let (kern, x, _, _) = blob_setup(90, 0x1205);
+        let lap = LaplacianOperator::new(GramOperator::new(kern, &x));
+        let s = Sketch::Dense(Matrix::eye(90));
+        let (emb, vals) = pencil_embedding(&lap, &s, 3).unwrap();
+        let k = kernel_matrix(&kern, &x);
+        let (shifted, _) = dense_shifted_laplacian(&k, LAPLACIAN_SHIFT);
+        let pe = partial_eigh(&shifted, 3);
+        for j in 0..3 {
+            let want = LAPLACIAN_SHIFT - pe.w[j];
+            assert!(
+                (vals[j] - want).abs() < 1e-6,
+                "pencil λ{j}: {} vs {}",
+                vals[j],
+                want
+            );
+        }
+        let sine = max_principal_sine(&emb, &pe.v);
+        assert!(sine < 1e-5, "identity-pencil subspace sin = {sine}");
+    }
+
+    /// Adaptive growth: the stopping rule picks an `m` within bounds,
+    /// a disabled tolerance runs to `m_max`, and the result still
+    /// clusters the blobs correctly.
+    #[test]
+    fn adaptive_pencil_chooses_m_and_clusters() {
+        let (kern, x, truth, mut rng) = blob_setup(150, 0x1206);
+        let opts = SpectralOptions {
+            k: 3,
+            method: EmbedMethod::Adaptive {
+                d: 24,
+                m_max: 8,
+                rel_tol: 5e-2,
+            },
+            ..Default::default()
+        };
+        let fit = SpectralClustering::fit(kern, &x, &opts, &mut rng).unwrap();
+        let m = fit.chosen_m.expect("adaptive fit reports chosen m");
+        assert!((1..=8).contains(&m), "chosen m = {m}");
+        let ari = adjusted_rand_index(&fit.labels, &truth);
+        assert!(ari >= 0.9, "adaptive ARI {ari}");
+        // disabled tolerance → the rule never fires early
+        let sweep = SpectralClustering::fit(
+            kern,
+            &x,
+            &SpectralOptions {
+                k: 3,
+                method: EmbedMethod::Adaptive {
+                    d: 24,
+                    m_max: 5,
+                    rel_tol: -1.0,
+                },
+                ..Default::default()
+            },
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(sweep.chosen_m, Some(5));
+    }
+
+    #[test]
+    fn helpers_subspace_and_normalize() {
+        let mut rng = Pcg64::seed(0x1207);
+        let a = {
+            // orthonormalise a random 30×3 block via its thin pencil
+            let m = Matrix::from_fn(30, 3, |_, _| rng.normal());
+            let g = eigh(&{
+                let mut s = matmul_at_b(&m, &m);
+                s.symmetrize();
+                s
+            });
+            // whiten: A·G·Λ^{-1/2}
+            let mut out = Matrix::zeros(30, 3);
+            for i in 0..30 {
+                for j in 0..3 {
+                    let mut acc = 0.0;
+                    for l in 0..3 {
+                        acc += m[(i, l)] * g.v[(l, j)];
+                    }
+                    out[(i, j)] = acc / g.w[j].sqrt();
+                }
+            }
+            out
+        };
+        assert!(subspace_change(&a, &a) < 1e-10);
+        assert!(max_principal_sine(&a, &a) < 1e-6);
+        let norm = row_normalize(&a, 3);
+        for i in 0..30 {
+            let n2: f64 = norm.row(i).iter().map(|v| v * v).sum();
+            assert!((n2 - 1.0).abs() < 1e-9, "row {i} norm² {n2}");
+        }
+        assert_eq!(cluster_sizes(&[0, 1, 1, 2], 3), vec![1, 2, 1]);
+    }
+}

@@ -2,15 +2,46 @@
 //! library:
 //!
 //! * [`jobs`] — experiment job scheduler: parameter sweeps × replicates run
-//!   on a worker pool with per-job RNG streams (drives every bench figure).
+//!   on a worker pool with per-job RNG streams (drives every bench figure
+//!   and the `cluster` job's per-k model-selection sweep).
 //! * [`state`] — model store: named trained models behind an `RwLock`, with
-//!   JSON persistence (landmarks + β round-trip).
+//!   JSON persistence (landmarks + β round-trip); also hosts the stateless
+//!   job runners shared by the TCP server and the CLI
+//!   ([`state::run_cluster_job`], [`state::parse_sketch_spec`]).
 //! * [`batcher`] — dynamic batcher: concurrent predict requests are
 //!   coalesced (per model) up to a batch cap / deadline before hitting the
 //!   compute path — the same discipline a serving system applies in front
 //!   of fixed-shape accelerators.
 //! * [`server`] — threaded TCP server speaking newline-delimited JSON
-//!   (`train` / `predict` / `models` / `metrics` / `ping`).
+//!   (`train` / `predict` / `cluster` / `models` / `metrics` / `ping`).
+//!
+//! # The `cluster` job kind
+//!
+//! The spectral-clustering workload ([`crate::cluster`]) as a stateless
+//! job: generate (or load) a dataset, embed through the streamed
+//! Laplacian operator, cluster, reply with the labels. Request fields
+//! (defaults in parentheses):
+//!
+//! ```text
+//! {"op":"cluster",
+//!  "dataset":"blobs",          // blobs | moons | rings (labelled) or any
+//!                              // train dataset / CSV path (features only)
+//!  "n":600, "k":2,             // points, clusters
+//!  "method":"operator",        // operator | sketched | adaptive
+//!  "d":0,                      // sketch width (0 → max(4k, 32))
+//!  "m":4,                      // terms for method:"sketched"
+//!  "m_max":16, "rel_tol":0.05, // adaptive-m growth bounds
+//!  "bandwidth":0.0,            // kernel bandwidth (0 → dataset default)
+//!  "seed":1,
+//!  "k_max":0}                  // ≥2 → embed at k_max+1, sweep k∈2..=k_max
+//!                              //      (JobScheduler), pick k by eigengap
+//! ```
+//!
+//! Reply: `{"ok":true, "k", "labels":[…], "sizes":[…],
+//! "eigenvalues":[…]` (bottom Laplacian spectrum, ascending)`,
+//! "inertia", "secs"` plus `"chosen_m"` for sketched/adaptive embeddings,
+//! `"ari_vs_truth"` for the labelled generators, and `"sweep":[{"k",
+//! "inertia", "eigengap"}…]` when `k_max` triggered model selection.
 
 pub mod batcher;
 pub mod jobs;
@@ -20,4 +51,4 @@ pub mod state;
 pub use batcher::{Batcher, BatcherConfig};
 pub use jobs::{JobScheduler, SweepPoint};
 pub use server::{serve, ServerConfig};
-pub use state::{ModelStore, StoredModel, TrainRequest};
+pub use state::{ClusterRequest, ModelStore, StoredModel, TrainRequest};

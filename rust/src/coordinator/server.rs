@@ -7,6 +7,7 @@
 //! | `ping`    | —                                                      | `{"ok":true,"pong":true}` |
 //! | `train`   | `name,dataset,n,sketch,m,d,lambda,bandwidth,seed` (+ `m_max,rel_tol` for `sketch:"adaptive"`) | training metadata (+ `adaptive_m,rounds,rank_updates,refactors` telemetry for adaptive fits) |
 //! | `predict` | `model, x: [[f64,…],…]`                                | `{"ok":true,"y":[…]}` |
+//! | `cluster` | `dataset,n,k,method,d,m,m_max,rel_tol,bandwidth,seed,k_max` | labels + spectral telemetry (see `coordinator` module docs for the full schema) |
 //! | `models`  | —                                                      | list of stored models |
 //! | `metrics` | —                                                      | batcher counters |
 //! | `shutdown`| —                                                      | stops the listener |
@@ -16,7 +17,9 @@
 //! clients coalesce.
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
-use crate::coordinator::state::{parse_sketch_spec, ModelStore, TrainRequest};
+use crate::coordinator::state::{
+    parse_sketch_spec, run_cluster_job, ClusterRequest, ModelStore, TrainRequest,
+};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -125,6 +128,7 @@ pub fn dispatch(line: &str, store: &ModelStore, batcher: &Batcher, stop: &Atomic
         Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
         Some("train") => op_train(&req, store),
         Some("predict") => op_predict(&req, batcher),
+        Some("cluster") => op_cluster(&req),
         Some("models") => {
             let list = store
                 .list()
@@ -203,6 +207,32 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
             }
             Json::obj(fields)
         }
+        Err(e) => err(e),
+    }
+}
+
+fn op_cluster(req: &Json) -> Json {
+    let defaults = ClusterRequest::default();
+    let s = |k: &str, d: &str| -> String {
+        req.get(k).and_then(|v| v.as_str()).unwrap_or(d).to_string()
+    };
+    let u = |k: &str, d: usize| req.get(k).and_then(|v| v.as_usize()).unwrap_or(d);
+    let f = |k: &str, d: f64| req.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+    let creq = ClusterRequest {
+        dataset: s("dataset", &defaults.dataset),
+        n: u("n", defaults.n),
+        k: u("k", defaults.k),
+        k_max: u("k_max", defaults.k_max),
+        method: s("method", &defaults.method),
+        d: u("d", defaults.d),
+        m: u("m", defaults.m),
+        m_max: u("m_max", defaults.m_max),
+        rel_tol: f("rel_tol", defaults.rel_tol),
+        bandwidth: f("bandwidth", defaults.bandwidth),
+        seed: u("seed", defaults.seed as usize) as u64,
+    };
+    match run_cluster_job(&creq) {
+        Ok(reply) => reply,
         Err(e) => err(e),
     }
 }
@@ -298,6 +328,30 @@ mod tests {
             &stop,
         );
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    }
+
+    #[test]
+    fn cluster_op_returns_labels_and_ari() {
+        let (store, b, stop) = setup();
+        let r = dispatch(
+            r#"{"op":"cluster","dataset":"blobs","n":90,"k":3,"method":"operator","seed":11}"#,
+            &store,
+            &b,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("k").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(r.get("labels").and_then(|v| v.as_arr()).unwrap().len(), 90);
+        let ari = r.get("ari_vs_truth").and_then(|v| v.as_f64()).unwrap();
+        assert!(ari >= 0.95, "ARI {ari}");
+        // bad method surfaces as a protocol error, not a panic
+        let r = dispatch(
+            r#"{"op":"cluster","dataset":"blobs","n":60,"k":2,"method":"nope"}"#,
+            &store,
+            &b,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

@@ -220,6 +220,242 @@ pub fn dataset_for(
     }
 }
 
+/// Parameters of a `cluster` job (server op or CLI) — the
+/// spectral-clustering workload (`crate::cluster`) as a coordinator job
+/// kind. Stateless: unlike `train`, nothing is stored, the reply carries
+/// the labels.
+#[derive(Clone, Debug)]
+pub struct ClusterRequest {
+    /// Dataset: the labelled generators `blobs` / `moons` / `rings`
+    /// (ARI against the ground truth is reported) or any regression
+    /// dataset name/CSV accepted by [`dataset_for`] (features only).
+    pub dataset: String,
+    /// Number of points.
+    pub n: usize,
+    /// Number of clusters (ignored when `k_max` triggers a sweep).
+    pub k: usize,
+    /// When ≥ 2: embed once at `k_max + 1` dimensions, run the per-k
+    /// k-means sweep over `k ∈ 2..=k_max` through the
+    /// [`JobScheduler`](super::jobs::JobScheduler), and pick `k` by the
+    /// largest Laplacian eigengap.
+    pub k_max: usize,
+    /// Embedding route: `operator` | `sketched` | `adaptive`.
+    pub method: String,
+    /// Sketch width (0 → `max(4k, 32)` capped at `n`).
+    pub d: usize,
+    /// Accumulated terms for `sketched`.
+    pub m: usize,
+    /// Term cap for `adaptive`.
+    pub m_max: usize,
+    /// Subspace-change stopping tolerance for `adaptive`.
+    pub rel_tol: f64,
+    /// Kernel bandwidth (0 → per-dataset default).
+    pub bandwidth: f64,
+    /// RNG seed (data generation + sketch draws).
+    pub seed: u64,
+}
+
+impl Default for ClusterRequest {
+    fn default() -> Self {
+        ClusterRequest {
+            dataset: "blobs".into(),
+            n: 600,
+            k: 2,
+            k_max: 0,
+            method: "operator".into(),
+            d: 0,
+            m: 4,
+            m_max: 16,
+            rel_tol: 5e-2,
+            bandwidth: 0.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Resolve a clustering dataset: `(features, ground truth if known,
+/// default kernel)`. The labelled 2-D generators get clustering-tuned
+/// bandwidth defaults; any other name falls through to [`dataset_for`]
+/// (features only, normalized like the training path).
+pub fn cluster_dataset_for(
+    name: &str,
+    n: usize,
+    k: usize,
+    bandwidth: f64,
+    rng: &mut Pcg64,
+) -> Result<(Matrix, Option<Vec<usize>>, Kernel), String> {
+    let bw = |default: f64| if bandwidth > 0.0 { bandwidth } else { default };
+    match name {
+        "blobs" => {
+            let (x, t) = crate::data::blobs(n, k.max(2), 6.0, 0.3, rng);
+            Ok((x, Some(t), Kernel::gaussian(bw(1.5))))
+        }
+        "moons" => {
+            // bandwidth must sit below the ≈0.3 inter-moon gap: 0.15
+            // cleanly separates (ARI 1.0); 0.25 already bridges the moons
+            let (x, t) = crate::data::two_moons(n, 0.06, rng);
+            Ok((x, Some(t), Kernel::gaussian(bw(0.15))))
+        }
+        "rings" => {
+            let radii = [0.5, 2.0, 3.5];
+            let kk = k.clamp(2, radii.len());
+            let (x, t) = crate::data::rings(n, &radii[..kk], 0.05, rng);
+            Ok((x, Some(t), Kernel::gaussian(bw(0.35))))
+        }
+        other => {
+            let (mut ds, _, kern) = dataset_for(other, n, bandwidth, rng)?;
+            crate::data::normalize_features(&mut ds.x);
+            Ok((ds.x, None, kern))
+        }
+    }
+}
+
+/// Parse a `cluster` method spec into an embedding route. Shared by the
+/// TCP op and the CLI, like [`parse_sketch_spec`].
+pub fn parse_cluster_method(
+    name: &str,
+    d: usize,
+    m: usize,
+    m_max: usize,
+    rel_tol: f64,
+) -> Result<crate::cluster::EmbedMethod, String> {
+    use crate::cluster::EmbedMethod;
+    match name {
+        "operator" => Ok(EmbedMethod::Operator),
+        "sketched" => Ok(EmbedMethod::Sketched { d, m: m.max(1) }),
+        "adaptive" => Ok(EmbedMethod::Adaptive {
+            d,
+            m_max: m_max.max(1),
+            rel_tol,
+        }),
+        other => Err(format!("unknown cluster method {other:?}")),
+    }
+}
+
+/// Run a `cluster` job end to end: generate the dataset, fit the
+/// spectral clustering (`k_max` ≥ 2 additionally embeds at `k_max + 1`,
+/// fans the per-k k-means sweep out through the
+/// [`JobScheduler`](super::jobs::JobScheduler), and picks `k` at the
+/// largest eigengap), and encode the JSON reply documented in the
+/// `coordinator` module docs.
+pub fn run_cluster_job(req: &ClusterRequest) -> Result<Json, String> {
+    use crate::cluster::{
+        adjusted_rand_index, cluster_sizes, lloyd_kmeans, row_normalize, SpectralClustering,
+        SpectralOptions,
+    };
+    let sweep = req.k_max >= 2;
+    let fit_k = if sweep { 2 } else { req.k };
+    let mut rng = Pcg64::seed(req.seed);
+    // data generation always uses the requested k (the "true" cluster
+    // count for labelled generators); k_max only bounds the search
+    let gen_k = req.k.max(2);
+    let (x, truth, kernel) =
+        cluster_dataset_for(&req.dataset, req.n, gen_k, req.bandwidth, &mut rng)?;
+    // validate against the *actual* row count — CSV datasets may hold
+    // fewer rows than requested (dataset_for truncates), and a bad k or
+    // k_max must surface as a protocol error, not a panic that kills
+    // the connection thread
+    let n = x.rows();
+    if fit_k < 1 || fit_k > n {
+        return Err(format!("cluster: need 1 <= k <= n, got k={fit_k} n={n}"));
+    }
+    if sweep && req.k_max > n {
+        return Err(format!("cluster: k_max {} exceeds n={n}", req.k_max));
+    }
+    let embed_dim = if sweep { (req.k_max + 1).min(n) } else { 0 };
+    let want_r = if sweep { embed_dim } else { fit_k };
+    let d = if req.d > 0 {
+        req.d.max(want_r).min(n)
+    } else {
+        crate::cluster::default_sketch_width(gen_k, want_r, n)
+    };
+    let method = parse_cluster_method(&req.method, d, req.m, req.m_max, req.rel_tol)?;
+    let opts = SpectralOptions {
+        k: fit_k,
+        embed_dim,
+        method,
+        // the job's labels always come from the explicit rounding below
+        // (uniform across sweep and fixed-k paths), so the fit's own
+        // k-means is capped at a single pass instead of a full solve
+        kmeans_iters: 1,
+        ..Default::default()
+    };
+    let t = crate::util::Timer::start();
+    let fit = SpectralClustering::fit(kernel, &x, &opts, &mut rng)
+        .ok_or("cluster: sketched pencil factorisation failed")?;
+    // model selection: per-k Lloyd sweep through the job scheduler +
+    // eigengap choice on the bottom Laplacian spectrum
+    let (final_k, sweep_rows) = if sweep {
+        let sched = super::jobs::JobScheduler::new(req.seed);
+        let emb = &fit.embedding;
+        let per_k = sched.run_sweep(req.k_max - 1, 1, |pt, _rng| {
+            let kk = pt.setting + 2;
+            let pts = row_normalize(emb, kk.min(emb.cols()));
+            let km = lloyd_kmeans(&pts, kk, 100);
+            (kk, km.inertia)
+        });
+        let ev = &fit.eigenvalues;
+        let mut best = (f64::NEG_INFINITY, 2usize);
+        let mut rows = Vec::new();
+        for group in &per_k {
+            let (kk, inertia) = group[0];
+            // eigengap λ_{k+1} − λ_k (0-based: ev[kk] − ev[kk−1])
+            let gap = if kk < ev.len() {
+                ev[kk] - ev[kk - 1]
+            } else {
+                0.0
+            };
+            if gap > best.0 {
+                best = (gap, kk);
+            }
+            rows.push(Json::obj(vec![
+                ("k", Json::from(kk)),
+                ("inertia", Json::Num(inertia)),
+                ("eigengap", Json::Num(gap)),
+            ]));
+        }
+        (best.1, Some(rows))
+    } else {
+        (fit_k, None)
+    };
+    let pts = row_normalize(&fit.embedding, final_k.min(fit.embedding.cols()));
+    let km = lloyd_kmeans(&pts, final_k, 100);
+    let secs = t.secs();
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("dataset", Json::Str(req.dataset.clone())),
+        ("n", Json::from(n)),
+        ("k", Json::from(final_k)),
+        ("method", Json::Str(req.method.clone())),
+        ("secs", Json::Num(secs)),
+        ("inertia", Json::Num(km.inertia)),
+        ("eigenvalues", Json::nums(&fit.eigenvalues)),
+        (
+            "sizes",
+            Json::Arr(
+                cluster_sizes(&km.labels, final_k)
+                    .into_iter()
+                    .map(Json::from)
+                    .collect(),
+            ),
+        ),
+        (
+            "labels",
+            Json::Arr(km.labels.iter().map(|&l| Json::from(l)).collect()),
+        ),
+    ];
+    if let Some(m) = fit.chosen_m {
+        fields.push(("chosen_m", Json::from(m)));
+    }
+    if let Some(t) = &truth {
+        fields.push(("ari_vs_truth", Json::Num(adjusted_rand_index(&km.labels, t))));
+    }
+    if let Some(rows) = sweep_rows {
+        fields.push(("sweep", Json::Arr(rows)));
+    }
+    Ok(Json::obj(fields))
+}
+
 /// Serialise a model (landmarks + β + kernel) to JSON for persistence.
 pub fn model_to_json(m: &SketchedKrr) -> Json {
     let l = m.landmarks();
@@ -359,6 +595,112 @@ mod tests {
         assert_eq!(paper_d(15000, 4), (1.5f64 * 15000f64.powf(4.0 / 11.0)) as usize);
         let lam = paper_lambda(15000, 4);
         assert!((lam - 0.9 * 15000f64.powf(-7.0 / 11.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_job_blobs_end_to_end() {
+        let req = ClusterRequest {
+            dataset: "blobs".into(),
+            n: 90,
+            k: 3,
+            seed: 7,
+            ..Default::default()
+        };
+        let j = run_cluster_job(&req).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("k").and_then(|v| v.as_usize()), Some(3));
+        let labels = j.get("labels").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(labels.len(), 90);
+        let sizes = j.get("sizes").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(sizes.len(), 3);
+        // well-separated blobs → near-perfect recovery
+        let ari = j.get("ari_vs_truth").and_then(|v| v.as_f64()).unwrap();
+        assert!(ari >= 0.95, "ARI {ari}");
+        assert_eq!(
+            j.get("eigenvalues").and_then(|v| v.as_arr()).unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn cluster_job_k_sweep_picks_true_k_by_eigengap() {
+        let req = ClusterRequest {
+            dataset: "blobs".into(),
+            n: 90,
+            k: 3,
+            k_max: 5,
+            seed: 8,
+            ..Default::default()
+        };
+        let j = run_cluster_job(&req).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        // three well-separated blobs → the eigengap sits at k = 3
+        assert_eq!(j.get("k").and_then(|v| v.as_usize()), Some(3));
+        let sweep = j.get("sweep").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(sweep.len(), 4); // k = 2..=5
+        for row in sweep {
+            assert!(row.get("inertia").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        }
+        // the embedding was wide enough for the gap at k_max
+        assert_eq!(
+            j.get("eigenvalues").and_then(|v| v.as_arr()).unwrap().len(),
+            6
+        );
+    }
+
+    #[test]
+    fn cluster_job_adaptive_reports_chosen_m() {
+        let req = ClusterRequest {
+            dataset: "blobs".into(),
+            n: 90,
+            k: 3,
+            method: "adaptive".into(),
+            m_max: 8,
+            seed: 9,
+            ..Default::default()
+        };
+        let j = run_cluster_job(&req).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{j}");
+        let m = j.get("chosen_m").and_then(|v| v.as_usize()).unwrap();
+        assert!((1..=8).contains(&m), "chosen m {m}");
+    }
+
+    #[test]
+    fn cluster_method_and_dataset_validation() {
+        assert!(parse_cluster_method("nope", 8, 1, 1, 0.1).is_err());
+        assert!(parse_cluster_method("operator", 8, 1, 1, 0.1).is_ok());
+        let req = ClusterRequest {
+            dataset: "no_such_data".into(),
+            ..Default::default()
+        };
+        assert!(run_cluster_job(&req).is_err());
+        // oversized k / k_max surface as protocol errors, not panics
+        // that would kill a server connection thread
+        let req = ClusterRequest {
+            dataset: "blobs".into(),
+            n: 10,
+            k: 30,
+            ..Default::default()
+        };
+        assert!(run_cluster_job(&req).is_err());
+        let req = ClusterRequest {
+            dataset: "blobs".into(),
+            n: 10,
+            k: 3,
+            k_max: 50,
+            ..Default::default()
+        };
+        assert!(run_cluster_job(&req).is_err());
+        // regression datasets are accepted features-only (no ARI field)
+        let req = ClusterRequest {
+            dataset: "bimodal".into(),
+            n: 80,
+            k: 2,
+            ..Default::default()
+        };
+        let j = run_cluster_job(&req).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert!(j.get("ari_vs_truth").is_none());
     }
 
     #[test]

@@ -7,5 +7,5 @@ mod synthetic;
 mod ucisim;
 
 pub use loader::{load_csv_dataset, normalize_features, train_test_split, Dataset};
-pub use synthetic::{bimodal, f_star, BimodalConfig};
+pub use synthetic::{bimodal, blobs, f_star, rings, two_moons, BimodalConfig};
 pub use ucisim::{casp_sim, gas_sim, rqa_sim, UciSim};

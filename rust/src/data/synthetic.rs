@@ -1,14 +1,23 @@
-//! The paper's synthetic bimodal distribution (§4.1, §D.1, §D.2).
+//! Synthetic data generators.
 //!
-//! With probability `n/(n+n^γ)` a point is `Unif[0,1]³`; with probability
+//! **Regression** — the paper's bimodal distribution (§4.1, §D.1, §D.2):
+//! with probability `n/(n+n^γ)` a point is `Unif[0,1]³`; with probability
 //! `n^γ/(n+n^γ)` each coordinate has pdf `4·(5−2x)` on `[2, 2.5]` (the
 //! normalised version of the paper's `∏(5−2x_j)`). The minority cluster is
 //! dense and far from the majority — this is precisely the high-incoherence
-//! regime where plain Nyström fails (paper §3.2).
-//!
-//! The regression target is `f*(x) = g(‖x‖/3)` with
+//! regime where plain Nyström fails (paper §3.2). The regression target is
+//! `f*(x) = g(‖x‖/3)` with
 //! `g(t) = 1.6|(t−0.4)(t−0.6)| − t(t−1)(t−2) − 0.5`, plus `N(0, 0.25)`
 //! noise.
+//!
+//! **Clustering** — labelled 2-D generators for the spectral-clustering
+//! workload ([`crate::cluster`], EXPERIMENTS.md §Clustering): [`blobs`]
+//! (isotropic Gaussians on a circle — the well-separated sanity case),
+//! [`two_moons`] (interleaved half-circles — linearly inseparable, the
+//! classic spectral/kernel success case), and [`rings`] (concentric
+//! annuli). All three assign point `i` to cluster `i % k`, so cluster
+//! sizes and the truth labels are deterministic given `n` — only the
+//! within-cluster jitter consumes RNG draws.
 
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
@@ -80,6 +89,68 @@ pub fn bimodal(cfg: &BimodalConfig, rng: &mut Pcg64) -> (Matrix, Vec<f64>, Vec<f
     (x, y, truth)
 }
 
+/// `k` isotropic Gaussian blobs (std `noise`) centred on a circle of
+/// radius `sep`, `n` points total, labels `i % k`. With `sep ≫ noise`
+/// the clusters are well separated — the regime the clustering
+/// acceptance tests (`ARI ≥ 0.95`) and the `BENCH_cluster` comparison
+/// use.
+pub fn blobs(n: usize, k: usize, sep: f64, noise: f64, rng: &mut Pcg64) -> (Matrix, Vec<usize>) {
+    assert!(k >= 1, "blobs: k >= 1");
+    let mut x = Matrix::zeros(n, 2);
+    let mut labels = vec![0usize; n];
+    for i in 0..n {
+        let c = i % k;
+        labels[i] = c;
+        let a = std::f64::consts::TAU * c as f64 / k as f64;
+        x[(i, 0)] = sep * a.cos() + noise * rng.normal();
+        x[(i, 1)] = sep * a.sin() + noise * rng.normal();
+    }
+    (x, labels)
+}
+
+/// Two interleaved half-moons (the scikit-learn construction): cluster 0
+/// is the upper half of the unit circle, cluster 1 the lower half shifted
+/// to `(1, 0.5) − (cos t, sin t)`, plus isotropic `N(0, noise²)` jitter.
+/// Labels are `i % 2`. Linearly inseparable but separable by a kernel
+/// spectral embedding with a bandwidth below the inter-moon gap (≈ 0.3).
+pub fn two_moons(n: usize, noise: f64, rng: &mut Pcg64) -> (Matrix, Vec<usize>) {
+    let mut x = Matrix::zeros(n, 2);
+    let mut labels = vec![0usize; n];
+    for i in 0..n {
+        let c = i % 2;
+        labels[i] = c;
+        // even positions sweep each moon uniformly in angle
+        let t = std::f64::consts::PI * ((i / 2) as f64 + 0.5) / (n / 2).max(1) as f64;
+        let (mx, my) = if c == 0 {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        x[(i, 0)] = mx + noise * rng.normal();
+        x[(i, 1)] = my + noise * rng.normal();
+    }
+    (x, labels)
+}
+
+/// Concentric rings: ring `c` has radius `radii[c]`, points get uniform
+/// angles plus radial `N(0, noise²)` jitter; labels are `i % radii.len()`.
+/// Euclidean k-means cannot split them; a kernel spectral embedding can.
+pub fn rings(n: usize, radii: &[f64], noise: f64, rng: &mut Pcg64) -> (Matrix, Vec<usize>) {
+    let k = radii.len();
+    assert!(k >= 1, "rings: at least one radius");
+    let mut x = Matrix::zeros(n, 2);
+    let mut labels = vec![0usize; n];
+    for i in 0..n {
+        let c = i % k;
+        labels[i] = c;
+        let a = rng.uniform() * std::f64::consts::TAU;
+        let r = radii[c] + noise * rng.normal();
+        x[(i, 0)] = r * a.cos();
+        x[(i, 1)] = r * a.sin();
+    }
+    (x, labels)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +210,44 @@ mod tests {
             .count() as f64
             / 20_000.0;
         assert!((left - 0.75).abs() < 0.015, "left mass {left}");
+    }
+
+    #[test]
+    fn cluster_generators_shapes_and_labels() {
+        let mut rng = Pcg64::seed(154);
+        let (x, l) = blobs(91, 3, 6.0, 0.5, &mut rng);
+        assert_eq!((x.rows(), x.cols()), (91, 2));
+        assert_eq!(l.len(), 91);
+        // deterministic label pattern i % k and near-even sizes
+        for (i, &li) in l.iter().enumerate() {
+            assert_eq!(li, i % 3);
+        }
+        let (xm, lm) = two_moons(80, 0.05, &mut rng);
+        assert_eq!((xm.rows(), xm.cols()), (80, 2));
+        assert!(lm.iter().all(|&c| c < 2));
+        let (xr, lr) = rings(60, &[0.4, 2.0], 0.02, &mut rng);
+        assert_eq!(xr.rows(), 60);
+        assert!(lr.iter().all(|&c| c < 2));
+        // ring radii are respected within noise
+        for i in 0..60 {
+            let r = (xr[(i, 0)].powi(2) + xr[(i, 1)].powi(2)).sqrt();
+            let want = [0.4, 2.0][lr[i]];
+            assert!((r - want).abs() < 0.2, "ring {i}: radius {r} vs {want}");
+        }
+    }
+
+    #[test]
+    fn blobs_are_well_separated_at_large_sep() {
+        let mut rng = Pcg64::seed(155);
+        let (x, l) = blobs(120, 3, 6.0, 0.4, &mut rng);
+        // every point is far closer to its own centre than to the others
+        for i in 0..120 {
+            let c = l[i];
+            let a = std::f64::consts::TAU * c as f64 / 3.0;
+            let (cx, cy) = (6.0 * a.cos(), 6.0 * a.sin());
+            let d_own = ((x[(i, 0)] - cx).powi(2) + (x[(i, 1)] - cy).powi(2)).sqrt();
+            assert!(d_own < 3.0, "point {i} strayed {d_own} from its blob");
+        }
     }
 
     #[test]

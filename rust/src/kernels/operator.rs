@@ -409,10 +409,11 @@ mod tests {
 
     /// Acceptance gate for the whole pipeline: every streamed consumer —
     /// one-shot sketched fits (sparse *and* dense sketches), the adaptive
-    /// fit, KPCA, kernel k-means, BLESS, and top-k K-satisfiability — runs
-    /// without a single full `n×n` assembly (the guard tracks square
-    /// self-assemblies on this thread; sub-blocks like BLESS's `K_JJ` stay
-    /// far below `n`).
+    /// fit, KPCA, kernel k-means, BLESS, top-k K-satisfiability, and the
+    /// spectral-clustering subsystem (Laplacian operator iteration *and*
+    /// the sketched Laplacian pencil) — runs without a single full `n×n`
+    /// assembly (the guard tracks square self-assemblies on this thread;
+    /// sub-blocks like BLESS's `K_JJ` stay far below `n`).
     #[test]
     fn streamed_consumers_never_assemble_full_k() {
         let n = 120;
@@ -446,6 +447,28 @@ mod tests {
         let op = GramOperator::new(kern, &x);
         let _ = crate::stats::k_satisfiability_topk_streamed(&op, &sp, 0.05);
         let _ = crate::stats::top_sigma_streamed(&op, 4);
+
+        // the clustering workload, on its own well-separated data (sized
+        // above n so any fallback assembly would trip the assert below):
+        // operator-iterated embedding and the sketched Laplacian pencil
+        let (cx, _) = crate::data::blobs(150, 3, 6.0, 0.3, &mut rng);
+        let ckern = Kernel::gaussian(1.5);
+        for method in [
+            crate::cluster::EmbedMethod::Operator,
+            crate::cluster::EmbedMethod::Adaptive {
+                d: 20,
+                m_max: 4,
+                rel_tol: 1e-2,
+            },
+        ] {
+            let opts = crate::cluster::SpectralOptions {
+                k: 3,
+                method,
+                ..Default::default()
+            };
+            let _ = crate::cluster::SpectralClustering::fit(ckern, &cx, &opts, &mut rng)
+                .unwrap();
+        }
 
         assert!(
             assembly_guard::max_square() < n,

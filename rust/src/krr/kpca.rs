@@ -39,8 +39,17 @@ pub fn sketched_kpca(
 
 /// The d×d pencil + lift, from already-formed sketched Grams (separated
 /// so tests can pin the streamed and dense-K gram routes to the same
-/// spectrum).
-fn kpca_from_gram(gram: &SketchedGram, d: usize, n: usize, r: usize) -> Option<SketchedKpca> {
+/// spectrum). Crate-visible because the pencil is operator-agnostic: the
+/// spectral-clustering path (`cluster::spectral`) feeds it Grams formed
+/// over the normalized affinity `N = D^{-1/2} K D^{-1/2}` instead of `K`
+/// and gets the sketched *Laplacian* embedding from the identical
+/// `L⁻¹(SᵀA²S)L⁻ᵀ` factorisation.
+pub(crate) fn kpca_from_gram(
+    gram: &SketchedGram,
+    d: usize,
+    n: usize,
+    r: usize,
+) -> Option<SketchedKpca> {
     let r = r.min(d);
     // W = SᵀKS = LLᵀ (jitter if columns collided)
     let mut w = gram.stks.clone();

@@ -23,5 +23,6 @@ pub use cv::{cv_select, CvResult};
 pub use exact::KrrModel;
 pub use falkon::{falkon, FalkonOptions, FalkonResult};
 pub use kkmeans::{kernel_kmeans, lloyd, KernelKmeans};
+pub(crate) use kpca::kpca_from_gram;
 pub use kpca::{sketched_kpca, SketchedKpca};
 pub use sketched::{AdaptiveOptions, AdaptiveRound, SketchedKrr, SketchedKrrReport};

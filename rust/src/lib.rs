@@ -31,19 +31,34 @@
 //! assembles `K` rather than return unconverged pairs — observable via
 //! `kernels::assembly_guard`, and test-pinned off on the default paths.
 //!
-//! The crate is organised in three layers:
+//! The abstract's *other* headline application — eigendecomposition in
+//! spectral clustering — is the [`cluster`] subsystem: a
+//! [`cluster::LaplacianOperator`] keeps the normalized graph Laplacian
+//! implicit over the streamed Gram operator (degrees in one pass,
+//! bottom-k eigenvectors via the `2I − L_sym` shift trick), with the
+//! embedding computed either by operator iteration or from an
+//! accumulation-sketched `d×d` pencil whose term count `m` is again
+//! chosen at runtime by a [`stats::StoppingRule`].
+//!
+//! The crate is organised in three layers (README.md has the map):
 //!
 //! * **Substrates** (built from scratch — the offline image only ships the
 //!   `xla` and `anyhow` crates): [`rng`], [`linalg`], [`pool`], [`util`].
 //! * **Core statistical library**: [`kernels`], [`sketch`], [`leverage`],
-//!   [`krr`], [`stats`], [`data`].
+//!   [`krr`], [`cluster`], [`stats`], [`data`].
 //! * **System layer**: [`runtime`] (PJRT execution of AOT-compiled JAX/Pallas
 //!   artifacts), [`coordinator`] (experiment scheduler, prediction server
-//!   with an adaptive-fit job kind, dynamic batcher), [`bench`] (paper
-//!   figure regeneration plus the adaptive-vs-refit comparison).
+//!   with adaptive-fit and spectral-clustering job kinds, dynamic
+//!   batcher), [`bench`] (paper figure regeneration plus the
+//!   adaptive-vs-refit and streamed-vs-dense clustering comparisons).
 //!
 //! See `DESIGN.md` (repo root) for the full inventory, the incremental
 //! accumulation data flow, and the per-experiment index.
+
+// Documentation is part of the CI contract: a cross-reference that stops
+// resolving is a build failure, not a silent rot (`cargo doc --no-deps`
+// runs in CI with the same lint as an error).
+#![deny(rustdoc::broken_intra_doc_links)]
 
 // The numerical substrate deliberately writes index-blocked loops
 // (triangular sweeps, register tiles, in-place panels) and long argument
@@ -68,6 +83,7 @@
 )]
 
 pub mod bench;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod kernels;
@@ -81,6 +97,7 @@ pub mod sketch;
 pub mod stats;
 pub mod util;
 
+pub use cluster::{LaplacianOperator, SpectralClustering};
 pub use kernels::{GramOperator, Kernel};
 pub use krr::{AdaptiveOptions, KrrModel, SketchedKrr};
 pub use linalg::Matrix;

@@ -1,11 +1,16 @@
 //! `accumkrr` — CLI launcher for the accumulation-sketch KRR framework.
 //!
 //! ```text
-//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive> [--replicates N]
-//!          [--n-max N] [--seed S] [--csv PATH] [--full] [--streamed]
+//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|cluster>
+//!          [--replicates N] [--n-max N] [--seed S] [--csv PATH] [--full]
+//!          [--streamed]
 //! accumkrr train --name M --dataset rqa --n 2000 --sketch accum --m 4
 //!          [--d D] [--lambda L] [--bandwidth B] [--seed S] [--save PATH]
 //! accumkrr train --sketch adaptive [--m-max M] [--rel-tol T]  # adaptive m
+//! accumkrr cluster --dataset moons --n 600 --k 2
+//!          [--method operator|sketched|adaptive] [--d D] [--m M]
+//!          [--m-max M] [--rel-tol T] [--bandwidth B] [--seed S]
+//!          [--k-max K]  # sweep k in 2..=K, pick by eigengap
 //! accumkrr serve [--addr 127.0.0.1:7878]
 //! accumkrr info [--artifacts DIR]
 //! accumkrr gen-data --dataset rqa --n 1000 --out data.csv [--seed S]
@@ -29,11 +34,12 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("cv") => cmd_cv(&args),
         Some("kpca") => cmd_kpca(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
         Some("gen-data") => cmd_gen_data(&args),
         _ => {
-            eprintln!("usage: accumkrr <bench|train|cv|kpca|serve|info|gen-data> [flags]");
+            eprintln!("usage: accumkrr <bench|train|cv|kpca|cluster|serve|info|gen-data> [flags]");
             eprintln!("       see module docs / README for flags");
             2
         }
@@ -216,6 +222,73 @@ fn cmd_kpca(args: &Args) -> i32 {
         }
         None => {
             eprintln!("kpca: factorisation failed");
+            1
+        }
+    }
+}
+
+fn cmd_cluster(args: &Args) -> i32 {
+    use accumkrr::coordinator::state::run_cluster_job;
+    use accumkrr::coordinator::ClusterRequest;
+    let defaults = ClusterRequest::default();
+    let req = ClusterRequest {
+        dataset: args.str_or("dataset", &defaults.dataset).to_string(),
+        n: args.usize_or("n", defaults.n),
+        k: args.usize_or("k", defaults.k),
+        k_max: args.usize_or("k-max", defaults.k_max),
+        method: args.str_or("method", &defaults.method).to_string(),
+        d: args.usize_or("d", defaults.d),
+        m: args.usize_or("m", defaults.m),
+        m_max: args.usize_or("m-max", defaults.m_max),
+        rel_tol: args.f64_or("rel-tol", defaults.rel_tol),
+        bandwidth: args.f64_or("bandwidth", defaults.bandwidth),
+        seed: args.usize_or("seed", defaults.seed as usize) as u64,
+    };
+    match run_cluster_job(&req) {
+        Ok(j) => {
+            let g = |k: &str| j.get(k).cloned();
+            println!(
+                "clustered {} (n={}): k={} method={} secs={:.3}",
+                req.dataset,
+                req.n,
+                g("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                req.method,
+                g("secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+            if let Some(sizes) = g("sizes") {
+                println!("cluster sizes: {sizes}");
+            }
+            if let Some(ev) = g("eigenvalues") {
+                println!("bottom Laplacian eigenvalues: {ev}");
+            }
+            if let Some(m) = g("chosen_m").and_then(|v| v.as_usize()) {
+                println!("adaptive: chose m={m}");
+            }
+            if let Some(ari) = g("ari_vs_truth").and_then(|v| v.as_f64()) {
+                println!("ARI vs ground truth: {ari:.4}");
+            }
+            if let Some(sweep) = g("sweep").and_then(|v| v.as_arr().map(|a| a.to_vec())) {
+                println!("k sweep (eigengap model selection):");
+                for row in &sweep {
+                    println!(
+                        "  k={} inertia={:.5} eigengap={:.5}",
+                        row.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                        row.get("inertia").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        row.get("eigengap").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    );
+                }
+            }
+            if let Some(path) = args.flags.get("save") {
+                if let Err(e) = std::fs::write(path, j.to_string()) {
+                    eprintln!("save failed: {e}");
+                    return 1;
+                }
+                println!("full reply saved to {path}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("cluster: {e}");
             1
         }
     }
