@@ -15,11 +15,18 @@
 //! streamed Gram-operator case, allocating no dense `K` anywhere in the
 //! harness — the mode the EXPERIMENTS.md peak-RSS sublinearity check
 //! needs, since `VmHWM` is a process-wide high-water mark),
-//! `ACCUMKRR_THREADS` (pin the pool for stable timings).
+//! `ACCUMKRR_THREADS` (pin the pool for stable timings),
+//! `ACCUMKRR_FORCE_SCALAR=1` (pin the whole run to the scalar micro-kernel
+//! — the `linalg::simd` dispatch knob; when it is *not* set and the host
+//! dispatch is vectorized, the dispatch-sensitive cases are additionally
+//! re-timed under a pinned scalar dispatch and report the
+//! SIMD-over-scalar uplift).
 
 use crate::data::{bimodal, BimodalConfig};
-use crate::kernels::{kernel_cols, kernel_matrix, GramOperator, Kernel};
-use crate::linalg::{chol_factor, matmul, matmul_at_b, partial_eigh, Matrix};
+use crate::kernels::{cross_kernel_f32, kernel_cols, kernel_matrix, GramOperator, Kernel};
+use crate::linalg::{
+    chol_factor, matmul, matmul_at_b, partial_eigh, simd, with_kernel, KernelImpl, Matrix,
+};
 use crate::rng::Pcg64;
 use crate::sketch::{sketch_gram, SketchBuilder, SketchKind};
 use crate::util::json::Json;
@@ -31,14 +38,25 @@ struct Case {
     name: String,
     /// flop estimate for the throughput column (0 = skip).
     flops: f64,
+    /// Dispatch-sensitive: also time the case under a pinned scalar
+    /// dispatch (when the ambient one is vectorized) and report the
+    /// SIMD-over-scalar uplift. Set on the GEMM variants and the
+    /// kernel-map cases — the paths the `linalg::simd` micro-kernels
+    /// accelerate.
+    dual: bool,
     run: Box<dyn FnMut()>,
 }
 
 struct CaseResult {
     name: String,
     flops: f64,
+    /// Dispatch the timed run used (`"scalar"` / `"avx2"` / `"neon"`).
+    kernel: &'static str,
     stats: TimingStats,
     gflops: f64,
+    /// Same case re-timed under `with_kernel(Scalar)` — only for `dual`
+    /// cases when the ambient dispatch is vectorized.
+    scalar_stats: Option<TimingStats>,
     /// Process peak RSS (MB) sampled right after the case's reps — a
     /// monotone high-water mark (see `util::mem::peak_rss_bytes`), so the
     /// interesting signal is whether the *streamed* cases move it versus
@@ -46,16 +64,32 @@ struct CaseResult {
     peak_rss_mb: f64,
 }
 
+impl CaseResult {
+    /// SIMD-over-scalar speedup (scalar median / vector median); 0 when no
+    /// scalar comparison ran.
+    fn uplift(&self) -> f64 {
+        match &self.scalar_stats {
+            Some(s) if self.stats.median > 0.0 => s.median / self.stats.median,
+            _ => 0.0,
+        }
+    }
+}
+
 fn report(r: &CaseResult) {
+    let uplift = match r.uplift() {
+        u if u > 0.0 => format!("  {u:>5.2}x vs scalar"),
+        _ => String::new(),
+    };
     println!(
-        "{:>36}  median {:>9.3} ms  iqr [{:>8.3}, {:>8.3}]  {:>7.2} gflop/s  rss {:>7.1} MB  (n={})",
+        "{:>36}  median {:>9.3} ms  iqr [{:>8.3}, {:>8.3}]  {:>7.2} gflop/s  rss {:>7.1} MB  (n={}){}",
         r.name,
         r.stats.median * 1e3,
         r.stats.p25 * 1e3,
         r.stats.p75 * 1e3,
         r.gflops,
         r.peak_rss_mb,
-        r.stats.n
+        r.stats.n,
+        uplift
     );
 }
 
@@ -101,6 +135,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
     let gram_case = Case {
         name: format!("gram_op K·B streamed n={n} d={d}"),
         flops: (n * n) as f64 * (2.0 * p as f64 + 8.0) + 2.0 * (n * n * d) as f64,
+        dual: true,
         run: Box::new({
             let x = x.clone();
             let b = b_thin.clone();
@@ -127,11 +162,16 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
     let gauss_sketch = SketchBuilder::new(SketchKind::Gaussian).build(n, d, rng);
     let landmark_idx: Vec<usize> = (0..nys_u).map(|i| (i * 7) % n).collect();
     let lam = 1e-3;
+    // kernel-map case: the vectorized exp over a realistic squared-distance
+    // range (what `kernel_matrix` spends its non-GEMM half on)
+    let map_len = if quick { 4096 } else { 1 << 20 };
+    let map_src: Vec<f64> = (0..map_len).map(|_| rng.uniform() * 40.0).collect();
 
     let mut cases: Vec<Case> = vec![
         Case {
             name: format!("matmul {gemm_n}^3"),
             flops: 2.0 * (gemm_n as f64).powi(3),
+            dual: true,
             run: Box::new({
                 let (a, b) = (a.clone(), b.clone());
                 move || {
@@ -142,6 +182,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
         Case {
             name: format!("matmul_at_b (KS)ᵀ(KS) {n}x{d}"),
             flops: 2.0 * (n * d * d) as f64,
+            dual: true,
             run: Box::new({
                 let ks = ks_like.clone();
                 move || {
@@ -152,6 +193,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
         Case {
             name: format!("syrk_at_a {n}x{d}"),
             flops: (n * d * d) as f64,
+            dual: true,
             run: Box::new({
                 let ks = ks_like.clone();
                 move || {
@@ -162,6 +204,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
         Case {
             name: format!("kernel_matrix n={n} p={p}"),
             flops: (n * n) as f64 * (2.0 * p as f64 + 8.0),
+            dual: true,
             run: Box::new({
                 let x = x.clone();
                 move || {
@@ -172,6 +215,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
         Case {
             name: format!("kernel_cols n={n} u={nys_u}"),
             flops: (n * nys_u) as f64 * (2.0 * p as f64 + 8.0),
+            dual: true,
             run: Box::new({
                 let x = x.clone();
                 let idx = landmark_idx.clone();
@@ -181,8 +225,39 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
             }),
         },
         Case {
+            // 1 mul + 1 exp per lane; exp_fast is counted at 8 flops like
+            // the assembly cases' estimate
+            name: format!("map_sq_dist gaussian len={map_len}"),
+            flops: 9.0 * map_len as f64,
+            dual: true,
+            run: Box::new({
+                let src = map_src.clone();
+                let mut buf = vec![0.0f64; map_len];
+                move || {
+                    buf.copy_from_slice(&src);
+                    kern.map_sq_dist(&mut buf);
+                    std::hint::black_box(&buf);
+                }
+            }),
+        },
+        Case {
+            // the mixed-precision comparator for the f64 `kernel_matrix`
+            // case above: same assembly through the f32 panel path
+            // (`Precision::F32` inside `GramOperator`), widened on output
+            name: format!("kernel_matrix f32 n={n} p={p}"),
+            flops: (n * n) as f64 * (2.0 * p as f64 + 8.0),
+            dual: false,
+            run: Box::new({
+                let x = x.clone();
+                move || {
+                    std::hint::black_box(cross_kernel_f32(&kern, &x, &x));
+                }
+            }),
+        },
+        Case {
             name: format!("partial_eigh n={n} k={eig_k}"),
             flops: 0.0,
+            dual: false,
             run: Box::new({
                 let kn = kn.clone();
                 move || {
@@ -193,6 +268,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
         Case {
             name: format!("cholesky {chol_n}"),
             flops: (chol_n as f64).powi(3) / 3.0,
+            dual: false,
             run: Box::new({
                 let spd = spd.clone();
                 move || {
@@ -208,6 +284,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
             // route's cost)
             name: format!("matmul K·B dense n={n} d={d}"),
             flops: 2.0 * (n * n * d) as f64,
+            dual: true,
             run: Box::new({
                 let k = k.clone();
                 let b = b_thin.clone();
@@ -219,6 +296,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
         Case {
             name: "sketch_gram accum m=4".to_string(),
             flops: 0.0,
+            dual: false,
             run: Box::new({
                 let x = x.clone();
                 let s = accum_sketch.clone();
@@ -230,6 +308,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
         Case {
             name: "sketch_gram gaussian (K given)".to_string(),
             flops: 2.0 * (n * n * d) as f64,
+            dual: false,
             run: Box::new({
                 let x = x.clone();
                 let k = k.clone();
@@ -244,6 +323,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
         cases.push(Case {
             name: "sketched fit end-to-end".to_string(),
             flops: 0.0,
+            dual: false,
             run: Box::new({
                 let x = x.clone();
                 let y = y.clone();
@@ -258,6 +338,7 @@ fn build_cases(quick: bool, streamed_only: bool, rng: &mut Pcg64) -> Vec<Case> {
         cases.push(Case {
             name: "falkon fit end-to-end".to_string(),
             flops: 0.0,
+            dual: false,
             run: Box::new({
                 let x = x.clone();
                 let y = y.clone();
@@ -292,20 +373,36 @@ pub fn run_hotpath_to(json_path: &str, reps: usize, quick: bool) -> Json {
         .unwrap_or(false);
     let mut rng = Pcg64::seed(0xb5);
     let mut cases = build_cases(quick, streamed_only, &mut rng);
+    // Sample the ambient dispatch once — every case below is timed under
+    // it, and `dual` cases get a second pinned-scalar run for the uplift
+    // column when it is vectorized.
+    let ambient = simd::active();
     println!(
-        "hotpath micro-benchmarks (reps={reps}, 1 warmup, {} mode{})",
+        "hotpath micro-benchmarks (reps={reps}, 1 warmup, {} mode{}, kernel={})",
         if quick { "quick" } else { "full" },
-        if streamed_only { ", streamed-only" } else { "" }
+        if streamed_only { ", streamed-only" } else { "" },
+        ambient.name()
     );
     let mut results = Vec::with_capacity(cases.len());
     for case in cases.iter_mut() {
-        (case.run)(); // warmup
-        let mut samples = Vec::with_capacity(reps);
-        for _ in 0..reps {
-            let ((), t) = timed(|| (case.run)());
-            samples.push(t);
-        }
-        let stats = timing_stats(&samples);
+        let time_reps = |run: &mut dyn FnMut()| {
+            run(); // warmup
+            let mut samples = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                let ((), t) = timed(|| run());
+                samples.push(t);
+            }
+            timing_stats(&samples)
+        };
+        let stats = time_reps(&mut *case.run);
+        let scalar_stats = if case.dual && ambient != KernelImpl::Scalar {
+            // `with_kernel` pins the calling thread's dispatch; the hot
+            // entry points sample it here and hand it to their pool
+            // workers, so the whole run is scalar end to end.
+            Some(with_kernel(KernelImpl::Scalar, || time_reps(&mut *case.run)))
+        } else {
+            None
+        };
         let gflops = if case.flops > 0.0 && stats.median > 0.0 {
             case.flops / stats.median / 1e9
         } else {
@@ -315,8 +412,10 @@ pub fn run_hotpath_to(json_path: &str, reps: usize, quick: bool) -> Json {
         let r = CaseResult {
             name: case.name.clone(),
             flops: case.flops,
+            kernel: ambient.name(),
             stats,
             gflops,
+            scalar_stats,
             peak_rss_mb,
         };
         report(&r);
@@ -326,9 +425,10 @@ pub fn run_hotpath_to(json_path: &str, reps: usize, quick: bool) -> Json {
     let case_objs: Vec<Json> = results
         .iter()
         .map(|r| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("name", Json::from(r.name.as_str())),
                 ("flops", Json::Num(r.flops)),
+                ("kernel", Json::from(r.kernel)),
                 ("median_secs", Json::Num(r.stats.median)),
                 ("p25_secs", Json::Num(r.stats.p25)),
                 ("p75_secs", Json::Num(r.stats.p75)),
@@ -337,7 +437,14 @@ pub fn run_hotpath_to(json_path: &str, reps: usize, quick: bool) -> Json {
                 ("gflops", Json::Num(r.gflops)),
                 ("peak_rss_mb", Json::Num(r.peak_rss_mb)),
                 ("reps", Json::from(r.stats.n)),
-            ])
+            ];
+            if let Some(s) = &r.scalar_stats {
+                // the forced-scalar rerun of the same case — EXPERIMENTS.md
+                // §Mixed-precision's uplift gate reads these two fields
+                fields.push(("scalar_median_secs", Json::Num(s.median)));
+                fields.push(("uplift", Json::Num(r.uplift())));
+            }
+            Json::obj(fields)
         })
         .collect();
     let final_rss = peak_rss_bytes().map_or(0.0, |b| b as f64 / (1024.0 * 1024.0));
@@ -347,6 +454,11 @@ pub fn run_hotpath_to(json_path: &str, reps: usize, quick: bool) -> Json {
         ("streamed_only", Json::Bool(streamed_only)),
         ("reps", Json::from(reps)),
         ("threads", Json::from(crate::pool::num_threads())),
+        // host provenance: which dispatch produced the numbers, and what
+        // the hardware offered (mirrors `runtime::HostStamp`)
+        ("arch", Json::from(std::env::consts::ARCH)),
+        ("kernel", Json::from(ambient.name())),
+        ("cpu_features", Json::from(crate::linalg::detected_features().as_str())),
         ("peak_rss_mb", Json::Num(final_rss)),
         ("cases", Json::Arr(case_objs)),
     ]);
@@ -375,14 +487,26 @@ mod tests {
         assert_eq!(j.get("mode").and_then(|v| v.as_str()), Some("quick"));
         let cases = j.get("cases").and_then(|v| v.as_arr()).unwrap();
         assert!(cases.len() >= 8, "expected the full quick case set");
+        let ambient_name = simd::active().name();
         for c in cases {
             assert!(c.get("name").and_then(|v| v.as_str()).is_some());
+            assert_eq!(c.get("kernel").and_then(|v| v.as_str()), Some(ambient_name));
             for field in ["median_secs", "p25_secs", "p75_secs", "gflops", "peak_rss_mb"] {
                 let v = c.get(field).and_then(|v| v.as_f64()).unwrap();
                 assert!(v >= 0.0, "{field} must be present and non-negative");
             }
             assert!(c.get("median_secs").unwrap().as_f64().unwrap() > 0.0);
             assert_eq!(c.get("reps").and_then(|v| v.as_usize()), Some(1));
+            // the uplift pair travels together and only on dual-run rows
+            match (c.get("scalar_median_secs"), c.get("uplift")) {
+                (Some(s), Some(u)) => {
+                    assert!(s.as_f64().unwrap() > 0.0);
+                    assert!(u.as_f64().unwrap() > 0.0);
+                    assert_ne!(ambient_name, "scalar", "no scalar rerun under scalar dispatch");
+                }
+                (None, None) => {}
+                _ => panic!("scalar_median_secs and uplift must appear together"),
+            }
         }
         // the tentpole cases are present by name
         let names: Vec<&str> = cases
@@ -391,10 +515,31 @@ mod tests {
             .collect();
         assert!(names.iter().any(|n| n.starts_with("matmul ")));
         assert!(names.iter().any(|n| n.starts_with("kernel_matrix")));
+        assert!(names.iter().any(|n| n.starts_with("kernel_matrix f32")));
+        assert!(names.iter().any(|n| n.starts_with("map_sq_dist")));
         assert!(names.iter().any(|n| n.starts_with("partial_eigh")));
         assert!(names.iter().any(|n| n.starts_with("gram_op K·B streamed")));
         assert!(names.iter().any(|n| n.starts_with("matmul K·B dense")));
+        // a vectorized host emits the uplift pair on the GEMM and
+        // kernel-map rows (the acceptance gate's inputs)
+        if ambient_name != "scalar" {
+            for prefix in ["matmul ", "map_sq_dist"] {
+                let i = names.iter().position(|n| n.starts_with(prefix)).unwrap();
+                let u = cases[i].get("uplift").and_then(|v| v.as_f64()).unwrap();
+                assert!(u > 0.0, "{prefix} case should report an uplift");
+            }
+        }
         assert!(j.get("peak_rss_mb").and_then(|v| v.as_f64()).is_some());
+        // host provenance travels at the top level
+        assert_eq!(j.get("kernel").and_then(|v| v.as_str()), Some(ambient_name));
+        assert_eq!(
+            j.get("arch").and_then(|v| v.as_str()),
+            Some(std::env::consts::ARCH)
+        );
+        assert!(j
+            .get("cpu_features")
+            .and_then(|v| v.as_str())
+            .is_some_and(|s| !s.is_empty()));
         std::fs::remove_file(&tmp).ok();
     }
 

@@ -216,6 +216,7 @@ mod tests {
                 bandwidth: 0.0,
                 seed: 5,
                 adaptive: None,
+                precision: crate::linalg::Precision::F64,
             })
             .unwrap();
         store

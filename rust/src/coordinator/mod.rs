@@ -14,6 +14,10 @@
 //!   of fixed-shape accelerators.
 //! * [`server`] — threaded TCP server speaking newline-delimited JSON
 //!   (`train` / `predict` / `cluster` / `models` / `metrics` / `ping`).
+//!   `train` accepts an optional `"precision":"f32"` field to route
+//!   one-shot fits through single-precision Gram assembly (the
+//!   [`Precision`](crate::linalg::Precision) knob; `d×d` solves stay
+//!   f64, adaptive fits ignore it).
 //!
 //! # The `cluster` job kind
 //!

@@ -5,7 +5,7 @@
 //! | op        | request fields                                         | reply |
 //! |-----------|--------------------------------------------------------|-------|
 //! | `ping`    | —                                                      | `{"ok":true,"pong":true}` |
-//! | `train`   | `name,dataset,n,sketch,m,d,lambda,bandwidth,seed` (+ `m_max,rel_tol` for `sketch:"adaptive"`) | training metadata (+ `adaptive_m,rounds,rank_updates,refactors` telemetry for adaptive fits) |
+//! | `train`   | `name,dataset,n,sketch,m,d,lambda,bandwidth,seed` (+ `m_max,rel_tol` for `sketch:"adaptive"`, + optional `precision:"f32"\|"f64"` for one-shot fits) | training metadata (+ `adaptive_m,rounds,rank_updates,refactors` telemetry for adaptive fits) |
 //! | `predict` | `model, x: [[f64,…],…]`                                | `{"ok":true,"y":[…]}` |
 //! | `cluster` | `dataset,n,k,method,d,m,m_max,rel_tol,bandwidth,seed,k_max` | labels + spectral telemetry (see `coordinator` module docs for the full schema) |
 //! | `models`  | —                                                      | list of stored models |
@@ -20,6 +20,7 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::state::{
     parse_sketch_spec, run_cluster_job, ClusterRequest, ModelStore, TrainRequest,
 };
+use crate::linalg::Precision;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -176,6 +177,12 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
         Ok(spec) => spec,
         Err(e) => return err(e),
     };
+    // optional "precision": "f64" (default) | "f32" — Gram accumulation
+    // precision for one-shot fits; d×d solves are always f64
+    let precision = match Precision::parse(&s("precision", "f64")) {
+        Ok(p) => p,
+        Err(e) => return err(e),
+    };
     let treq = TrainRequest {
         name: s("name", "default"),
         dataset: s("dataset", "bimodal"),
@@ -186,6 +193,7 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
         bandwidth: f("bandwidth", 0.0),
         seed: u("seed", 1) as u64,
         adaptive,
+        precision,
     };
     match store.train(&treq) {
         Ok(meta) => {

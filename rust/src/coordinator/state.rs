@@ -3,7 +3,7 @@
 use crate::data::{normalize_features, Dataset};
 use crate::kernels::Kernel;
 use crate::krr::{AdaptiveOptions, SketchedKrr};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, Precision};
 use crate::rng::Pcg64;
 use crate::sketch::{SketchBuilder, SketchKind};
 use crate::util::json::Json;
@@ -50,6 +50,12 @@ pub struct TrainRequest {
     /// is reported through the stored model's
     /// [`SketchedKrrReport`](crate::krr::SketchedKrrReport).
     pub adaptive: Option<AdaptiveOptions>,
+    /// Gram-accumulation precision for one-shot fits (`F32` assembles and
+    /// accumulates the sketched Grams in single precision; all `d×d`
+    /// solves stay f64). Ignored by adaptive training, which is
+    /// f64-only — its incremental rank-update identities assume exact
+    /// f64 Grams.
+    pub precision: Precision,
 }
 
 /// Thread-safe named model registry.
@@ -112,8 +118,9 @@ impl ModelStore {
             (model, name)
         } else {
             let sketch = SketchBuilder::new(req.kind.clone()).build(n, d, &mut rng);
-            let model = SketchedKrr::fit(kernel, &ds.x, &ds.y, &sketch, lambda, None)
-                .ok_or("sketched fit failed (singular system)")?;
+            let model =
+                SketchedKrr::fit_with(kernel, &ds.x, &ds.y, &sketch, lambda, None, req.precision)
+                    .ok_or("sketched fit failed (singular system)")?;
             (model, req.kind.name())
         };
         let train_secs = t.secs();
@@ -524,6 +531,7 @@ mod tests {
             bandwidth: 0.0,
             seed: 3,
             adaptive: None,
+            precision: Precision::F64,
         };
         let meta = store.train(&req).unwrap();
         assert_eq!(meta.n_train, 200);
@@ -550,6 +558,7 @@ mod tests {
                 rel_tol: 0.05,
                 ..Default::default()
             }),
+            precision: Precision::F64,
         };
         let meta = store.train(&req).unwrap();
         let rep = *meta.model.report();
@@ -585,6 +594,7 @@ mod tests {
             bandwidth: 0.0,
             seed: 1,
             adaptive: None,
+            precision: Precision::F64,
         };
         assert!(store.train(&req).is_err());
     }

@@ -1,4 +1,12 @@
 //! Kernel function definitions.
+//!
+//! The batched kernel map ([`Kernel::map_sq_dist`]) is the transcendental
+//! hot path of tiled assembly; it routes through the
+//! [`crate::linalg::simd`] dispatch so AVX2 hosts run a 4-lane `exp`
+//! (NEON hosts and `ACCUMKRR_FORCE_SCALAR=1` fall back to the scalar
+//! [`exp_fast`], which the lane kernels agree with to ≲1e-12 relative).
+
+use crate::linalg::simd::{self, exp_fast, KernelImpl};
 
 /// Which positive semi-definite kernel to use.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -144,26 +152,42 @@ impl Kernel {
 
     /// Apply the kernel map to a row of squared distances **in place** —
     /// the batched form of [`eval_sq_dist`] used by the tiled assembly
-    /// path. The kernel kind is matched once per row, and the
-    /// transcendental goes through [`exp_fast`] (Cody–Waite reduction +
-    /// degree-12 Horner, no libm call), so the loop body is branch-free
-    /// and vectorises; values agree with [`eval`]/libm to a few ulp —
-    /// far inside every tolerance in the repo.
+    /// path. Samples the micro-kernel dispatch and delegates to
+    /// [`Kernel::map_sq_dist_with`]; parallel assembly loops should
+    /// instead sample `simd::active()` once on the calling thread and
+    /// call `map_sq_dist_with` from their workers, so scoped dispatch
+    /// overrides propagate into the pool.
     pub fn map_sq_dist(&self, d2: &mut [f64]) {
+        self.map_sq_dist_with(simd::active(), d2);
+    }
+
+    /// [`Kernel::map_sq_dist`] with the dispatch pinned by the caller.
+    /// The kernel kind is matched once per row; the transcendental runs
+    /// lane-parallel on AVX2 (`simd::map_exp`, a 4-wide Cody–Waite +
+    /// degree-12 Horner `exp`) and through the scalar [`exp_fast`]
+    /// otherwise — identical reduction/polynomial, so the two dispatch
+    /// modes agree to ≲1e-12 relative and each is position-independent
+    /// (any slice ordering gives bitwise-identical values per element,
+    /// which the symmetric-assembly mirror relies on).
+    pub(crate) fn map_sq_dist_with(&self, imp: KernelImpl, d2: &mut [f64]) {
         match self.kind {
             KernelKind::Gaussian => {
                 let c = -1.0 / (2.0 * self.bandwidth * self.bandwidth);
                 for v in d2.iter_mut() {
-                    *v = exp_fast((*v).max(0.0) * c);
+                    *v = (*v).max(0.0) * c;
                 }
+                simd::map_exp(imp, d2);
             }
             KernelKind::Matern12 => {
                 let c = -1.0 / self.bandwidth;
                 for v in d2.iter_mut() {
-                    *v = exp_fast((*v).max(0.0).sqrt() * c);
+                    *v = (*v).max(0.0).sqrt() * c;
                 }
+                simd::map_exp(imp, d2);
             }
             KernelKind::Matern32 => {
+                // the (1 + a) prefactor needs a alongside exp(−a), so this
+                // family stays on the scalar exp (dispatch-independent)
                 let c = 3f64.sqrt() / self.bandwidth;
                 for v in d2.iter_mut() {
                     let a = c * (*v).max(0.0).sqrt();
@@ -184,6 +208,50 @@ impl Kernel {
                     *v = self.eval_sq_dist(*v);
                 }
             }
+        }
+    }
+
+    /// Single-precision kernel map for the opt-in f32 assembly path
+    /// (`Precision::F32`): same shapes as [`Kernel::map_sq_dist_with`]
+    /// but on f32 squared distances, with an 8-lane AVX2 `exp` under
+    /// SIMD dispatch and the scalar `exp_fast_f32` otherwise. Radial
+    /// kernels only — callers gate on [`Kernel::is_radial`].
+    pub(crate) fn map_sq_dist_f32(&self, imp: KernelImpl, d2: &mut [f32]) {
+        match self.kind {
+            KernelKind::Gaussian => {
+                let c = (-1.0 / (2.0 * self.bandwidth * self.bandwidth)) as f32;
+                for v in d2.iter_mut() {
+                    *v = (*v).max(0.0) * c;
+                }
+                simd::map_exp_f32(imp, d2);
+            }
+            KernelKind::Matern12 => {
+                let c = (-1.0 / self.bandwidth) as f32;
+                for v in d2.iter_mut() {
+                    *v = (*v).max(0.0).sqrt() * c;
+                }
+                simd::map_exp_f32(imp, d2);
+            }
+            KernelKind::Matern32 => {
+                let c = (3f64.sqrt() / self.bandwidth) as f32;
+                for v in d2.iter_mut() {
+                    let a = c * (*v).max(0.0).sqrt();
+                    *v = (1.0 + a) * simd::exp_fast_f32(-a);
+                }
+            }
+            KernelKind::Matern52 => {
+                let c = (5f64.sqrt() / self.bandwidth) as f32;
+                let q = (5.0 / (3.0 * self.bandwidth * self.bandwidth)) as f32;
+                for v in d2.iter_mut() {
+                    let x = (*v).max(0.0);
+                    let a = c * x.sqrt();
+                    *v = (1.0 + a + q * x) * simd::exp_fast_f32(-a);
+                }
+            }
+            _ => panic!(
+                "map_sq_dist_f32: {:?} is not radial (gate on is_radial)",
+                self.kind
+            ),
         }
     }
 
@@ -226,42 +294,6 @@ fn dot(x: &[f64], y: &[f64]) -> f64 {
 #[inline]
 fn sq_dist(x: &[f64], y: &[f64]) -> f64 {
     x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
-}
-
-/// Branch-light `exp` for the batched kernel map: Cody–Waite range
-/// reduction (`x = n·ln2 + r`, `|r| ≤ ln2/2`) followed by a degree-12
-/// Taylor–Horner polynomial and an exact power-of-two scale via exponent
-/// bits. No division and no libm call, so the per-row kernel-map loop can
-/// vectorise. Accurate to a few ulp for `x ∈ [−708, 709]` (the truncation
-/// tail `r¹³/13!` is below 2e-16 relative); saturates to `0`/`∞` outside.
-#[inline]
-fn exp_fast(x: f64) -> f64 {
-    if x < -708.0 {
-        return 0.0;
-    }
-    if x > 709.0 {
-        return f64::INFINITY;
-    }
-    const LN2_HI: f64 = 6.931_471_803_691_238_164_90e-1;
-    const LN2_LO: f64 = 1.908_214_929_270_587_700_02e-10;
-    let n = (x * std::f64::consts::LOG2_E).round();
-    let r = (x - n * LN2_HI) - n * LN2_LO;
-    let mut p = 1.0 / 479_001_600.0; // 1/12!
-    p = p * r + 1.0 / 39_916_800.0; // 1/11!
-    p = p * r + 1.0 / 3_628_800.0; // 1/10!
-    p = p * r + 1.0 / 362_880.0; // 1/9!
-    p = p * r + 1.0 / 40_320.0; // 1/8!
-    p = p * r + 1.0 / 5_040.0; // 1/7!
-    p = p * r + 1.0 / 720.0; // 1/6!
-    p = p * r + 1.0 / 120.0; // 1/5!
-    p = p * r + 1.0 / 24.0; // 1/4!
-    p = p * r + 1.0 / 6.0; // 1/3!
-    p = p * r + 0.5; // 1/2!
-    p = p * r + 1.0; // 1/1!
-    p = p * r + 1.0; // 1/0!
-    // 2ⁿ exactly, through the exponent field (n ∈ [−1022, 1023] here)
-    let scale = f64::from_bits(((n as i64 + 1023) as u64) << 52);
-    p * scale
 }
 
 #[cfg(test)]
@@ -352,6 +384,38 @@ mod tests {
         assert_eq!(exp_fast(0.0), 1.0);
         assert_eq!(exp_fast(-1000.0), 0.0);
         assert_eq!(exp_fast(1000.0), f64::INFINITY);
+    }
+
+    /// The f32 map agrees with the f64 map to single-precision accuracy
+    /// on every radial family, under forced-scalar and detected dispatch.
+    #[test]
+    fn map_sq_dist_f32_matches_f64_map() {
+        let kerns = [
+            Kernel::gaussian(1.3),
+            Kernel::matern(0.5, 0.9),
+            Kernel::matern(1.5, 1.1),
+            Kernel::matern(2.5, 2.0),
+        ];
+        let d2s: Vec<f64> = vec![0.0, 1e-6, 0.3, 1.0, 4.0, 25.0, 60.0, -1e-13];
+        for imp in [KernelImpl::Scalar, simd::active()] {
+            for kern in kerns {
+                let mut want = d2s.clone();
+                kern.map_sq_dist_with(imp, &mut want);
+                let mut got: Vec<f32> = d2s.iter().map(|&v| v as f32).collect();
+                kern.map_sq_dist_f32(imp, &mut got);
+                for ((g, w), &d2) in got.iter().zip(want.iter()).zip(d2s.iter()) {
+                    let rel = (*g as f64 - w).abs() / (1.0 + w.abs());
+                    assert!(rel < 1e-5, "{:?} {imp:?} d2={d2}: {g} vs {w}", kern.kind);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn map_sq_dist_f32_rejects_non_radial() {
+        let mut row = [1.0f32];
+        Kernel::linear().map_sq_dist_f32(KernelImpl::Scalar, &mut row);
     }
 
     #[test]

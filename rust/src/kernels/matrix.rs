@@ -11,6 +11,7 @@
 //! vectorizable exp). Non-radial kernels fall back to direct evaluation.
 
 use super::functions::Kernel;
+use crate::linalg::simd;
 use crate::linalg::{matmul_a_bt, mirror_lower_from_upper, syrk_a_at_upper, Matrix};
 use crate::pool;
 
@@ -94,6 +95,9 @@ pub fn cross_kernel(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Matrix {
             matmul_a_bt(a, b)
         };
         let kern = *kernel;
+        // dispatch sampled once on the calling thread (pool workers would
+        // not see a scoped override), passed into workers by value
+        let imp = simd::active();
         pool::scope_chunks(k.data_mut(), TILE * nb, |tile_idx, chunk| {
             let r0 = tile_idx * TILE;
             for (li, krow) in chunk.chunks_mut(nb).enumerate() {
@@ -110,7 +114,7 @@ pub fn cross_kernel(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Matrix {
                 for (kv, bn) in tail.iter_mut().zip(bnorm[j0..].iter()) {
                     *kv = an + bn - 2.0 * *kv;
                 }
-                kern.map_sq_dist(tail);
+                kern.map_sq_dist_with(imp, tail);
             }
         });
         if square {
@@ -137,6 +141,70 @@ pub fn cross_kernel(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Matrix {
         mirror_lower_from_upper(&mut k);
     }
     k
+}
+
+/// Single-precision cross-kernel block for the opt-in `Precision::F32`
+/// assembly path: the `na × nb` kernel values as a row-major `Vec<f32>`,
+/// never materialising an f64 copy. Features are narrowed once, row
+/// norms / dot products / the kernel map all run in f32 (8-lane `exp`
+/// under AVX2 dispatch), and callers widen once per consumed element —
+/// `GramOperator` accumulates its tile products in f32 and widens per
+/// output entry before the f64 `d×d` solves. Radial kernels only.
+///
+/// Determinism: each output row is produced by exactly one worker with a
+/// fixed j-ascending loop, so results are bitwise independent of the
+/// thread count (same contract as [`cross_kernel`]).
+pub(crate) fn cross_kernel_rows_f32(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Vec<f32> {
+    assert!(
+        kernel.is_radial(),
+        "cross_kernel_rows_f32: radial kernels only"
+    );
+    assert_eq!(a.cols(), b.cols(), "cross_kernel_rows_f32: feature dims");
+    let (na, nb, p) = (a.rows(), b.rows(), a.cols());
+    let mut k = vec![0.0f32; na * nb];
+    if na == 0 || nb == 0 {
+        return k;
+    }
+    let af: Vec<f32> = a.data().iter().map(|&v| v as f32).collect();
+    let bf: Vec<f32> = b.data().iter().map(|&v| v as f32).collect();
+    let bnorm: Vec<f32> = (0..nb)
+        .map(|j| sqnorm_f32(&bf[j * p..(j + 1) * p]))
+        .collect();
+    let kern = *kernel;
+    let imp = simd::active();
+    let (af, bf, bnorm) = (&af, &bf, &bnorm);
+    pool::scope_chunks(&mut k, TILE * nb, |tile_idx, chunk| {
+        let r0 = tile_idx * TILE;
+        for (li, krow) in chunk.chunks_mut(nb).enumerate() {
+            let i = r0 + li;
+            let arow = &af[i * p..(i + 1) * p];
+            let an = sqnorm_f32(arow);
+            for (j, kv) in krow.iter_mut().enumerate() {
+                let brow = &bf[j * p..(j + 1) * p];
+                let dot: f32 = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+                *kv = an + bnorm[j] - 2.0 * dot;
+            }
+            kern.map_sq_dist_f32(imp, krow);
+        }
+    });
+    k
+}
+
+/// [`cross_kernel_rows_f32`] widened into the standard f64 [`Matrix`] —
+/// for consumers (and the bench) that want the f32-assembled block in
+/// the common matrix type. Accuracy bounds for the narrowed path are
+/// gated in `EXPERIMENTS.md` §Mixed-precision.
+pub(crate) fn cross_kernel_f32(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Matrix {
+    let rows = cross_kernel_rows_f32(kernel, a, b);
+    let mut out = Matrix::zeros(a.rows(), b.rows());
+    for (dst, src) in out.data_mut().iter_mut().zip(rows.iter()) {
+        *dst = *src as f64;
+    }
+    out
+}
+
+fn sqnorm_f32(v: &[f32]) -> f32 {
+    v.iter().map(|x| x * x).sum()
 }
 
 /// Selected kernel columns `K[:, idx]` without forming all of `K` — the
@@ -286,6 +354,36 @@ mod tests {
                 let full = cross_kernel(&kern, &x, &x2); // distinct refs: full rectangle
                 assert_eq!(fast.data(), full.data(), "{} n={n}", kern.name());
             }
+        }
+    }
+
+    /// The f32 assembly tracks the f64 assembly to single-precision
+    /// accuracy (kernel values live in [0, 1], so absolute ~1e-5 is the
+    /// right scale), and is bitwise thread-count-independent.
+    #[test]
+    fn cross_kernel_f32_tracks_f64_assembly() {
+        use crate::pool;
+        let _guard = pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut r = Pcg64::seed(0x9006);
+        let a = randx(&mut r, 160, 5);
+        let b = randx(&mut r, 70, 5);
+        for kern in [Kernel::gaussian(0.8), Kernel::matern(1.5, 1.0)] {
+            let want = cross_kernel(&kern, &a, &b);
+            let got = cross_kernel_f32(&kern, &a, &b);
+            let mut worst = 0.0f64;
+            for (g, w) in got.data().iter().zip(want.data().iter()) {
+                worst = worst.max((g - w).abs());
+            }
+            assert!(worst < 5e-5, "{} worst abs err {worst}", kern.name());
+            let before = pool::num_threads();
+            pool::set_num_threads(1);
+            let serial = cross_kernel_rows_f32(&kern, &a, &b);
+            pool::set_num_threads(4);
+            let parallel = cross_kernel_rows_f32(&kern, &a, &b);
+            pool::set_num_threads(before);
+            assert_eq!(serial, parallel, "{}", kern.name());
         }
     }
 

@@ -22,6 +22,7 @@ mod operator;
 mod rff;
 
 pub use functions::{Kernel, KernelKind};
+pub(crate) use matrix::{cross_kernel_f32, cross_kernel_rows_f32};
 pub use matrix::{
     assembly_guard, cross_kernel, gather_rows, kernel_cols, kernel_diag, kernel_matrix,
 };

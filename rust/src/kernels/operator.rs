@@ -44,8 +44,10 @@
 //! (and not at all for `n ≤ KC`); equality tests pin both routes together.
 
 use super::functions::Kernel;
-use super::matrix::{cross_kernel, gather_rows, kernel_diag, kernel_matrix};
-use crate::linalg::{syrk_at_a, Matrix, SymOp};
+use super::matrix::{
+    cross_kernel, cross_kernel_f32, cross_kernel_rows_f32, gather_rows, kernel_diag, kernel_matrix,
+};
+use crate::linalg::{syrk_at_a, Matrix, Precision, SymOp};
 use crate::pool;
 use crate::sketch::{Sketch, SketchOps, SparseSketch};
 use std::collections::HashMap;
@@ -63,6 +65,7 @@ pub struct GramOperator<'a> {
     x: &'a Matrix,
     tile: usize,
     scale: f64,
+    precision: Precision,
 }
 
 impl<'a> GramOperator<'a> {
@@ -73,6 +76,7 @@ impl<'a> GramOperator<'a> {
             x,
             tile: DEFAULT_TILE,
             scale: 1.0,
+            precision: Precision::F64,
         }
     }
 
@@ -82,6 +86,24 @@ impl<'a> GramOperator<'a> {
         assert!(tile >= 1, "gram operator: tile >= 1");
         self.tile = tile;
         self
+    }
+
+    /// Opt into single-precision assembly + accumulation
+    /// ([`Precision::F32`]): tile panels are assembled in f32 (8-lane
+    /// `exp` under AVX2), `K·B` accumulates in f32, and each output entry
+    /// is widened to f64 exactly once. Radial kernels only — non-radial
+    /// kernels silently stay on the f64 path. All `d×d` solves downstream
+    /// remain f64 regardless. Determinism contracts (bitwise tile- and
+    /// thread-invariance) hold for the f32 path too; only the precision
+    /// of the values changes (bounds: EXPERIMENTS.md §Mixed-precision).
+    pub fn with_precision(mut self, precision: Precision) -> GramOperator<'a> {
+        self.precision = precision;
+        self
+    }
+
+    /// The accumulation precision in effect.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// The same operator representing `alpha·(current)` — e.g.
@@ -122,11 +144,20 @@ impl<'a> GramOperator<'a> {
     /// landmark fast path, `O(n·|idx|)` evaluations and memory.
     pub fn columns(&self, idx: &[usize]) -> Matrix {
         let landmarks = gather_rows(self.x, idx);
-        let mut c = cross_kernel(&self.kernel, self.x, &landmarks);
+        let mut c = if self.use_f32() {
+            cross_kernel_f32(&self.kernel, self.x, &landmarks)
+        } else {
+            cross_kernel(&self.kernel, self.x, &landmarks)
+        };
         if self.scale != 1.0 {
             c.scale(self.scale);
         }
         c
+    }
+
+    /// F32 requested *and* applicable (radial kernel).
+    fn use_f32(&self) -> bool {
+        self.precision == Precision::F32 && self.kernel.is_radial()
     }
 
     /// Streamed `α·K·B` for a tall `n×c` block, never holding more than
@@ -148,6 +179,10 @@ impl<'a> GramOperator<'a> {
         let c = b.cols();
         let mut out = Matrix::zeros(n, c);
         if c == 0 || n == 0 {
+            return out;
+        }
+        if self.use_f32() {
+            self.matmul_f32_into(b, &mut out);
             return out;
         }
         let bd = b.data();
@@ -177,6 +212,40 @@ impl<'a> GramOperator<'a> {
             r0 = r1;
         }
         out
+    }
+
+    /// The [`Precision::F32`] body of [`GramOperator::matmul`]: f32 tile
+    /// panels (`cross_kernel_rows_f32`), f32 row accumulation with the
+    /// same one-owner-per-row / j-ascending schedule as the f64 path, a
+    /// single f32→f64 widen per output entry, and the scale applied in
+    /// f64. Bitwise tile- and thread-invariant for the same reasons.
+    fn matmul_f32_into(&self, b: &Matrix, out: &mut Matrix) {
+        let n = self.n();
+        let c = b.cols();
+        let bf: Vec<f32> = b.data().iter().map(|&v| v as f32).collect();
+        let scale = self.scale;
+        let mut r0 = 0usize;
+        while r0 < n {
+            let r1 = (r0 + self.tile).min(n);
+            let xt = self.x.slice(r0, r1, 0, self.x.cols());
+            let kt = cross_kernel_rows_f32(&self.kernel, &xt, self.x);
+            let out_chunk = &mut out.data_mut()[r0 * c..r1 * c];
+            let (bf, kt) = (&bf, &kt);
+            pool::scope_chunks(out_chunk, c, |li, orow| {
+                let krow = &kt[li * n..(li + 1) * n];
+                let mut acc = vec![0.0f32; c];
+                for (j, &kv) in krow.iter().enumerate() {
+                    let brow = &bf[j * c..(j + 1) * c];
+                    for (a, &bv) in acc.iter_mut().zip(brow.iter()) {
+                        *a += kv * bv;
+                    }
+                }
+                for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                    *o = a as f64 * scale;
+                }
+            });
+            r0 = r1;
+        }
     }
 
     /// Streamed `α·K·v` matrix–vector product.
@@ -322,6 +391,69 @@ mod tests {
             }
         }
         pool::set_num_threads(before);
+    }
+
+    /// The f32 streamed product tracks the f64 one to single-precision
+    /// accumulation accuracy, stays bitwise tile/thread-invariant, and
+    /// non-radial kernels silently keep the f64 path.
+    #[test]
+    fn f32_precision_matmul_tracks_f64_and_stays_invariant() {
+        use crate::linalg::Precision;
+        let _guard = pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let (kern, x, mut rng) = setup(260, 0x0907);
+        let b = Matrix::from_fn(260, 6, |_, _| rng.normal());
+        let f64_out = GramOperator::new(kern, &x).matmul(&b);
+        let op32 = GramOperator::new(kern, &x).with_precision(Precision::F32);
+        let f32_out = op32.matmul(&b);
+        assert_close(&f32_out, &f64_out, 1e-5 * 260.0, "f32 K·B vs f64");
+        let before = pool::num_threads();
+        for &tile in &[1usize, 37, DEFAULT_TILE, 260] {
+            for &threads in &[1usize, 4] {
+                pool::set_num_threads(threads);
+                let got = op32.with_tile(tile).matmul(&b);
+                assert_eq!(got.data(), f32_out.data(), "tile={tile} t={threads}");
+            }
+        }
+        pool::set_num_threads(before);
+        // non-radial: F32 request is a no-op, bitwise the f64 path
+        let lin = Kernel::linear();
+        let a = GramOperator::new(lin, &x).matmul(&b);
+        let b32 = GramOperator::new(lin, &x)
+            .with_precision(Precision::F32)
+            .matmul(&b);
+        assert_eq!(a.data(), b32.data());
+    }
+
+    /// The streamed determinism contract holds under **both** dispatch
+    /// modes: forced-scalar and host-detected kernels each give bitwise
+    /// tile/thread-invariant products (the two modes differ from each
+    /// other only by FMA grouping, so cross-mode equality is not, and
+    /// must not be, asserted bitwise).
+    #[test]
+    fn streamed_invariance_holds_under_both_dispatch_modes() {
+        use crate::linalg::{with_kernel, KernelImpl};
+        let _guard = pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let (kern, x, mut rng) = setup(301, 0x0908);
+        let b = Matrix::from_fn(301, 5, |_, _| rng.normal());
+        for imp in [KernelImpl::Scalar, crate::linalg::simd::active()] {
+            with_kernel(imp, || {
+                let before = pool::num_threads();
+                pool::set_num_threads(1);
+                let reference = GramOperator::new(kern, &x).matmul(&b);
+                for &tile in &[37usize, DEFAULT_TILE, 301] {
+                    for &threads in &[1usize, 4] {
+                        pool::set_num_threads(threads);
+                        let got = GramOperator::new(kern, &x).with_tile(tile).matmul(&b);
+                        assert_eq!(got.data(), reference.data(), "{imp:?} tile={tile}");
+                    }
+                }
+                pool::set_num_threads(before);
+            });
+        }
     }
 
     /// Sketched Grams through the operator equal the dense-K reference for

@@ -3,9 +3,9 @@
 //! sketch at runtime.
 
 use crate::kernels::{cross_kernel, gather_rows, Kernel};
-use crate::linalg::{chol_factor, CholFactor, Matrix};
+use crate::linalg::{chol_factor, CholFactor, Matrix, Precision};
 use crate::rng::Pcg64;
-use crate::sketch::{sketch_gram, IncrementalGram, Sketch, SketchBuilder, SketchOps};
+use crate::sketch::{sketch_gram_with, IncrementalGram, Sketch, SketchBuilder, SketchOps};
 use crate::stats::{amm_error_proxy, rel_change, StoppingRule};
 use crate::util::timer::Timer;
 
@@ -178,10 +178,32 @@ impl SketchedKrr {
         lambda: f64,
         k_full: Option<&Matrix>,
     ) -> Option<SketchedKrr> {
+        Self::fit_with(kernel, x, y, sketch, lambda, k_full, Precision::F64)
+    }
+
+    /// [`SketchedKrr::fit`] with an explicit Gram-accumulation
+    /// [`Precision`]. `F32` assembles kernel panels and accumulates `K·S`
+    /// in single precision (the `exp`-bound hot path runs the 8-lane f32
+    /// kernel map under AVX2 dispatch) and widens once per Gram entry;
+    /// the `d×d` system, its Cholesky factorisation and every solve stay
+    /// f64, so θ degrades only through the Gram entries (~1e-7 relative
+    /// each — end-to-end bounds gated in EXPERIMENTS.md §Mixed-precision).
+    /// The adaptive fit ([`SketchedKrr::fit_adaptive`]) intentionally has
+    /// no precision knob: its incremental rank-update identities assume
+    /// the Grams are exact in f64.
+    pub fn fit_with(
+        kernel: Kernel,
+        x: &Matrix,
+        y: &[f64],
+        sketch: &Sketch,
+        lambda: f64,
+        k_full: Option<&Matrix>,
+        precision: Precision,
+    ) -> Option<SketchedKrr> {
         let n = x.rows();
         assert_eq!(y.len(), n, "sketched krr: |y| != n");
         let mut t = Timer::start();
-        let gram = sketch_gram(&kernel, x, sketch, k_full);
+        let gram = sketch_gram_with(&kernel, x, sketch, k_full, precision);
         let gram_secs = t.lap();
 
         // A = SᵀK²S + nλ·SᵀKS ; rhs = SᵀKY = (KS)ᵀ y
@@ -480,6 +502,36 @@ mod tests {
             assert!((a - b).abs() < 1e-8, "{a} vs {b}");
         }
         assert!(skrr.num_landmarks() <= 40);
+    }
+
+    /// End-to-end accuracy bound for the mixed-precision path: an F32 fit
+    /// tracks the F64 fit on θ and the fitted values to well inside the
+    /// paper's statistical error scale (the Gram entries each carry
+    /// ~1e-7 relative noise; the f64 d×d solve does not amplify it beyond
+    /// the system's modest conditioning). Also pins that F64 through
+    /// `fit_with` is exactly `fit`.
+    #[test]
+    fn f32_precision_fit_tracks_f64_fit() {
+        let (x, y, kern, lam) = toy_problem(200, 130);
+        let mut rng = Pcg64::seed(131);
+        let s = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(200, 12, &mut rng);
+        let f64_fit = SketchedKrr::fit(kern, &x, &y, &s, lam, None).unwrap();
+        let same = SketchedKrr::fit_with(kern, &x, &y, &s, lam, None, Precision::F64).unwrap();
+        assert_eq!(f64_fit.theta(), same.theta(), "F64 fit_with == fit");
+        let f32_fit = SketchedKrr::fit_with(kern, &x, &y, &s, lam, None, Precision::F32).unwrap();
+        let theta_scale = f64_fit
+            .theta()
+            .iter()
+            .fold(0.0f64, |m, v| m.max(v.abs()));
+        for (a, b) in f32_fit.theta().iter().zip(f64_fit.theta().iter()) {
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + theta_scale),
+                "theta {a} vs {b}"
+            );
+        }
+        for (a, b) in f32_fit.fitted().iter().zip(f64_fit.fitted().iter()) {
+            assert!((a - b).abs() < 1e-3, "fitted {a} vs {b}");
+        }
     }
 
     #[test]

@@ -40,10 +40,19 @@
 //! accumulation-sketched `d×d` pencil whose term count `m` is again
 //! chosen at runtime by a [`stats::StoppingRule`].
 //!
+//! The hot paths themselves are explicitly vectorized (DESIGN.md §8):
+//! `linalg::simd` selects an AVX2+FMA / NEON / scalar micro-kernel once
+//! at runtime (`ACCUMKRR_FORCE_SCALAR=1` pins the fallback) and feeds
+//! the packed GEMM driver and the radial kernel map, while an opt-in
+//! [`linalg::Precision`] knob runs the `O(n²)` assembly side in f32 —
+//! every `d×d` solve stays f64. Determinism is preserved *per selected
+//! kernel*: bitwise tile/thread invariance holds under each dispatch.
+//!
 //! The crate is organised in three layers (README.md has the map):
 //!
-//! * **Substrates** (built from scratch — the offline image only ships the
-//!   `xla` and `anyhow` crates): [`rng`], [`linalg`], [`pool`], [`util`].
+//! * **Substrates** (built entirely from scratch — the default build has
+//!   **zero** external dependencies; the optional `xla` feature pulls the
+//!   in-tree PJRT stub crate): [`rng`], [`linalg`], [`pool`], [`util`].
 //! * **Core statistical library**: [`kernels`], [`sketch`], [`leverage`],
 //!   [`krr`], [`cluster`], [`stats`], [`data`].
 //! * **System layer**: [`runtime`] (PJRT execution of AOT-compiled JAX/Pallas
@@ -100,6 +109,6 @@ pub mod util;
 pub use cluster::{LaplacianOperator, SpectralClustering};
 pub use kernels::{GramOperator, Kernel};
 pub use krr::{AdaptiveOptions, KrrModel, SketchedKrr};
-pub use linalg::Matrix;
+pub use linalg::{Matrix, Precision};
 pub use rng::Pcg64;
 pub use sketch::{AccumSketch, Sketch, SketchKind, SketchOps};

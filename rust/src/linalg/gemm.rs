@@ -11,20 +11,27 @@
 //! in `sketch::apply`. Before/after medians for the packed rewrite are
 //! recorded in EXPERIMENTS.md §Perf (measured by `bench::hotpath`).
 //!
+//! The micro-kernel itself lives in [`super::simd`]: the packed `MR×kc`
+//! / `kc×NR` strip layout produced here is exactly what the AVX2/NEON
+//! 4×8 kernels consume, so runtime dispatch swaps the innermost loop
+//! without touching the packing or blocking. The dispatch is sampled
+//! once per GEMM call on the calling thread and passed into the pool
+//! workers by value.
+//!
 //! Determinism: every element of C is produced inside exactly one
 //! row-panel chunk, and within a chunk the loop structure (`kc` blocks
 //! outer, micro-tiles inner, `p` ascending inside the micro-kernel) is
 //! fixed. Chunk boundaries depend only on the `MC` constant, never on the
 //! worker count, so **all** variants are bitwise independent of the
-//! thread count — the contract the `at_b`/`syrk` callers rely on.
+//! thread count — the contract the `at_b`/`syrk` callers rely on. The
+//! bitwise guarantee holds *per selected kernel*: scalar and vector
+//! kernels contract FMAs differently, so cross-dispatch comparisons are
+//! tolerance-based (see `simd` module docs).
 
+use super::simd::{self, MR, NR};
 use super::Matrix;
 use crate::pool;
 
-/// Micro-tile rows: the accumulator holds `MR×NR` partial sums in locals.
-const MR: usize = 4;
-/// Micro-tile columns (one or two SIMD vectors per accumulator row).
-const NR: usize = 8;
 /// Row-panel height a single task works on (the `mc` of the blocking
 /// scheme; also the parallel split unit, so it must not depend on the
 /// worker count).
@@ -148,6 +155,10 @@ where
     let cdat = c.data_mut();
     let a_at = &a_at;
     let bpack = &bpack;
+    // Sample the micro-kernel dispatch ONCE on the calling thread (pool
+    // workers are fresh threads where a scoped `with_kernel` override
+    // would not be visible) and pass it into every worker by value.
+    let imp = simd::active();
     pool::scope_chunks(cdat, MC * n, |panel_idx, chunk| {
         let r0 = panel_idx * MC;
         let rows = chunk.len() / n;
@@ -192,7 +203,7 @@ where
                         }
                         let bstrip = &bblock[s * kc * NR..(s + 1) * kc * NR];
                         let mut acc = [[0.0f64; NR]; MR];
-                        micro_kernel(kc, astrip, bstrip, &mut acc);
+                        simd::micro_kernel(imp, kc, astrip, bstrip, &mut acc);
                         let jn = NR.min(n - j0);
                         for r in 0..rn {
                             let base = (i0 + r) * n + j0;
@@ -212,24 +223,9 @@ where
     c
 }
 
-/// The register-blocked heart: `acc[r][t] += Σ_p a[p·MR+r] · b[p·NR+t]`.
-/// Both operands arrive packed and zero-padded, so the loops are
-/// branch-free at fixed trip counts and the `t` loop vectorises.
-#[inline(always)]
-fn micro_kernel(kc: usize, a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]) {
-    for p in 0..kc {
-        let av = &a[p * MR..(p + 1) * MR];
-        let bv = &b[p * NR..(p + 1) * NR];
-        for r in 0..MR {
-            let ar = av[r];
-            for (cv, bt) in acc[r].iter_mut().zip(bv.iter()) {
-                *cv += ar * *bt;
-            }
-        }
-    }
-}
-
 /// Serial i-k-j fallback for tiny products where packing overhead loses.
+/// Always scalar (no micro-kernel involved), so tiny products are bitwise
+/// identical under every dispatch mode.
 fn gemm_small<FA, FB>(
     m: usize,
     k: usize,
@@ -448,36 +444,90 @@ mod tests {
         assert_eq!((s.rows(), s.cols()), (3, 3));
     }
 
+    /// Scalar vs whatever this host detects (AVX2/NEON, or scalar again):
+    /// all four variants over micro-kernel edge shapes — m,n,k sweeping
+    /// 1, MR−1, MR, NR+1 and 97 (crosses no blocking boundary evenly).
+    /// Scalar and FMA kernels round differently, so this is a tight
+    /// relative comparison, **not** bitwise (see `simd` module docs); on
+    /// a scalar-only host both runs take the same path and the check is
+    /// trivially exact.
+    #[test]
+    fn scalar_and_simd_dispatch_agree_on_edge_shapes() {
+        use super::simd::{with_kernel, KernelImpl};
+        let mut r = Pcg64::seed(27);
+        let dims = [1usize, MR - 1, MR, NR + 1, 97];
+        let rel_close = |x: &Matrix, y: &Matrix| {
+            x.data()
+                .iter()
+                .zip(y.data().iter())
+                .all(|(a, b)| (a - b).abs() <= 1e-12 * (1.0 + a.abs().max(b.abs())))
+        };
+        for &m in &dims {
+            for &k in &dims {
+                for &n in &dims {
+                    let a = randm(&mut r, m, k);
+                    let b = randm(&mut r, k, n);
+                    let bt = randm(&mut r, n, k);
+                    let at = randm(&mut r, k, m);
+                    let sc = with_kernel(KernelImpl::Scalar, || {
+                        (
+                            matmul(&a, &b),
+                            matmul_a_bt(&a, &bt),
+                            matmul_at_b(&at, &b),
+                            syrk_at_a(&b),
+                        )
+                    });
+                    let vc = (
+                        matmul(&a, &b),
+                        matmul_a_bt(&a, &bt),
+                        matmul_at_b(&at, &b),
+                        syrk_at_a(&b),
+                    );
+                    assert!(rel_close(&sc.0, &vc.0), "matmul {m}x{k}x{n}");
+                    assert!(rel_close(&sc.1, &vc.1), "a_bt {m}x{k}x{n}");
+                    assert!(rel_close(&sc.2, &vc.2), "at_b {m}x{k}x{n}");
+                    assert!(rel_close(&sc.3, &vc.3), "syrk {k}x{n}");
+                }
+            }
+        }
+    }
+
     /// Every element of C is produced inside one fixed-boundary row-panel
     /// chunk, so the parallel split is bitwise identical to the serial
-    /// path — for the packed paths of all four variants.
+    /// path — for the packed paths of all four variants, under **both**
+    /// dispatch modes (forced scalar and whatever this host detects).
     #[test]
     fn at_b_and_syrk_parallel_match_serial_exactly() {
+        use super::simd::{active, with_kernel, KernelImpl};
         use crate::pool;
         let _guard = pool::TEST_THREADS_LOCK
             .lock()
             .unwrap_or_else(|e| e.into_inner());
-        let mut r = Pcg64::seed(0x9002);
-        // > MC output rows so the pool actually splits
-        let a = randm(&mut r, 150, 70);
-        let b = randm(&mut r, 150, 33);
-        let big = randm(&mut r, 90, 130);
-        let wide = randm(&mut r, 130, 80);
-        let before = pool::num_threads();
-        pool::set_num_threads(1);
-        let atb_serial = matmul_at_b(&a, &b);
-        let syrk_serial = syrk_at_a(&big);
-        let mm_serial = matmul(&big, &wide);
-        let abt_serial = matmul_a_bt(&big, &wide.transpose());
-        pool::set_num_threads(4);
-        let atb_par = matmul_at_b(&a, &b);
-        let syrk_par = syrk_at_a(&big);
-        let mm_par = matmul(&big, &wide);
-        let abt_par = matmul_a_bt(&big, &wide.transpose());
-        pool::set_num_threads(before);
-        assert_eq!(atb_serial.data(), atb_par.data());
-        assert_eq!(syrk_serial.data(), syrk_par.data());
-        assert_eq!(mm_serial.data(), mm_par.data());
-        assert_eq!(abt_serial.data(), abt_par.data());
+        for imp in [KernelImpl::Scalar, active()] {
+            with_kernel(imp, || {
+                let mut r = Pcg64::seed(0x9002);
+                // > MC output rows so the pool actually splits
+                let a = randm(&mut r, 150, 70);
+                let b = randm(&mut r, 150, 33);
+                let big = randm(&mut r, 90, 130);
+                let wide = randm(&mut r, 130, 80);
+                let before = pool::num_threads();
+                pool::set_num_threads(1);
+                let atb_serial = matmul_at_b(&a, &b);
+                let syrk_serial = syrk_at_a(&big);
+                let mm_serial = matmul(&big, &wide);
+                let abt_serial = matmul_a_bt(&big, &wide.transpose());
+                pool::set_num_threads(4);
+                let atb_par = matmul_at_b(&a, &b);
+                let syrk_par = syrk_at_a(&big);
+                let mm_par = matmul(&big, &wide);
+                let abt_par = matmul_a_bt(&big, &wide.transpose());
+                pool::set_num_threads(before);
+                assert_eq!(atb_serial.data(), atb_par.data(), "{imp:?}");
+                assert_eq!(syrk_serial.data(), syrk_par.data(), "{imp:?}");
+                assert_eq!(mm_serial.data(), mm_par.data(), "{imp:?}");
+                assert_eq!(abt_serial.data(), abt_par.data(), "{imp:?}");
+            });
+        }
     }
 }

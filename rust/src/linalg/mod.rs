@@ -10,12 +10,19 @@
 //! iteration for the spectral application paths, driveable by implicit
 //! operators through the [`SymOp`] trait), and operator-norm estimation
 //! by power iteration ([`norms`]).
+//!
+//! The GEMM micro-kernel and the transcendental kernel map are routed
+//! through [`simd`] — a one-time runtime dispatch over explicit
+//! AVX2+FMA / NEON implementations with a portable scalar fallback
+//! ([`kernel_name`] reports the selection, [`with_kernel`] pins it for a
+//! scope, `ACCUMKRR_FORCE_SCALAR=1` pins the fallback process-wide).
 
 mod chol;
 mod eig;
 mod gemm;
 mod matrix;
 mod norms;
+pub(crate) mod simd;
 
 pub use chol::{chol_factor, chol_solve, chol_solve_many, CholFactor};
 pub use eig::{
@@ -25,3 +32,4 @@ pub(crate) use gemm::{mirror_lower_from_upper, syrk_a_at_upper};
 pub use gemm::{matmul, matmul_at_b, matmul_a_bt, syrk_a_at, syrk_at_a};
 pub use matrix::Matrix;
 pub use norms::{fro_norm, op_norm, op_norm_rect};
+pub use simd::{detected_features, kernel_name, with_kernel, KernelImpl, Precision};

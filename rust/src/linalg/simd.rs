@@ -1,0 +1,754 @@
+//! SIMD micro-kernel dispatch: explicit AVX2+FMA (x86_64) and NEON
+//! (aarch64) inner kernels behind one-time runtime feature detection,
+//! with the portable scalar kernel as the always-correct fallback.
+//!
+//! Everything that is hot *and* vectorisable funnels through here:
+//!
+//! * the `MR×NR` GEMM micro-kernel consumed by the packed driver in
+//!   [`super::gemm`] (packing layout unchanged — the dispatch swaps only
+//!   the register-tile arithmetic, so all four product variants get the
+//!   vector kernel for free);
+//! * the lane-parallel `exp` used by the batched kernel map
+//!   ([`crate::kernels::Kernel::map_sq_dist`]), in f64 (4-wide) and f32
+//!   (8-wide) flavours.
+//!
+//! **Dispatch model.** [`active`] answers "which kernel?" from, in
+//! order: a thread-local override (see [`with_kernel`]), then a
+//! process-wide `OnceLock` initialised on first use from the
+//! `ACCUMKRR_FORCE_SCALAR` env var and `is_x86_feature_detected!`. Hot
+//! entry points sample the dispatch **once on the calling thread** and
+//! pass the choice into their worker closures, so a scoped override
+//! covers the whole parallel computation and a worker thread can never
+//! disagree with its coordinator mid-product.
+//!
+//! **Determinism contract (per selected kernel).** For a fixed
+//! [`KernelImpl`], every result is bitwise independent of thread count
+//! and tile size — the FMA tile accumulates in the same fixed order the
+//! scalar kernel does, and the lane-parallel `exp` pushes slice tails
+//! through the same vector routine via a padded lane buffer, so each
+//! element's value is independent of its position in the slice. *Across*
+//! kernels, FMA contraction means AVX2/NEON results differ from scalar
+//! by accumulated ulps; tests compare dispatches with tight relative
+//! tolerances, never bitwise. DESIGN.md §8 spells out the policy.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Micro-tile rows: the accumulator holds `MR×NR` partial sums in
+/// registers (shared with the packed driver in [`super::gemm`]).
+pub(crate) const MR: usize = 4;
+/// Micro-tile columns: two 4-lane f64 vectors per accumulator row.
+pub(crate) const NR: usize = 8;
+
+/// Which inner micro-kernel implementation the dispatch selected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelImpl {
+    /// Portable Rust fallback (always correct on every target).
+    Scalar,
+    /// AVX2 + FMA 4×8 register tile (x86_64, runtime-detected).
+    Avx2,
+    /// NEON 4×8 register tile (aarch64 — a baseline feature there).
+    Neon,
+}
+
+impl KernelImpl {
+    /// Stable name recorded in bench output and host stamps.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelImpl::Scalar => "scalar",
+            KernelImpl::Avx2 => "avx2",
+            KernelImpl::Neon => "neon",
+        }
+    }
+}
+
+/// Numeric accumulation policy for the kernel-assembly and sketch-apply
+/// hot paths. The `d×d` solve side (`chol`, pencil, eig) always runs in
+/// f64 regardless of this knob — mixed precision buys lane width on the
+/// `O(n·tile)` assembly work, not on the conditioning-sensitive solves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Assemble and accumulate in f64 (default; all bitwise contracts).
+    #[default]
+    F64,
+    /// Assemble kernel tiles and accumulate `K·B` rows in f32, widening
+    /// to f64 once per output element. Accuracy bounds are quantified in
+    /// EXPERIMENTS.md §Mixed-precision.
+    F32,
+}
+
+impl Precision {
+    /// Stable name used in job schemas and bench output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    /// Parse a job-schema / CLI spelling.
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s {
+            "f64" | "F64" | "double" => Ok(Precision::F64),
+            "f32" | "F32" | "single" => Ok(Precision::F32),
+            other => Err(format!("precision: expected f32 or f64, got {other:?}")),
+        }
+    }
+}
+
+static DETECTED: OnceLock<KernelImpl> = OnceLock::new();
+
+thread_local! {
+    /// Scoped dispatch override (tests, bench uplift runs). Thread-local
+    /// on purpose: a global toggle would race against concurrently
+    /// running tests that rely on the ambient dispatch.
+    static OVERRIDE: Cell<Option<KernelImpl>> = const { Cell::new(None) };
+}
+
+fn force_scalar_env() -> bool {
+    match std::env::var("ACCUMKRR_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> KernelImpl {
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        KernelImpl::Avx2
+    } else {
+        KernelImpl::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> KernelImpl {
+    // NEON is baseline on every aarch64 target std supports.
+    KernelImpl::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> KernelImpl {
+    KernelImpl::Scalar
+}
+
+fn detect() -> KernelImpl {
+    if force_scalar_env() {
+        KernelImpl::Scalar
+    } else {
+        detect_arch()
+    }
+}
+
+/// The micro-kernel implementation in effect on this thread: a scoped
+/// [`with_kernel`] override if present, else the process-wide detection
+/// (`ACCUMKRR_FORCE_SCALAR=1` pins the fallback; cached in a `OnceLock`).
+pub fn active() -> KernelImpl {
+    if let Some(k) = OVERRIDE.with(|c| c.get()) {
+        return k;
+    }
+    *DETECTED.get_or_init(detect)
+}
+
+/// Name of the dispatch in effect (`"scalar"` / `"avx2"` / `"neon"`).
+pub fn kernel_name() -> &'static str {
+    active().name()
+}
+
+/// CPU feature set the detection probed, for provenance stamps
+/// (`runtime::HostStamp`): what the *hardware* offers, independent of
+/// any override pinning the dispatch below it.
+pub fn detected_features() -> String {
+    detected_features_impl()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detected_features_impl() -> String {
+    let mut feats = vec!["sse2"];
+    if std::arch::is_x86_feature_detected!("avx") {
+        feats.push("avx");
+    }
+    if std::arch::is_x86_feature_detected!("avx2") {
+        feats.push("avx2");
+    }
+    if std::arch::is_x86_feature_detected!("fma") {
+        feats.push("fma");
+    }
+    feats.join("+")
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detected_features_impl() -> String {
+    "neon".to_string()
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detected_features_impl() -> String {
+    "portable".to_string()
+}
+
+/// Run `f` with the dispatch pinned to `k` on this thread, restoring the
+/// previous state afterwards (also on panic). Entry points sample the
+/// dispatch once on the calling thread and propagate it into their
+/// worker closures, so the override covers whole parallel computations
+/// started inside `f`. This is the in-process companion to the
+/// `ACCUMKRR_FORCE_SCALAR` env pin: tests and the bench's uplift rows
+/// use it to run the same computation under two dispatches.
+pub fn with_kernel<R>(k: KernelImpl, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<KernelImpl>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(OVERRIDE.with(|c| c.replace(Some(k))));
+    f()
+}
+
+// ---------------------------------------------------------------------
+// GEMM micro-kernel
+// ---------------------------------------------------------------------
+
+/// The register-blocked heart of the packed GEMM driver:
+/// `acc[r][t] += Σ_p a[p·MR+r] · b[p·NR+t]`, dispatched per `imp`. Both
+/// operands arrive packed and zero-padded (see [`super::gemm`]), so
+/// every implementation runs branch-free at fixed trip counts.
+#[inline(always)]
+pub(crate) fn micro_kernel(
+    imp: KernelImpl,
+    kc: usize,
+    a: &[f64],
+    b: &[f64],
+    acc: &mut [[f64; NR]; MR],
+) {
+    match imp {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `imp` is Avx2 only when runtime detection saw avx2+fma
+        // on this CPU; the packed operands satisfy the length contract
+        // (`a ≥ kc·MR`, `b ≥ kc·NR`) asserted inside.
+        KernelImpl::Avx2 => unsafe { avx2::micro_kernel_4x8(kc, a, b, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline aarch64 feature; same length contract.
+        KernelImpl::Neon => unsafe { neon::micro_kernel_4x8(kc, a, b, acc) },
+        _ => micro_kernel_scalar(kc, a, b, acc),
+    }
+}
+
+/// Portable micro-kernel (the pre-dispatch implementation, unchanged —
+/// the scalar baseline every SIMD kernel is tested against). LLVM
+/// autovectorises the fixed-width `t` loop on targets with vector units
+/// enabled at compile time.
+#[inline(always)]
+fn micro_kernel_scalar(kc: usize, a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for p in 0..kc {
+        let av = &a[p * MR..(p + 1) * MR];
+        let bv = &b[p * NR..(p + 1) * NR];
+        for r in 0..MR {
+            let ar = av[r];
+            for (cv, bt) in acc[r].iter_mut().zip(bv.iter()) {
+                *cv += ar * *bt;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lane-parallel exp
+// ---------------------------------------------------------------------
+
+/// `xs[i] = exp(xs[i])` elementwise, dispatched per `imp`. Under SIMD
+/// dispatch each element's result is independent of its position in the
+/// slice (tails run through the same vector routine via a padded lane
+/// buffer) — the property the bitwise symmetric-vs-rectangular assembly
+/// test relies on, since the two paths map differently-aligned row
+/// suffixes.
+pub(crate) fn map_exp(imp: KernelImpl, xs: &mut [f64]) {
+    match imp {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 implies runtime-detected avx2+fma.
+        KernelImpl::Avx2 => unsafe { avx2::map_exp(xs) },
+        _ => {
+            for v in xs.iter_mut() {
+                *v = exp_fast(*v);
+            }
+        }
+    }
+}
+
+/// f32 twin of [`map_exp`] for the mixed-precision assembly path
+/// (8 lanes per AVX2 vector).
+pub(crate) fn map_exp_f32(imp: KernelImpl, xs: &mut [f32]) {
+    match imp {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 implies runtime-detected avx2+fma.
+        KernelImpl::Avx2 => unsafe { avx2::map_exp_f32(xs) },
+        _ => {
+            for v in xs.iter_mut() {
+                *v = exp_fast_f32(*v);
+            }
+        }
+    }
+}
+
+/// Branch-light scalar `exp` (moved here from `kernels::functions` when
+/// the dispatch layer grew a vector twin): Cody–Waite range reduction
+/// (`x = n·ln2 + r`, `|r| ≤ ln2/2`) followed by a degree-12
+/// Taylor–Horner polynomial and an exact power-of-two scale via exponent
+/// bits. No division and no libm call. Accurate to a few ulp for
+/// `x ∈ [−708, 709]` (the truncation tail `r¹³/13!` is below 2e-16
+/// relative); saturates to `0`/`∞` outside.
+#[inline]
+pub(crate) fn exp_fast(x: f64) -> f64 {
+    if x < -708.0 {
+        return 0.0;
+    }
+    if x > 709.0 {
+        return f64::INFINITY;
+    }
+    let n = (x * std::f64::consts::LOG2_E).round();
+    let r = (x - n * LN2_HI) - n * LN2_LO;
+    let mut p = 1.0 / 479_001_600.0; // 1/12!
+    p = p * r + 1.0 / 39_916_800.0; // 1/11!
+    p = p * r + 1.0 / 3_628_800.0; // 1/10!
+    p = p * r + 1.0 / 362_880.0; // 1/9!
+    p = p * r + 1.0 / 40_320.0; // 1/8!
+    p = p * r + 1.0 / 5_040.0; // 1/7!
+    p = p * r + 1.0 / 720.0; // 1/6!
+    p = p * r + 1.0 / 120.0; // 1/5!
+    p = p * r + 1.0 / 24.0; // 1/4!
+    p = p * r + 1.0 / 6.0; // 1/3!
+    p = p * r + 0.5; // 1/2!
+    p = p * r + 1.0; // 1/1!
+    p = p * r + 1.0; // 1/0!
+    // 2ⁿ exactly, through the exponent field (n ∈ [−1022, 1023] here)
+    let scale = f64::from_bits(((n as i64 + 1023) as u64) << 52);
+    p * scale
+}
+
+const LN2_HI: f64 = 6.931_471_803_691_238_164_90e-1;
+const LN2_LO: f64 = 1.908_214_929_270_587_700_02e-10;
+
+/// f32 scalar `exp` for the mixed-precision path: same structure as
+/// [`exp_fast`] with a degree-7 polynomial (truncation `r⁸/8!` ≈ 5e-9 at
+/// `|r| ≤ ln2/2`, below f32 eps) and f32 Cody–Waite constants. Max
+/// relative error ≈ 9e-8 (< 1 ulp) over `[−87, 88]`; saturates outside.
+#[inline]
+pub(crate) fn exp_fast_f32(x: f32) -> f32 {
+    if x < -87.0 {
+        return 0.0;
+    }
+    if x > 88.0 {
+        return f32::INFINITY;
+    }
+    let n = (x * std::f32::consts::LOG2_E).round();
+    let r = (x - n * LN2_HI_F32) - n * LN2_LO_F32;
+    let mut p = 1.0 / 5_040.0f32; // 1/7!
+    p = p * r + 1.0 / 720.0; // 1/6!
+    p = p * r + 1.0 / 120.0; // 1/5!
+    p = p * r + 1.0 / 24.0; // 1/4!
+    p = p * r + 1.0 / 6.0; // 1/3!
+    p = p * r + 0.5; // 1/2!
+    p = p * r + 1.0; // 1/1!
+    p = p * r + 1.0; // 1/0!
+    // 2ⁿ via the exponent field (n ∈ [−126, 127] inside the guards)
+    let scale = f32::from_bits(((n as i32 + 127) as u32) << 23);
+    p * scale
+}
+
+const LN2_HI_F32: f32 = 0.693_359_375; // 355/512, exact in f32
+const LN2_LO_F32: f32 = -2.121_944_4e-4;
+
+// ---------------------------------------------------------------------
+// AVX2 + FMA implementations (x86_64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{LN2_HI, LN2_HI_F32, LN2_LO, LN2_LO_F32, MR, NR};
+    use std::arch::x86_64::*;
+
+    /// 4×8 f64 register tile: 8 accumulator vectors (4 rows × 2 lanes of
+    /// 4), one broadcast per packed A element, FMA into the tile. The
+    /// accumulation order per element (`p` ascending) matches the scalar
+    /// kernel; only FMA contraction separates the two numerically.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified `avx2` and `fma`, and pass
+    /// packed panels with `a.len() ≥ kc·MR`, `b.len() ≥ kc·NR`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn micro_kernel_4x8(
+        kc: usize,
+        a: &[f64],
+        b: &[f64],
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
+        // SAFETY: all pointer offsets are in-bounds by the length
+        // contract above; loadu/storeu tolerate any alignment.
+        unsafe {
+            let mut acc_v = [[_mm256_setzero_pd(); 2]; MR];
+            for r in 0..MR {
+                acc_v[r][0] = _mm256_loadu_pd(acc[r].as_ptr());
+                acc_v[r][1] = _mm256_loadu_pd(acc[r].as_ptr().add(4));
+            }
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            for p in 0..kc {
+                let b0 = _mm256_loadu_pd(bp.add(p * NR));
+                let b1 = _mm256_loadu_pd(bp.add(p * NR + 4));
+                let arow = ap.add(p * MR);
+                for r in 0..MR {
+                    let av = _mm256_set1_pd(*arow.add(r));
+                    acc_v[r][0] = _mm256_fmadd_pd(av, b0, acc_v[r][0]);
+                    acc_v[r][1] = _mm256_fmadd_pd(av, b1, acc_v[r][1]);
+                }
+            }
+            for r in 0..MR {
+                _mm256_storeu_pd(acc[r].as_mut_ptr(), acc_v[r][0]);
+                _mm256_storeu_pd(acc[r].as_mut_ptr().add(4), acc_v[r][1]);
+            }
+        }
+    }
+
+    /// 4-lane f64 `exp`: the scalar Cody–Waite/Horner pipeline verbatim,
+    /// with the float→int n conversion done by the `1.5·2⁵²` magic-add
+    /// bit trick (AVX2 has no packed f64→i64 convert) and saturation
+    /// applied by mask blends against the *unclamped* input, matching
+    /// the scalar guards exactly.
+    ///
+    /// # Safety
+    /// Requires runtime-verified `avx2` and `fma`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn exp4(x: __m256d) -> __m256d {
+        // SAFETY: pure register arithmetic; no memory access.
+        unsafe {
+            let lo_mask = _mm256_cmp_pd::<_CMP_LT_OQ>(x, _mm256_set1_pd(-708.0));
+            let hi_mask = _mm256_cmp_pd::<_CMP_GT_OQ>(x, _mm256_set1_pd(709.0));
+            // clamp so n/scale stay in range on saturated lanes (their
+            // value is overwritten by the blends below)
+            let xc = _mm256_max_pd(
+                _mm256_set1_pd(-708.0),
+                _mm256_min_pd(x, _mm256_set1_pd(709.0)),
+            );
+            let n = _mm256_round_pd::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
+                _mm256_mul_pd(xc, _mm256_set1_pd(std::f64::consts::LOG2_E)),
+            );
+            let r = _mm256_fnmadd_pd(
+                n,
+                _mm256_set1_pd(LN2_LO),
+                _mm256_fnmadd_pd(n, _mm256_set1_pd(LN2_HI), xc),
+            );
+            let mut p = _mm256_set1_pd(1.0 / 479_001_600.0);
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0 / 39_916_800.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0 / 3_628_800.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0 / 362_880.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0 / 40_320.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0 / 5_040.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0 / 720.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0 / 120.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0 / 24.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0 / 6.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(0.5));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0));
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0));
+            // 2ⁿ: bits(n + 1.5·2⁵²) − bits(1.5·2⁵²) recovers n as i64
+            // (exact for |n| < 2⁵¹), then (n + 1023) << 52 is the scale.
+            const SHIFT: f64 = 6_755_399_441_055_744.0;
+            let nbits = _mm256_castpd_si256(_mm256_add_pd(n, _mm256_set1_pd(SHIFT)));
+            let nint = _mm256_sub_epi64(nbits, _mm256_castpd_si256(_mm256_set1_pd(SHIFT)));
+            let scale = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(_mm256_add_epi64(
+                nint,
+                _mm256_set1_epi64x(1023),
+            )));
+            let y = _mm256_mul_pd(p, scale);
+            let y = _mm256_andnot_pd(lo_mask, y);
+            _mm256_blendv_pd(y, _mm256_set1_pd(f64::INFINITY), hi_mask)
+        }
+    }
+
+    /// Apply [`exp4`] over a slice. The tail (`len % 4`) runs through the
+    /// same vector routine via a padded lane buffer so every element's
+    /// result is independent of its position and of the slice length.
+    ///
+    /// # Safety
+    /// Requires runtime-verified `avx2` and `fma`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn map_exp(xs: &mut [f64]) {
+        // SAFETY: chunk pointers come from `chunks_exact_mut(4)`, so
+        // every 4-lane load/store is in-bounds; the tail goes through a
+        // stack buffer of exactly 4 lanes.
+        unsafe {
+            let mut chunks = xs.chunks_exact_mut(4);
+            for c in &mut chunks {
+                let v = _mm256_loadu_pd(c.as_ptr());
+                _mm256_storeu_pd(c.as_mut_ptr(), exp4(v));
+            }
+            let rem = chunks.into_remainder();
+            if !rem.is_empty() {
+                let mut buf = [0.0f64; 4];
+                buf[..rem.len()].copy_from_slice(rem);
+                let v = _mm256_loadu_pd(buf.as_ptr());
+                _mm256_storeu_pd(buf.as_mut_ptr(), exp4(v));
+                rem.copy_from_slice(&buf[..rem.len()]);
+            }
+        }
+    }
+
+    /// 8-lane f32 `exp`: degree-7 Horner; here AVX2's native packed
+    /// f32→i32 convert replaces the f64 magic-add trick.
+    ///
+    /// # Safety
+    /// Requires runtime-verified `avx2` and `fma`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn exp8_f32(x: __m256) -> __m256 {
+        // SAFETY: pure register arithmetic; no memory access.
+        unsafe {
+            let lo_mask = _mm256_cmp_ps::<_CMP_LT_OQ>(x, _mm256_set1_ps(-87.0));
+            let hi_mask = _mm256_cmp_ps::<_CMP_GT_OQ>(x, _mm256_set1_ps(88.0));
+            let xc = _mm256_max_ps(
+                _mm256_set1_ps(-87.0),
+                _mm256_min_ps(x, _mm256_set1_ps(88.0)),
+            );
+            let n = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
+                _mm256_mul_ps(xc, _mm256_set1_ps(std::f32::consts::LOG2_E)),
+            );
+            let r = _mm256_fnmadd_ps(
+                n,
+                _mm256_set1_ps(LN2_LO_F32),
+                _mm256_fnmadd_ps(n, _mm256_set1_ps(LN2_HI_F32), xc),
+            );
+            let mut p = _mm256_set1_ps(1.0 / 5_040.0);
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 720.0));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 120.0));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 24.0));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 6.0));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(0.5));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0));
+            // n is already integral, so the nearest-even convert is exact
+            let nint = _mm256_cvtps_epi32(n);
+            let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+                nint,
+                _mm256_set1_epi32(127),
+            )));
+            let y = _mm256_mul_ps(p, scale);
+            let y = _mm256_andnot_ps(lo_mask, y);
+            _mm256_blendv_ps(y, _mm256_set1_ps(f32::INFINITY), hi_mask)
+        }
+    }
+
+    /// Apply [`exp8_f32`] over a slice with the same padded-tail
+    /// discipline as [`map_exp`].
+    ///
+    /// # Safety
+    /// Requires runtime-verified `avx2` and `fma`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn map_exp_f32(xs: &mut [f32]) {
+        // SAFETY: same bounds argument as `map_exp`, with 8-lane chunks.
+        unsafe {
+            let mut chunks = xs.chunks_exact_mut(8);
+            for c in &mut chunks {
+                let v = _mm256_loadu_ps(c.as_ptr());
+                _mm256_storeu_ps(c.as_mut_ptr(), exp8_f32(v));
+            }
+            let rem = chunks.into_remainder();
+            if !rem.is_empty() {
+                let mut buf = [0.0f32; 8];
+                buf[..rem.len()].copy_from_slice(rem);
+                let v = _mm256_loadu_ps(buf.as_ptr());
+                _mm256_storeu_ps(buf.as_mut_ptr(), exp8_f32(v));
+                rem.copy_from_slice(&buf[..rem.len()]);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON implementation (aarch64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{MR, NR};
+    use std::arch::aarch64::*;
+
+    /// 4×8 f64 register tile on 2-lane NEON vectors: 16 accumulators +
+    /// 4 B vectors fit the 32-register file. Same fixed accumulation
+    /// order as the scalar kernel, FMA-contracted.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; caller passes packed panels with
+    /// `a.len() ≥ kc·MR`, `b.len() ≥ kc·NR`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn micro_kernel_4x8(
+        kc: usize,
+        a: &[f64],
+        b: &[f64],
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
+        // SAFETY: all pointer offsets are in-bounds by the length
+        // contract above.
+        unsafe {
+            let mut acc_v = [[vdupq_n_f64(0.0); 4]; MR];
+            for r in 0..MR {
+                for t in 0..4 {
+                    acc_v[r][t] = vld1q_f64(acc[r].as_ptr().add(2 * t));
+                }
+            }
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            for p in 0..kc {
+                let brow = bp.add(p * NR);
+                let bv = [
+                    vld1q_f64(brow),
+                    vld1q_f64(brow.add(2)),
+                    vld1q_f64(brow.add(4)),
+                    vld1q_f64(brow.add(6)),
+                ];
+                let arow = ap.add(p * MR);
+                for r in 0..MR {
+                    let av = vdupq_n_f64(*arow.add(r));
+                    for t in 0..4 {
+                        acc_v[r][t] = vfmaq_f64(acc_v[r][t], av, bv[t]);
+                    }
+                }
+            }
+            for r in 0..MR {
+                for t in 0..4 {
+                    vst1q_f64(acc[r].as_mut_ptr().add(2 * t), acc_v[r][t]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn dispatch_names_and_override() {
+        assert!(["scalar", "avx2", "neon"].contains(&kernel_name()));
+        let ambient = active();
+        with_kernel(KernelImpl::Scalar, || {
+            assert_eq!(active(), KernelImpl::Scalar);
+            assert_eq!(kernel_name(), "scalar");
+        });
+        assert_eq!(active(), ambient, "override must restore");
+        assert!(!detected_features().is_empty());
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        assert_eq!(Precision::parse("f32"), Ok(Precision::F32));
+        assert_eq!(Precision::parse("double"), Ok(Precision::F64));
+        assert!(Precision::parse("f16").is_err());
+        assert_eq!(Precision::default().name(), "f64");
+    }
+
+    /// The dispatched micro-kernel agrees with the scalar one on random
+    /// packed panels to FMA-contraction tolerance (bitwise when the
+    /// ambient dispatch *is* scalar).
+    #[test]
+    fn micro_kernel_dispatch_matches_scalar() {
+        let mut r = Pcg64::seed(0xD15);
+        for &kc in &[1usize, 2, 7, 64, 256] {
+            let a: Vec<f64> = (0..kc * MR).map(|_| r.normal()).collect();
+            let b: Vec<f64> = (0..kc * NR).map(|_| r.normal()).collect();
+            let mut want = [[0.25f64; NR]; MR];
+            micro_kernel_scalar(kc, &a, &b, &mut want);
+            let mut got = [[0.25f64; NR]; MR];
+            micro_kernel(active(), kc, &a, &b, &mut got);
+            for rr in 0..MR {
+                for t in 0..NR {
+                    let (w, g) = (want[rr][t], got[rr][t]);
+                    assert!(
+                        (w - g).abs() <= 1e-12 * (1.0 + w.abs()),
+                        "kc={kc} [{rr}][{t}]: scalar {w} vs dispatch {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Lane-parallel exp vs the scalar reference over the full reduction
+    /// range, including both saturation regimes (exact 0/∞ agreement).
+    #[test]
+    fn map_exp_matches_scalar_over_reduction_range() {
+        let mut xs: Vec<f64> = Vec::new();
+        let mut x = -740.0;
+        while x < 60.0 {
+            xs.push(x);
+            x += 0.193;
+        }
+        xs.extend_from_slice(&[-1e9, -708.0, -708.0001, 709.0, 709.0001, 1e9, 0.0]);
+        let mut got = xs.clone();
+        map_exp(active(), &mut got);
+        for (&xi, &gi) in xs.iter().zip(got.iter()) {
+            let want = exp_fast(xi);
+            if want == 0.0 || want.is_infinite() {
+                assert_eq!(gi, want, "saturation at {xi}");
+            } else {
+                let rel = ((gi - want) / want).abs();
+                assert!(rel < 1e-12, "x={xi}: {gi} vs {want} (rel {rel})");
+            }
+        }
+    }
+
+    /// Each element's value is independent of its position in the slice:
+    /// mapping one element at a time reproduces the batch map bitwise.
+    /// (This is what keeps the symmetric assembly fast path — which maps
+    /// row *suffixes* — bitwise equal to rectangular assembly.)
+    #[test]
+    fn map_exp_is_position_independent() {
+        let xs: Vec<f64> = (0..23).map(|i| -0.37 * i as f64).collect();
+        let mut batch = xs.clone();
+        map_exp(active(), &mut batch);
+        for (i, &xi) in xs.iter().enumerate() {
+            let mut one = [xi];
+            map_exp(active(), &mut one);
+            assert_eq!(one[0].to_bits(), batch[i].to_bits(), "element {i}");
+        }
+        // and for every suffix offset (the symmetric path maps krow[i..])
+        for off in 0..xs.len() {
+            let mut suffix = xs[off..].to_vec();
+            map_exp(active(), &mut suffix);
+            for (k, v) in suffix.iter().enumerate() {
+                assert_eq!(v.to_bits(), batch[off + k].to_bits(), "offset {off}+{k}");
+            }
+        }
+    }
+
+    #[test]
+    fn exp_f32_accuracy_and_saturation() {
+        let mut worst = 0.0f64;
+        let mut x = -87.0f32;
+        while x < 88.0 {
+            let got = exp_fast_f32(x) as f64;
+            let want = (x as f64).exp();
+            worst = worst.max(((got - want) / want).abs());
+            x += 0.0137;
+        }
+        assert!(worst < 2e-7, "f32 exp relative error {worst}");
+        assert_eq!(exp_fast_f32(-100.0), 0.0);
+        assert_eq!(exp_fast_f32(100.0), f32::INFINITY);
+        assert_eq!(exp_fast_f32(0.0), 1.0);
+    }
+
+    #[test]
+    fn map_exp_f32_matches_scalar_and_positions() {
+        let xs: Vec<f32> = (0..37).map(|i| -0.61 * i as f32 + 3.0).collect();
+        let mut batch = xs.clone();
+        map_exp_f32(active(), &mut batch);
+        for (i, &xi) in xs.iter().enumerate() {
+            let mut one = [xi];
+            map_exp_f32(active(), &mut one);
+            assert_eq!(one[0].to_bits(), batch[i].to_bits(), "element {i}");
+            let want = exp_fast_f32(xi) as f64;
+            let rel = ((batch[i] as f64 - want) / want.max(1e-30)).abs();
+            assert!(rel < 2e-7, "x={xi}: {} vs {want}", batch[i]);
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //!          [--streamed]
 //! accumkrr train --name M --dataset rqa --n 2000 --sketch accum --m 4
 //!          [--d D] [--lambda L] [--bandwidth B] [--seed S] [--save PATH]
+//!          [--precision f64|f32]  # f32: single-precision Gram assembly
 //! accumkrr train --sketch adaptive [--m-max M] [--rel-tol T]  # adaptive m
 //! accumkrr cluster --dataset moons --n 600 --k 2
 //!          [--method operator|sketched|adaptive] [--d D] [--m M]
@@ -103,6 +104,13 @@ fn cmd_train(args: &Args) -> i32 {
             return 2;
         }
     };
+    let precision = match accumkrr::linalg::Precision::parse(args.str_or("precision", "f64")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("train: {e}");
+            return 2;
+        }
+    };
     let req = TrainRequest {
         name: args.str_or("name", "default").to_string(),
         dataset: args.str_or("dataset", "bimodal").to_string(),
@@ -113,6 +121,7 @@ fn cmd_train(args: &Args) -> i32 {
         bandwidth: args.f64_or("bandwidth", 0.0),
         seed: args.usize_or("seed", 1) as u64,
         adaptive,
+        precision,
     };
     let store = ModelStore::new();
     match store.train(&req) {
@@ -310,13 +319,40 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
+#[cfg(feature = "xla")]
 fn cmd_info(args: &Args) -> i32 {
     let dir = args.str_or("artifacts", "artifacts");
+    println!("host: {}", accumkrr::runtime::HostStamp::detect());
     match accumkrr::runtime::ModelRuntime::open(dir) {
         Ok(rt) => {
             println!("PJRT platform: {}", rt.platform());
             println!("artifacts in {dir}:");
             for a in &rt.manifest().artifacts {
+                println!(
+                    "  {:40} entry={:17} kernel={:9} n={} p={} d={} m={} b={}",
+                    a.name, a.entry, a.kernel, a.n, a.p, a.d, a.m, a.b
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("info: {e} (run `make artifacts` first?)");
+            1
+        }
+    }
+}
+
+/// Without the `xla` feature there is no PJRT engine, but the manifest
+/// and the host/dispatch stamp are still useful diagnostics.
+#[cfg(not(feature = "xla"))]
+fn cmd_info(args: &Args) -> i32 {
+    let dir = args.str_or("artifacts", "artifacts");
+    println!("host: {}", accumkrr::runtime::HostStamp::detect());
+    println!("PJRT platform: disabled (build with `--features xla`)");
+    match accumkrr::runtime::Manifest::load(dir) {
+        Ok(man) => {
+            println!("artifacts in {dir}:");
+            for a in &man.artifacts {
                 println!(
                     "  {:40} entry={:17} kernel={:9} n={} p={} d={} m={} b={}",
                     a.name, a.entry, a.kernel, a.n, a.p, a.d, a.m, a.b

@@ -1,6 +1,7 @@
-//! Thin PJRT wrapper over the `xla` crate.
+//! Thin PJRT wrapper over the `xla` crate (in-tree stub by default; see
+//! `runtime` module docs for how to point it at the real bindings).
 
-use anyhow::{Context, Result};
+use super::{Result, RuntimeError};
 
 /// A PJRT CPU client plus the artifacts compiled on it.
 pub struct Engine {
@@ -17,7 +18,8 @@ pub struct LoadedArtifact {
 impl Engine {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError::new(format!("creating PJRT CPU client: {e}")))?;
         Ok(Engine { client })
     }
 
@@ -33,12 +35,12 @@ impl Engine {
     /// Load and compile an HLO-text artifact.
     pub fn load_hlo_text(&self, path: &str, name: &str) -> Result<LoadedArtifact> {
         let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
+            .map_err(|e| RuntimeError::new(format!("parsing HLO text {path}: {e}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
+            .map_err(|e| RuntimeError::new(format!("compiling {name}: {e}")))?;
         Ok(LoadedArtifact {
             exe,
             name: name.to_string(),
@@ -53,10 +55,10 @@ impl LoadedArtifact {
         let result = self
             .exe
             .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
+            .map_err(|e| RuntimeError::new(format!("executing {}: {e}", self.name)))?;
         let lit = result[0][0]
             .to_literal_sync()
-            .context("device → host transfer")?;
+            .map_err(|e| RuntimeError::new(format!("device → host transfer: {e}")))?;
         Ok(lit.to_tuple()?)
     }
 }

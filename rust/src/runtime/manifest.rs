@@ -1,7 +1,50 @@
 //! Artifact manifest (`artifacts/manifest.json`) written by
-//! `python -m compile.aot`.
+//! `python -m compile.aot`, plus [`HostStamp`] — the one shared
+//! formatter for "which machine/kernel produced this artifact".
 
 use crate::util::json::Json;
+
+/// Provenance stamp for persisted artifacts (`BENCH_hotpath.json`,
+/// `accumkrr info`, saved models): compile-target arch, the micro-kernel
+/// dispatch selected at runtime, and the CPU features that selection was
+/// based on. One implementation so every artifact formats the same
+/// fields the same way, instead of each writer rolling its own arch
+/// string.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostStamp {
+    /// Compile-target architecture (`x86_64`, `aarch64`, …).
+    pub arch: String,
+    /// Micro-kernel dispatch in effect (`scalar` / `avx2` / `neon`).
+    pub kernel: String,
+    /// CPU feature set the dispatch layer detected (e.g. `avx2+fma`).
+    pub cpu_features: String,
+}
+
+impl HostStamp {
+    /// Probe the current host/dispatch state.
+    pub fn detect() -> HostStamp {
+        HostStamp {
+            arch: std::env::consts::ARCH.to_string(),
+            kernel: crate::linalg::kernel_name().to_string(),
+            cpu_features: crate::linalg::detected_features(),
+        }
+    }
+
+    /// JSON object with `arch` / `kernel` / `cpu_features` fields.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.clone())),
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("cpu_features", Json::Str(self.cpu_features.clone())),
+        ])
+    }
+}
+
+impl std::fmt::Display for HostStamp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{} ({})", self.arch, self.kernel, self.cpu_features)
+    }
+}
 
 /// One artifact's metadata: entry point + static shape bucket.
 #[derive(Clone, Debug, PartialEq)]
@@ -155,5 +198,25 @@ mod tests {
     fn rejects_malformed() {
         assert!(Manifest::parse("{}", ".").is_err());
         assert!(Manifest::parse("{\"artifacts\":[{\"name\":\"x\"}]}", ".").is_err());
+    }
+
+    /// The stamp records the compile-target arch and a kernel name the
+    /// dispatch layer actually owns, and serialises all three fields.
+    #[test]
+    fn host_stamp_reflects_dispatch() {
+        let stamp = HostStamp::detect();
+        assert_eq!(stamp.arch, std::env::consts::ARCH);
+        assert!(["scalar", "avx2", "neon"].contains(&stamp.kernel.as_str()));
+        let j = stamp.to_json();
+        assert_eq!(
+            j.get("kernel").and_then(|v| v.as_str()),
+            Some(stamp.kernel.as_str())
+        );
+        assert_eq!(
+            j.get("arch").and_then(|v| v.as_str()),
+            Some(stamp.arch.as_str())
+        );
+        assert!(j.get("cpu_features").is_some());
+        assert!(format!("{stamp}").contains(&stamp.kernel));
     }
 }

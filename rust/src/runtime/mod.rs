@@ -2,20 +2,65 @@
 //! `python -m compile.aot`) and execute them from the Rust hot path.
 //! Python never runs at request time.
 //!
-//! * [`Engine`] wraps `xla::PjRtClient` (CPU) and compiles HLO **text**
-//!   artifacts (`artifacts/*.hlo.txt`). Text, not serialized protos: jax ≥
-//!   0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//!   the text parser reassigns ids.
-//! * [`Manifest`] / [`ArtifactSpec`] mirror `artifacts/manifest.json`.
-//! * [`ModelRuntime`] is the typed facade: pad a request to the nearest
-//!   shape bucket, convert `f64 → f32`, execute, unpad.
+//! The execution half is gated behind the `xla` cargo feature so the
+//! default build resolves and compiles fully offline (the feature's
+//! dependency is the in-tree type stub under `third_party/xla-stub`;
+//! swap it for the real bindings to run artifacts):
+//!
+//! * `Engine` (feature `xla`) wraps `xla::PjRtClient` (CPU) and compiles
+//!   HLO **text** artifacts (`artifacts/*.hlo.txt`). Text, not serialized
+//!   protos: jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
+//!   0.5.1 rejects; the text parser reassigns ids.
+//! * [`Manifest`] / [`ArtifactSpec`] mirror `artifacts/manifest.json` and
+//!   are always available (pure JSON, no runtime dependency), as is
+//!   [`HostStamp`] — the shared arch/CPU-feature provenance record that
+//!   bench output and `accumkrr info` both embed.
+//! * `ModelRuntime` (feature `xla`) is the typed facade: pad a request to
+//!   the nearest shape bucket, convert `f64 → f32`, execute, unpad.
 
-mod client;
 mod manifest;
+
+#[cfg(feature = "xla")]
+mod client;
+#[cfg(feature = "xla")]
 mod model_runtime;
 
+pub use manifest::{ArtifactSpec, HostStamp, Manifest};
+
+#[cfg(feature = "xla")]
 pub use client::{
     literal_f32, literal_i32, literal_scalar, literal_to_f64, Engine, LoadedArtifact,
 };
-pub use manifest::{ArtifactSpec, Manifest};
+#[cfg(feature = "xla")]
 pub use model_runtime::{FitOutput, ModelRuntime};
+
+/// Runtime-layer error. A plain string wrapper: the runtime layer used to
+/// lean on `anyhow`, but keeping the crate dependency-free (offline
+/// builds, no registry) is worth more than error-chain ergonomics here.
+#[derive(Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    /// Wrap a message.
+    pub fn new(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError(msg.into())
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> RuntimeError {
+        RuntimeError(format!("xla: {e}"))
+    }
+}
+
+/// Result alias used across the runtime layer.
+pub type Result<T> = std::result::Result<T, RuntimeError>;

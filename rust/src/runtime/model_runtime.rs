@@ -15,9 +15,9 @@
 
 use super::client::{literal_f32, literal_i32, literal_scalar, literal_to_f64, Engine, LoadedArtifact};
 use super::manifest::{ArtifactSpec, Manifest};
+use super::{Result, RuntimeError};
 use crate::linalg::Matrix;
 use crate::sketch::SparseSketch;
-use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -46,7 +46,7 @@ pub struct ModelRuntime {
 impl ModelRuntime {
     /// Open the artifact directory (compiles lazily, caches per artifact).
     pub fn open(dir: &str) -> Result<ModelRuntime> {
-        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let manifest = Manifest::load(dir).map_err(RuntimeError::new)?;
         Ok(ModelRuntime {
             engine: Engine::cpu()?,
             manifest,
@@ -95,7 +95,9 @@ impl ModelRuntime {
             .manifest
             .find_fit(kernel_name, n, p, d, m_max)
             .ok_or_else(|| {
-                anyhow!("no fit bucket for kernel={kernel_name} n={n} p={p} d={d} m={m_max}")
+                RuntimeError::new(format!(
+                    "no fit bucket for kernel={kernel_name} n={n} p={p} d={d} m={m_max}"
+                ))
             })?
             .clone();
         let exe = self.compiled(&spec)?;
@@ -133,7 +135,10 @@ impl ModelRuntime {
         ];
         let out = exe.execute(&inputs)?;
         if out.len() != 2 {
-            return Err(anyhow!("fit artifact returned {} outputs", out.len()));
+            return Err(RuntimeError::new(format!(
+                "fit artifact returned {} outputs",
+                out.len()
+            )));
         }
         let theta_full = literal_to_f64(&out[0])?;
         let fitted_full = literal_to_f64(&out[1])?;
@@ -161,7 +166,9 @@ impl ModelRuntime {
             .iter()
             .filter(|a| a.entry == "fit_exact" && a.kernel == kernel_name && a.n >= n && a.p == p)
             .min_by_key(|a| a.n)
-            .ok_or_else(|| anyhow!("no exact bucket for kernel={kernel_name} n={n} p={p}"))?
+            .ok_or_else(|| {
+                RuntimeError::new(format!("no exact bucket for kernel={kernel_name} n={n} p={p}"))
+            })?
             .clone();
         let exe = self.compiled(&spec)?;
         let mut xp = vec![0.0f64; spec.n * spec.p];
@@ -211,7 +218,9 @@ impl ModelRuntime {
             .manifest
             .find_predict(kernel_name, b, p, d, m_max)
             .ok_or_else(|| {
-                anyhow!("no predict bucket for kernel={kernel_name} b={b} p={p} d={d} m={m_max}")
+                RuntimeError::new(format!(
+                    "no predict bucket for kernel={kernel_name} b={b} p={p} d={d} m={m_max}"
+                ))
             })?
             .clone();
         let exe = self.compiled(&spec)?;

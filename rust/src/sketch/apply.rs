@@ -21,7 +21,7 @@
 
 use super::{AccumSketch, Sketch, SketchOps, SparseSketch};
 use crate::kernels::{GramOperator, Kernel};
-use crate::linalg::{chol_factor, matmul, matmul_at_b, syrk_at_a, Matrix};
+use crate::linalg::{chol_factor, matmul, matmul_at_b, syrk_at_a, Matrix, Precision};
 use std::collections::HashMap;
 
 /// All sketched quantities the KRR solvers need, with the cost model used
@@ -89,6 +89,28 @@ pub fn sketch_gram(
         stk2s,
         kernel_evals,
     }
+}
+
+/// [`sketch_gram`] with an explicit accumulation [`Precision`]. `F64`
+/// (and any non-streamed call, i.e. `k_full` given) is exactly
+/// [`sketch_gram`]; `F32` streams through a single-precision
+/// [`GramOperator`] — f32 panel assembly and `K·S` accumulation, one
+/// widen per entry — while the `d×d` Grams handed to the solvers stay
+/// f64. The precision knob reaches here from
+/// [`SketchedKrr::fit_with`](crate::krr::SketchedKrr::fit_with) and the
+/// coordinator job schema's `precision` field.
+pub fn sketch_gram_with(
+    kernel: &Kernel,
+    x: &Matrix,
+    sketch: &Sketch,
+    k_full: Option<&Matrix>,
+    precision: Precision,
+) -> SketchedGram {
+    if k_full.is_none() && precision == Precision::F32 {
+        let op = GramOperator::new(*kernel, x).with_precision(precision);
+        return sketch_gram_streamed(&op, sketch);
+    }
+    sketch_gram(kernel, x, sketch, k_full)
 }
 
 /// [`sketch_gram`] against an existing [`GramOperator`] (callers that

@@ -1,7 +1,10 @@
 //! PJRT integration: the AOT-compiled JAX/Pallas artifacts, loaded and
 //! executed from Rust, must agree with the native Rust implementation of
 //! the same math. Requires `make artifacts` (skips with a message if the
-//! manifest is absent).
+//! manifest is absent) and a build with the `xla` feature pointed at the
+//! real bindings (the whole file compiles away otherwise).
+
+#![cfg(feature = "xla")]
 
 use accumkrr::data::{bimodal, BimodalConfig};
 use accumkrr::kernels::Kernel;

@@ -1,0 +1,153 @@
+//! Compile-time stand-in for the `xla` PJRT bindings.
+//!
+//! The offline build must resolve without registry access, but the
+//! `runtime` layer of `accumkrr` should keep *type-checking* under
+//! `--features xla` so it cannot rot silently. This crate mirrors exactly
+//! the API surface `accumkrr::runtime` consumes; every entry point that
+//! would touch a real PJRT plugin returns [`Error::StubRuntime`] instead.
+//!
+//! To execute artifacts for real, replace the path dependency in
+//! `rust/Cargo.toml` with the published `xla` bindings — the signatures
+//! here are kept call-compatible with that crate.
+
+use std::fmt;
+
+/// Error type matching the shape of the real bindings' error.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub was asked to perform real PJRT work.
+    StubRuntime(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::StubRuntime(what) => write!(
+                f,
+                "{what}: built against the in-tree xla stub; swap the \
+                 `xla` path dependency for the real bindings to run artifacts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias used by the whole stub surface.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>(what: &'static str) -> Result<T> {
+    Err(Error::StubRuntime(what))
+}
+
+/// PJRT client handle (stub: unconstructible at runtime).
+pub struct PjRtClient(());
+
+/// A compiled executable (stub).
+pub struct PjRtLoadedExecutable(());
+
+/// A device buffer (stub).
+pub struct PjRtBuffer(());
+
+/// A host literal (stub: constructible, but all conversions fail).
+#[derive(Clone)]
+pub struct Literal(());
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto(());
+
+/// An XLA computation built from a proto (stub).
+pub struct XlaComputation(());
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails on the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    /// Platform name of the backing PJRT plugin.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation. Unreachable on the stub (no client exists).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs. Unreachable on the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+}
+
+impl PjRtBuffer {
+    /// Device → host transfer. Unreachable on the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always fails on the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Scalar literal.
+    pub fn scalar(_x: f32) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub("Literal::reshape")
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_entry_points_fail_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("stub"), "{msg}");
+    }
+}
