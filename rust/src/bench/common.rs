@@ -22,6 +22,10 @@ pub struct BenchOpts {
     /// Exact-KRR reference fits still assemble `K` where a figure needs
     /// the dense baseline (that cost is the baseline's, not the method's).
     pub streamed: bool,
+    /// CI smoke mode (`--smoke`): shrink wall-clock-bound benches (the
+    /// `serve` load generator) to seconds while still emitting their
+    /// JSON artifacts.
+    pub smoke: bool,
 }
 
 impl Default for BenchOpts {
@@ -33,6 +37,7 @@ impl Default for BenchOpts {
             csv: None,
             full: false,
             streamed: false,
+            smoke: false,
         }
     }
 }

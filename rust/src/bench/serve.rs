@@ -1,0 +1,370 @@
+//! Serving-plane load generator: offered vs sustained QPS against the
+//! reactor server, adaptive micro-batching vs batching disabled.
+//!
+//! The generator is a paced closed loop: `C` client threads each hold
+//! one framed connection and send single-row `predict` requests at a
+//! target per-client rate (unpaced for the capacity probe), reading
+//! each reply before the next send. Offered load is swept as fractions
+//! of the measured capacity, so the bench is self-scaling across
+//! machines; the *saturation knee* is the largest offered rate the
+//! server still sustains within 10%. Client-side latencies give the
+//! p50/p99 columns, the server's shared [`ServingMetrics`] the shed
+//! counts and mean batch occupancy per point.
+//!
+//! Emits `BENCH_serve.json` with both configurations and the headline
+//! `uplift` (adaptive capacity / no-batch capacity). `--smoke` shrinks
+//! clients, durations and the sweep for the CI box.
+
+use super::common::{BenchOpts, Row};
+use crate::coordinator::frame::{read_frame, write_frame};
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::state::{ModelStore, TrainRequest};
+use crate::coordinator::{BatcherConfig, ServerConfig, ServerHandle};
+use crate::linalg::Precision;
+use crate::rng::Pcg64;
+use crate::sketch::SketchKind;
+use crate::util::json::Json;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One measured load point.
+struct Point {
+    offered: f64,
+    sustained: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    errors: u64,
+    shed: u64,
+    mean_batch_rows: f64,
+}
+
+struct LoadParams {
+    clients: usize,
+    duration: Duration,
+    fractions: &'static [f64],
+}
+
+/// Run the serving bench, dumping `BENCH_serve.json` into the working
+/// directory.
+pub fn run_serve(opts: &BenchOpts) -> Vec<Row> {
+    run_serve_to(opts, "BENCH_serve.json")
+}
+
+/// Same as [`run_serve`] with an explicit JSON output path (tests point
+/// it at a temp file).
+pub fn run_serve_to(opts: &BenchOpts, json_path: &str) -> Vec<Row> {
+    let p = if opts.smoke {
+        LoadParams {
+            clients: 4,
+            duration: Duration::from_millis(200),
+            fractions: &[0.5, 1.0],
+        }
+    } else {
+        LoadParams {
+            clients: 8,
+            duration: Duration::from_millis(1500),
+            fractions: &[0.25, 0.5, 0.75, 1.0, 1.25],
+        }
+    };
+    let n_train = if opts.smoke { 150 } else { 1000 };
+
+    let configs: [(&str, BatcherConfig); 2] = [
+        ("adaptive", BatcherConfig::default()),
+        (
+            "nobatch",
+            BatcherConfig {
+                max_batch: 1,
+                ..Default::default()
+            },
+        ),
+    ];
+    let mut rows = Vec::new();
+    let mut cfg_objs = Vec::new();
+    let mut capacities = Vec::new();
+    for (name, bcfg) in configs {
+        let (capacity, knee, points) = bench_config(bcfg, n_train, opts.seed, &p);
+        capacities.push(capacity);
+        let mut point_objs = Vec::new();
+        for pt in &points {
+            rows.push(Row::new(
+                &[("bench", "serve"), ("config", name)],
+                &[
+                    ("offered_qps", pt.offered),
+                    ("sustained_qps", pt.sustained),
+                    ("p50_ms", pt.p50_ms),
+                    ("p99_ms", pt.p99_ms),
+                    ("mean_batch_rows", pt.mean_batch_rows),
+                    ("shed", pt.shed as f64),
+                ],
+            ));
+            point_objs.push(Json::obj(vec![
+                ("offered_qps", Json::Num(pt.offered)),
+                ("sustained_qps", Json::Num(pt.sustained)),
+                ("p50_ms", Json::Num(pt.p50_ms)),
+                ("p99_ms", Json::Num(pt.p99_ms)),
+                ("errors", Json::from(pt.errors as usize)),
+                ("shed", Json::from(pt.shed as usize)),
+                ("mean_batch_rows", Json::Num(pt.mean_batch_rows)),
+            ]));
+        }
+        cfg_objs.push(Json::obj(vec![
+            ("config", Json::from(name)),
+            ("capacity_qps", Json::Num(capacity)),
+            ("knee_qps", Json::Num(knee)),
+            ("points", Json::Arr(point_objs)),
+        ]));
+    }
+    let uplift = capacities[0] / capacities[1].max(1e-9);
+    rows.push(Row::new(
+        &[("bench", "serve"), ("config", "uplift")],
+        &[
+            ("offered_qps", 0.0),
+            ("sustained_qps", uplift),
+            ("p50_ms", 0.0),
+            ("p99_ms", 0.0),
+            ("mean_batch_rows", 0.0),
+            ("shed", 0.0),
+        ],
+    ));
+    let j = Json::obj(vec![
+        ("bench", Json::from("serve")),
+        ("clients", Json::from(p.clients)),
+        ("duration_secs", Json::Num(p.duration.as_secs_f64())),
+        ("n_train", Json::from(n_train)),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("adaptive_capacity_qps", Json::Num(capacities[0])),
+        ("nobatch_capacity_qps", Json::Num(capacities[1])),
+        ("uplift", Json::Num(uplift)),
+        ("configs", Json::Arr(cfg_objs)),
+    ]);
+    if let Err(e) = std::fs::write(json_path, j.to_string()) {
+        eprintln!("serve bench: writing {json_path} failed: {e}");
+    } else {
+        println!("(serving comparison written to {json_path})");
+    }
+    rows
+}
+
+/// Stand a server up with one trained model, probe capacity (unpaced),
+/// then sweep paced fractions of it. Returns (capacity, knee, points).
+fn bench_config(
+    bcfg: BatcherConfig,
+    n_train: usize,
+    seed: u64,
+    p: &LoadParams,
+) -> (f64, f64, Vec<Point>) {
+    let store = Arc::new(ModelStore::new());
+    store
+        .train(&TrainRequest {
+            name: "bench".into(),
+            dataset: "bimodal".into(),
+            n: n_train,
+            kind: SketchKind::Accumulation { m: 3 },
+            d: 0,
+            lambda: 0.0,
+            bandwidth: 0.0,
+            seed,
+            adaptive: None,
+            precision: Precision::F64,
+        })
+        .expect("serve bench: train");
+    let handle = ServerHandle::start(
+        store,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            batcher: bcfg,
+            ..Default::default()
+        },
+    )
+    .expect("serve bench: bind");
+    let addr = handle.addr();
+    let metrics = handle.metrics();
+
+    // capacity probe: closed loop, no pacing
+    let (cap_pt, _) = measure(addr, &metrics, p.clients, None, p.duration, seed);
+    let capacity = cap_pt.sustained.max(1.0);
+
+    let mut points = vec![cap_pt];
+    let mut knee = 0.0f64;
+    for &f in p.fractions {
+        let offered = capacity * f;
+        let per_client = offered / p.clients as f64;
+        let interval = Duration::from_secs_f64(1.0 / per_client.max(1.0));
+        let (pt, _) = measure(addr, &metrics, p.clients, Some(interval), p.duration, seed);
+        if pt.sustained >= 0.9 * pt.offered && pt.offered > knee {
+            knee = pt.offered;
+        }
+        points.push(pt);
+    }
+    handle.stop();
+    (capacity, knee, points)
+}
+
+/// Drive one load point: `clients` framed connections sending paced
+/// single-row predicts for `duration`. Returns the point plus the raw
+/// completion count.
+fn measure(
+    addr: SocketAddr,
+    metrics: &Arc<ServingMetrics>,
+    clients: usize,
+    interval: Option<Duration>,
+    duration: Duration,
+    seed: u64,
+) -> (Point, u64) {
+    let q0 = metrics.queries.load(Ordering::Relaxed);
+    let b0 = metrics.batches.load(Ordering::Relaxed);
+    let shed0 = metrics.shed.load(Ordering::Relaxed);
+    let wall = Instant::now();
+    let stop_at = wall + duration;
+    let mut handles = Vec::with_capacity(clients);
+    for c in 0..clients {
+        handles.push(std::thread::spawn(move || {
+            client_loop(addr, interval, stop_at, seed ^ (c as u64 + 1))
+        }));
+    }
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let mut completed = 0u64;
+    let mut errors = 0u64;
+    for h in handles {
+        let (lat, done, errs) = h.join().expect("load client panicked");
+        lat_ms.extend(lat);
+        completed += done;
+        errors += errs;
+    }
+    let elapsed = wall.elapsed().as_secs_f64();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let dq = metrics.queries.load(Ordering::Relaxed) - q0;
+    let db = metrics.batches.load(Ordering::Relaxed) - b0;
+    let pt = Point {
+        offered: match interval {
+            Some(iv) => clients as f64 / iv.as_secs_f64(),
+            None => completed as f64 / elapsed,
+        },
+        sustained: completed as f64 / elapsed,
+        p50_ms: pct(&lat_ms, 0.50),
+        p99_ms: pct(&lat_ms, 0.99),
+        errors,
+        shed: metrics.shed.load(Ordering::Relaxed) - shed0,
+        mean_batch_rows: if db > 0 { dq as f64 / db as f64 } else { 0.0 },
+    };
+    (pt, completed)
+}
+
+/// One client: framed connection, paced send → blocking read, latency
+/// per completed request in milliseconds.
+fn client_loop(
+    addr: SocketAddr,
+    interval: Option<Duration>,
+    stop_at: Instant,
+    seed: u64,
+) -> (Vec<f64>, u64, u64) {
+    let mut conn = match TcpStream::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return (Vec::new(), 0, 1),
+    };
+    let _ = conn.set_nodelay(true);
+    let mut rng = Pcg64::seed(seed);
+    let mut lat = Vec::new();
+    let mut errors = 0u64;
+    let mut sent = 0u64;
+    let t0 = Instant::now();
+    loop {
+        if let Some(iv) = interval {
+            let next = t0 + iv.mul_f64(sent as f64);
+            if next >= stop_at {
+                break;
+            }
+            let now = Instant::now();
+            if next > now {
+                std::thread::sleep(next - now);
+            }
+        }
+        if Instant::now() >= stop_at {
+            break;
+        }
+        let row = [
+            rng.uniform() * 4.0 - 2.0,
+            rng.uniform() * 4.0 - 2.0,
+            rng.uniform() * 4.0 - 2.0,
+        ];
+        let req = Json::obj(vec![
+            ("method", Json::from("predict")),
+            ("model", Json::from("bench")),
+            ("x", Json::Arr(vec![Json::nums(&row)])),
+        ]);
+        let s = Instant::now();
+        if write_frame(&mut conn, &req).is_err() {
+            errors += 1;
+            break;
+        }
+        match read_frame(&mut conn) {
+            Ok(reply) => {
+                lat.push(s.elapsed().as_secs_f64() * 1e3);
+                if reply.get("ok") != Some(&Json::Bool(true)) {
+                    errors += 1;
+                }
+            }
+            Err(_) => {
+                errors += 1;
+                break;
+            }
+        }
+        sent += 1;
+    }
+    (lat, sent, errors)
+}
+
+/// Percentile of an ascending-sorted sample (nearest-rank).
+fn pct(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted_ms.len() as f64).ceil() as usize).clamp(1, sorted_ms.len()) - 1;
+    sorted_ms[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_bench_smoke_emits_rows_and_json() {
+        let tmp = std::env::temp_dir().join("accumkrr_bench_serve_test.json");
+        let opts = BenchOpts {
+            smoke: true,
+            ..Default::default()
+        };
+        let rows = run_serve_to(&opts, &tmp.to_string_lossy());
+        // capacity + 2 fractions per config, plus the uplift row
+        assert_eq!(rows.len(), 2 * 3 + 1);
+        for r in &rows {
+            if r.key("config") != Some("uplift") {
+                assert!(r.val("sustained_qps").unwrap() > 0.0, "{r:?}");
+            }
+        }
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert!(j.get("uplift").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        let cfgs = j.get("configs").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(cfgs.len(), 2);
+        for c in cfgs {
+            assert!(c.get("capacity_qps").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            let pts = c.get("points").and_then(|v| v.as_arr()).unwrap();
+            assert_eq!(pts.len(), 3);
+            for p in pts {
+                assert_eq!(p.get("errors").and_then(|v| v.as_usize()), Some(0), "{p}");
+            }
+        }
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn pct_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pct(&v, 0.5), 2.0);
+        assert_eq!(pct(&v, 0.99), 4.0);
+        assert_eq!(pct(&[], 0.5), 0.0);
+    }
+}

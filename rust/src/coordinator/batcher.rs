@@ -1,25 +1,55 @@
-//! Dynamic batcher: coalesce concurrent predict requests per model.
+//! Adaptive micro-batcher: coalesce concurrent predict requests per model.
 //!
 //! Prediction against a sketched-KRR model is a cross-kernel GEMV per
 //! query; batching queries into one cross-kernel GEMM amortises the
-//! landmark-matrix traversal (and, on the PJRT path, fills the fixed-shape
-//! predict bucket). Requests wait at most `max_wait` for co-riders; a full
-//! batch flushes immediately.
+//! landmark-matrix traversal. Two things distinguish this from a fixed
+//! `max_wait` batcher:
+//!
+//! * **Adaptive wait** (the control law, DESIGN.md §9): the worker keeps
+//!   an EWMA of observed inter-arrival gaps. The time the batch head
+//!   waits for co-riders is `min(cap, gap · remaining_slots)` — the
+//!   expected time for the rest of the batch to show up. At low arrival
+//!   rates (`gap ≥ cap`) the wait collapses to **zero**: a lone request
+//!   is served immediately instead of idling out the full `max_wait`
+//!   (the fixed-wait pathology this replaces). Under load the gap
+//!   shrinks, the wait grows toward the cap, and batches fill. Even at
+//!   zero budget the worker drains already-queued requests with a
+//!   non-blocking sweep, so queued co-riders always coalesce.
+//! * **Flat row buffers end-to-end**: a request carries one `Vec<f64>`
+//!   (row-major) from the wire to the GEMM. The flush path concatenates
+//!   flat buffers into a single [`Matrix`] with `copy_from_slice` —
+//!   no `Vec<Vec<f64>>`, no per-row allocation (test-enforced with a
+//!   counting allocator).
+//!
+//! Completion is callback-based ([`Completion`]) so the reactor can
+//! submit without parking a thread; [`Batcher::predict`] is the blocking
+//! convenience wrapper the sync dispatch path and tests use.
+//!
+//! **Determinism:** coalescing never changes an answer. `SketchedKrr::
+//! predict` assembles through the row-stable kernel path, so a row's
+//! prediction is bitwise identical whether it rides alone or in any
+//! batch composition (test-pinned here and in `tests/serving.rs`).
 
+use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::state::ModelStore;
 use crate::linalg::Matrix;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Max queries per flushed batch.
     pub max_batch: usize,
-    /// Max time the first request in a batch waits for co-riders.
+    /// Upper bound on the time the first request in a batch waits for
+    /// co-riders (the adaptive wait never exceeds this cap; with
+    /// `adaptive` off it is the fixed wait).
     pub max_wait: Duration,
+    /// Scale the wait with the observed arrival rate (see module docs).
+    /// Off = the classic fixed-deadline batcher.
+    pub adaptive: bool,
 }
 
 impl Default for BatcherConfig {
@@ -27,37 +57,75 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
+            adaptive: true,
         }
     }
 }
 
-struct Item {
+/// Completion callback invoked exactly once with the request's result
+/// (on the batcher worker thread).
+pub type Completion = Box<dyn FnOnce(Result<Vec<f64>, String>) + Send>;
+
+struct PredictJob {
     model: String,
-    rows: Vec<Vec<f64>>,
-    reply: Sender<Result<Vec<f64>, String>>,
+    /// Row-major `rows × dim` query block.
+    flat: Vec<f64>,
+    rows: usize,
+    dim: usize,
+    /// Submission time — measures queue + batch + GEMM latency.
+    t0: Instant,
+    done: Completion,
 }
 
-/// Counters exported by the `metrics` server op.
-#[derive(Debug, Default)]
-pub struct BatcherMetrics {
-    /// Total queries served.
-    pub queries: AtomicU64,
-    /// Total flushed batches.
-    pub batches: AtomicU64,
+/// EWMA weight for inter-arrival gap observations.
+const GAP_ALPHA: f64 = 0.2;
+
+/// The adaptive control law, pure for testability: how long to keep
+/// waiting for co-riders given the gap estimate (seconds, `∞` until the
+/// first observation), the wait cap, and the remaining batch slots.
+/// Returns zero when arrivals are slower than the cap (serve the lone
+/// request now), else the expected fill time `gap · remaining`, capped.
+pub(crate) fn adaptive_wait(gap_s: f64, cap: Duration, remaining: usize) -> Duration {
+    let cap_s = cap.as_secs_f64();
+    if !gap_s.is_finite() || gap_s >= cap_s {
+        return Duration::ZERO;
+    }
+    Duration::from_secs_f64((gap_s * remaining as f64).min(cap_s))
+}
+
+fn observe_gap(gap_ewma: &mut f64, last_arrival: &mut Option<Instant>, now: Instant) {
+    if let Some(prev) = *last_arrival {
+        let dt = now.duration_since(prev).as_secs_f64();
+        *gap_ewma = if gap_ewma.is_finite() {
+            (1.0 - GAP_ALPHA) * *gap_ewma + GAP_ALPHA * dt
+        } else {
+            dt
+        };
+    }
+    *last_arrival = Some(now);
 }
 
 /// Handle to the batching worker.
 pub struct Batcher {
-    tx: Mutex<Option<Sender<Item>>>,
+    tx: Mutex<Option<Sender<PredictJob>>>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
-    metrics: Arc<BatcherMetrics>,
+    metrics: Arc<ServingMetrics>,
 }
 
 impl Batcher {
     /// Spawn the worker thread over a shared model store.
     pub fn start(store: Arc<ModelStore>, cfg: BatcherConfig) -> Batcher {
-        let (tx, rx) = channel::<Item>();
-        let metrics = Arc::new(BatcherMetrics::default());
+        Batcher::start_with(store, cfg, Arc::new(ServingMetrics::new()))
+    }
+
+    /// As [`start`](Batcher::start), sharing an externally owned metrics
+    /// block (the server threads one block through reactor + batcher).
+    pub fn start_with(
+        store: Arc<ModelStore>,
+        cfg: BatcherConfig,
+        metrics: Arc<ServingMetrics>,
+    ) -> Batcher {
+        let (tx, rx) = channel::<PredictJob>();
         let m2 = metrics.clone();
         let handle = std::thread::spawn(move || worker(store, cfg, rx, m2));
         Batcher {
@@ -67,24 +135,67 @@ impl Batcher {
         }
     }
 
-    /// Submit rows for prediction against a named model; blocks until the
-    /// batch containing them is served.
-    pub fn predict(&self, model: &str, rows: Vec<Vec<f64>>) -> Result<Vec<f64>, String> {
-        let (reply_tx, reply_rx) = channel();
-        {
-            let guard = self.tx.lock().unwrap();
-            let tx = guard.as_ref().ok_or("batcher stopped")?;
-            tx.send(Item {
-                model: model.to_string(),
-                rows,
-                reply: reply_tx,
-            })
-            .map_err(|_| "batcher worker gone")?;
+    /// Submit a flat row-major `rows × dim` query block for prediction
+    /// against a named model; `done` fires exactly once (possibly before
+    /// this returns, for shape errors).
+    pub fn submit(&self, model: &str, flat: Vec<f64>, rows: usize, dim: usize, done: Completion) {
+        if rows == 0 || dim == 0 || flat.len() != rows * dim {
+            done(Err(format!(
+                "bad predict shape: {} values for {rows}x{dim}",
+                flat.len()
+            )));
+            return;
         }
-        reply_rx.recv().map_err(|_| "batcher dropped reply".to_string())?
+        let job = PredictJob {
+            model: model.to_string(),
+            flat,
+            rows,
+            dim,
+            t0: Instant::now(),
+            done,
+        };
+        let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+        match guard.as_ref() {
+            Some(tx) => {
+                if let Err(err) = tx.send(job) {
+                    let job = err.0;
+                    (job.done)(Err("batcher worker gone".into()));
+                }
+            }
+            None => (job.done)(Err("batcher stopped".into())),
+        }
     }
 
-    /// Metrics snapshot: (queries, batches).
+    /// Blocking convenience wrapper: flatten, submit, wait for the batch
+    /// containing these rows to be served.
+    pub fn predict(&self, model: &str, rows: Vec<Vec<f64>>) -> Result<Vec<f64>, String> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let dim = rows[0].len();
+        let mut flat = Vec::with_capacity(rows.len() * dim);
+        for row in &rows {
+            if row.len() != dim {
+                return Err("ragged predict rows".into());
+            }
+            flat.extend_from_slice(row);
+        }
+        let (reply_tx, reply_rx) = channel();
+        self.submit(
+            model,
+            flat,
+            rows.len(),
+            dim,
+            Box::new(move |r| {
+                let _ = reply_tx.send(r);
+            }),
+        );
+        reply_rx
+            .recv()
+            .map_err(|_| "batcher dropped reply".to_string())?
+    }
+
+    /// Legacy metrics snapshot: (queries, batches).
     pub fn metrics(&self) -> (u64, u64) {
         (
             self.metrics.queries.load(Ordering::Relaxed),
@@ -92,11 +203,16 @@ impl Batcher {
         )
     }
 
+    /// The full serving metrics block (shared with the reactor).
+    pub fn serving_metrics(&self) -> Arc<ServingMetrics> {
+        self.metrics.clone()
+    }
+
     /// Stop the worker (drains the queue).
     pub fn stop(&self) {
-        let tx = self.tx.lock().unwrap().take();
+        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
         drop(tx);
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        if let Some(h) = self.handle.lock().unwrap_or_else(|e| e.into_inner()).take() {
             let _ = h.join();
         }
     }
@@ -111,96 +227,119 @@ impl Drop for Batcher {
 fn worker(
     store: Arc<ModelStore>,
     cfg: BatcherConfig,
-    rx: Receiver<Item>,
-    metrics: Arc<BatcherMetrics>,
+    rx: Receiver<PredictJob>,
+    metrics: Arc<ServingMetrics>,
 ) {
+    let mut gap_ewma = f64::INFINITY;
+    let mut last_arrival: Option<Instant> = None;
     loop {
-        // block for the first item
+        // block for the batch head
         let first = match rx.recv() {
-            Ok(i) => i,
+            Ok(j) => j,
             Err(_) => return, // all senders gone
         };
-        let deadline = std::time::Instant::now() + cfg.max_wait;
-        let mut batch = vec![first];
-        let mut total_rows = batch[0].rows.len();
-        while total_rows < cfg.max_batch {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                break;
+        observe_gap(&mut gap_ewma, &mut last_arrival, Instant::now());
+        let start = Instant::now();
+        let mut total = first.rows;
+        let mut jobs = vec![first];
+        while total < cfg.max_batch {
+            let budget = if cfg.adaptive {
+                adaptive_wait(gap_ewma, cfg.max_wait, cfg.max_batch - total)
+            } else {
+                cfg.max_wait
+            };
+            let elapsed = start.elapsed();
+            if budget <= elapsed {
+                // budget exhausted — still sweep anything already queued
+                // so waiting co-riders coalesce instead of re-batching
+                match rx.try_recv() {
+                    Ok(j) => {
+                        observe_gap(&mut gap_ewma, &mut last_arrival, Instant::now());
+                        total += j.rows;
+                        jobs.push(j);
+                        continue;
+                    }
+                    Err(_) => break,
+                }
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(i) => {
-                    total_rows += i.rows.len();
-                    batch.push(i);
+            match rx.recv_timeout(budget - elapsed) {
+                Ok(j) => {
+                    observe_gap(&mut gap_ewma, &mut last_arrival, Instant::now());
+                    total += j.rows;
+                    jobs.push(j);
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        flush(&store, batch, &metrics);
+        flush(&store, jobs, &metrics);
     }
 }
 
-/// Serve one coalesced batch, grouping items by model.
-fn flush(store: &ModelStore, batch: Vec<Item>, metrics: &BatcherMetrics) {
+/// Serve one coalesced batch, grouping jobs by model via a sorted index
+/// vector (no name clones) and concatenating flat buffers straight into
+/// the GEMM input. Allocation budget: O(groups + jobs), never O(rows).
+fn flush(store: &ModelStore, mut jobs: Vec<PredictJob>, metrics: &ServingMetrics) {
     metrics.batches.fetch_add(1, Ordering::Relaxed);
-    // group indices by model name
-    let mut by_model: std::collections::HashMap<String, Vec<usize>> = Default::default();
-    for (i, item) in batch.iter().enumerate() {
-        by_model.entry(item.model.clone()).or_default().push(i);
-    }
-    let mut replies: Vec<Option<Result<Vec<f64>, String>>> = (0..batch.len()).map(|_| None).collect();
-    for (model_name, idxs) in by_model {
-        let stored = store.get(&model_name);
-        match stored {
+    let total_rows: usize = jobs.iter().map(|j| j.rows).sum();
+    metrics.batch_rows.record(total_rows as f64);
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| jobs[a].model.cmp(&jobs[b].model));
+    let mut results: Vec<Option<Result<Vec<f64>, String>>> =
+        (0..jobs.len()).map(|_| None).collect();
+    let mut g0 = 0;
+    while g0 < order.len() {
+        let mut g1 = g0 + 1;
+        while g1 < order.len() && jobs[order[g1]].model == jobs[order[g0]].model {
+            g1 += 1;
+        }
+        let group = &order[g0..g1];
+        let name = &jobs[group[0]].model;
+        match store.get(name) {
             None => {
-                for &i in &idxs {
-                    replies[i] = Some(Err(format!("unknown model {model_name:?}")));
+                for &i in group {
+                    results[i] = Some(Err(format!("unknown model {name:?}")));
                 }
             }
             Some(sm) => {
-                // build one matrix over all items for this model
                 let p = sm.model.landmarks().cols();
-                let rows: usize = idxs.iter().map(|&i| batch[i].rows.len()).sum();
-                let mut ok = true;
-                let mut xq = Matrix::zeros(rows, p);
-                let mut r = 0;
-                for &i in &idxs {
-                    for row in &batch[i].rows {
-                        if row.len() != p {
-                            ok = false;
-                            break;
-                        }
-                        xq.row_mut(r).copy_from_slice(row);
-                        r += 1;
+                if group.iter().any(|&i| jobs[i].dim != p) {
+                    for &i in group {
+                        results[i] = Some(Err(format!("feature dim != {p}")));
                     }
-                }
-                if !ok {
-                    for &i in &idxs {
-                        replies[i] = Some(Err(format!("feature dim != {p}")));
+                } else {
+                    let rows: usize = group.iter().map(|&i| jobs[i].rows).sum();
+                    let mut xq = Matrix::zeros(rows, p);
+                    let dst = xq.data_mut();
+                    let mut off = 0;
+                    for &i in group {
+                        let src = &jobs[i].flat;
+                        dst[off..off + src.len()].copy_from_slice(src);
+                        off += src.len();
                     }
-                    continue;
-                }
-                metrics.queries.fetch_add(rows as u64, Ordering::Relaxed);
-                let y = sm.model.predict(&xq);
-                let mut off = 0;
-                for &i in &idxs {
-                    let k = batch[i].rows.len();
-                    replies[i] = Some(Ok(y[off..off + k].to_vec()));
-                    off += k;
+                    metrics.queries.fetch_add(rows as u64, Ordering::Relaxed);
+                    let y = sm.model.predict(&xq);
+                    let mut yoff = 0;
+                    for &i in group {
+                        let k = jobs[i].rows;
+                        results[i] = Some(Ok(y[yoff..yoff + k].to_vec()));
+                        yoff += k;
+                    }
                 }
             }
         }
+        g0 = g1;
     }
-    for (item, reply) in batch.into_iter().zip(replies.into_iter()) {
-        let _ = item.reply.send(reply.unwrap_or_else(|| Err("internal: no reply".into())));
+    for (job, res) in jobs.drain(..).zip(results) {
+        metrics.predict_latency.record(job.t0.elapsed().as_secs_f64());
+        (job.done)(res.unwrap_or_else(|| Err("internal: no result".into())));
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::state::{StoredModel, TrainRequest};
+    use crate::coordinator::state::TrainRequest;
     use crate::sketch::SketchKind;
 
     fn store_with_model() -> Arc<ModelStore> {
@@ -244,11 +383,14 @@ mod tests {
     #[test]
     fn concurrent_requests_coalesce() {
         let store = store_with_model();
+        // fixed wait here: the property under test is coalescing, which
+        // must hold regardless of the control law
         let b = Arc::new(Batcher::start(
             store,
             BatcherConfig {
                 max_batch: 64,
                 max_wait: Duration::from_millis(30),
+                adaptive: false,
             },
         ));
         let mut handles = Vec::new();
@@ -275,5 +417,91 @@ mod tests {
         let b = Batcher::start(store, BatcherConfig::default());
         assert!(b.predict("nope", vec![vec![0.0; 3]]).is_err());
         assert!(b.predict("m", vec![vec![0.0; 7]]).is_err());
+    }
+
+    /// The control law: zero wait until the gap estimate exists or when
+    /// arrivals are slower than the cap; expected-fill-time otherwise;
+    /// always capped; monotone in `remaining`.
+    #[test]
+    fn adaptive_wait_control_law() {
+        let cap = Duration::from_millis(2);
+        assert_eq!(adaptive_wait(f64::INFINITY, cap, 63), Duration::ZERO);
+        assert_eq!(adaptive_wait(0.01, cap, 63), Duration::ZERO, "gap beyond cap");
+        assert_eq!(adaptive_wait(0.002, cap, 63), Duration::ZERO, "gap == cap");
+        let w = adaptive_wait(10e-6, cap, 50); // 10 µs gaps, 50 slots left
+        assert_eq!(w, Duration::from_secs_f64(500e-6));
+        assert_eq!(adaptive_wait(1e-3, cap, 63), cap, "capped");
+        let w1 = adaptive_wait(20e-6, cap, 10);
+        let w2 = adaptive_wait(20e-6, cap, 40);
+        assert!(w2 > w1, "more open slots => willing to wait longer");
+    }
+
+    /// A row's prediction is bitwise identical whether it is served
+    /// alone or coalesced behind other rows — the batcher must never
+    /// change an answer (row-stable assembly underneath).
+    #[test]
+    fn batch_composition_does_not_change_answers_bitwise() {
+        let store = store_with_model();
+        let b = Batcher::start(store, BatcherConfig::default());
+        let probe = vec![0.37, -1.2, 0.88];
+        let alone = b.predict("m", vec![probe.clone()]).unwrap();
+        let riding = b
+            .predict(
+                "m",
+                vec![vec![9.0, 9.0, 9.0], probe.clone(), vec![-3.0, 0.0, 3.0]],
+            )
+            .unwrap();
+        assert_eq!(alone[0].to_bits(), riding[1].to_bits());
+    }
+
+    /// The flush path allocates O(jobs), not O(rows): doubling the rows
+    /// per job must not grow the allocation count by more than the GEMM
+    /// panel slack. Pinned to one pool thread so every allocation lands
+    /// on this thread's counter.
+    #[test]
+    fn flush_does_no_per_row_allocations() {
+        use crate::util::mem::alloc_count;
+        let _guard = crate::pool::TEST_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let before_threads = crate::pool::num_threads();
+        crate::pool::set_num_threads(1);
+        let store = store_with_model();
+        let metrics = ServingMetrics::new();
+
+        let build_jobs = |rows_per_job: usize| -> Vec<PredictJob> {
+            (0..4)
+                .map(|j| {
+                    let flat: Vec<f64> = (0..rows_per_job * 3)
+                        .map(|t| 0.01 * (j * 1000 + t) as f64)
+                        .collect();
+                    PredictJob {
+                        model: "m".to_string(),
+                        flat,
+                        rows: rows_per_job,
+                        dim: 3,
+                        t0: Instant::now(),
+                        done: Box::new(|r| {
+                            assert!(r.is_ok());
+                        }),
+                    }
+                })
+                .collect()
+        };
+
+        let count_flush = |jobs: Vec<PredictJob>| -> u64 {
+            let a0 = alloc_count::on_thread();
+            flush(&store, jobs, &metrics);
+            alloc_count::on_thread() - a0
+        };
+        // warm up lazily-initialised state (dispatch detection etc.)
+        count_flush(build_jobs(2));
+        let small = count_flush(build_jobs(8)); // 32 rows total
+        let large = count_flush(build_jobs(64)); // 256 rows total
+        crate::pool::set_num_threads(before_threads);
+        assert!(
+            large <= small + 64,
+            "flush allocations scale with rows: {small} for 32 rows vs {large} for 256"
+        );
     }
 }

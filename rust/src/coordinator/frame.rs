@@ -1,0 +1,258 @@
+//! Wire framing for the serving plane (protocol v2).
+//!
+//! A v2 message is a **length-prefixed JSON frame**: a 4-byte big-endian
+//! payload length followed by that many bytes of UTF-8 JSON. Frames never
+//! exceed [`MAX_FRAME`] (8 MiB), so the high byte of a valid length
+//! prefix is always `0x00` — which is also how the server tells protocols
+//! apart: the first byte of a connection is sniffed ([`sniff`]), `0x00`
+//! selects framed mode, `{` or leading whitespace selects the legacy
+//! newline-delimited JSON protocol (v1, unchanged for old clients), and
+//! anything else is rejected. A connection keeps its sniffed mode for its
+//! whole lifetime.
+//!
+//! Framing exists so the reactor can multiplex: requests carry an `"id"`
+//! and framed replies may arrive out of submission order (the reply
+//! echoes the id), whereas legacy-mode replies are always released in
+//! request order. [`Decoder`] is the incremental parser both modes share
+//! on the server side; [`write_frame`]/[`read_frame`] are the blocking
+//! client-side helpers the CLI, the load-generator bench and the tests
+//! speak the protocol with.
+
+use crate::util::json::Json;
+use std::io::{self, Read, Write};
+
+/// Hard cap on a single frame's payload (8 MiB — a predict batch of
+/// ~130k rows of 8 features; anything larger should be chunked by the
+/// client). Kept below `2^24` so valid length prefixes always start with
+/// a zero byte (the protocol-sniffing invariant).
+pub const MAX_FRAME: usize = 8 << 20;
+
+/// Header size: 4-byte big-endian payload length.
+pub const HEADER: usize = 4;
+
+/// Which protocol a connection speaks (decided once per connection by
+/// [`sniff`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wire {
+    /// v2: length-prefixed JSON frames, multiplexed via request ids.
+    Framed,
+    /// v1: newline-delimited JSON, replies strictly in request order.
+    Legacy,
+}
+
+/// Decode errors the incremental [`Decoder`] can hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Declared payload length exceeds [`MAX_FRAME`]; the stream cannot
+    /// be resynchronised, so the connection must close after the error
+    /// reply.
+    Oversized(usize),
+}
+
+/// Classify a connection by its first byte. `None` → unknown protocol
+/// (reject the connection with an error).
+pub fn sniff(first: u8) -> Option<Wire> {
+    match first {
+        0x00 => Some(Wire::Framed),
+        b'{' | b' ' | b'\t' | b'\r' | b'\n' => Some(Wire::Legacy),
+        _ => None,
+    }
+}
+
+/// Wrap a payload in the 4-byte big-endian length header.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME, "frame exceeds MAX_FRAME");
+    let mut out = Vec::with_capacity(HEADER + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode a JSON value as one framed message.
+pub fn frame_msg(j: &Json) -> Vec<u8> {
+    encode_frame(j.to_string().as_bytes())
+}
+
+/// Encode a JSON value as one legacy newline-terminated line.
+pub fn legacy_msg(j: &Json) -> Vec<u8> {
+    let mut out = j.to_string().into_bytes();
+    out.push(b'\n');
+    out
+}
+
+/// Write one framed request/reply (blocking client side).
+pub fn write_frame<W: Write>(w: &mut W, j: &Json) -> io::Result<()> {
+    w.write_all(&frame_msg(j))?;
+    w.flush()
+}
+
+/// Read one framed message (blocking client side). `InvalidData` on an
+/// oversized header or malformed JSON payload; `UnexpectedEof` on a
+/// half-written frame.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Json> {
+    let mut hdr = [0u8; HEADER];
+    r.read_exact(&mut hdr)?;
+    let len = u32::from_be_bytes(hdr) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds MAX_FRAME"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame payload not UTF-8"))?;
+    Json::parse(text).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+/// Incremental receive buffer shared by both protocols: bytes go in via
+/// [`push`](Decoder::push), complete frames or lines come out. Consumed
+/// bytes are reclaimed lazily ([`compact`](Decoder::compact) runs
+/// internally once the dead prefix outgrows the live tail).
+#[derive(Default)]
+pub struct Decoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl Decoder {
+    /// Empty decoder.
+    pub fn new() -> Decoder {
+        Decoder::default()
+    }
+
+    /// Append received bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Unconsumed bytes currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn compact(&mut self) {
+        if self.pos > 0 && self.pos >= self.buf.len().max(4096) / 2 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Next complete frame payload, if one is fully buffered.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, FrameError> {
+        let avail = self.buffered();
+        if avail < HEADER {
+            return Ok(None);
+        }
+        let hdr = &self.buf[self.pos..self.pos + HEADER];
+        let len = u32::from_be_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+        if len > MAX_FRAME {
+            return Err(FrameError::Oversized(len));
+        }
+        if avail < HEADER + len {
+            return Ok(None);
+        }
+        let start = self.pos + HEADER;
+        let payload = self.buf[start..start + len].to_vec();
+        self.pos = start + len;
+        self.compact();
+        Ok(Some(payload))
+    }
+
+    /// Next complete newline-terminated line (legacy mode), without the
+    /// terminator. Non-UTF-8 bytes are replaced, surfacing later as a
+    /// JSON parse error rather than a connection kill.
+    pub fn next_line(&mut self) -> Option<String> {
+        let rel = self.buf[self.pos..].iter().position(|&b| b == b'\n')?;
+        let end = self.pos + rel;
+        let line = String::from_utf8_lossy(&self.buf[self.pos..end])
+            .trim_end_matches('\r')
+            .to_string();
+        self.pos = end + 1;
+        self.compact();
+        Some(line)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_through_decoder() {
+        let j = Json::obj(vec![("method", Json::Str("ping".into())), ("id", Json::from(7usize))]);
+        let bytes = frame_msg(&j);
+        assert_eq!(bytes[0], 0x00, "length high byte must be the sniff byte");
+        let mut d = Decoder::new();
+        d.push(&bytes);
+        let payload = d.next_frame().unwrap().unwrap();
+        assert_eq!(Json::parse(std::str::from_utf8(&payload).unwrap()).unwrap(), j);
+        assert_eq!(d.next_frame().unwrap(), None);
+    }
+
+    #[test]
+    fn decoder_handles_byte_at_a_time_and_pipelined_frames() {
+        let a = frame_msg(&Json::obj(vec![("id", Json::from(1usize))]));
+        let b = frame_msg(&Json::obj(vec![("id", Json::from(2usize))]));
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        let mut d = Decoder::new();
+        let mut got = Vec::new();
+        for byte in stream {
+            d.push(&[byte]);
+            while let Some(p) = d.next_frame().unwrap() {
+                got.push(p);
+            }
+        }
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], a[HEADER..].to_vec());
+        assert_eq!(got[1], b[HEADER..].to_vec());
+    }
+
+    #[test]
+    fn oversized_header_is_an_error() {
+        let mut d = Decoder::new();
+        d.push(&((MAX_FRAME as u32 + 1).to_be_bytes()));
+        assert_eq!(d.next_frame(), Err(FrameError::Oversized(MAX_FRAME + 1)));
+    }
+
+    #[test]
+    fn half_frame_stays_pending() {
+        let bytes = frame_msg(&Json::obj(vec![("id", Json::from(3usize))]));
+        let mut d = Decoder::new();
+        d.push(&bytes[..bytes.len() - 1]);
+        assert_eq!(d.next_frame().unwrap(), None);
+        d.push(&bytes[bytes.len() - 1..]);
+        assert!(d.next_frame().unwrap().is_some());
+    }
+
+    #[test]
+    fn legacy_lines_split_correctly() {
+        let mut d = Decoder::new();
+        d.push(b"{\"op\":\"ping\"}\r\n{\"op\":");
+        assert_eq!(d.next_line().as_deref(), Some("{\"op\":\"ping\"}"));
+        assert_eq!(d.next_line(), None);
+        d.push(b"\"metrics\"}\n");
+        assert_eq!(d.next_line().as_deref(), Some("{\"op\":\"metrics\"}"));
+    }
+
+    #[test]
+    fn sniff_table() {
+        assert_eq!(sniff(0x00), Some(Wire::Framed));
+        assert_eq!(sniff(b'{'), Some(Wire::Legacy));
+        assert_eq!(sniff(b' '), Some(Wire::Legacy));
+        assert_eq!(sniff(b'\n'), Some(Wire::Legacy));
+        assert_eq!(sniff(b'G'), None, "HTTP and other junk is rejected");
+        assert_eq!(sniff(0x01), None, "oversized first header byte is rejected");
+    }
+
+    #[test]
+    fn blocking_helpers_roundtrip() {
+        let j = Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::nums(&[1.5, -2.0]))]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &j).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), j);
+    }
+}

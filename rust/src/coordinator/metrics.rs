@@ -1,0 +1,240 @@
+//! Serving-plane metrics: lock-free counters plus fixed-bucket
+//! histograms (no deps, no allocation after construction).
+//!
+//! The histograms use **fixed log-spaced bucket bounds** chosen at
+//! construction, with one `AtomicU64` per bucket — `record` is a single
+//! linear scan + one relaxed fetch-add, cheap enough to sit on the
+//! per-request hot path. Quantiles are reconstructed by a cumulative
+//! walk with linear interpolation inside the winning bucket, which makes
+//! `quantile(q)` monotone in `q` by construction.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed-bucket histogram. Bounds are upper edges; the last bucket is
+/// unbounded (`> bounds.last()`).
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+}
+
+impl Histogram {
+    /// Histogram over explicit upper bucket edges (must be ascending).
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, counts }
+    }
+
+    /// Log-spaced bounds for second-scale latencies: 10 µs up to ~100 s
+    /// with ratio 1.6 (~2 buckets per octave, ~35 buckets total).
+    pub fn log_time() -> Histogram {
+        let mut bounds = Vec::new();
+        let mut b = 1e-5;
+        while b < 100.0 {
+            bounds.push(b);
+            b *= 1.6;
+        }
+        Histogram::new(bounds)
+    }
+
+    /// Power-of-two bounds for batch-size distributions: 1, 2, 4, … 4096.
+    pub fn pow2() -> Histogram {
+        Histogram::new((0..13).map(|i| (1u64 << i) as f64).collect())
+    }
+
+    /// Record one observation.
+    pub fn record(&self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate `q`-quantile (`0 ≤ q ≤ 1`), linearly interpolated
+    /// inside the winning bucket; `0.0` when empty. For the unbounded
+    /// last bucket the lower edge is returned (a deliberate lower
+    /// bound). Monotone in `q`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if (cum + n) as f64 >= target {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                if i == self.bounds.len() {
+                    return lo;
+                }
+                let hi = self.bounds[i];
+                let frac = (target - cum as f64) / n as f64;
+                return lo + (hi - lo) * frac.clamp(0.0, 1.0);
+            }
+            cum += n;
+        }
+        *self.bounds.last().unwrap_or(&0.0)
+    }
+
+    /// Mean of recorded values approximated by bucket midpoints (lower
+    /// edge for the unbounded tail); `0.0` when empty.
+    pub fn approx_mean(&self) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed) as f64;
+            if n == 0.0 {
+                continue;
+            }
+            let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+            let mid = if i == self.bounds.len() { lo } else { (lo + self.bounds[i]) / 2.0 };
+            sum += mid * n;
+        }
+        sum / total as f64
+    }
+
+    /// Serialize as `{count, p50, p90, p99, mean}` (values in the
+    /// recorded unit).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::from(self.count() as f64)),
+            ("p50", Json::from(self.quantile(0.50))),
+            ("p90", Json::from(self.quantile(0.90))),
+            ("p99", Json::from(self.quantile(0.99))),
+            ("mean", Json::from(self.approx_mean())),
+        ])
+    }
+}
+
+/// All serving-plane counters, shared by the reactor, the batcher and
+/// the `metrics` op. Everything is atomic; the struct lives in an `Arc`.
+pub struct ServingMetrics {
+    /// Rows predicted (legacy name: `queries`).
+    pub queries: AtomicU64,
+    /// Batches flushed by the micro-batcher.
+    pub batches: AtomicU64,
+    /// Requests shed by backpressure (`overloaded` replies).
+    pub shed: AtomicU64,
+    /// Malformed / oversized / unparseable frames and lines.
+    pub frame_errors: AtomicU64,
+    /// End-to-end predict latency in seconds (submit → reply encoded).
+    pub predict_latency: Histogram,
+    /// Rows per flushed batch.
+    pub batch_rows: Histogram,
+}
+
+impl ServingMetrics {
+    /// Fresh zeroed metrics.
+    pub fn new() -> ServingMetrics {
+        ServingMetrics {
+            queries: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            frame_errors: AtomicU64::new(0),
+            predict_latency: Histogram::log_time(),
+            batch_rows: Histogram::pow2(),
+        }
+    }
+
+    /// Snapshot for the `metrics` op. Latency quantiles are reported in
+    /// **milliseconds**.
+    pub fn to_json(&self) -> Json {
+        let lat = &self.predict_latency;
+        let ms = 1e3;
+        Json::obj(vec![
+            ("queries", Json::from(self.queries.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::from(self.batches.load(Ordering::Relaxed) as f64)),
+            ("shed", Json::from(self.shed.load(Ordering::Relaxed) as f64)),
+            ("frame_errors", Json::from(self.frame_errors.load(Ordering::Relaxed) as f64)),
+            (
+                "predict_latency_ms",
+                Json::obj(vec![
+                    ("count", Json::from(lat.count() as f64)),
+                    ("p50", Json::from(lat.quantile(0.50) * ms)),
+                    ("p90", Json::from(lat.quantile(0.90) * ms)),
+                    ("p99", Json::from(lat.quantile(0.99) * ms)),
+                    ("mean", Json::from(lat.approx_mean() * ms)),
+                ]),
+            ),
+            ("batch_rows", self.batch_rows.to_json()),
+        ])
+    }
+}
+
+impl Default for ServingMetrics {
+    fn default() -> ServingMetrics {
+        ServingMetrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_order_and_interpolate() {
+        let h = Histogram::log_time();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4); // 0.1 ms .. 100 ms
+        }
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        assert!(p50 > 1e-3 && p50 < 1e-1, "p50={p50}");
+        assert!(p99 > p50, "p99={p99} should exceed p50={p50}");
+        assert!(p99 < 0.2, "p99={p99}");
+    }
+
+    #[test]
+    fn quantile_is_monotone_in_q() {
+        let h = Histogram::pow2();
+        for v in [1.0, 1.0, 3.0, 5.0, 17.0, 200.0, 5000.0, 9000.0] {
+            h.record(v);
+        }
+        let mut last = -1.0;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = h.quantile(q);
+            assert!(v >= last, "quantile not monotone at q={q}: {v} < {last}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = Histogram::log_time();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.approx_mean(), 0.0);
+    }
+
+    #[test]
+    fn metrics_serialize_cleanly_and_counters_are_monotone() {
+        let m = ServingMetrics::new();
+        m.queries.fetch_add(3, Ordering::Relaxed);
+        m.batches.fetch_add(1, Ordering::Relaxed);
+        m.predict_latency.record(2e-3);
+        let before = m.to_json().to_string();
+        let parsed = Json::parse(&before).expect("metrics JSON must parse");
+        assert_eq!(parsed.get("queries").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(parsed.get("shed").and_then(Json::as_f64), Some(0.0));
+        // Monotone: more activity never decreases any counter.
+        m.queries.fetch_add(2, Ordering::Relaxed);
+        m.shed.fetch_add(1, Ordering::Relaxed);
+        let after = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(after.get("queries").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(after.get("shed").and_then(Json::as_f64), Some(1.0));
+        let lat = after.get("predict_latency_ms").expect("latency block");
+        assert!(lat.get("p99").and_then(Json::as_f64).unwrap() >= 0.0);
+    }
+}

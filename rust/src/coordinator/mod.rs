@@ -4,20 +4,65 @@
 //! * [`jobs`] — experiment job scheduler: parameter sweeps × replicates run
 //!   on a worker pool with per-job RNG streams (drives every bench figure
 //!   and the `cluster` job's per-k model-selection sweep).
-//! * [`state`] — model store: named trained models behind an `RwLock`, with
-//!   JSON persistence (landmarks + β round-trip); also hosts the stateless
-//!   job runners shared by the TCP server and the CLI
-//!   ([`state::run_cluster_job`], [`state::parse_sketch_spec`]).
-//! * [`batcher`] — dynamic batcher: concurrent predict requests are
-//!   coalesced (per model) up to a batch cap / deadline before hitting the
-//!   compute path — the same discipline a serving system applies in front
-//!   of fixed-shape accelerators.
-//! * [`server`] — threaded TCP server speaking newline-delimited JSON
-//!   (`train` / `predict` / `cluster` / `models` / `metrics` / `ping`).
-//!   `train` accepts an optional `"precision":"f32"` field to route
-//!   one-shot fits through single-precision Gram assembly (the
+//! * [`state`] — model store: named trained models behind sharded
+//!   `RwLock`s (name-hashed, so serving-path reads don't contend with a
+//!   concurrent `train`), with JSON persistence (landmarks + β
+//!   round-trip); also hosts the stateless job runners shared by the TCP
+//!   server and the CLI ([`state::run_cluster_job`],
+//!   [`state::parse_sketch_spec`]).
+//! * [`batcher`] — adaptive micro-batcher: concurrent predict requests
+//!   are coalesced (per model) into one cross-kernel GEMM. The wait for
+//!   co-riders scales with the observed arrival rate — zero at low load
+//!   (lone requests are served immediately), growing toward the cap as
+//!   the queue heats up (DESIGN.md §9).
+//! * [`frame`] — the v2 wire format: 4-byte big-endian length-prefixed
+//!   JSON frames, plus the incremental [`frame::Decoder`] both protocols
+//!   share.
+//! * [`metrics`] — lock-free serving counters and fixed-bucket
+//!   log-spaced histograms (latency quantiles, batch-size distribution)
+//!   behind the `metrics` op.
+//! * `reactor` (crate-private) — the single-threaded readiness loop
+//!   driving every connection: non-blocking sockets, per-connection
+//!   bounded write queues, load shedding, `mpsc`-based completion/wake.
+//! * [`server`] — the TCP serving front end tying the above together
+//!   (`train` / `predict` / `cluster` / `models` / `metrics` / `ping` /
+//!   `shutdown`). `train` accepts an optional `"precision":"f32"` field
+//!   to route one-shot fits through single-precision Gram assembly (the
 //!   [`Precision`](crate::linalg::Precision) knob; `d×d` solves stay
 //!   f64, adaptive fits ignore it).
+//!
+//! # Wire protocols
+//!
+//! Every connection speaks one of two protocols, auto-detected from its
+//! first byte and fixed for the connection's lifetime:
+//!
+//! **v1 (legacy)** — newline-delimited JSON, one request per line, one
+//! reply per line, replies in request order. First byte `{` (or
+//! whitespace). Byte-compatible with every pre-v2 client.
+//!
+//! **v2 (framed)** — each message is a 4-byte big-endian length header
+//! followed by that many bytes of UTF-8 JSON. The frame cap is 8 MiB
+//! ([`frame::MAX_FRAME`]), so a header's first byte is always `0x00` —
+//! that is the sniff. Requests carry `method` (the operation; `op` is
+//! accepted as an alias) and optionally `id` (any JSON value). Replies
+//! are multiplexed: they arrive as their handlers finish, **not**
+//! necessarily in request order, and every reply envelope guarantees
+//!
+//! ```text
+//! {"id": <echoed id, if the request had one>,
+//!  "method": "<echoed method>",
+//!  "ok": true|false,
+//!  "err"/"error": "<message, mirrored under both keys when present>",
+//!  ...op-specific fields}
+//! ```
+//!
+//! Pipelining is unlimited up to the backpressure bounds: a connection
+//! with more than `max_inflight` outstanding requests, or more than
+//! `high_water_bytes` of unread reply bytes, gets
+//! `{"ok":false,"err":"overloaded"}` immediately (and a `shed` metrics
+//! tick) instead of queueing without bound. Malformed JSON gets a
+//! structured `bad json` error; an oversized frame is answered then the
+//! connection closes (the stream cannot be resynchronised).
 //!
 //! # The `cluster` job kind
 //!
@@ -48,11 +93,15 @@
 //! "inertia", "eigengap"}…]` when `k_max` triggered model selection.
 
 pub mod batcher;
+pub mod frame;
 pub mod jobs;
+pub mod metrics;
+pub(crate) mod reactor;
 pub mod server;
 pub mod state;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batcher, BatcherConfig, Completion};
 pub use jobs::{JobScheduler, SweepPoint};
-pub use server::{serve, ServerConfig};
+pub use metrics::{Histogram, ServingMetrics};
+pub use server::{serve, ServerConfig, ServerHandle};
 pub use state::{ClusterRequest, ModelStore, StoredModel, TrainRequest};

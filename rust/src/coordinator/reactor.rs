@@ -1,0 +1,539 @@
+//! Single-threaded readiness loop driving every serving connection.
+//!
+//! Pure-`std` event loop (DESIGN.md §9): the listener and all accepted
+//! sockets run non-blocking, and one reactor thread sweeps them —
+//! accept burst, completion drain, per-connection reads → parse →
+//! dispatch, write flush — then parks briefly on the completion channel
+//! when a sweep found no work. The `mpsc` completion channel doubles as
+//! the wake mechanism: worker threads (batcher, task pool) finish a
+//! request by sending [`Done::Reply`], which both delivers the bytes and
+//! wakes the reactor. Without `epoll`/`kqueue` (no `libc` in the
+//! zero-dep substrate) idle wakeups are bounded by the park interval:
+//! 200 µs with open connections, 5 ms when idle — a latency floor that
+//! disappears under load, when the sweep always finds work and never
+//! parks.
+//!
+//! **Backpressure** is per connection and enforced at parse time: a
+//! request that would push `inflight` past `max_inflight`, or that
+//! arrives while the outbound queue holds more than `high_water_bytes`
+//! of unread replies, is shed immediately with
+//! `{"ok":false,"err":"overloaded"}` (and a `shed` counter tick) instead
+//! of being dispatched. Reply bytes queue in a per-connection
+//! [`VecDeque`] and are written opportunistically; a slow reader
+//! therefore fills its own queue and starts shedding without affecting
+//! any other connection.
+//!
+//! **Ordering:** every parsed request gets a per-connection sequence
+//! number and completes exactly once (dispatch reply, parse error, or
+//! shed). Legacy-mode replies are parked and released strictly in
+//! sequence order (newline clients have no ids to match on); framed
+//! replies are released the moment they complete — the id does the
+//! matching.
+
+use crate::coordinator::frame::{legacy_msg, sniff, Decoder, FrameError, Wire};
+use crate::coordinator::metrics::ServingMetrics;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// Reactor-level limits (the server config carries user-facing knobs).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ReactorConfig {
+    /// Max requests in flight per connection before shedding.
+    pub max_inflight: usize,
+    /// Max queued outbound bytes per connection before shedding.
+    pub high_water_bytes: usize,
+}
+
+/// Messages into the reactor: a finished request's reply bytes, or a
+/// bare wakeup (shutdown nudge).
+pub(crate) enum Done {
+    Reply {
+        conn: usize,
+        gen: u64,
+        seq: u64,
+        bytes: Vec<u8>,
+    },
+    Wake,
+}
+
+/// One-shot reply channel handed to the router per request. Dropping it
+/// without sending leaks the sequence slot on a legacy connection, so
+/// routers must guarantee exactly-once delivery (the coordinator router
+/// wraps handlers in `catch_unwind` for this reason).
+pub(crate) struct ReplySink {
+    tx: Sender<Done>,
+    conn: usize,
+    gen: u64,
+    seq: u64,
+    mode: Wire,
+    id: Json,
+    method: String,
+}
+
+impl ReplySink {
+    /// Encode the reply for this connection's protocol and deliver it to
+    /// the reactor (also wakes it).
+    pub fn send(self, reply: Json) {
+        let bytes = encode_reply(self.mode, &self.id, &self.method, reply);
+        let _ = self.tx.send(Done::Reply {
+            conn: self.conn,
+            gen: self.gen,
+            seq: self.seq,
+            bytes,
+        });
+    }
+}
+
+/// Request dispatcher plugged into the reactor (implemented by
+/// `server::CoordRouter`; a trait so protocol tests can stub it).
+pub(crate) trait Router: Send + Sync + 'static {
+    /// Handle one parsed request; must eventually call `sink.send`
+    /// exactly once (synchronously or from another thread).
+    fn route(&self, req: Json, sink: ReplySink);
+    /// Cooperative shutdown flag: when set, the reactor stops accepting
+    /// and reading, drains outstanding work briefly, and exits.
+    fn stop_flag(&self) -> &AtomicBool;
+    /// Shared counters (shed / frame errors are ticked by the reactor).
+    fn metrics(&self) -> &ServingMetrics;
+}
+
+/// Envelope guarantee for framed replies: inject the echoed `id` and
+/// `method`, default `ok` to `true` when the handler didn't set it, and
+/// mirror `err`/`error` both ways so clients can rely on either key.
+/// Legacy replies are passed through untouched (v1 compatibility).
+pub(crate) fn encode_reply(mode: Wire, id: &Json, method: &str, mut reply: Json) -> Vec<u8> {
+    match mode {
+        Wire::Legacy => legacy_msg(&reply),
+        Wire::Framed => {
+            if let Json::Obj(m) = &mut reply {
+                if !matches!(id, Json::Null) {
+                    m.insert("id".into(), id.clone());
+                }
+                if !method.is_empty() && !m.contains_key("method") {
+                    m.insert("method".into(), Json::Str(method.to_string()));
+                }
+                if !m.contains_key("ok") {
+                    m.insert("ok".into(), Json::Bool(true));
+                }
+                if let Some(e) = m.get("error").cloned() {
+                    m.entry("err".to_string()).or_insert(e);
+                } else if let Some(e) = m.get("err").cloned() {
+                    m.entry("error".to_string()).or_insert(e);
+                }
+            }
+            crate::coordinator::frame::frame_msg(&reply)
+        }
+    }
+}
+
+fn err_reply(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+/// The canonical load-shed reply; carries both error keys explicitly so
+/// even legacy clients (no envelope injection) see `"err":"overloaded"`.
+fn overloaded_reply() -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("err", Json::Str("overloaded".into())),
+        ("error", Json::Str("overloaded".into())),
+    ])
+}
+
+struct Conn {
+    stream: TcpStream,
+    gen: u64,
+    mode: Option<Wire>,
+    dec: Decoder,
+    wq: VecDeque<Vec<u8>>,
+    /// Bytes of `wq.front()` already written.
+    wfront: usize,
+    /// Total unwritten outbound bytes (the backpressure signal).
+    wbytes: usize,
+    next_seq: u64,
+    /// Legacy ordering: next sequence number eligible for release.
+    release_next: u64,
+    /// Legacy replies completed out of order, keyed by sequence.
+    parked: BTreeMap<u64, Vec<u8>>,
+    inflight: usize,
+    /// Half-closed: no more reads; freed once fully drained.
+    closing: bool,
+    /// Unrecoverable; freed on the next sweep.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, gen: u64) -> Conn {
+        Conn {
+            stream,
+            gen,
+            mode: None,
+            dec: Decoder::new(),
+            wq: VecDeque::new(),
+            wfront: 0,
+            wbytes: 0,
+            next_seq: 0,
+            release_next: 0,
+            parked: BTreeMap::new(),
+            inflight: 0,
+            closing: false,
+            dead: false,
+        }
+    }
+
+    fn enqueue(&mut self, bytes: Vec<u8>) {
+        self.wbytes += bytes.len();
+        self.wq.push_back(bytes);
+    }
+
+    /// A request finished: account it and release what's releasable.
+    fn complete(&mut self, seq: u64, bytes: Vec<u8>) {
+        self.inflight = self.inflight.saturating_sub(1);
+        match self.mode {
+            Some(Wire::Legacy) => {
+                self.parked.insert(seq, bytes);
+                while let Some(b) = self.parked.remove(&self.release_next) {
+                    self.enqueue(b);
+                    self.release_next += 1;
+                }
+            }
+            _ => self.enqueue(bytes),
+        }
+    }
+
+    /// Write until the socket pushes back. Returns `true` on progress.
+    fn flush_writes(&mut self) -> bool {
+        let mut progressed = false;
+        while let Some(front) = self.wq.front() {
+            match self.stream.write(&front[self.wfront..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return progressed;
+                }
+                Ok(n) => {
+                    progressed = true;
+                    self.wfront += n;
+                    self.wbytes -= n;
+                    if self.wfront == front.len() {
+                        self.wq.pop_front();
+                        self.wfront = 0;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return progressed,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return progressed;
+                }
+            }
+        }
+        progressed
+    }
+
+    /// Drained and done: nothing queued, nothing parked, nothing inflight.
+    fn drained(&self) -> bool {
+        self.wq.is_empty() && self.parked.is_empty() && self.inflight == 0
+    }
+}
+
+/// Spawn the reactor thread over a bound (blocking-mode) listener.
+/// Returns the completion/wake sender and the join handle; the thread
+/// exits once the router's stop flag is set and the grace drain ends.
+pub(crate) fn spawn<R: Router>(
+    listener: TcpListener,
+    router: std::sync::Arc<R>,
+    cfg: ReactorConfig,
+) -> std::io::Result<(Sender<Done>, std::thread::JoinHandle<()>)> {
+    listener.set_nonblocking(true)?;
+    let (tx, rx) = channel::<Done>();
+    let tx2 = tx.clone();
+    let handle = std::thread::Builder::new()
+        .name("accumkrr-reactor".into())
+        .spawn(move || run(listener, router, cfg, tx2, rx))
+        .expect("spawn reactor thread");
+    Ok((tx, handle))
+}
+
+fn run<R: Router>(
+    listener: TcpListener,
+    router: std::sync::Arc<R>,
+    cfg: ReactorConfig,
+    tx: Sender<Done>,
+    rx: Receiver<Done>,
+) {
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut gens: Vec<u64> = Vec::new();
+    let mut buf = vec![0u8; 16 * 1024];
+    loop {
+        let stopping = router.stop_flag().load(Ordering::SeqCst);
+        let mut activity = false;
+
+        if !stopping {
+            // accept burst (bounded so a connect flood can't starve IO)
+            for _ in 0..64 {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        let _ = s.set_nodelay(true);
+                        if s.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        activity = true;
+                        let slot = conns.iter().position(|c| c.is_none());
+                        match slot {
+                            Some(i) => conns[i] = Some(Conn::new(s, gens[i])),
+                            None => {
+                                conns.push(Some(Conn::new(s, 0)));
+                                gens.push(0);
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // drain finished work
+        while let Ok(done) = rx.try_recv() {
+            activity = true;
+            apply_done(&mut conns, done);
+        }
+
+        // per-connection IO sweep
+        for idx in 0..conns.len() {
+            let Some(conn) = conns[idx].as_mut() else {
+                continue;
+            };
+            if !stopping && !conn.closing && !conn.dead {
+                // bounded read burst per tick per connection
+                'reads: for _ in 0..4 {
+                    match conn.stream.read(&mut buf) {
+                        Ok(0) => {
+                            conn.closing = true;
+                            break 'reads;
+                        }
+                        Ok(n) => {
+                            activity = true;
+                            if conn.mode.is_none() {
+                                match sniff(buf[0]) {
+                                    Some(m) => conn.mode = Some(m),
+                                    None => {
+                                        router
+                                            .metrics()
+                                            .frame_errors
+                                            .fetch_add(1, Ordering::Relaxed);
+                                        conn.enqueue(legacy_msg(&err_reply(
+                                            "unknown protocol (expected framed or newline JSON)",
+                                        )));
+                                        conn.closing = true;
+                                        break 'reads;
+                                    }
+                                }
+                            }
+                            conn.dec.push(&buf[..n]);
+                            parse_available(conn, idx, router.as_ref(), &tx, &cfg);
+                            if conn.closing || conn.dead {
+                                break 'reads;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break 'reads,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            conn.dead = true;
+                            break 'reads;
+                        }
+                    }
+                }
+            }
+            if conn.flush_writes() {
+                activity = true;
+            }
+            if conn.dead || (conn.closing && conn.drained()) {
+                gens[idx] = conn.gen + 1;
+                conns[idx] = None;
+            }
+        }
+
+        if stopping {
+            grace_drain(&mut conns, &rx);
+            return;
+        }
+
+        if !activity {
+            let open = conns.iter().filter(|c| c.is_some()).count();
+            let park = if open > 0 {
+                Duration::from_micros(200)
+            } else {
+                Duration::from_millis(5)
+            };
+            match rx.recv_timeout(park) {
+                Ok(done) => apply_done(&mut conns, done),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+    }
+}
+
+/// Post-shutdown drain: deliver already-inflight replies (the shutdown
+/// ack itself among them) and flush sockets, bounded at 250 ms so
+/// shutdown latency stays deterministic even with a slow op in flight.
+fn grace_drain(conns: &mut [Option<Conn>], rx: &Receiver<Done>) {
+    let deadline = Instant::now() + Duration::from_millis(250);
+    loop {
+        while let Ok(done) = rx.try_recv() {
+            apply_done_slice(conns, done);
+        }
+        let mut pending = false;
+        for conn in conns.iter_mut().flatten() {
+            conn.flush_writes();
+            if !conn.dead && !conn.drained() {
+                pending = true;
+            }
+        }
+        if !pending || Instant::now() >= deadline {
+            return;
+        }
+        match rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(done) => apply_done_slice(conns, done),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // no more completions can arrive; flush what's queued
+                for conn in conns.iter_mut().flatten() {
+                    conn.flush_writes();
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn apply_done(conns: &mut Vec<Option<Conn>>, done: Done) {
+    apply_done_slice(conns.as_mut_slice(), done);
+}
+
+fn apply_done_slice(conns: &mut [Option<Conn>], done: Done) {
+    if let Done::Reply {
+        conn,
+        gen,
+        seq,
+        bytes,
+    } = done
+    {
+        if let Some(Some(c)) = conns.get_mut(conn) {
+            if c.gen == gen && !c.dead {
+                c.complete(seq, bytes);
+            }
+        }
+    }
+}
+
+/// Pull every complete message out of the connection's decoder and start
+/// (or summarily answer) a request for each.
+fn parse_available<R: Router>(
+    conn: &mut Conn,
+    idx: usize,
+    router: &R,
+    tx: &Sender<Done>,
+    cfg: &ReactorConfig,
+) {
+    loop {
+        if conn.closing || conn.dead {
+            return;
+        }
+        match conn.mode {
+            Some(Wire::Legacy) => match conn.dec.next_line() {
+                Some(line) => {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    begin_request(conn, idx, router, tx, cfg, &line);
+                }
+                None => return,
+            },
+            Some(Wire::Framed) => match conn.dec.next_frame() {
+                Ok(Some(payload)) => {
+                    let text = String::from_utf8_lossy(&payload).into_owned();
+                    begin_request(conn, idx, router, tx, cfg, &text);
+                }
+                Ok(None) => return,
+                Err(FrameError::Oversized(len)) => {
+                    // unrecoverable: the stream can't be resynchronised
+                    router.metrics().frame_errors.fetch_add(1, Ordering::Relaxed);
+                    let reply = err_reply(&format!(
+                        "frame of {len} bytes exceeds limit of {} bytes",
+                        crate::coordinator::frame::MAX_FRAME
+                    ));
+                    let bytes = encode_reply(Wire::Framed, &Json::Null, "", reply);
+                    conn.enqueue(bytes);
+                    conn.closing = true;
+                    return;
+                }
+            },
+            None => return,
+        }
+    }
+}
+
+fn begin_request<R: Router>(
+    conn: &mut Conn,
+    idx: usize,
+    router: &R,
+    tx: &Sender<Done>,
+    cfg: &ReactorConfig,
+    text: &str,
+) {
+    let mode = conn.mode.expect("mode sniffed before parsing");
+    let seq = conn.next_seq;
+    conn.next_seq += 1;
+    conn.inflight += 1;
+    let parsed = Json::parse(text);
+    let (id, method) = match &parsed {
+        Ok(j) => (
+            j.get("id").cloned().unwrap_or(Json::Null),
+            j.get("method")
+                .or_else(|| j.get("op"))
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+        ),
+        Err(_) => (Json::Null, String::new()),
+    };
+    match parsed {
+        Err(e) => {
+            router.metrics().frame_errors.fetch_add(1, Ordering::Relaxed);
+            let bytes = encode_reply(mode, &id, &method, err_reply(&format!("bad json: {e}")));
+            conn.complete(seq, bytes);
+        }
+        Ok(req) => {
+            let overloaded =
+                conn.inflight > cfg.max_inflight || conn.wbytes > cfg.high_water_bytes;
+            if overloaded {
+                router.metrics().shed.fetch_add(1, Ordering::Relaxed);
+                let bytes = encode_reply(mode, &id, &method, overloaded_reply());
+                conn.complete(seq, bytes);
+            } else {
+                router.route(
+                    req,
+                    ReplySink {
+                        tx: tx.clone(),
+                        conn: idx,
+                        gen: conn.gen,
+                        seq,
+                        mode,
+                        id,
+                        method,
+                    },
+                );
+            }
+        }
+    }
+}

@@ -1,30 +1,42 @@
-//! Threaded TCP server speaking newline-delimited JSON.
+//! Reactor-backed TCP server speaking framed (v2) and legacy newline
+//! (v1) JSON.
 //!
-//! Operations:
+//! Operations (same schema on both protocols; framed requests use
+//! `method`, with `op` accepted as an alias — legacy uses `op`):
 //!
 //! | op        | request fields                                         | reply |
 //! |-----------|--------------------------------------------------------|-------|
 //! | `ping`    | —                                                      | `{"ok":true,"pong":true}` |
 //! | `train`   | `name,dataset,n,sketch,m,d,lambda,bandwidth,seed` (+ `m_max,rel_tol` for `sketch:"adaptive"`, + optional `precision:"f32"\|"f64"` for one-shot fits) | training metadata (+ `adaptive_m,rounds,rank_updates,refactors` telemetry for adaptive fits) |
-//! | `predict` | `model, x: [[f64,…],…]`                                | `{"ok":true,"y":[…]}` |
+//! | `predict` | `model, x: [[f64,…],…]` (rectangular)                  | `{"ok":true,"y":[…]}` |
 //! | `cluster` | `dataset,n,k,method,d,m,m_max,rel_tol,bandwidth,seed,k_max` | labels + spectral telemetry (see `coordinator` module docs for the full schema) |
 //! | `models`  | —                                                      | list of stored models |
-//! | `metrics` | —                                                      | batcher counters |
-//! | `shutdown`| —                                                      | stops the listener |
+//! | `metrics` | —                                                      | serving counters + latency/batch histograms |
+//! | `shutdown`| —                                                      | stops the server |
 //!
-//! One thread per connection (requests within a connection are pipelined
-//! line-by-line); predictions flow through the [`Batcher`] so concurrent
-//! clients coalesce.
+//! All connections are driven by one [`reactor`](crate::coordinator::
+//! reactor) thread (non-blocking sockets, per-connection write queues,
+//! load shedding past the backpressure limits). Fast ops answer inline
+//! on the reactor; `predict` flows through the adaptive [`Batcher`]
+//! (callback completion, no thread parked); `train`/`cluster` run on a
+//! small [`TaskPool`] so a long fit never stalls the event loop or
+//! predictions against already-stored models. Framed replies carry the
+//! guaranteed `id`/`method`/`ok` envelope (see `coordinator` module
+//! docs for the wire schema); legacy replies are byte-compatible with
+//! the v1 server.
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::reactor::{self, Done, ReactorConfig, ReplySink, Router};
 use crate::coordinator::state::{
     parse_sketch_spec, run_cluster_job, ClusterRequest, ModelStore, TrainRequest,
 };
 use crate::linalg::Precision;
+use crate::pool::TaskPool;
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
 /// Server configuration.
@@ -34,6 +46,14 @@ pub struct ServerConfig {
     pub addr: String,
     /// Batching policy.
     pub batcher: BatcherConfig,
+    /// Backpressure: max requests in flight per connection before the
+    /// server sheds with `{"ok":false,"err":"overloaded"}`.
+    pub max_inflight: usize,
+    /// Backpressure: max unread reply bytes queued per connection
+    /// before new requests on it are shed.
+    pub high_water_bytes: usize,
+    /// Worker threads for slow ops (`train`, `cluster`).
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -41,95 +61,250 @@ impl Default for ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:7878".into(),
             batcher: BatcherConfig::default(),
+            max_inflight: 256,
+            high_water_bytes: 1 << 20,
+            workers: 2,
         }
     }
 }
 
-/// Start serving; returns the bound local address and a shutdown closure is
-/// not needed — send `{"op":"shutdown"}`. Blocks until shutdown when
-/// `block` is true; otherwise serves on a background thread.
+/// Routes parsed requests from the reactor to handlers (fast ops
+/// inline, predicts to the batcher, slow ops to the task pool).
+struct CoordRouter {
+    store: Arc<ModelStore>,
+    batcher: Arc<Batcher>,
+    tasks: TaskPool,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<ServingMetrics>,
+}
+
+impl CoordRouter {
+    fn route_predict(&self, req: &Json, sink: ReplySink) {
+        match parse_predict(req) {
+            Ok((model, flat, rows, dim)) => {
+                self.batcher.submit(
+                    &model,
+                    flat,
+                    rows,
+                    dim,
+                    Box::new(move |r| {
+                        sink.send(match r {
+                            Ok(y) => ok_y(&y),
+                            Err(e) => err(e),
+                        })
+                    }),
+                );
+            }
+            Err(e) => sink.send(err(e)),
+        }
+    }
+}
+
+impl Router for CoordRouter {
+    fn route(&self, req: Json, sink: ReplySink) {
+        let op = req
+            .get("method")
+            .or_else(|| req.get("op"))
+            .and_then(|o| o.as_str())
+            .unwrap_or("")
+            .to_string();
+        match op.as_str() {
+            "predict" => self.route_predict(&req, sink),
+            "train" | "cluster" => {
+                let store = self.store.clone();
+                // off the reactor thread: a fit can take seconds, and
+                // predictions against stored models must keep flowing
+                self.tasks.submit(move || {
+                    let reply =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            if op == "train" {
+                                op_train(&req, &store)
+                            } else {
+                                op_cluster(&req)
+                            }
+                        }))
+                        .unwrap_or_else(|_| err("internal error: handler panicked"));
+                    sink.send(reply);
+                });
+            }
+            _ => {
+                let reply = dispatch_value(&req, &self.store, &self.batcher, &self.stop);
+                sink.send(reply);
+            }
+        }
+    }
+
+    fn stop_flag(&self) -> &AtomicBool {
+        &self.stop
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+}
+
+/// Running server: reactor thread + batcher + task pool. Dropping the
+/// handle shuts the server down (unless [`detach`](ServerHandle::detach)ed).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    wake: Sender<Done>,
+    reactor: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<ServingMetrics>,
+    detached: bool,
+}
+
+impl ServerHandle {
+    /// Bind and start serving on the reactor thread; returns immediately.
+    pub fn start(store: Arc<ModelStore>, cfg: ServerConfig) -> std::io::Result<ServerHandle> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let metrics = Arc::new(ServingMetrics::new());
+        let batcher = Arc::new(Batcher::start_with(
+            store.clone(),
+            cfg.batcher,
+            metrics.clone(),
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let router = Arc::new(CoordRouter {
+            store,
+            batcher,
+            tasks: TaskPool::new(cfg.workers),
+            stop: stop.clone(),
+            metrics: metrics.clone(),
+        });
+        let (wake, handle) = reactor::spawn(
+            listener,
+            router,
+            ReactorConfig {
+                max_inflight: cfg.max_inflight,
+                high_water_bytes: cfg.high_water_bytes,
+            },
+        )?;
+        Ok(ServerHandle {
+            addr,
+            stop,
+            wake,
+            reactor: Some(handle),
+            metrics,
+            detached: false,
+        })
+    }
+
+    /// Bound local address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared serving counters (same block the `metrics` op reports).
+    pub fn metrics(&self) -> Arc<ServingMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Request shutdown (sets the flag and wakes the reactor). Returns
+    /// immediately; pair with [`join`](ServerHandle::join) to wait.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.wake.send(Done::Wake);
+    }
+
+    /// Block until the reactor exits (e.g. a client sent `shutdown`).
+    pub fn join(mut self) {
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+        self.detached = true;
+    }
+
+    /// Shut down and wait for the reactor to exit.
+    pub fn stop(self) {
+        self.shutdown();
+        self.join();
+    }
+
+    /// Leave the server running for the life of the process and drop
+    /// the handle.
+    pub fn detach(mut self) -> SocketAddr {
+        self.detached = true;
+        self.addr
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if self.detached {
+            return;
+        }
+        self.shutdown();
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start serving; returns the bound local address. Send
+/// `{"op":"shutdown"}` (or call [`ServerHandle::shutdown`] via
+/// [`ServerHandle::start`]) to stop. Blocks until shutdown when `block`
+/// is true; otherwise serves detached on the reactor thread.
 pub fn serve(
     store: Arc<ModelStore>,
     cfg: ServerConfig,
     block: bool,
 ) -> std::io::Result<std::net::SocketAddr> {
-    let listener = TcpListener::bind(&cfg.addr)?;
-    let addr = listener.local_addr()?;
-    let batcher = Arc::new(Batcher::start(store.clone(), cfg.batcher));
-    let stop = Arc::new(AtomicBool::new(false));
-    let accept_loop = {
-        let stop = stop.clone();
-        move || {
-            for stream in listener.incoming() {
-                if stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                match stream {
-                    Ok(s) => {
-                        let store = store.clone();
-                        let batcher = batcher.clone();
-                        let stop = stop.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(s, &store, &batcher, &stop);
-                        });
-                    }
-                    Err(_) => break,
-                }
-            }
-        }
-    };
+    let handle = ServerHandle::start(store, cfg)?;
+    let addr = handle.addr();
     if block {
-        accept_loop();
+        handle.join();
     } else {
-        std::thread::spawn(accept_loop);
+        handle.detach();
     }
     Ok(addr)
-}
-
-fn handle_conn(
-    stream: TcpStream,
-    store: &ModelStore,
-    batcher: &Batcher,
-    stop: &AtomicBool,
-) -> std::io::Result<()> {
-    // small request/reply lines: Nagle + delayed-ACK would add ~40-90ms
-    // per round trip (measured in EXPERIMENTS.md §Perf)
-    stream.set_nodelay(true)?;
-    let peer_addr = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = dispatch(&line, store, batcher, stop);
-        writeln!(writer, "{reply}")?;
-        if stop.load(Ordering::Relaxed) {
-            // poke the listener so the accept loop observes the flag
-            let _ = TcpStream::connect(peer_addr.ip().to_string() + ":0");
-            break;
-        }
-    }
-    Ok(())
 }
 
 fn err(msg: impl Into<String>) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
 }
 
-/// Decode one request line, execute, encode the reply. Public so tests can
-/// exercise the protocol without sockets.
+fn ok_y(y: &[f64]) -> Json {
+    Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::nums(y))])
+}
+
+fn parse_predict(req: &Json) -> Result<(String, Vec<f64>, usize, usize), String> {
+    let model = req
+        .get("model")
+        .and_then(|v| v.as_str())
+        .ok_or("missing model")?
+        .to_string();
+    let (flat, rows, dim) = req
+        .get("x")
+        .and_then(|x| x.as_flat_rows())
+        .ok_or("missing/empty x (need rectangular numeric rows)")?;
+    Ok((model, flat, rows, dim))
+}
+
+/// Decode one request line, execute, encode the reply. Public so tests
+/// can exercise the protocol without sockets. This is the synchronous
+/// path — the reactor uses the same handlers but completes predict /
+/// train / cluster asynchronously.
 pub fn dispatch(line: &str, store: &ModelStore, batcher: &Batcher, stop: &AtomicBool) -> Json {
     let req = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => return err(format!("bad json: {e}")),
     };
-    match req.get("op").and_then(|o| o.as_str()) {
+    dispatch_value(&req, store, batcher, stop)
+}
+
+/// Execute one parsed request synchronously.
+fn dispatch_value(req: &Json, store: &ModelStore, batcher: &Batcher, stop: &AtomicBool) -> Json {
+    match req
+        .get("method")
+        .or_else(|| req.get("op"))
+        .and_then(|o| o.as_str())
+    {
         Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
-        Some("train") => op_train(&req, store),
-        Some("predict") => op_predict(&req, batcher),
-        Some("cluster") => op_cluster(&req),
+        Some("train") => op_train(req, store),
+        Some("predict") => op_predict(req, batcher),
+        Some("cluster") => op_cluster(req),
         Some("models") => {
             let list = store
                 .list()
@@ -146,15 +321,14 @@ pub fn dispatch(line: &str, store: &ModelStore, batcher: &Batcher, stop: &Atomic
             Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::Arr(list))])
         }
         Some("metrics") => {
-            let (q, b) = batcher.metrics();
-            Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("queries", Json::from(q as usize)),
-                ("batches", Json::from(b as usize)),
-            ])
+            let mut j = batcher.serving_metrics().to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("ok".into(), Json::Bool(true));
+            }
+            j
         }
         Some("shutdown") => {
-            stop.store(true, Ordering::Relaxed);
+            stop.store(true, Ordering::SeqCst);
             Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))])
         }
         Some(other) => err(format!("unknown op {other:?}")),
@@ -246,24 +420,24 @@ fn op_cluster(req: &Json) -> Json {
 }
 
 fn op_predict(req: &Json, batcher: &Batcher) -> Json {
-    let model = match req.get("model").and_then(|v| v.as_str()) {
-        Some(m) => m.to_string(),
-        None => return err("missing model"),
-    };
-    let rows: Option<Vec<Vec<f64>>> = req.get("x").and_then(|v| v.as_arr()).map(|rows| {
-        rows.iter()
-            .filter_map(|r| {
-                r.as_arr()
-                    .map(|vals| vals.iter().filter_map(|v| v.as_f64()).collect())
-            })
-            .collect()
-    });
-    let rows = match rows {
-        Some(r) if !r.is_empty() => r,
-        _ => return err("missing/empty x"),
-    };
-    match batcher.predict(&model, rows) {
-        Ok(y) => Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::nums(&y))]),
+    match parse_predict(req) {
+        Ok((model, flat, rows, dim)) => {
+            let (tx, rx) = channel();
+            batcher.submit(
+                &model,
+                flat,
+                rows,
+                dim,
+                Box::new(move |r| {
+                    let _ = tx.send(r);
+                }),
+            );
+            match rx.recv() {
+                Ok(Ok(y)) => ok_y(&y),
+                Ok(Err(e)) => err(e),
+                Err(_) => err("batcher dropped reply"),
+            }
+        }
         Err(e) => err(e),
     }
 }
@@ -271,7 +445,8 @@ fn op_predict(req: &Json, batcher: &Batcher) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::batcher::BatcherConfig;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
 
     fn setup() -> (Arc<ModelStore>, Batcher, AtomicBool) {
         let store = Arc::new(ModelStore::new());
@@ -288,6 +463,9 @@ mod tests {
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
         let r = dispatch("not json", &store, &b, &stop);
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        // "method" is accepted everywhere "op" is
+        let r = dispatch(r#"{"method":"ping"}"#, &store, &b, &stop);
+        assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
     }
 
     #[test]
@@ -312,6 +490,10 @@ mod tests {
         assert_eq!(r.get("models").unwrap().as_arr().unwrap().len(), 1);
         let r = dispatch(r#"{"op":"metrics"}"#, &store, &b, &stop);
         assert_eq!(r.get("queries").and_then(|q| q.as_usize()), Some(2));
+        // upgraded metrics block: latency + batch histograms serialize
+        assert!(r.get("predict_latency_ms").is_some(), "{r}");
+        assert!(r.get("batch_rows").is_some(), "{r}");
+        assert_eq!(r.get("shed").and_then(|v| v.as_usize()), Some(0));
     }
 
     #[test]
@@ -376,7 +558,7 @@ mod tests {
             store,
             ServerConfig {
                 addr: "127.0.0.1:0".into(),
-                batcher: BatcherConfig::default(),
+                ..Default::default()
             },
             false,
         )

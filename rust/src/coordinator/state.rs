@@ -58,10 +58,35 @@ pub struct TrainRequest {
     pub precision: Precision,
 }
 
-/// Thread-safe named model registry.
-#[derive(Default)]
+/// Shards in the model registry. Power of two; 16 is plenty — the shard
+/// count only needs to exceed the number of threads that might touch
+/// the store at once (batcher + task-pool workers).
+const STORE_SHARDS: usize = 16;
+
+/// Thread-safe named model registry, sharded by name hash so the
+/// batcher's per-group `get` on the serving hot path never contends
+/// with a concurrent `train` writing a different model.
 pub struct ModelStore {
-    models: RwLock<HashMap<String, StoredModel>>,
+    shards: Vec<RwLock<HashMap<String, StoredModel>>>,
+}
+
+impl Default for ModelStore {
+    fn default() -> Self {
+        ModelStore {
+            shards: (0..STORE_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+}
+
+/// FNV-1a over the model name — tiny, deterministic, no `RandomState`
+/// allocation per lookup.
+fn shard_of(name: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h as usize) & (STORE_SHARDS - 1)
 }
 
 impl ModelStore {
@@ -72,22 +97,33 @@ impl ModelStore {
 
     /// Insert/replace a model.
     pub fn put(&self, name: &str, m: StoredModel) {
-        self.models.write().unwrap().insert(name.to_string(), m);
+        self.shards[shard_of(name)]
+            .write()
+            .unwrap()
+            .insert(name.to_string(), m);
     }
 
     /// Fetch a model by name.
     pub fn get(&self, name: &str) -> Option<StoredModel> {
-        self.models.read().unwrap().get(name).cloned()
+        self.shards[shard_of(name)].read().unwrap().get(name).cloned()
     }
 
-    /// Names + summary metadata of all models.
+    /// Names + summary metadata of all models (sorted by name — shard
+    /// order is hash order, clients expect something stable).
     pub fn list(&self) -> Vec<(String, usize, f64, String)> {
-        self.models
-            .read()
-            .unwrap()
+        let mut out: Vec<(String, usize, f64, String)> = self
+            .shards
             .iter()
-            .map(|(k, v)| (k.clone(), v.n_train, v.train_secs, v.sketch.clone()))
-            .collect()
+            .flat_map(|s| {
+                s.read()
+                    .unwrap()
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.n_train, v.train_secs, v.sketch.clone()))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 
     /// Train a model per the request and store it. Returns the stored
@@ -711,6 +747,54 @@ mod tests {
         let j = run_cluster_job(&req).unwrap();
         assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
         assert!(j.get("ari_vs_truth").is_none());
+    }
+
+    #[test]
+    fn sharded_store_lists_all_models_sorted() {
+        let store = ModelStore::new();
+        let mut rng = Pcg64::seed(2);
+        let x = Matrix::from_fn(20, 2, |_, _| rng.uniform());
+        let y: Vec<f64> = (0..20).map(|i| x[(i, 0)]).collect();
+        let s = SketchBuilder::new(SketchKind::Nystrom).build(20, 5, &mut rng);
+        let m = SketchedKrr::fit(Kernel::gaussian(0.5), &x, &y, &s, 1e-3, None).unwrap();
+        let m = Arc::new(m);
+        // enough names to land in several different shards
+        let names: Vec<String> = (0..40).map(|i| format!("model-{i:02}")).collect();
+        for name in &names {
+            store.put(
+                name,
+                StoredModel {
+                    model: m.clone(),
+                    n_train: 20,
+                    train_secs: 0.0,
+                    sketch: "nystrom".into(),
+                    train_mse: 0.0,
+                },
+            );
+        }
+        for name in &names {
+            assert!(store.get(name).is_some(), "missing {name}");
+        }
+        assert!(store.get("model-99").is_none());
+        let listed = store.list();
+        assert_eq!(listed.len(), names.len());
+        let listed_names: Vec<&str> = listed.iter().map(|t| t.0.as_str()).collect();
+        let mut want: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        want.sort();
+        assert_eq!(listed_names, want);
+        // overwrite goes to the same shard slot, not a duplicate
+        store.put(
+            &names[0],
+            StoredModel {
+                model: m.clone(),
+                n_train: 21,
+                train_secs: 0.0,
+                sketch: "nystrom".into(),
+                train_mse: 0.0,
+            },
+        );
+        assert_eq!(store.get(&names[0]).unwrap().n_train, 21);
+        assert_eq!(store.list().len(), names.len());
     }
 
     #[test]

@@ -143,6 +143,62 @@ pub fn cross_kernel(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Matrix {
     k
 }
 
+/// **Row-stable** rectangular cross-kernel: row `i` of the result is
+/// bitwise a function of `aᵢ` and `b` only, independent of how many
+/// other rows share the call. [`cross_kernel`] does not promise this:
+/// its cross term goes through the plain GEMM entry, whose small-product
+/// shortcut changes accumulation order with the batch shape. Here the
+/// radial cross term is routed through
+/// [`matmul_a_bt_rowstable`](crate::linalg::matmul_a_bt_rowstable)
+/// (always the packed path; per-row outputs position-independent), the
+/// norm fold is per-row arithmetic, and the batched kernel map is
+/// elementwise with padded-lane tails — so the whole row is invariant
+/// under batching. This is the serving-plane assembly route
+/// (`SketchedKrr::predict`): a prediction must not depend on the batch
+/// the micro-batcher coalesced it into. Never takes the symmetric
+/// `a is b` shortcut; non-radial kernels use direct evaluation, which is
+/// row-independent by construction.
+pub fn cross_kernel_rowstable(kernel: &Kernel, a: &Matrix, b: &Matrix) -> Matrix {
+    use crate::linalg::matmul_a_bt_rowstable;
+    assert_eq!(a.cols(), b.cols(), "cross_kernel_rowstable: feature dims");
+    let (na, nb, p) = (a.rows(), b.rows(), a.cols());
+    if na == 0 || nb == 0 {
+        return Matrix::zeros(na, nb);
+    }
+    if kernel.is_radial() {
+        let anorm: Vec<f64> = (0..na).map(|i| sqnorm(a.row(i))).collect();
+        let bnorm: Vec<f64> = (0..nb).map(|j| sqnorm(b.row(j))).collect();
+        let mut k = matmul_a_bt_rowstable(a, b);
+        let kern = *kernel;
+        let imp = simd::active();
+        pool::scope_chunks(k.data_mut(), TILE * nb, |tile_idx, chunk| {
+            let r0 = tile_idx * TILE;
+            for (li, krow) in chunk.chunks_mut(nb).enumerate() {
+                let an = anorm[r0 + li];
+                for (kv, bn) in krow.iter_mut().zip(bnorm.iter()) {
+                    *kv = an + bn - 2.0 * *kv;
+                }
+                kern.map_sq_dist_with(imp, krow);
+            }
+        });
+        return k;
+    }
+    let mut k = Matrix::zeros(na, nb);
+    let adat = a.data();
+    let bdat = b.data();
+    let kern = *kernel;
+    pool::scope_chunks(k.data_mut(), TILE * nb, |tile_idx, chunk| {
+        let r0 = tile_idx * TILE;
+        for (li, krow) in chunk.chunks_mut(nb).enumerate() {
+            let arow = &adat[(r0 + li) * p..(r0 + li + 1) * p];
+            for (j, kv) in krow.iter_mut().enumerate() {
+                *kv = kern.eval(arow, &bdat[j * p..(j + 1) * p]);
+            }
+        }
+    });
+    k
+}
+
 /// Single-precision cross-kernel block for the opt-in `Precision::F32`
 /// assembly path: the `na × nb` kernel values as a row-major `Vec<f32>`,
 /// never materialising an f64 copy. Features are narrowed once, row
@@ -384,6 +440,41 @@ mod tests {
             let parallel = cross_kernel_rows_f32(&kern, &a, &b);
             pool::set_num_threads(before);
             assert_eq!(serial, parallel, "{}", kern.name());
+        }
+    }
+
+    /// The serving contract end-to-end at the assembly layer: a single
+    /// query row assembled alone is bitwise the same row assembled in a
+    /// batch of any size or position, under both dispatch modes — and
+    /// the row-stable route agrees numerically with the plain one.
+    #[test]
+    fn rowstable_assembly_is_bitwise_batch_invariant() {
+        use crate::linalg::{with_kernel, KernelImpl};
+        let mut r = Pcg64::seed(0x9007);
+        let landmarks = randx(&mut r, 14, 6);
+        let batch = randx(&mut r, 41, 6);
+        for kern in [Kernel::gaussian(0.8), Kernel::matern(1.5, 1.0), Kernel::polynomial(1.5, 2)] {
+            for imp in [KernelImpl::Scalar, crate::linalg::simd::active()] {
+                with_kernel(imp, || {
+                    let full = cross_kernel_rowstable(&kern, &batch, &landmarks);
+                    for i in [0usize, 7, 40] {
+                        let one = Matrix::from_fn(1, 6, |_, j| batch[(i, j)]);
+                        let solo = cross_kernel_rowstable(&kern, &one, &landmarks);
+                        for j in 0..14 {
+                            assert_eq!(
+                                solo[(0, j)].to_bits(),
+                                full[(i, j)].to_bits(),
+                                "{} row {i} col {j} {imp:?}",
+                                kern.name()
+                            );
+                        }
+                    }
+                    let plain = cross_kernel(&kern, &batch, &landmarks);
+                    for (g, w) in full.data().iter().zip(plain.data().iter()) {
+                        assert!((g - w).abs() < 1e-12, "{} vs plain", kern.name());
+                    }
+                });
+            }
         }
     }
 

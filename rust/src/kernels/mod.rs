@@ -24,7 +24,8 @@ mod rff;
 pub use functions::{Kernel, KernelKind};
 pub(crate) use matrix::{cross_kernel_f32, cross_kernel_rows_f32};
 pub use matrix::{
-    assembly_guard, cross_kernel, gather_rows, kernel_cols, kernel_diag, kernel_matrix,
+    assembly_guard, cross_kernel, cross_kernel_rowstable, gather_rows, kernel_cols, kernel_diag,
+    kernel_matrix,
 };
 pub use operator::{GramOperator, DEFAULT_TILE};
 pub use rff::{RandomFourierFeatures, RffKrr};

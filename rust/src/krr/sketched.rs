@@ -2,7 +2,7 @@
 //! fit and the adaptive-m incremental fit that grows the accumulation
 //! sketch at runtime.
 
-use crate::kernels::{cross_kernel, gather_rows, Kernel};
+use crate::kernels::{cross_kernel_rowstable, gather_rows, Kernel};
 use crate::linalg::{chol_factor, CholFactor, Matrix, Precision};
 use crate::rng::Pcg64;
 use crate::sketch::{sketch_gram_with, IncrementalGram, Sketch, SketchBuilder, SketchOps};
@@ -413,8 +413,16 @@ impl SketchedKrr {
     }
 
     /// Predict at query rows: `O(|landmarks|)` kernel evals per query.
+    ///
+    /// Assembly goes through the **row-stable** route
+    /// ([`cross_kernel_rowstable`]): each prediction is bitwise a
+    /// function of its own query row and the model only, never of the
+    /// other rows in `xq`. The serving plane's micro-batcher relies on
+    /// this — coalescing requests into one GEMM must not change anyone's
+    /// answer (`matvec` is per-output-row independent, so the contract
+    /// survives the final product too).
     pub fn predict(&self, xq: &Matrix) -> Vec<f64> {
-        let kq = cross_kernel(&self.kernel, xq, &self.landmarks);
+        let kq = cross_kernel_rowstable(&self.kernel, xq, &self.landmarks);
         kq.matvec(&self.beta)
     }
 }

@@ -63,6 +63,28 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     gemm_packed(m, k, n, |i, p| ad[i * k + p], |p, j| bd[j * k + p], false)
 }
 
+/// **Row-stable** `C = A · Bᵀ`: row `i` of the result is bitwise a
+/// function of row `i` of `A` and all of `B` only — independent of how
+/// many *other* rows ride along in the same call. The plain variants
+/// don't promise this: [`gemm_packed`] routes tiny products
+/// (`m·n·k ≤ SMALL_FLOPS`) to a serial i-k-j loop whose accumulation
+/// order differs from the packed micro-kernel, so the same row computed
+/// in a 1-row call and a 64-row call could differ in the last ulp. This
+/// variant always takes the packed path (whose per-row outputs are
+/// position-independent: MR strips are zero-padded, the micro-kernel
+/// accumulates each lane separately with a fixed `p`-ascending order),
+/// which is the serving-plane contract — a prediction must not change
+/// with the batch it happened to be coalesced into.
+pub fn matmul_a_bt_rowstable(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt_rowstable: inner dims");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    if m == 0 || n == 0 || k == 0 {
+        return Matrix::zeros(m, n);
+    }
+    let (ad, bd) = (a.data(), b.data());
+    gemm_packed_full(m, k, n, |i, p| ad[i * k + p], |p, j| bd[j * k + p], false)
+}
+
 /// `C = Aᵀ · B` (`a`: k×m, `b`: k×n) without materialising the transpose.
 /// Results are bitwise independent of the thread count (see module docs).
 pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
@@ -127,6 +149,25 @@ where
     if m * n * k <= SMALL_FLOPS {
         return gemm_small(m, k, n, &a_at, &b_at, upper_only);
     }
+    gemm_packed_full(m, k, n, a_at, b_at, upper_only)
+}
+
+/// The packed body proper — no small-product shortcut, so the code path
+/// (and therefore the per-row accumulation order) is the same at every
+/// `m`. Callers guarantee non-zero dims. [`matmul_a_bt_rowstable`] calls
+/// this directly; everything else goes through [`gemm_packed`].
+fn gemm_packed_full<FA, FB>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_at: FA,
+    b_at: FB,
+    upper_only: bool,
+) -> Matrix
+where
+    FA: Fn(usize, usize) -> f64 + Sync,
+    FB: Fn(usize, usize) -> f64 + Sync,
+{
     let n_strips = (n + NR - 1) / NR;
     let n_pad = n_strips * NR;
     // Pack all of B once: per KC block, NR-column strips, k-major inside a
@@ -489,6 +530,40 @@ mod tests {
                     assert!(rel_close(&sc.3, &vc.3), "syrk {k}x{n}");
                 }
             }
+        }
+    }
+
+    /// The serving contract: a single row pushed through
+    /// `matmul_a_bt_rowstable` alone is **bitwise** equal to that row of
+    /// the full-batch product, under both dispatch modes and regardless
+    /// of which batch position the row occupies. (The plain `matmul_a_bt`
+    /// has no such promise — tiny products take the serial shortcut.)
+    #[test]
+    fn rowstable_a_bt_is_bitwise_batch_invariant() {
+        use super::simd::{active, with_kernel, KernelImpl};
+        let mut r = Pcg64::seed(0x9003);
+        // n·k small enough that a 1-row call would hit SMALL_FLOPS in the
+        // plain variant — exactly the case the rowstable path exists for.
+        let b = randm(&mut r, 12, 10);
+        let batch = randm(&mut r, 37, 10);
+        for imp in [KernelImpl::Scalar, active()] {
+            with_kernel(imp, || {
+                let full = matmul_a_bt_rowstable(&batch, &b);
+                for i in [0usize, 1, 5, 36] {
+                    let one = Matrix::from_fn(1, 10, |_, j| batch[(i, j)]);
+                    let solo = matmul_a_bt_rowstable(&one, &b);
+                    for j in 0..12 {
+                        assert_eq!(
+                            solo[(0, j)].to_bits(),
+                            full[(i, j)].to_bits(),
+                            "row {i} col {j} under {imp:?}"
+                        );
+                    }
+                }
+                // and it agrees numerically with the reference product
+                let reference = naive(&batch, &b.transpose());
+                assert!(close(&full, &reference, 1e-9), "{imp:?}");
+            });
         }
     }
 

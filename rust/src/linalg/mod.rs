@@ -29,7 +29,7 @@ pub use eig::{
     eigh, partial_eigh, partial_eigh_op, partial_eigh_op_warm, EighResult, PartialEigh, SymOp,
 };
 pub(crate) use gemm::{mirror_lower_from_upper, syrk_a_at_upper};
-pub use gemm::{matmul, matmul_at_b, matmul_a_bt, syrk_a_at, syrk_at_a};
+pub use gemm::{matmul, matmul_at_b, matmul_a_bt, matmul_a_bt_rowstable, syrk_a_at, syrk_at_a};
 pub use matrix::Matrix;
 pub use norms::{fro_norm, op_norm, op_norm_rect};
 pub use simd::{detected_features, kernel_name, with_kernel, KernelImpl, Precision};

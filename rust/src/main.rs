@@ -1,9 +1,9 @@
 //! `accumkrr` — CLI launcher for the accumulation-sketch KRR framework.
 //!
 //! ```text
-//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|cluster>
+//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|cluster|serve>
 //!          [--replicates N] [--n-max N] [--seed S] [--csv PATH] [--full]
-//!          [--streamed]
+//!          [--streamed] [--smoke]  # smoke: CI-sized serve load test
 //! accumkrr train --name M --dataset rqa --n 2000 --sketch accum --m 4
 //!          [--d D] [--lambda L] [--bandwidth B] [--seed S] [--save PATH]
 //!          [--precision f64|f32]  # f32: single-precision Gram assembly
@@ -12,7 +12,12 @@
 //!          [--method operator|sketched|adaptive] [--d D] [--m M]
 //!          [--m-max M] [--rel-tol T] [--bandwidth B] [--seed S]
 //!          [--k-max K]  # sweep k in 2..=K, pick by eigengap
-//! accumkrr serve [--addr 127.0.0.1:7878]
+//! accumkrr serve [--addr 127.0.0.1:7878] [--max-batch N] [--max-wait-ms T]
+//!          [--fixed-wait]       # disable the adaptive batching wait
+//!          [--max-inflight N] [--high-water BYTES] [--workers N]
+//! accumkrr client [op] [--addr 127.0.0.1:7878] [--model M] [--x JSON]
+//!          [--json REQ]         # full request object, overrides op flags
+//!          [--legacy]           # newline-JSON instead of framed
 //! accumkrr info [--artifacts DIR]
 //! accumkrr gen-data --dataset rqa --n 1000 --out data.csv [--seed S]
 //! ```
@@ -37,10 +42,13 @@ fn main() {
         Some("kpca") => cmd_kpca(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("info") => cmd_info(&args),
         Some("gen-data") => cmd_gen_data(&args),
         _ => {
-            eprintln!("usage: accumkrr <bench|train|cv|kpca|cluster|serve|info|gen-data> [flags]");
+            eprintln!(
+                "usage: accumkrr <bench|train|cv|kpca|cluster|serve|client|info|gen-data> [flags]"
+            );
             eprintln!("       see module docs / README for flags");
             2
         }
@@ -70,6 +78,7 @@ fn bench_opts(args: &Args) -> BenchOpts {
             .or_else(|| cfg.get("bench", "csv").and_then(|v| v.as_str().map(String::from))),
         full: args.has("full") || cfg.bool_or("bench", "full", false),
         streamed: args.has("streamed") || cfg.bool_or("bench", "streamed", false),
+        smoke: args.has("smoke") || cfg.bool_or("bench", "smoke", false),
     }
 }
 
@@ -304,12 +313,25 @@ fn cmd_cluster(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    let defaults = ServerConfig::default();
     let cfg = ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7878").to_string(),
-        ..Default::default()
+        batcher: accumkrr::coordinator::BatcherConfig {
+            max_batch: args.usize_or("max-batch", defaults.batcher.max_batch),
+            max_wait: std::time::Duration::from_secs_f64(
+                args.f64_or("max-wait-ms", 2.0).max(0.0) / 1e3,
+            ),
+            adaptive: !args.has("fixed-wait"),
+        },
+        max_inflight: args.usize_or("max-inflight", defaults.max_inflight),
+        high_water_bytes: args.usize_or("high-water", defaults.high_water_bytes),
+        workers: args.usize_or("workers", defaults.workers).max(1),
     };
     let store = Arc::new(ModelStore::new());
-    println!("accumkrr serving on {} (newline-delimited JSON)", cfg.addr);
+    println!(
+        "accumkrr serving on {} (framed + newline JSON; send {{\"op\":\"shutdown\"}} to stop)",
+        cfg.addr
+    );
     match serve(store, cfg, true) {
         Ok(_) => 0,
         Err(e) => {
@@ -317,6 +339,74 @@ fn cmd_serve(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// One-shot client for the serving plane: build (or take via `--json`) a
+/// request, send it framed (default) or newline-JSON (`--legacy`), print
+/// the reply on stdout.
+fn cmd_client(args: &Args) -> i32 {
+    use accumkrr::coordinator::frame::{read_frame, write_frame};
+    use accumkrr::util::json::Json;
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let req = if let Some(raw) = args.flags.get("json") {
+        match Json::parse(raw) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("client: bad --json: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let op = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ping");
+        let mut fields = vec![("method", Json::from(op))];
+        if let Some(m) = args.flags.get("model") {
+            fields.push(("model", Json::from(m.as_str())));
+        }
+        if let Some(x) = args.flags.get("x") {
+            match Json::parse(x) {
+                Ok(j) => fields.push(("x", j)),
+                Err(e) => {
+                    eprintln!("client: bad --x: {e}");
+                    return 2;
+                }
+            }
+        }
+        Json::obj(fields)
+    };
+    let mut conn = match std::net::TcpStream::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("client: connect {addr}: {e}");
+            return 1;
+        }
+    };
+    let _ = conn.set_nodelay(true);
+    if args.has("legacy") {
+        use std::io::{BufRead, BufReader, Write};
+        if let Err(e) = writeln!(conn, "{req}") {
+            eprintln!("client: {e}");
+            return 1;
+        }
+        let mut line = String::new();
+        if let Err(e) = BufReader::new(conn).read_line(&mut line) {
+            eprintln!("client: {e}");
+            return 1;
+        }
+        print!("{line}");
+    } else {
+        if let Err(e) = write_frame(&mut conn, &req) {
+            eprintln!("client: {e}");
+            return 1;
+        }
+        match read_frame(&mut conn) {
+            Ok(j) => println!("{j}"),
+            Err(e) => {
+                eprintln!("client: {e}");
+                return 1;
+            }
+        }
+    }
+    0
 }
 
 #[cfg(feature = "xla")]

@@ -8,11 +8,19 @@
 //! * [`parallel_map`] — map a closure over an index range collecting results
 //!   (experiment replicates in the coordinator's job scheduler).
 //!
+//! A third, long-lived primitive serves the coordinator rather than the
+//! math kernels: [`TaskPool`], a fixed set of worker threads draining a
+//! queue of boxed jobs, used to keep slow ops (train, cluster) off the
+//! reactor thread without spawning a thread per request.
+//!
 //! The worker count defaults to `std::thread::available_parallelism()` and
 //! can be pinned with `ACCUMKRR_THREADS` (the bench harness pins 1 for
 //! stable timings).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 static CACHED: AtomicUsize = AtomicUsize::new(0);
 
@@ -105,6 +113,62 @@ where
     out.into_iter().map(|r| r.unwrap()).collect()
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size pool of long-lived worker threads draining a shared job
+/// queue. Unlike [`scope_chunks`] (scoped, borrows the caller's stack),
+/// `TaskPool` jobs are `'static` and outlive the submitting call — the
+/// shape the serving plane needs for train/cluster ops that must not
+/// block the reactor. A panicking job is caught and does not take its
+/// worker down.
+pub struct TaskPool {
+    tx: Mutex<Option<Sender<Job>>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl TaskPool {
+    /// Spawn `workers` (min 1) threads waiting on the queue.
+    pub fn new(workers: usize) -> TaskPool {
+        let (tx, rx) = channel::<Job>();
+        let rx: Arc<Mutex<Receiver<Job>>> = Arc::new(Mutex::new(rx));
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    let job = match rx.lock().unwrap_or_else(|e| e.into_inner()).recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // sender dropped: shutdown
+                    };
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job()));
+                })
+            })
+            .collect();
+        TaskPool { tx: Mutex::new(Some(tx)), workers }
+    }
+
+    /// Enqueue a job. Returns `false` if the pool has been shut down.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
+        match &*self.tx.lock().unwrap_or_else(|e| e.into_inner()) {
+            Some(tx) => tx.send(Box::new(f)).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Stop accepting jobs, finish the queue, and join every worker.
+    pub fn shutdown(&mut self) {
+        self.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +226,24 @@ mod tests {
         let out = parallel_map(100, |i| i * 3);
         assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
         set_num_threads(before);
+    }
+
+    #[test]
+    fn task_pool_runs_all_jobs_and_survives_panics() {
+        use std::sync::atomic::AtomicU64;
+        let pool = TaskPool::new(3);
+        let count = Arc::new(AtomicU64::new(0));
+        assert!(pool.submit(|| panic!("worker must survive this")));
+        for _ in 0..50 {
+            let c = Arc::clone(&count);
+            assert!(pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        let mut pool = pool;
+        pool.shutdown(); // drains the queue and joins
+        assert_eq!(count.load(Ordering::SeqCst), 50);
+        assert!(!pool.submit(|| {}), "submit after shutdown must fail");
     }
 
     #[test]

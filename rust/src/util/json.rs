@@ -93,6 +93,33 @@ impl Json {
     pub fn nums(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
+
+    /// Interpret `self` as a rectangular array-of-numeric-arrays and
+    /// flatten it row-major into one buffer, returning
+    /// `(flat, rows, dim)`. `None` if `self` is not an array, is empty,
+    /// is ragged, has a zero-width row, or contains a non-numeric
+    /// entry. This is the zero-copy-per-row ingestion path for predict
+    /// payloads: one allocation for the whole batch, no intermediate
+    /// `Vec<Vec<f64>>`.
+    pub fn as_flat_rows(&self) -> Option<(Vec<f64>, usize, usize)> {
+        let rows = self.as_arr()?;
+        let first = rows.first()?.as_arr()?;
+        let dim = first.len();
+        if dim == 0 {
+            return None;
+        }
+        let mut flat = Vec::with_capacity(rows.len() * dim);
+        for row in rows {
+            let row = row.as_arr()?;
+            if row.len() != dim {
+                return None;
+            }
+            for v in row {
+                flat.push(v.as_f64()?);
+            }
+        }
+        Some((flat, rows.len(), dim))
+    }
 }
 
 impl From<f64> for Json {
@@ -390,5 +417,23 @@ mod tests {
         let j = Json::Str("a\"b\\c\nd".into());
         assert_eq!(j.to_string(), r#""a\"b\\c\nd""#);
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn flat_rows_accepts_rectangular_numeric_input() {
+        let j = Json::parse("[[1,2,3],[4,5,6]]").unwrap();
+        let (flat, rows, dim) = j.as_flat_rows().unwrap();
+        assert_eq!((rows, dim), (2, 3));
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn flat_rows_rejects_bad_shapes() {
+        assert!(Json::parse("[]").unwrap().as_flat_rows().is_none(), "empty");
+        assert!(Json::parse("[[]]").unwrap().as_flat_rows().is_none(), "zero-dim row");
+        assert!(Json::parse("[[1,2],[3]]").unwrap().as_flat_rows().is_none(), "ragged");
+        assert!(Json::parse("[[1,\"x\"]]").unwrap().as_flat_rows().is_none(), "non-numeric");
+        assert!(Json::parse("[1,2]").unwrap().as_flat_rows().is_none(), "not nested");
+        assert!(Json::parse("3").unwrap().as_flat_rows().is_none(), "not an array");
     }
 }

@@ -19,9 +19,64 @@ pub fn peak_rss_bytes() -> Option<u64> {
     None
 }
 
+/// Test-only counting allocator: counts heap allocations made **by the
+/// current thread** so hot-path tests can assert allocation budgets
+/// (e.g. the batcher flush path must not allocate per row). Installed as
+/// the global allocator only under `cfg(test)`, so release binaries use
+/// the system allocator untouched.
+#[cfg(test)]
+pub mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    // const-initialised Cell: no lazy-init allocation, no Drop — safe to
+    // touch from inside the allocator itself without TLS re-entry.
+    thread_local! {
+        static COUNT: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Forwards to [`System`], bumping a per-thread counter on `alloc`
+    /// and `realloc` (frees are not counted: the budget of interest is
+    /// new allocations).
+    pub struct CountingAlloc;
+
+    // SAFETY: pure pass-through to the system allocator; the counter
+    // side effect cannot affect allocation correctness.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let _ = COUNT.try_with(|c| c.set(c.get() + 1));
+            System.alloc(layout)
+        }
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let _ = COUNT.try_with(|c| c.set(c.get() + 1));
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static GLOBAL: CountingAlloc = CountingAlloc;
+
+    /// Allocations made by the calling thread so far (monotone).
+    pub fn on_thread() -> u64 {
+        COUNT.try_with(|c| c.get()).unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn counting_allocator_sees_thread_allocations() {
+        let before = alloc_count::on_thread();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        let after = alloc_count::on_thread();
+        assert!(after > before, "Vec::with_capacity must register");
+        drop(v);
+    }
 
     #[test]
     fn peak_rss_readable_on_linux() {

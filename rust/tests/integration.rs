@@ -157,6 +157,7 @@ fn coordinator_tcp_service_end_to_end() {
             bandwidth: 0.0,
             seed: 9,
             adaptive: None,
+            precision: accumkrr::linalg::Precision::F64,
         })
         .unwrap();
     let addr = serve(

@@ -1,0 +1,402 @@
+//! End-to-end tests for the async serving plane: framed protocol,
+//! legacy interop, robustness against malformed input, backpressure,
+//! bounded shutdown, and bitwise-stable predictions across batch
+//! compositions.
+
+use accumkrr::coordinator::frame::{read_frame, write_frame, MAX_FRAME};
+use accumkrr::coordinator::state::TrainRequest;
+use accumkrr::coordinator::{BatcherConfig, ModelStore, ServerConfig, ServerHandle};
+use accumkrr::linalg::Precision;
+use accumkrr::sketch::SketchKind;
+use accumkrr::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A store holding one small pre-trained model named `m` (bimodal → 3
+/// feature columns).
+fn store_with_model() -> Arc<ModelStore> {
+    let store = Arc::new(ModelStore::new());
+    store
+        .train(&TrainRequest {
+            name: "m".into(),
+            dataset: "bimodal".into(),
+            n: 150,
+            kind: SketchKind::Accumulation { m: 3 },
+            d: 10,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 5,
+            adaptive: None,
+            precision: Precision::F64,
+        })
+        .unwrap();
+    store
+}
+
+fn start(store: Arc<ModelStore>, tweak: impl FnOnce(&mut ServerConfig)) -> ServerHandle {
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    tweak(&mut cfg);
+    ServerHandle::start(store, cfg).unwrap()
+}
+
+fn connect(h: &ServerHandle) -> TcpStream {
+    let c = TcpStream::connect(h.addr()).unwrap();
+    c.set_nodelay(true).unwrap();
+    c
+}
+
+/// Read framed replies until one matches the wanted id.
+fn read_id(conn: &mut TcpStream, want: usize) -> Json {
+    loop {
+        let j = read_frame(conn).unwrap();
+        if j.get("id").and_then(|v| v.as_usize()) == Some(want) {
+            return j;
+        }
+    }
+}
+
+fn predict_req(id: usize, rows: &[Vec<f64>]) -> Json {
+    Json::obj(vec![
+        ("id", Json::from(id)),
+        ("method", Json::from("predict")),
+        ("model", Json::from("m")),
+        (
+            "x",
+            Json::Arr(rows.iter().map(|r| Json::nums(r)).collect()),
+        ),
+    ])
+}
+
+#[test]
+fn framed_protocol_end_to_end_with_envelope() {
+    let h = start(store_with_model(), |_| {});
+    let mut conn = connect(&h);
+    // ping: envelope injects ok + echoes method and id
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![("id", Json::from(1usize)), ("method", Json::from("ping"))]),
+    )
+    .unwrap();
+    let r = read_id(&mut conn, 1);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("method").and_then(|v| v.as_str()), Some("ping"));
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
+    // predict through the batcher
+    write_frame(&mut conn, &predict_req(7, &[vec![0.1, 0.2, 0.3], vec![1.0, -1.0, 0.5]]))
+        .unwrap();
+    let r = read_id(&mut conn, 7);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("method").and_then(|v| v.as_str()), Some("predict"));
+    assert_eq!(r.get("y").and_then(|v| v.as_arr()).unwrap().len(), 2);
+    // errors carry BOTH err and error keys in the framed envelope
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![
+            ("id", Json::from(9usize)),
+            ("method", Json::from("predict")),
+            ("model", Json::from("nope")),
+            ("x", Json::Arr(vec![Json::nums(&[0.0, 0.0, 0.0])])),
+        ]),
+    )
+    .unwrap();
+    let r = read_id(&mut conn, 9);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+    assert!(r.get("err").is_some() && r.get("error").is_some(), "{r}");
+    // metrics reflects the served rows
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![("id", Json::from(2usize)), ("method", Json::from("metrics"))]),
+    )
+    .unwrap();
+    let r = read_id(&mut conn, 2);
+    assert!(r.get("queries").and_then(|v| v.as_usize()).unwrap() >= 2, "{r}");
+    assert!(r.get("predict_latency_ms").is_some(), "{r}");
+    h.stop();
+}
+
+#[test]
+fn legacy_and_framed_pipelined_mixed_clients() {
+    let h = start(store_with_model(), |_| {});
+    // legacy client: three requests in ONE write; replies must come back
+    // newline-delimited, in order
+    let mut legacy = connect(&h);
+    legacy
+        .write_all(
+            b"{\"op\":\"ping\"}\n{\"op\":\"predict\",\"model\":\"m\",\"x\":[[0.5,0.5,0.5]]}\n{\"op\":\"models\"}\n",
+        )
+        .unwrap();
+    let mut reader = BufReader::new(legacy.try_clone().unwrap());
+    let mut lines = Vec::new();
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        lines.push(Json::parse(&line).unwrap());
+    }
+    assert_eq!(lines[0].get("pong"), Some(&Json::Bool(true)), "{}", lines[0]);
+    assert_eq!(lines[1].get("y").and_then(|v| v.as_arr()).unwrap().len(), 1);
+    assert!(lines[2].get("models").is_some(), "{}", lines[2]);
+    // framed client on the same server, pipelined in one write; replies
+    // are matched by id, order not guaranteed
+    let mut framed = connect(&h);
+    let mut burst = Vec::new();
+    for id in [11usize, 12, 13] {
+        burst.extend_from_slice(&accumkrr::coordinator::frame::frame_msg(&Json::obj(vec![
+            ("id", Json::from(id)),
+            ("method", Json::from("ping")),
+        ])));
+    }
+    framed.write_all(&burst).unwrap();
+    let mut seen = Vec::new();
+    for _ in 0..3 {
+        let j = read_frame(&mut framed).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{j}");
+        seen.push(j.get("id").and_then(|v| v.as_usize()).unwrap());
+    }
+    seen.sort();
+    assert_eq!(seen, vec![11, 12, 13]);
+    h.stop();
+}
+
+#[test]
+fn malformed_input_gets_structured_error_without_poisoning() {
+    let h = start(store_with_model(), |_| {});
+    // framed: garbage payload → bad json error, connection still works
+    let mut conn = connect(&h);
+    let garbage = b"this is not json";
+    let mut msg = (garbage.len() as u32).to_be_bytes().to_vec();
+    msg.extend_from_slice(garbage);
+    conn.write_all(&msg).unwrap();
+    let r = read_frame(&mut conn).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+    assert!(
+        r.get("error").and_then(|v| v.as_str()).unwrap().contains("bad json"),
+        "{r}"
+    );
+    write_frame(&mut conn, &Json::obj(vec![("method", Json::from("ping"))])).unwrap();
+    let r = read_frame(&mut conn).unwrap();
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)), "same conn survives: {r}");
+    // legacy: a garbage line errors, the next line still answers
+    let mut legacy = connect(&h);
+    legacy.write_all(b"wat wat\n{\"op\":\"ping\"}\n").unwrap();
+    let mut reader = BufReader::new(legacy);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(&line).unwrap().get("ok"), Some(&Json::Bool(false)));
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(&line).unwrap().get("pong"), Some(&Json::Bool(true)));
+    h.stop();
+}
+
+#[test]
+fn oversized_half_written_and_unknown_protocol_frames() {
+    let h = start(store_with_model(), |_| {});
+    // oversized header: structured error then the connection closes
+    let mut conn = connect(&h);
+    conn.write_all(&((MAX_FRAME + 1) as u32).to_be_bytes()).unwrap();
+    let r = read_frame(&mut conn).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+    assert!(
+        r.get("error").and_then(|v| v.as_str()).unwrap().contains("exceeds"),
+        "{r}"
+    );
+    assert!(read_frame(&mut conn).is_err(), "server must close after oversize");
+    // half-written frame then client write-close: server must drop the
+    // connection instead of waiting forever
+    let mut conn = connect(&h);
+    let mut partial = (100u32).to_be_bytes().to_vec();
+    partial.extend_from_slice(&[0u8; 10]);
+    conn.write_all(&partial).unwrap();
+    conn.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert_eq!(conn.read_to_end(&mut buf).unwrap(), 0, "no reply for half frame");
+    // unknown first byte: error reply, then close
+    let mut conn = connect(&h);
+    conn.write_all(&[0xFFu8]).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let r = Json::parse(&line).unwrap();
+    assert!(
+        r.get("error").and_then(|v| v.as_str()).unwrap().contains("protocol"),
+        "{r}"
+    );
+    // server stays healthy for well-formed clients afterwards
+    let mut ok_conn = connect(&h);
+    write_frame(&mut ok_conn, &Json::obj(vec![("method", Json::from("ping"))])).unwrap();
+    assert_eq!(
+        read_frame(&mut ok_conn).unwrap().get("pong"),
+        Some(&Json::Bool(true))
+    );
+    h.stop();
+}
+
+#[test]
+fn overload_sheds_pipelined_burst_deterministically() {
+    let h = start(store_with_model(), |cfg| {
+        cfg.max_inflight = 1;
+    });
+    let metrics = h.metrics();
+    let mut conn = connect(&h);
+    // three pings in one write: the reactor parses the burst before any
+    // completion is applied, so #2 and #3 exceed max_inflight=1 and shed
+    let mut burst = Vec::new();
+    for id in [1usize, 2, 3] {
+        burst.extend_from_slice(&accumkrr::coordinator::frame::frame_msg(&Json::obj(vec![
+            ("id", Json::from(id)),
+            ("method", Json::from("ping")),
+        ])));
+    }
+    conn.write_all(&burst).unwrap();
+    let mut ok = 0;
+    let mut overloaded = 0;
+    for _ in 0..3 {
+        let r = read_frame(&mut conn).unwrap();
+        if r.get("ok") == Some(&Json::Bool(true)) {
+            ok += 1;
+        } else {
+            assert_eq!(r.get("err").and_then(|v| v.as_str()), Some("overloaded"), "{r}");
+            overloaded += 1;
+        }
+    }
+    assert_eq!((ok, overloaded), (1, 2));
+    assert_eq!(metrics.shed.load(std::sync::atomic::Ordering::Relaxed), 2);
+    // shed is per-request, not a connection death sentence
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![("id", Json::from(4usize)), ("method", Json::from("ping"))]),
+    )
+    .unwrap();
+    assert_eq!(read_id(&mut conn, 4).get("ok"), Some(&Json::Bool(true)));
+    h.stop();
+}
+
+#[test]
+fn shutdown_completes_in_bounded_time() {
+    let h = start(store_with_model(), |_| {});
+    let mut conn = connect(&h);
+    let t0 = Instant::now();
+    write_frame(&mut conn, &Json::obj(vec![("method", Json::from("shutdown"))])).unwrap();
+    let r = read_frame(&mut conn).unwrap();
+    assert_eq!(r.get("stopping"), Some(&Json::Bool(true)), "{r}");
+    h.join();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(2),
+        "shutdown took {elapsed:?}, want < 2s"
+    );
+}
+
+/// The serving acceptance bar: a row's prediction is bitwise identical
+/// no matter the concurrency level or which batch composition it rides
+/// in. Solo baseline first, then concurrent clients hammering mixed
+/// batches while re-asking for the probe row.
+#[test]
+fn predictions_bitwise_stable_across_concurrency_and_batches() {
+    let h = start(store_with_model(), |cfg| {
+        // long fixed wait forces heavy coalescing across clients
+        cfg.batcher = BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(5),
+            adaptive: true,
+        };
+    });
+    let probe = vec![0.37, -1.2, 0.88];
+    let solo = {
+        let mut conn = connect(&h);
+        write_frame(&mut conn, &predict_req(1, std::slice::from_ref(&probe))).unwrap();
+        let r = read_id(&mut conn, 1);
+        r.get("y").and_then(|v| v.as_arr()).unwrap()[0].as_f64().unwrap()
+    };
+    let addr = h.addr();
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let probe = probe.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.set_nodelay(true).unwrap();
+            let mut got = Vec::new();
+            for i in 0..6usize {
+                // vary the batch composition: filler rows around the
+                // probe, at shifting positions
+                let mut rows = Vec::new();
+                for f in 0..(t as usize % 3) {
+                    rows.push(vec![t as f64 + f as f64, -1.0, 0.5]);
+                }
+                rows.push(probe.clone());
+                for f in 0..i {
+                    rows.push(vec![0.1 * f as f64, 2.0, -0.7]);
+                }
+                let probe_pos = t as usize % 3;
+                let req = Json::obj(vec![
+                    ("id", Json::from(i)),
+                    ("method", Json::from("predict")),
+                    ("model", Json::from("m")),
+                    ("x", Json::Arr(rows.iter().map(|r| Json::nums(r)).collect())),
+                ]);
+                write_frame(&mut conn, &req).unwrap();
+                let r = loop {
+                    let j = read_frame(&mut conn).unwrap();
+                    if j.get("id").and_then(|v| v.as_usize()) == Some(i) {
+                        break j;
+                    }
+                };
+                let y = r.get("y").and_then(|v| v.as_arr()).unwrap();
+                got.push(y[probe_pos].as_f64().unwrap());
+            }
+            got
+        }));
+    }
+    for hnd in handles {
+        for y in hnd.join().unwrap() {
+            assert_eq!(
+                y.to_bits(),
+                solo.to_bits(),
+                "probe row drifted under concurrency: {y} vs solo {solo}"
+            );
+        }
+    }
+    h.stop();
+}
+
+/// Metrics counters only ever grow, and the latency histogram stays
+/// internally consistent as traffic accumulates.
+#[test]
+fn metrics_are_monotone_under_traffic() {
+    let h = start(store_with_model(), |_| {});
+    let mut conn = connect(&h);
+    let fetch = |conn: &mut TcpStream, id: usize| -> Json {
+        write_frame(
+            conn,
+            &Json::obj(vec![("id", Json::from(id)), ("method", Json::from("metrics"))]),
+        )
+        .unwrap();
+        read_id(conn, id)
+    };
+    let mut last_q = 0;
+    for round in 0..3usize {
+        for i in 0..4usize {
+            write_frame(&mut conn, &predict_req(100 + i, &[vec![0.1 * i as f64, 0.5, -0.5]]))
+                .unwrap();
+            read_id(&mut conn, 100 + i);
+        }
+        let m = fetch(&mut conn, 900 + round);
+        let q = m.get("queries").and_then(|v| v.as_usize()).unwrap();
+        assert!(q >= last_q + 4, "queries must grow: {q} after {last_q}");
+        last_q = q;
+        let lat = m.get("predict_latency_ms").unwrap();
+        let p50 = lat.get("p50").and_then(|v| v.as_f64()).unwrap();
+        let p99 = lat.get("p99").and_then(|v| v.as_f64()).unwrap();
+        assert!(p50 >= 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+        let br = m.get("batch_rows").unwrap();
+        assert!(br.get("count").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+    }
+    h.stop();
+}
