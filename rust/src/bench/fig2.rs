@@ -85,41 +85,46 @@ pub fn run_fig2(opts: &BenchOpts) -> Vec<Row> {
 mod tests {
     use super::*;
 
-    /// Quarantined: flaky by construction. 6 replicates at n = 500 is far
-    /// from the paper's 30-replicate averages; the m-ordering holds in
-    /// expectation but a single fixed seed can invert adjacent curves, and
-    /// any change to the sketch RNG draw order (e.g. the term-major
-    /// refactor behind grow-in-place sketches) reshuffles the draw. The
-    /// statistically robust version of this claim is exercised by
-    /// `tests/integration.rs::end_to_end_pipeline_error_ordering` with
-    /// averaged comparisons. Run with `--ignored` to spot-check.
+    /// Deflaked (was `#[ignore]`d): a single fixed-seed mean can invert
+    /// adjacent m-curves at this miniature scale, but the *median over
+    /// independent seeds* of the m=1 vs m=16 vs Gaussian ordering is
+    /// stable — an outlier seed ends up in the tail, not the middle.
+    /// Scale is kept small (n = 400, 4 replicates, 3 seeds) so the test
+    /// stays within tier-1 runtime.
     #[test]
-    #[ignore = "flaky by construction: 6-replicate ordering assertion at fixed seed"]
     fn fig2_error_monotone_in_m_at_small_scale() {
-        let opts = BenchOpts {
-            replicates: 6,
-            n_max: 500,
-            ..Default::default()
+        let errs_at_dmax = |seed: u64| {
+            let opts = BenchOpts {
+                replicates: 4,
+                n_max: 400,
+                seed,
+                ..Default::default()
+            };
+            let rows = run_fig2(&opts);
+            // largest d: where accumulation separates the curves most
+            let dmax = rows.iter().map(|r| r.val("d").unwrap()).fold(0.0f64, f64::max);
+            let err_of = |m: &str| {
+                rows.iter()
+                    .find(|r| r.key("m") == Some(m) && r.val("d") == Some(dmax))
+                    .unwrap()
+                    .val("approx_err")
+                    .unwrap()
+            };
+            (err_of("1"), err_of("16"), err_of("inf"))
         };
-        let rows = run_fig2(&opts);
-        // pick the largest d; errors averaged over replicates should be
-        // (weakly) ordered: m=1 worst, m=32 ≈ gaussian
-        let dmax = rows
-            .iter()
-            .map(|r| r.val("d").unwrap() as usize)
-            .max()
-            .unwrap() as f64;
-        let err_of = |m: &str| {
-            rows.iter()
-                .find(|r| r.key("m") == Some(m) && r.val("d") == Some(dmax))
-                .unwrap()
-                .val("approx_err")
-                .unwrap()
+        let (mut e1, mut e16, mut einf) = (Vec::new(), Vec::new(), Vec::new());
+        for seed in [2u64, 12, 22] {
+            let (a, b, c) = errs_at_dmax(seed);
+            e1.push(a);
+            e16.push(b);
+            einf.push(c);
+        }
+        let median = |vals: &mut Vec<f64>| {
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals[vals.len() / 2]
         };
-        let e1 = err_of("1");
-        let e16 = err_of("16");
-        let einf = err_of("inf");
-        assert!(e16 < e1, "m=16 ({e16}) should beat m=1 ({e1})");
-        assert!(einf < e1, "gaussian ({einf}) should beat m=1 ({e1})");
+        let (m1, m16, minf) = (median(&mut e1), median(&mut e16), median(&mut einf));
+        assert!(m16 < m1, "median m=16 ({m16}) should beat m=1 ({m1})");
+        assert!(minf < m1, "median gaussian ({minf}) should beat m=1 ({m1})");
     }
 }

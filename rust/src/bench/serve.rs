@@ -24,6 +24,7 @@ use crate::linalg::Precision;
 use crate::rng::Pcg64;
 use crate::sketch::SketchKind;
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -38,6 +39,9 @@ struct Point {
     errors: u64,
     shed: u64,
     mean_batch_rows: f64,
+    /// Failed replies by `err_code` ("unknown" for codeless failures),
+    /// so shed vs deadline vs fault rejections stay distinguishable.
+    err_codes: BTreeMap<String, u64>,
 }
 
 struct LoadParams {
@@ -99,12 +103,18 @@ pub fn run_serve_to(opts: &BenchOpts, json_path: &str) -> Vec<Row> {
                     ("shed", pt.shed as f64),
                 ],
             ));
+            let codes: Vec<(&str, Json)> = pt
+                .err_codes
+                .iter()
+                .map(|(code, n)| (code.as_str(), Json::from(*n as usize)))
+                .collect();
             point_objs.push(Json::obj(vec![
                 ("offered_qps", Json::Num(pt.offered)),
                 ("sustained_qps", Json::Num(pt.sustained)),
                 ("p50_ms", Json::Num(pt.p50_ms)),
                 ("p99_ms", Json::Num(pt.p99_ms)),
                 ("errors", Json::from(pt.errors as usize)),
+                ("err_codes", Json::obj(codes)),
                 ("shed", Json::from(pt.shed as usize)),
                 ("mean_batch_rows", Json::Num(pt.mean_batch_rows)),
             ]));
@@ -227,11 +237,15 @@ fn measure(
     let mut lat_ms: Vec<f64> = Vec::new();
     let mut completed = 0u64;
     let mut errors = 0u64;
+    let mut err_codes: BTreeMap<String, u64> = BTreeMap::new();
     for h in handles {
-        let (lat, done, errs) = h.join().expect("load client panicked");
+        let (lat, done, errs, codes) = h.join().expect("load client panicked");
         lat_ms.extend(lat);
         completed += done;
         errors += errs;
+        for (code, n) in codes {
+            *err_codes.entry(code).or_insert(0) += n;
+        }
     }
     let elapsed = wall.elapsed().as_secs_f64();
     lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -248,21 +262,24 @@ fn measure(
         errors,
         shed: metrics.shed.load(Ordering::Relaxed) - shed0,
         mean_batch_rows: if db > 0 { dq as f64 / db as f64 } else { 0.0 },
+        err_codes,
     };
     (pt, completed)
 }
 
 /// One client: framed connection, paced send → blocking read, latency
-/// per completed request in milliseconds.
+/// per completed request in milliseconds, plus an `err_code` tally of
+/// the failed replies.
 fn client_loop(
     addr: SocketAddr,
     interval: Option<Duration>,
     stop_at: Instant,
     seed: u64,
-) -> (Vec<f64>, u64, u64) {
+) -> (Vec<f64>, u64, u64, BTreeMap<String, u64>) {
+    let mut err_codes: BTreeMap<String, u64> = BTreeMap::new();
     let mut conn = match TcpStream::connect(addr) {
         Ok(c) => c,
-        Err(_) => return (Vec::new(), 0, 1),
+        Err(_) => return (Vec::new(), 0, 1, err_codes),
     };
     let _ = conn.set_nodelay(true);
     let mut rng = Pcg64::seed(seed);
@@ -304,6 +321,12 @@ fn client_loop(
                 lat.push(s.elapsed().as_secs_f64() * 1e3);
                 if reply.get("ok") != Some(&Json::Bool(true)) {
                     errors += 1;
+                    let code = reply
+                        .get("err_code")
+                        .and_then(|c| c.as_str())
+                        .unwrap_or("unknown")
+                        .to_string();
+                    *err_codes.entry(code).or_insert(0) += 1;
                 }
             }
             Err(_) => {
@@ -313,7 +336,7 @@ fn client_loop(
         }
         sent += 1;
     }
-    (lat, sent, errors)
+    (lat, sent, errors, err_codes)
 }
 
 /// Percentile of an ascending-sorted sample (nearest-rank).
@@ -355,6 +378,9 @@ mod tests {
             assert_eq!(pts.len(), 3);
             for p in pts {
                 assert_eq!(p.get("errors").and_then(|v| v.as_usize()), Some(0), "{p}");
+                // the distribution is always present; healthy runs empty
+                let codes = p.get("err_codes").unwrap();
+                assert_eq!(codes, &Json::obj(vec![]), "{p}");
             }
         }
         std::fs::remove_file(&tmp).ok();

@@ -33,6 +33,7 @@
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::state::ModelStore;
 use crate::linalg::Matrix;
+use crate::util::CodedError;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -64,7 +65,7 @@ impl Default for BatcherConfig {
 
 /// Completion callback invoked exactly once with the request's result
 /// (on the batcher worker thread).
-pub type Completion = Box<dyn FnOnce(Result<Vec<f64>, String>) + Send>;
+pub type Completion = Box<dyn FnOnce(Result<Vec<f64>, CodedError>) + Send>;
 
 struct PredictJob {
     model: String,
@@ -74,8 +75,16 @@ struct PredictJob {
     dim: usize,
     /// Submission time — measures queue + batch + GEMM latency.
     t0: Instant,
+    /// Absolute expiry: past this instant the job is answered
+    /// `deadline_exceeded` instead of consuming a GEMM slot, and the
+    /// worker flushes early so co-riders land inside it.
+    deadline: Option<Instant>,
     done: Completion,
 }
+
+/// How far before the oldest queued deadline the worker flushes — slack
+/// for the GEMM itself so the reply still lands inside the deadline.
+const DEADLINE_FLUSH_MARGIN: Duration = Duration::from_millis(5);
 
 /// EWMA weight for inter-arrival gap observations.
 const GAP_ALPHA: f64 = 0.2;
@@ -137,13 +146,23 @@ impl Batcher {
 
     /// Submit a flat row-major `rows × dim` query block for prediction
     /// against a named model; `done` fires exactly once (possibly before
-    /// this returns, for shape errors).
-    pub fn submit(&self, model: &str, flat: Vec<f64>, rows: usize, dim: usize, done: Completion) {
+    /// this returns, for shape errors). `deadline` is the absolute
+    /// expiry — expired jobs are answered `deadline_exceeded` without a
+    /// GEMM slot.
+    pub fn submit(
+        &self,
+        model: &str,
+        flat: Vec<f64>,
+        rows: usize,
+        dim: usize,
+        deadline: Option<Instant>,
+        done: Completion,
+    ) {
         if rows == 0 || dim == 0 || flat.len() != rows * dim {
-            done(Err(format!(
+            done(Err(CodedError::invalid_input(format!(
                 "bad predict shape: {} values for {rows}x{dim}",
                 flat.len()
-            )));
+            ))));
             return;
         }
         let job = PredictJob {
@@ -152,6 +171,7 @@ impl Batcher {
             rows,
             dim,
             t0: Instant::now(),
+            deadline,
             done,
         };
         let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
@@ -159,16 +179,16 @@ impl Batcher {
             Some(tx) => {
                 if let Err(err) = tx.send(job) {
                     let job = err.0;
-                    (job.done)(Err("batcher worker gone".into()));
+                    (job.done)(Err(CodedError::internal("batcher worker gone")));
                 }
             }
-            None => (job.done)(Err("batcher stopped".into())),
+            None => (job.done)(Err(CodedError::internal("batcher stopped"))),
         }
     }
 
     /// Blocking convenience wrapper: flatten, submit, wait for the batch
     /// containing these rows to be served.
-    pub fn predict(&self, model: &str, rows: Vec<Vec<f64>>) -> Result<Vec<f64>, String> {
+    pub fn predict(&self, model: &str, rows: Vec<Vec<f64>>) -> Result<Vec<f64>, CodedError> {
         if rows.is_empty() {
             return Ok(Vec::new());
         }
@@ -176,7 +196,7 @@ impl Batcher {
         let mut flat = Vec::with_capacity(rows.len() * dim);
         for row in &rows {
             if row.len() != dim {
-                return Err("ragged predict rows".into());
+                return Err(CodedError::invalid_input("ragged predict rows"));
             }
             flat.extend_from_slice(row);
         }
@@ -186,13 +206,14 @@ impl Batcher {
             flat,
             rows.len(),
             dim,
+            None,
             Box::new(move |r| {
                 let _ = reply_tx.send(r);
             }),
         );
         reply_rx
             .recv()
-            .map_err(|_| "batcher dropped reply".to_string())?
+            .map_err(|_| CodedError::internal("batcher dropped reply"))?
     }
 
     /// Legacy metrics snapshot: (queries, batches).
@@ -243,11 +264,20 @@ fn worker(
         let mut total = first.rows;
         let mut jobs = vec![first];
         while total < cfg.max_batch {
-            let budget = if cfg.adaptive {
+            let mut budget = if cfg.adaptive {
                 adaptive_wait(gap_ewma, cfg.max_wait, cfg.max_batch - total)
             } else {
                 cfg.max_wait
             };
+            // a queued deadline trumps the batching policy: flush with
+            // enough margin that the oldest co-rider's GEMM still lands
+            // inside its deadline instead of idling out `max_wait`
+            if let Some(dl) = jobs.iter().filter_map(|j| j.deadline).min() {
+                budget = budget.min(
+                    dl.saturating_duration_since(start)
+                        .saturating_sub(DEADLINE_FLUSH_MARGIN),
+                );
+            }
             let elapsed = start.elapsed();
             if budget <= elapsed {
                 // budget exhausted — still sweep anything already queued
@@ -279,14 +309,36 @@ fn worker(
 /// Serve one coalesced batch, grouping jobs by model via a sorted index
 /// vector (no name clones) and concatenating flat buffers straight into
 /// the GEMM input. Allocation budget: O(groups + jobs), never O(rows).
+///
+/// Failure domains, in evaluation order: an injected `batcher.flush`
+/// fault fails the whole batch (structured, no quarantine); expired
+/// deadlines are answered before any grouping so they never consume a
+/// GEMM slot; quarantined models answer `model_unhealthy`; a panic
+/// inside `predict` is caught, quarantines the model, and fails only
+/// that model's group — co-batched groups for other models still serve.
 fn flush(store: &ModelStore, mut jobs: Vec<PredictJob>, metrics: &ServingMetrics) {
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     let total_rows: usize = jobs.iter().map(|j| j.rows).sum();
     metrics.batch_rows.record(total_rows as f64);
-    let mut order: Vec<usize> = (0..jobs.len()).collect();
-    order.sort_by(|&a, &b| jobs[a].model.cmp(&jobs[b].model));
-    let mut results: Vec<Option<Result<Vec<f64>, String>>> =
+    let mut results: Vec<Option<Result<Vec<f64>, CodedError>>> =
         (0..jobs.len()).map(|_| None).collect();
+    if crate::util::fault::hit("batcher.flush") {
+        for (job, _) in jobs.drain(..).zip(results) {
+            metrics.predict_latency.record(job.t0.elapsed().as_secs_f64());
+            (job.done)(Err(CodedError::internal("injected fault: batcher.flush")));
+        }
+        return;
+    }
+    // expired deadlines answer before grouping — no GEMM slot consumed
+    let now = Instant::now();
+    for (i, job) in jobs.iter().enumerate() {
+        if job.deadline.is_some_and(|dl| dl <= now) {
+            metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            results[i] = Some(Err(CodedError::deadline_exceeded()));
+        }
+    }
+    let mut order: Vec<usize> = (0..jobs.len()).filter(|&i| results[i].is_none()).collect();
+    order.sort_by(|&a, &b| jobs[a].model.cmp(&jobs[b].model));
     let mut g0 = 0;
     while g0 < order.len() {
         let mut g1 = g0 + 1;
@@ -295,17 +347,26 @@ fn flush(store: &ModelStore, mut jobs: Vec<PredictJob>, metrics: &ServingMetrics
         }
         let group = &order[g0..g1];
         let name = &jobs[group[0]].model;
+        if store.is_quarantined(name) {
+            for &i in group {
+                results[i] = Some(Err(CodedError::model_unhealthy(name)));
+            }
+            g0 = g1;
+            continue;
+        }
         match store.get(name) {
             None => {
                 for &i in group {
-                    results[i] = Some(Err(format!("unknown model {name:?}")));
+                    results[i] =
+                        Some(Err(CodedError::invalid_input(format!("unknown model {name:?}"))));
                 }
             }
             Some(sm) => {
                 let p = sm.model.landmarks().cols();
                 if group.iter().any(|&i| jobs[i].dim != p) {
                     for &i in group {
-                        results[i] = Some(Err(format!("feature dim != {p}")));
+                        results[i] =
+                            Some(Err(CodedError::invalid_input(format!("feature dim != {p}"))));
                     }
                 } else {
                     let rows: usize = group.iter().map(|&i| jobs[i].rows).sum();
@@ -318,12 +379,33 @@ fn flush(store: &ModelStore, mut jobs: Vec<PredictJob>, metrics: &ServingMetrics
                         off += src.len();
                     }
                     metrics.queries.fetch_add(rows as u64, Ordering::Relaxed);
-                    let y = sm.model.predict(&xq);
-                    let mut yoff = 0;
-                    for &i in group {
-                        let k = jobs[i].rows;
-                        results[i] = Some(Ok(y[yoff..yoff + k].to_vec()));
-                        yoff += k;
+                    let y = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if crate::util::fault::hit("worker.panic") {
+                            panic!("injected fault: worker.panic");
+                        }
+                        sm.model.predict(&xq)
+                    }));
+                    match y {
+                        Ok(y) => {
+                            let mut yoff = 0;
+                            for &i in group {
+                                let k = jobs[i].rows;
+                                results[i] = Some(Ok(y[yoff..yoff + k].to_vec()));
+                                yoff += k;
+                            }
+                        }
+                        Err(_) => {
+                            // poisoned model: quarantine so later requests
+                            // get model_unhealthy instead of panicking again
+                            store.quarantine(name);
+                            metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                            metrics.quarantined.fetch_add(1, Ordering::Relaxed);
+                            for &i in group {
+                                results[i] = Some(Err(CodedError::internal(format!(
+                                    "predict worker panicked; model {name:?} quarantined"
+                                ))));
+                            }
+                        }
                     }
                 }
             }
@@ -332,7 +414,7 @@ fn flush(store: &ModelStore, mut jobs: Vec<PredictJob>, metrics: &ServingMetrics
     }
     for (job, res) in jobs.drain(..).zip(results) {
         metrics.predict_latency.record(job.t0.elapsed().as_secs_f64());
-        (job.done)(res.unwrap_or_else(|| Err("internal: no result".into())));
+        (job.done)(res.unwrap_or_else(|| Err(CodedError::internal("no result"))));
     }
 }
 
@@ -413,10 +495,84 @@ mod tests {
 
     #[test]
     fn unknown_model_and_bad_dims_error() {
+        use crate::util::ErrorKind;
         let store = store_with_model();
         let b = Batcher::start(store, BatcherConfig::default());
-        assert!(b.predict("nope", vec![vec![0.0; 3]]).is_err());
-        assert!(b.predict("m", vec![vec![0.0; 7]]).is_err());
+        let e = b.predict("nope", vec![vec![0.0; 3]]).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::InvalidInput);
+        let e = b.predict("m", vec![vec![0.0; 7]]).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::InvalidInput);
+    }
+
+    /// A job whose deadline already passed is answered `deadline_exceeded`
+    /// before grouping: it consumes no GEMM slot (queries untouched) and
+    /// ticks the `deadline_expired` counter. Live jobs in the same batch
+    /// still serve.
+    #[test]
+    fn expired_deadline_skips_gemm_and_ticks_counter() {
+        use crate::util::ErrorKind;
+        use std::sync::mpsc;
+        let store = store_with_model();
+        let metrics = ServingMetrics::new();
+        let (tx_dead, rx_dead) = mpsc::channel();
+        let (tx_live, rx_live) = mpsc::channel();
+        let jobs = vec![
+            PredictJob {
+                model: "m".to_string(),
+                flat: vec![0.5, 0.5, 0.5],
+                rows: 1,
+                dim: 3,
+                t0: Instant::now(),
+                deadline: Some(Instant::now() - Duration::from_millis(1)),
+                done: Box::new(move |r| tx_dead.send(r).unwrap()),
+            },
+            PredictJob {
+                model: "m".to_string(),
+                flat: vec![1.0, 1.0, 1.0],
+                rows: 1,
+                dim: 3,
+                t0: Instant::now(),
+                deadline: Some(Instant::now() + Duration::from_secs(30)),
+                done: Box::new(move |r| tx_live.send(r).unwrap()),
+            },
+        ];
+        flush(&store, jobs, &metrics);
+        let dead = rx_dead.recv().unwrap().unwrap_err();
+        assert_eq!(dead.kind, ErrorKind::DeadlineExceeded);
+        let live = rx_live.recv().unwrap().unwrap();
+        assert_eq!(live.len(), 1);
+        assert_eq!(metrics.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.queries.load(Ordering::Relaxed), 1, "expired job must not reach GEMM");
+    }
+
+    /// A quarantined model answers `model_unhealthy` without running the
+    /// kernel; retraining under the same name heals it and service
+    /// resumes.
+    #[test]
+    fn quarantined_model_rejects_until_retrained() {
+        use crate::util::ErrorKind;
+        let store = store_with_model();
+        let b = Batcher::start(store.clone(), BatcherConfig::default());
+        store.quarantine("m");
+        let e = b.predict("m", vec![vec![0.5, 0.5, 0.5]]).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::ModelUnhealthy);
+        // retrain heals
+        store
+            .train(&TrainRequest {
+                name: "m".into(),
+                dataset: "bimodal".into(),
+                n: 150,
+                kind: SketchKind::Accumulation { m: 3 },
+                d: 10,
+                lambda: 1e-3,
+                bandwidth: 0.0,
+                seed: 5,
+                adaptive: None,
+                precision: crate::linalg::Precision::F64,
+            })
+            .unwrap();
+        let y = b.predict("m", vec![vec![0.5, 0.5, 0.5]]).unwrap();
+        assert_eq!(y.len(), 1);
     }
 
     /// The control law: zero wait until the gap estimate exists or when
@@ -481,6 +637,7 @@ mod tests {
                         rows: rows_per_job,
                         dim: 3,
                         t0: Instant::now(),
+                        deadline: None,
                         done: Box::new(|r| {
                             assert!(r.is_ok());
                         }),

@@ -1,0 +1,278 @@
+//! Retrying TCP client for the serving plane.
+//!
+//! Wraps one connection to an `accumkrr serve` instance with the retry
+//! discipline a production caller needs: bounded attempts, exponential
+//! backoff with seeded jitter (deterministic under test), reconnect on
+//! transport errors, and a running tally of `err_code`s seen so callers
+//! can report shed vs deadline vs fault rejections separately.
+//!
+//! Retries are **idempotent-only**: `ping`, `predict`, `models`,
+//! `metrics`, and `cluster` are safe to resend (they mutate nothing), so
+//! a transport error or an `overloaded` shed triggers a backed-off
+//! retry. `train` and `shutdown` are never resent — a lost reply does
+//! not prove the op did not run, and double-submitting a multi-second
+//! fit is worse than surfacing the error.
+
+use crate::coordinator::frame::{read_frame, write_frame};
+use crate::rng::Pcg64;
+use crate::util::json::Json;
+use crate::util::CodedError;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Ops the client will resend after a transport error or shed. Everything
+/// else gets exactly one attempt.
+const IDEMPOTENT_OPS: &[&str] = &["ping", "predict", "models", "metrics", "cluster"];
+
+/// Client configuration; see [`Client::new`].
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Server address, e.g. `127.0.0.1:7878`.
+    pub addr: String,
+    /// Extra attempts after the first (so `retries: 2` → ≤ 3 sends).
+    pub retries: u32,
+    /// Base backoff before the first retry; doubles each further retry,
+    /// with up to +50% seeded jitter so synchronized clients desynchronize.
+    pub backoff: Duration,
+    /// Seed for the jitter stream (deterministic tests).
+    pub seed: u64,
+    /// Speak v1 newline JSON instead of framed v2.
+    pub legacy: bool,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            addr: "127.0.0.1:7878".into(),
+            retries: 2,
+            backoff: Duration::from_millis(50),
+            seed: 1,
+            legacy: false,
+        }
+    }
+}
+
+/// A lazily-connected retrying client. Not thread-safe by design (one
+/// connection, one request in flight); clone the config and build one
+/// per thread for concurrent load.
+pub struct Client {
+    cfg: ClientConfig,
+    conn: Option<TcpStream>,
+    rng: Pcg64,
+    err_codes: BTreeMap<String, u64>,
+    attempts: u64,
+    retries: u64,
+}
+
+impl Client {
+    /// Build a client; no I/O happens until the first [`call`](Client::call).
+    pub fn new(cfg: ClientConfig) -> Client {
+        let seed = cfg.seed;
+        Client {
+            cfg,
+            conn: None,
+            rng: Pcg64::seed(seed),
+            err_codes: BTreeMap::new(),
+            attempts: 0,
+            retries: 0,
+        }
+    }
+
+    /// Every `err_code` observed in failed replies, with counts. Legacy
+    /// replies carry no code; their failures tally under `"unknown"`.
+    pub fn err_code_tally(&self) -> &BTreeMap<String, u64> {
+        &self.err_codes
+    }
+
+    /// `(total sends, of which retries)` — observability for the bench.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.attempts, self.retries)
+    }
+
+    fn ensure_conn(&mut self) -> std::io::Result<&mut TcpStream> {
+        if self.conn.is_none() {
+            let s = TcpStream::connect(&self.cfg.addr)?;
+            let _ = s.set_nodelay(true);
+            self.conn = Some(s);
+        }
+        Ok(self.conn.as_mut().expect("connection just established"))
+    }
+
+    /// One send + one reply on the current connection; any I/O error
+    /// tears the connection down so the next attempt reconnects.
+    fn send_once(&mut self, req: &Json) -> std::io::Result<Json> {
+        let legacy = self.cfg.legacy;
+        let result = (|| {
+            let conn = self.ensure_conn()?;
+            if legacy {
+                conn.write_all(format!("{req}\n").as_bytes())?;
+                conn.flush()?;
+                let mut line = String::new();
+                let mut reader = BufReader::new(conn.try_clone()?);
+                if reader.read_line(&mut line)? == 0 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "server closed the connection",
+                    ));
+                }
+                Json::parse(&line).map_err(|e| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad reply: {e}"))
+                })
+            } else {
+                write_frame(conn, req)?;
+                read_frame(conn)
+            }
+        })();
+        if result.is_err() {
+            self.conn = None;
+        }
+        result
+    }
+
+    fn backoff_for(&mut self, attempt: u32) -> Duration {
+        let exp = self.cfg.backoff.saturating_mul(1u32 << attempt.min(16));
+        exp.mul_f64(1.0 + 0.5 * self.rng.uniform())
+    }
+
+    fn tally_reply(&mut self, reply: &Json) {
+        if reply.get("ok").and_then(|v| v.as_bool()) == Some(false) {
+            let code = reply
+                .get("err_code")
+                .and_then(|c| c.as_str())
+                .unwrap_or("unknown")
+                .to_string();
+            *self.err_codes.entry(code).or_insert(0) += 1;
+        }
+    }
+
+    /// Send one request and return the server's reply. `Err` means the
+    /// transport failed (after retries, if the op was idempotent);
+    /// application-level failures come back as `Ok` replies with
+    /// `ok:false` plus `err_code` — inspect, don't unwrap.
+    pub fn call(&mut self, req: &Json) -> Result<Json, CodedError> {
+        let op = req
+            .get("method")
+            .or_else(|| req.get("op"))
+            .and_then(|o| o.as_str())
+            .unwrap_or("")
+            .to_string();
+        let retryable = IDEMPOTENT_OPS.contains(&op.as_str());
+        let mut attempt = 0u32;
+        loop {
+            self.attempts += 1;
+            match self.send_once(req) {
+                Ok(reply) => {
+                    self.tally_reply(&reply);
+                    let shed = reply.get("err_code").and_then(|c| c.as_str())
+                        == Some("overloaded")
+                        || reply.get("err").and_then(|e| e.as_str()) == Some("overloaded");
+                    if shed && retryable && attempt < self.cfg.retries {
+                        let wait = self.backoff_for(attempt);
+                        std::thread::sleep(wait);
+                        attempt += 1;
+                        self.retries += 1;
+                        continue;
+                    }
+                    return Ok(reply);
+                }
+                Err(e) => {
+                    if retryable && attempt < self.cfg.retries {
+                        let wait = self.backoff_for(attempt);
+                        std::thread::sleep(wait);
+                        attempt += 1;
+                        self.retries += 1;
+                        continue;
+                    }
+                    return Err(CodedError::internal(format!(
+                        "transport to {} failed after {} attempt(s): {e}",
+                        self.cfg.addr,
+                        attempt + 1
+                    )));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ModelStore, ServerConfig, ServerHandle};
+    use std::sync::Arc;
+
+    fn local_server() -> ServerHandle {
+        ServerHandle::start(
+            Arc::new(ModelStore::new()),
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ping_roundtrips_on_both_protocols() {
+        let server = local_server();
+        for legacy in [false, true] {
+            let mut c = Client::new(ClientConfig {
+                addr: server.addr().to_string(),
+                legacy,
+                ..Default::default()
+            });
+            let reply = c.call(&Json::obj(vec![("op", Json::Str("ping".into()))])).unwrap();
+            assert_eq!(reply.get("pong"), Some(&Json::Bool(true)), "legacy={legacy}");
+            assert_eq!(c.stats(), (1, 0), "no retries on a healthy call");
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn application_errors_are_tallied_not_retried() {
+        let server = local_server();
+        let mut c = Client::new(ClientConfig {
+            addr: server.addr().to_string(),
+            ..Default::default()
+        });
+        let reply = c
+            .call(&Json::obj(vec![
+                ("method", Json::Str("predict".into())),
+                ("model", Json::Str("absent".into())),
+                ("x", Json::Arr(vec![Json::nums(&[0.0, 0.0])])),
+            ]))
+            .unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            reply.get("err_code").and_then(|c| c.as_str()),
+            Some("invalid_input"),
+            "{reply}"
+        );
+        assert_eq!(c.err_code_tally().get("invalid_input"), Some(&1));
+        assert_eq!(c.stats(), (1, 0), "invalid_input must not be retried");
+        server.stop();
+    }
+
+    #[test]
+    fn transport_failure_retries_then_reports() {
+        // bind-then-drop: the port is real but nobody is listening
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut c = Client::new(ClientConfig {
+            addr: dead,
+            retries: 2,
+            backoff: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let err = c.call(&Json::obj(vec![("op", Json::Str("ping".into()))])).unwrap_err();
+        assert!(err.msg.contains("3 attempt(s)"), "{}", err.msg);
+        assert_eq!(c.stats(), (3, 2));
+        // non-idempotent ops get exactly one attempt
+        let before = c.stats().0;
+        let _ = c.call(&Json::obj(vec![("op", Json::Str("train".into()))]));
+        assert_eq!(c.stats().0, before + 1);
+    }
+}

@@ -247,6 +247,49 @@ mod tests {
         assert_eq!(sniff(0x01), None, "oversized first header byte is rejected");
     }
 
+    /// Property: a framed byte stream decodes to the same messages no
+    /// matter how it is chunked. Chunk sizes are drawn seeded from
+    /// 1..=9 bytes, so splits land inside the 4-byte header (and inside
+    /// payloads, and across frame boundaries) many times per trial; the
+    /// decode must equal one-shot delivery exactly, in order.
+    #[test]
+    fn random_chunking_decodes_like_one_shot() {
+        use crate::rng::Pcg64;
+        let msgs: Vec<Json> = (0..6usize)
+            .map(|i| {
+                Json::obj(vec![
+                    ("id", Json::from(i)),
+                    ("method", Json::Str("predict".into())),
+                    ("x", Json::nums(&vec![0.25 * i as f64; i * 7 + 1])),
+                ])
+            })
+            .collect();
+        let stream: Vec<u8> = msgs.iter().flat_map(frame_msg).collect();
+        let mut d = Decoder::new();
+        d.push(&stream);
+        let mut want = Vec::new();
+        while let Some(p) = d.next_frame().unwrap() {
+            want.push(p);
+        }
+        assert_eq!(want.len(), msgs.len(), "reference decode must see every frame");
+        let mut rng = Pcg64::seed(0xC0FFEE);
+        for trial in 0..64 {
+            let mut d = Decoder::new();
+            let mut got = Vec::new();
+            let mut pos = 0;
+            while pos < stream.len() {
+                let max = (stream.len() - pos).min(1 + rng.below(9) as usize);
+                let take = 1 + rng.below(max as u64) as usize;
+                d.push(&stream[pos..pos + take]);
+                pos += take;
+                while let Some(p) = d.next_frame().unwrap() {
+                    got.push(p);
+                }
+            }
+            assert_eq!(got, want, "trial {trial} diverged from one-shot decode");
+        }
+    }
+
     #[test]
     fn blocking_helpers_roundtrip() {
         let j = Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::nums(&[1.5, -2.0]))]);

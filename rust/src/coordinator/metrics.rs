@@ -128,6 +128,15 @@ pub struct ServingMetrics {
     pub shed: AtomicU64,
     /// Malformed / oversized / unparseable frames and lines.
     pub frame_errors: AtomicU64,
+    /// Worker panics caught (train or batched predict).
+    pub worker_panics: AtomicU64,
+    /// Models put into quarantine after a worker panic.
+    pub quarantined: AtomicU64,
+    /// Requests answered `deadline_exceeded` without consuming compute.
+    pub deadline_expired: AtomicU64,
+    /// Error replies per taxonomy code, indexed like
+    /// [`crate::util::error::ALL`].
+    pub err_codes: [AtomicU64; crate::util::error::ALL.len()],
     /// End-to-end predict latency in seconds (submit → reply encoded).
     pub predict_latency: Histogram,
     /// Rows per flushed batch.
@@ -142,21 +151,52 @@ impl ServingMetrics {
             batches: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             frame_errors: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            err_codes: std::array::from_fn(|_| AtomicU64::new(0)),
             predict_latency: Histogram::log_time(),
             batch_rows: Histogram::pow2(),
         }
     }
 
+    /// Count one error reply under its taxonomy code. Unknown codes (a
+    /// reply hand-built without the taxonomy) land on `internal`.
+    pub fn tick_err_code(&self, code: &str) {
+        use crate::util::error::{ErrorKind, ALL};
+        let kind = ErrorKind::from_code(code).unwrap_or(ErrorKind::Internal);
+        let idx = ALL.iter().position(|k| *k == kind).unwrap_or(ALL.len() - 1);
+        self.err_codes[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot for the `metrics` op. Latency quantiles are reported in
-    /// **milliseconds**.
+    /// **milliseconds**. `faults_injected` is the process-wide
+    /// [`crate::util::fault::fired_total`] — chaos tests read their
+    /// injection accounting here next to the counters the faults moved.
     pub fn to_json(&self) -> Json {
         let lat = &self.predict_latency;
         let ms = 1e3;
+        let codes: Vec<(&str, Json)> = crate::util::error::ALL
+            .iter()
+            .zip(self.err_codes.iter())
+            .map(|(k, c)| (k.code(), Json::from(c.load(Ordering::Relaxed) as f64)))
+            .collect();
         Json::obj(vec![
             ("queries", Json::from(self.queries.load(Ordering::Relaxed) as f64)),
             ("batches", Json::from(self.batches.load(Ordering::Relaxed) as f64)),
             ("shed", Json::from(self.shed.load(Ordering::Relaxed) as f64)),
             ("frame_errors", Json::from(self.frame_errors.load(Ordering::Relaxed) as f64)),
+            (
+                "worker_panics",
+                Json::from(self.worker_panics.load(Ordering::Relaxed) as f64),
+            ),
+            ("quarantined", Json::from(self.quarantined.load(Ordering::Relaxed) as f64)),
+            (
+                "deadline_expired",
+                Json::from(self.deadline_expired.load(Ordering::Relaxed) as f64),
+            ),
+            ("faults_injected", Json::from(crate::util::fault::fired_total() as f64)),
+            ("err_codes", Json::obj(codes)),
             (
                 "predict_latency_ms",
                 Json::obj(vec![
@@ -236,5 +276,27 @@ mod tests {
         assert_eq!(after.get("shed").and_then(Json::as_f64), Some(1.0));
         let lat = after.get("predict_latency_ms").expect("latency block");
         assert!(lat.get("p99").and_then(Json::as_f64).unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn err_code_table_is_exhaustive_and_tallies() {
+        let m = ServingMetrics::new();
+        m.tick_err_code("deadline_exceeded");
+        m.tick_err_code("deadline_exceeded");
+        m.tick_err_code("model_unhealthy");
+        m.tick_err_code("not-a-real-code"); // lands on internal
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let codes = j.get("err_codes").expect("err_codes block");
+        for k in crate::util::error::ALL {
+            assert!(codes.get(k.code()).is_some(), "missing code {}", k.code());
+        }
+        assert_eq!(codes.get("deadline_exceeded").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(codes.get("model_unhealthy").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(codes.get("internal").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(codes.get("overloaded").and_then(Json::as_f64), Some(0.0));
+        // the robustness counters serialize alongside
+        for key in ["worker_panics", "quarantined", "deadline_expired", "faults_injected"] {
+            assert!(j.get(key).and_then(Json::as_f64).is_some(), "missing {key}");
+        }
     }
 }

@@ -18,6 +18,9 @@
 //! * [`frame`] — the v2 wire format: 4-byte big-endian length-prefixed
 //!   JSON frames, plus the incremental [`frame::Decoder`] both protocols
 //!   share.
+//! * [`client`] — the retrying client: bounded attempts, exponential
+//!   backoff with seeded jitter, reconnect on transport errors,
+//!   idempotent-only resends, and an `err_code` tally for observability.
 //! * [`metrics`] — lock-free serving counters and fixed-bucket
 //!   log-spaced histograms (latency quantiles, batch-size distribution)
 //!   behind the `metrics` op.
@@ -44,17 +47,28 @@
 //! followed by that many bytes of UTF-8 JSON. The frame cap is 8 MiB
 //! ([`frame::MAX_FRAME`]), so a header's first byte is always `0x00` —
 //! that is the sniff. Requests carry `method` (the operation; `op` is
-//! accepted as an alias) and optionally `id` (any JSON value). Replies
-//! are multiplexed: they arrive as their handlers finish, **not**
-//! necessarily in request order, and every reply envelope guarantees
+//! accepted as an alias), optionally `id` (any JSON value), and
+//! optionally `deadline_ms` (integer): a budget after which the server
+//! answers `deadline_exceeded` instead of spending compute on a reply
+//! nobody is waiting for. Replies are multiplexed: they arrive as their
+//! handlers finish, **not** necessarily in request order, and every
+//! reply envelope guarantees
 //!
 //! ```text
 //! {"id": <echoed id, if the request had one>,
 //!  "method": "<echoed method>",
 //!  "ok": true|false,
 //!  "err"/"error": "<message, mirrored under both keys when present>",
+//!  "err_code": "<stable failure class, present whenever ok is false>",
 //!  ...op-specific fields}
 //! ```
+//!
+//! `err_code` is the machine contract ([`crate::util::ErrorKind`]):
+//! `invalid_input` | `overloaded` | `deadline_exceeded` |
+//! `model_unhealthy` | `numeric_failure` | `internal`. Messages may be
+//! reworded; codes never. Legacy (v1) replies predate the taxonomy and
+//! stay byte-identical — the reactor strips `err_code` before newline
+//! encoding (DESIGN.md §10).
 //!
 //! Pipelining is unlimited up to the backpressure bounds: a connection
 //! with more than `max_inflight` outstanding requests, or more than
@@ -93,6 +107,7 @@
 //! "inertia", "eigengap"}…]` when `k_max` triggered model selection.
 
 pub mod batcher;
+pub mod client;
 pub mod frame;
 pub mod jobs;
 pub mod metrics;
@@ -101,6 +116,7 @@ pub mod server;
 pub mod state;
 
 pub use batcher::{Batcher, BatcherConfig, Completion};
+pub use client::{Client, ClientConfig};
 pub use jobs::{JobScheduler, SweepPoint};
 pub use metrics::{Histogram, ServingMetrics};
 pub use server::{serve, ServerConfig, ServerHandle};

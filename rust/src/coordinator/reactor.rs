@@ -33,6 +33,7 @@
 use crate::coordinator::frame::{legacy_msg, sniff, Decoder, FrameError, Wire};
 use crate::coordinator::metrics::ServingMetrics;
 use crate::util::json::Json;
+use crate::util::ErrorKind;
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -73,9 +74,18 @@ pub(crate) struct ReplySink {
     mode: Wire,
     id: Json,
     method: String,
+    deadline: Option<Instant>,
 }
 
 impl ReplySink {
+    /// Absolute deadline derived from the request's `deadline_ms` field,
+    /// if the client sent one. Handlers and the batcher consult it so an
+    /// expired request is answered `deadline_exceeded` instead of doing
+    /// (and then discarding) the work.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
     /// Encode the reply for this connection's protocol and deliver it to
     /// the reactor (also wakes it).
     pub fn send(self, reply: Json) {
@@ -103,12 +113,20 @@ pub(crate) trait Router: Send + Sync + 'static {
 }
 
 /// Envelope guarantee for framed replies: inject the echoed `id` and
-/// `method`, default `ok` to `true` when the handler didn't set it, and
-/// mirror `err`/`error` both ways so clients can rely on either key.
-/// Legacy replies are passed through untouched (v1 compatibility).
+/// `method`, default `ok` to `true` when the handler didn't set it,
+/// mirror `err`/`error` both ways so clients can rely on either key, and
+/// guarantee every failed reply carries a machine-stable `err_code`
+/// (defaulting to `internal` when the handler set none). Legacy replies
+/// stay byte-identical to the v1 protocol: the taxonomy postdates v1, so
+/// `err_code` is stripped before newline encoding.
 pub(crate) fn encode_reply(mode: Wire, id: &Json, method: &str, mut reply: Json) -> Vec<u8> {
     match mode {
-        Wire::Legacy => legacy_msg(&reply),
+        Wire::Legacy => {
+            if let Json::Obj(m) = &mut reply {
+                m.remove("err_code");
+            }
+            legacy_msg(&reply)
+        }
         Wire::Framed => {
             if let Json::Obj(m) = &mut reply {
                 if !matches!(id, Json::Null) {
@@ -125,15 +143,22 @@ pub(crate) fn encode_reply(mode: Wire, id: &Json, method: &str, mut reply: Json)
                 } else if let Some(e) = m.get("err").cloned() {
                     m.entry("error".to_string()).or_insert(e);
                 }
+                if matches!(m.get("ok"), Some(Json::Bool(false))) && !m.contains_key("err_code") {
+                    m.insert(
+                        "err_code".into(),
+                        Json::Str(ErrorKind::Internal.code().to_string()),
+                    );
+                }
             }
             crate::coordinator::frame::frame_msg(&reply)
         }
     }
 }
 
-fn err_reply(msg: &str) -> Json {
+fn err_reply(kind: ErrorKind, msg: &str) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
+        ("err_code", Json::Str(kind.code().to_string())),
         ("error", Json::Str(msg.to_string())),
     ])
 }
@@ -144,6 +169,7 @@ fn overloaded_reply() -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("err", Json::Str("overloaded".into())),
+        ("err_code", Json::Str(ErrorKind::Overloaded.code().to_string())),
         ("error", Json::Str("overloaded".into())),
     ])
 }
@@ -211,6 +237,12 @@ impl Conn {
 
     /// Write until the socket pushes back. Returns `true` on progress.
     fn flush_writes(&mut self) -> bool {
+        // Chaos seam: an injected write fault behaves like a broken pipe
+        // — this connection dies, every other connection keeps serving.
+        if !self.wq.is_empty() && crate::util::fault::hit("io.write") {
+            self.dead = true;
+            return false;
+        }
         let mut progressed = false;
         while let Some(front) = self.wq.front() {
             match self.stream.write(&front[self.wfront..]) {
@@ -322,6 +354,12 @@ fn run<R: Router>(
                         }
                         Ok(n) => {
                             activity = true;
+                            // Chaos seam: an injected read fault acts as
+                            // a mid-request connection reset.
+                            if crate::util::fault::hit("io.read") {
+                                conn.dead = true;
+                                break 'reads;
+                            }
                             if conn.mode.is_none() {
                                 match sniff(buf[0]) {
                                     Some(m) => conn.mode = Some(m),
@@ -330,9 +368,18 @@ fn run<R: Router>(
                                             .metrics()
                                             .frame_errors
                                             .fetch_add(1, Ordering::Relaxed);
-                                        conn.enqueue(legacy_msg(&err_reply(
-                                            "unknown protocol (expected framed or newline JSON)",
-                                        )));
+                                        router.metrics().tick_err_code("invalid_input");
+                                        // legacy encoding strips err_code
+                                        conn.enqueue(encode_reply(
+                                            Wire::Legacy,
+                                            &Json::Null,
+                                            "",
+                                            err_reply(
+                                                ErrorKind::InvalidInput,
+                                                "unknown protocol (expected framed or newline \
+                                                 JSON)",
+                                            ),
+                                        ));
                                         conn.closing = true;
                                         break 'reads;
                                     }
@@ -461,6 +508,16 @@ fn parse_available<R: Router>(
             },
             Some(Wire::Framed) => match conn.dec.next_frame() {
                 Ok(Some(payload)) => {
+                    // Chaos seam: an injected decode fault corrupts this
+                    // one frame — structured reply, connection survives.
+                    if crate::util::fault::hit("frame.decode") {
+                        router.metrics().frame_errors.fetch_add(1, Ordering::Relaxed);
+                        router.metrics().tick_err_code("invalid_input");
+                        let reply =
+                            err_reply(ErrorKind::InvalidInput, "injected fault: frame.decode");
+                        conn.enqueue(encode_reply(Wire::Framed, &Json::Null, "", reply));
+                        continue;
+                    }
                     let text = String::from_utf8_lossy(&payload).into_owned();
                     begin_request(conn, idx, router, tx, cfg, &text);
                 }
@@ -468,10 +525,14 @@ fn parse_available<R: Router>(
                 Err(FrameError::Oversized(len)) => {
                     // unrecoverable: the stream can't be resynchronised
                     router.metrics().frame_errors.fetch_add(1, Ordering::Relaxed);
-                    let reply = err_reply(&format!(
-                        "frame of {len} bytes exceeds limit of {} bytes",
-                        crate::coordinator::frame::MAX_FRAME
-                    ));
+                    router.metrics().tick_err_code("invalid_input");
+                    let reply = err_reply(
+                        ErrorKind::InvalidInput,
+                        &format!(
+                            "frame of {len} bytes exceeds limit of {} bytes",
+                            crate::coordinator::frame::MAX_FRAME
+                        ),
+                    );
                     let bytes = encode_reply(Wire::Framed, &Json::Null, "", reply);
                     conn.enqueue(bytes);
                     conn.closing = true;
@@ -510,7 +571,9 @@ fn begin_request<R: Router>(
     match parsed {
         Err(e) => {
             router.metrics().frame_errors.fetch_add(1, Ordering::Relaxed);
-            let bytes = encode_reply(mode, &id, &method, err_reply(&format!("bad json: {e}")));
+            router.metrics().tick_err_code("invalid_input");
+            let reply = err_reply(ErrorKind::InvalidInput, &format!("bad json: {e}"));
+            let bytes = encode_reply(mode, &id, &method, reply);
             conn.complete(seq, bytes);
         }
         Ok(req) => {
@@ -518,9 +581,14 @@ fn begin_request<R: Router>(
                 conn.inflight > cfg.max_inflight || conn.wbytes > cfg.high_water_bytes;
             if overloaded {
                 router.metrics().shed.fetch_add(1, Ordering::Relaxed);
+                router.metrics().tick_err_code("overloaded");
                 let bytes = encode_reply(mode, &id, &method, overloaded_reply());
                 conn.complete(seq, bytes);
             } else {
+                let deadline = req
+                    .get("deadline_ms")
+                    .and_then(Json::as_usize)
+                    .map(|ms| Instant::now() + Duration::from_millis(ms as u64));
                 router.route(
                     req,
                     ReplySink {
@@ -531,6 +599,7 @@ fn begin_request<R: Router>(
                         mode,
                         id,
                         method,
+                        deadline,
                     },
                 );
             }

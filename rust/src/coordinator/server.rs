@@ -34,10 +34,12 @@ use crate::coordinator::state::{
 use crate::linalg::Precision;
 use crate::pool::TaskPool;
 use crate::util::json::Json;
+use crate::util::{CodedError, ErrorKind};
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -78,24 +80,53 @@ struct CoordRouter {
     metrics: Arc<ServingMetrics>,
 }
 
+/// Deliver a reply through the sink, tallying its `err_code` (if any)
+/// into the serving metrics so shed vs deadline vs fault rejections are
+/// distinguishable in the `metrics` op.
+fn send_counted(metrics: &ServingMetrics, sink: ReplySink, reply: Json) {
+    if let Some(code) = reply.get("err_code").and_then(|c| c.as_str()) {
+        metrics.tick_err_code(code);
+    }
+    sink.send(reply);
+}
+
 impl CoordRouter {
     fn route_predict(&self, req: &Json, sink: ReplySink) {
+        let metrics = self.metrics.clone();
         match parse_predict(req) {
             Ok((model, flat, rows, dim)) => {
+                // serving-boundary rejections: a quarantined model or a
+                // wrong feature width never consumes a batch slot
+                if self.store.is_quarantined(&model) {
+                    let e = CodedError::model_unhealthy(&model);
+                    send_counted(&metrics, sink, coded(&e));
+                    return;
+                }
+                if let Some(sm) = self.store.get(&model) {
+                    let p = sm.model.landmarks().cols();
+                    if dim != p {
+                        let e = CodedError::invalid_input(format!("feature dim != {p}"));
+                        send_counted(&metrics, sink, coded(&e));
+                        return;
+                    }
+                }
+                let deadline = sink.deadline();
                 self.batcher.submit(
                     &model,
                     flat,
                     rows,
                     dim,
+                    deadline,
                     Box::new(move |r| {
-                        sink.send(match r {
+                        let reply = match r {
                             Ok(y) => ok_y(&y),
-                            Err(e) => err(e),
-                        })
+                            Err(e) => coded(&e),
+                        };
+                        send_counted(&metrics, sink, reply);
                     }),
                 );
             }
-            Err(e) => sink.send(err(e)),
+            Err(e) => send_counted(&metrics, sink, coded(&e)),
         }
     }
 }
@@ -112,24 +143,45 @@ impl Router for CoordRouter {
             "predict" => self.route_predict(&req, sink),
             "train" | "cluster" => {
                 let store = self.store.clone();
+                let metrics = self.metrics.clone();
+                let deadline = sink.deadline();
                 // off the reactor thread: a fit can take seconds, and
                 // predictions against stored models must keep flowing
                 self.tasks.submit(move || {
-                    let reply =
-                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                            if op == "train" {
-                                op_train(&req, &store)
-                            } else {
-                                op_cluster(&req)
+                    if deadline.is_some_and(|dl| dl <= Instant::now()) {
+                        metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                        let e = CodedError::deadline_exceeded();
+                        send_counted(&metrics, sink, coded(&e));
+                        return;
+                    }
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if crate::util::fault::hit("worker.panic") {
+                            panic!("injected fault: worker.panic");
+                        }
+                        if op == "train" {
+                            op_train(&req, &store)
+                        } else {
+                            op_cluster(&req)
+                        }
+                    }));
+                    let reply = result.unwrap_or_else(|_| {
+                        // a panicked train leaves the named model
+                        // quarantined until a later train heals it
+                        metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                        if op == "train" {
+                            if let Some(name) = req.get("name").and_then(|v| v.as_str()) {
+                                store.quarantine(name);
+                                metrics.quarantined.fetch_add(1, Ordering::Relaxed);
                             }
-                        }))
-                        .unwrap_or_else(|_| err("internal error: handler panicked"));
-                    sink.send(reply);
+                        }
+                        err(ErrorKind::Internal, "internal error: handler panicked")
+                    });
+                    send_counted(&metrics, sink, reply);
                 });
             }
             _ => {
                 let reply = dispatch_value(&req, &self.store, &self.batcher, &self.stop);
-                sink.send(reply);
+                send_counted(&self.metrics, sink, reply);
             }
         }
     }
@@ -261,24 +313,43 @@ pub fn serve(
     Ok(addr)
 }
 
-fn err(msg: impl Into<String>) -> Json {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+fn err(kind: ErrorKind, msg: impl Into<String>) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("err_code", Json::Str(kind.code().to_string())),
+        ("error", Json::Str(msg.into())),
+    ])
+}
+
+fn coded(e: &CodedError) -> Json {
+    err(e.kind, e.msg.clone())
 }
 
 fn ok_y(y: &[f64]) -> Json {
     Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::nums(y))])
 }
 
-fn parse_predict(req: &Json) -> Result<(String, Vec<f64>, usize, usize), String> {
+fn parse_predict(req: &Json) -> Result<(String, Vec<f64>, usize, usize), CodedError> {
     let model = req
         .get("model")
         .and_then(|v| v.as_str())
-        .ok_or("missing model")?
+        .ok_or_else(|| CodedError::invalid_input("missing model"))?
         .to_string();
     let (flat, rows, dim) = req
         .get("x")
         .and_then(|x| x.as_flat_rows())
-        .ok_or("missing/empty x (need rectangular numeric rows)")?;
+        .ok_or_else(|| {
+            CodedError::invalid_input("missing/empty x (need rectangular numeric rows)")
+        })?;
+    // reject NaN/Inf at the boundary: a non-finite feature would poison
+    // the whole coalesced GEMM batch, not just this request
+    if let Some(bad) = flat.iter().position(|v| !v.is_finite()) {
+        return Err(CodedError::invalid_input(format!(
+            "x[{}][{}] is not finite",
+            bad / dim,
+            bad % dim
+        )));
+    }
     Ok((model, flat, rows, dim))
 }
 
@@ -289,7 +360,7 @@ fn parse_predict(req: &Json) -> Result<(String, Vec<f64>, usize, usize), String>
 pub fn dispatch(line: &str, store: &ModelStore, batcher: &Batcher, stop: &AtomicBool) -> Json {
     let req = match Json::parse(line) {
         Ok(j) => j,
-        Err(e) => return err(format!("bad json: {e}")),
+        Err(e) => return err(ErrorKind::InvalidInput, format!("bad json: {e}")),
     };
     dispatch_value(&req, store, batcher, stop)
 }
@@ -331,8 +402,8 @@ fn dispatch_value(req: &Json, store: &ModelStore, batcher: &Batcher, stop: &Atom
             stop.store(true, Ordering::SeqCst);
             Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))])
         }
-        Some(other) => err(format!("unknown op {other:?}")),
-        None => err("missing op"),
+        Some(other) => err(ErrorKind::InvalidInput, format!("unknown op {other:?}")),
+        None => err(ErrorKind::InvalidInput, "missing op"),
     }
 }
 
@@ -342,20 +413,28 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
     };
     let u = |k: &str, d: usize| req.get(k).and_then(|v| v.as_usize()).unwrap_or(d);
     let f = |k: &str, d: f64| req.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
-    let (kind, adaptive) = match parse_sketch_spec(
+    let (kind, mut adaptive) = match parse_sketch_spec(
         &s("sketch", "accum"),
         u("m", 4),
         u("m_max", 64),
         f("rel_tol", 1e-3),
     ) {
         Ok(spec) => spec,
-        Err(e) => return err(e),
+        Err(e) => return err(ErrorKind::InvalidInput, e),
     };
+    // optional "rank_update_limit": admission cap for the incremental
+    // Cholesky path in adaptive fits (chaos tests raise it to force
+    // every round through the downdate seam)
+    if let Some(limit) = req.get("rank_update_limit").and_then(|v| v.as_usize()) {
+        if let Some(a) = adaptive.as_mut() {
+            a.rank_update_limit = Some(limit);
+        }
+    }
     // optional "precision": "f64" (default) | "f32" — Gram accumulation
     // precision for one-shot fits; d×d solves are always f64
     let precision = match Precision::parse(&s("precision", "f64")) {
         Ok(p) => p,
-        Err(e) => return err(e),
+        Err(e) => return err(ErrorKind::InvalidInput, e),
     };
     let treq = TrainRequest {
         name: s("name", "default"),
@@ -387,9 +466,14 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
                 fields.push(("rank_updates", Json::from(rep.rank_updates as usize)));
                 fields.push(("refactors", Json::from(rep.refactors as usize)));
             }
+            // only reported when the factorization needed rescuing, so
+            // healthy train replies stay byte-identical
+            if rep.jitter_bumps > 0 {
+                fields.push(("jitter_bumps", Json::from(rep.jitter_bumps as usize)));
+            }
             Json::obj(fields)
         }
-        Err(e) => err(e),
+        Err(e) => coded(&e),
     }
 }
 
@@ -415,7 +499,7 @@ fn op_cluster(req: &Json) -> Json {
     };
     match run_cluster_job(&creq) {
         Ok(reply) => reply,
-        Err(e) => err(e),
+        Err(e) => coded(&e),
     }
 }
 
@@ -428,17 +512,18 @@ fn op_predict(req: &Json, batcher: &Batcher) -> Json {
                 flat,
                 rows,
                 dim,
+                None,
                 Box::new(move |r| {
                     let _ = tx.send(r);
                 }),
             );
             match rx.recv() {
                 Ok(Ok(y)) => ok_y(&y),
-                Ok(Err(e)) => err(e),
-                Err(_) => err("batcher dropped reply"),
+                Ok(Err(e)) => coded(&e),
+                Err(_) => err(ErrorKind::Internal, "batcher dropped reply"),
             }
         }
-        Err(e) => err(e),
+        Err(e) => coded(&e),
     }
 }
 

@@ -7,7 +7,8 @@ use crate::linalg::{Matrix, Precision};
 use crate::rng::Pcg64;
 use crate::sketch::{SketchBuilder, SketchKind};
 use crate::util::json::Json;
-use std::collections::HashMap;
+use crate::util::CodedError;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, RwLock};
 
 /// A trained model plus the metadata clients query.
@@ -66,14 +67,25 @@ const STORE_SHARDS: usize = 16;
 /// Thread-safe named model registry, sharded by name hash so the
 /// batcher's per-group `get` on the serving hot path never contends
 /// with a concurrent `train` writing a different model.
+///
+/// Every lock access is poison-tolerant (`into_inner` on a poisoned
+/// guard): a panic elsewhere while a guard was held must not cascade
+/// into killing every thread that later touches the store — the store's
+/// invariant is per-entry (a `StoredModel` is immutable once inserted),
+/// so a poisoned lock carries no torn state.
 pub struct ModelStore {
     shards: Vec<RwLock<HashMap<String, StoredModel>>>,
+    /// Names quarantined after a worker panic during train/predict —
+    /// requests against them answer `model_unhealthy` instead of
+    /// retry-and-panic loops. A successful retrain (or re-`put`) heals.
+    quarantined: RwLock<HashSet<String>>,
 }
 
 impl Default for ModelStore {
     fn default() -> Self {
         ModelStore {
             shards: (0..STORE_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            quarantined: RwLock::new(HashSet::new()),
         }
     }
 }
@@ -95,17 +107,49 @@ impl ModelStore {
         ModelStore::default()
     }
 
-    /// Insert/replace a model.
+    /// Insert/replace a model. Storing a model heals any standing
+    /// quarantine on the name — whatever is now in the slot is freshly
+    /// trained and healthy.
     pub fn put(&self, name: &str, m: StoredModel) {
         self.shards[shard_of(name)]
             .write()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .insert(name.to_string(), m);
+        self.heal(name);
     }
 
     /// Fetch a model by name.
     pub fn get(&self, name: &str) -> Option<StoredModel> {
-        self.shards[shard_of(name)].read().unwrap().get(name).cloned()
+        self.shards[shard_of(name)]
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+            .cloned()
+    }
+
+    /// Quarantine a name after a worker panic touched its model: until a
+    /// retrain heals it, requests answer `model_unhealthy`.
+    pub fn quarantine(&self, name: &str) {
+        self.quarantined
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(name.to_string());
+    }
+
+    /// Lift a quarantine (successful retrain / re-`put`).
+    pub fn heal(&self, name: &str) {
+        self.quarantined
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(name);
+    }
+
+    /// Is the name currently quarantined?
+    pub fn is_quarantined(&self, name: &str) -> bool {
+        self.quarantined
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .contains(name)
     }
 
     /// Names + summary metadata of all models (sorted by name — shard
@@ -116,7 +160,7 @@ impl ModelStore {
             .iter()
             .flat_map(|s| {
                 s.read()
-                    .unwrap()
+                    .unwrap_or_else(|e| e.into_inner())
                     .iter()
                     .map(|(k, v)| (k.clone(), v.n_train, v.train_secs, v.sketch.clone()))
                     .collect::<Vec<_>>()
@@ -128,9 +172,13 @@ impl ModelStore {
 
     /// Train a model per the request and store it. Returns the stored
     /// metadata. This is the coordinator's end-to-end training path.
-    pub fn train(&self, req: &TrainRequest) -> Result<StoredModel, String> {
+    /// Malformed requests come back as `invalid_input`; solver failures
+    /// past the jitter ladder as `numeric_failure` — never a panic.
+    pub fn train(&self, req: &TrainRequest) -> Result<StoredModel, CodedError> {
+        validate_train_request(req)?;
         let mut rng = Pcg64::seed(req.seed);
-        let (mut ds, dx, kernel) = dataset_for(&req.dataset, req.n, req.bandwidth, &mut rng)?;
+        let (mut ds, dx, kernel) = dataset_for(&req.dataset, req.n, req.bandwidth, &mut rng)
+            .map_err(CodedError::invalid_input)?;
         normalize_features(&mut ds.x);
         let n = ds.n();
         let d = if req.d > 0 {
@@ -138,6 +186,11 @@ impl ModelStore {
         } else {
             paper_d(n, dx)
         };
+        if d > n {
+            return Err(CodedError::invalid_input(format!(
+                "train: d={d} exceeds n={n} training rows"
+            )));
+        }
         let lambda = if req.lambda > 0.0 {
             req.lambda
         } else {
@@ -149,14 +202,14 @@ impl ModelStore {
             let (model, _trace) = SketchedKrr::fit_adaptive(
                 kernel, &ds.x, &ds.y, &builder, d, lambda, aopts, &mut rng,
             )
-            .ok_or("adaptive sketched fit failed (singular system)")?;
+            .ok_or_else(|| CodedError::numeric("adaptive sketched fit failed (singular system)"))?;
             let name = format!("adaptive_m{}", model.report().m);
             (model, name)
         } else {
             let sketch = SketchBuilder::new(req.kind.clone()).build(n, d, &mut rng);
             let model =
                 SketchedKrr::fit_with(kernel, &ds.x, &ds.y, &sketch, lambda, None, req.precision)
-                    .ok_or("sketched fit failed (singular system)")?;
+                    .ok_or_else(|| CodedError::numeric("sketched fit failed (singular system)"))?;
             (model, req.kind.name())
         };
         let train_secs = t.secs();
@@ -171,6 +224,30 @@ impl ModelStore {
         self.put(&req.name, stored.clone());
         Ok(stored)
     }
+}
+
+/// Bounds-check a train request before any compute is spent — every
+/// rejection here is an `invalid_input`, never a worker-killing panic.
+fn validate_train_request(req: &TrainRequest) -> Result<(), CodedError> {
+    if req.name.is_empty() {
+        return Err(CodedError::invalid_input("train: model name is empty"));
+    }
+    if req.n == 0 {
+        return Err(CodedError::invalid_input("train: n must be >= 1"));
+    }
+    if !req.lambda.is_finite() || req.lambda < 0.0 {
+        return Err(CodedError::invalid_input(format!(
+            "train: lambda must be finite and >= 0, got {}",
+            req.lambda
+        )));
+    }
+    if !req.bandwidth.is_finite() || req.bandwidth < 0.0 {
+        return Err(CodedError::invalid_input(format!(
+            "train: bandwidth must be finite and >= 0, got {}",
+            req.bandwidth
+        )));
+    }
+    Ok(())
 }
 
 /// Parse a sketch spec name (`nystrom` | `gaussian` | `rademacher` |
@@ -381,11 +458,20 @@ pub fn parse_cluster_method(
 /// [`JobScheduler`](super::jobs::JobScheduler), and picks `k` at the
 /// largest eigengap), and encode the JSON reply documented in the
 /// `coordinator` module docs.
-pub fn run_cluster_job(req: &ClusterRequest) -> Result<Json, String> {
+pub fn run_cluster_job(req: &ClusterRequest) -> Result<Json, CodedError> {
     use crate::cluster::{
         adjusted_rand_index, cluster_sizes, lloyd_kmeans, row_normalize, SpectralClustering,
         SpectralOptions,
     };
+    if req.n == 0 {
+        return Err(CodedError::invalid_input("cluster: n must be >= 1"));
+    }
+    if !req.bandwidth.is_finite() || req.bandwidth < 0.0 {
+        return Err(CodedError::invalid_input(format!(
+            "cluster: bandwidth must be finite and >= 0, got {}",
+            req.bandwidth
+        )));
+    }
     let sweep = req.k_max >= 2;
     let fit_k = if sweep { 2 } else { req.k };
     let mut rng = Pcg64::seed(req.seed);
@@ -393,17 +479,23 @@ pub fn run_cluster_job(req: &ClusterRequest) -> Result<Json, String> {
     // count for labelled generators); k_max only bounds the search
     let gen_k = req.k.max(2);
     let (x, truth, kernel) =
-        cluster_dataset_for(&req.dataset, req.n, gen_k, req.bandwidth, &mut rng)?;
+        cluster_dataset_for(&req.dataset, req.n, gen_k, req.bandwidth, &mut rng)
+            .map_err(CodedError::invalid_input)?;
     // validate against the *actual* row count — CSV datasets may hold
     // fewer rows than requested (dataset_for truncates), and a bad k or
     // k_max must surface as a protocol error, not a panic that kills
     // the connection thread
     let n = x.rows();
     if fit_k < 1 || fit_k > n {
-        return Err(format!("cluster: need 1 <= k <= n, got k={fit_k} n={n}"));
+        return Err(CodedError::invalid_input(format!(
+            "cluster: need 1 <= k <= n, got k={fit_k} n={n}"
+        )));
     }
     if sweep && req.k_max > n {
-        return Err(format!("cluster: k_max {} exceeds n={n}", req.k_max));
+        return Err(CodedError::invalid_input(format!(
+            "cluster: k_max {} exceeds n={n}",
+            req.k_max
+        )));
     }
     let embed_dim = if sweep { (req.k_max + 1).min(n) } else { 0 };
     let want_r = if sweep { embed_dim } else { fit_k };
@@ -412,7 +504,8 @@ pub fn run_cluster_job(req: &ClusterRequest) -> Result<Json, String> {
     } else {
         crate::cluster::default_sketch_width(gen_k, want_r, n)
     };
-    let method = parse_cluster_method(&req.method, d, req.m, req.m_max, req.rel_tol)?;
+    let method = parse_cluster_method(&req.method, d, req.m, req.m_max, req.rel_tol)
+        .map_err(CodedError::invalid_input)?;
     let opts = SpectralOptions {
         k: fit_k,
         embed_dim,
@@ -425,7 +518,7 @@ pub fn run_cluster_job(req: &ClusterRequest) -> Result<Json, String> {
     };
     let t = crate::util::Timer::start();
     let fit = SpectralClustering::fit(kernel, &x, &opts, &mut rng)
-        .ok_or("cluster: sketched pencil factorisation failed")?;
+        .ok_or_else(|| CodedError::numeric("cluster: sketched pencil factorisation failed"))?;
     // model selection: per-k Lloyd sweep through the job scheduler +
     // eigengap choice on the bottom Laplacian spectrum
     let (final_k, sweep_rows) = if sweep {
@@ -632,7 +725,68 @@ mod tests {
             adaptive: None,
             precision: Precision::F64,
         };
-        assert!(store.train(&req).is_err());
+        let err = store.train(&req).unwrap_err();
+        assert_eq!(err.kind, crate::util::ErrorKind::InvalidInput);
+    }
+
+    /// Every malformed train request classifies as `invalid_input` —
+    /// the taxonomy contract for the serving boundary.
+    #[test]
+    fn malformed_train_requests_classify_as_invalid_input() {
+        use crate::util::ErrorKind;
+        let store = ModelStore::new();
+        let base = TrainRequest {
+            name: "x".into(),
+            dataset: "bimodal".into(),
+            n: 50,
+            kind: SketchKind::Nystrom,
+            d: 5,
+            lambda: 1e-2,
+            bandwidth: 0.0,
+            seed: 1,
+            adaptive: None,
+            precision: Precision::F64,
+        };
+        let cases = [
+            TrainRequest { name: "".into(), ..base.clone() },
+            TrainRequest { n: 0, ..base.clone() },
+            TrainRequest { lambda: f64::NAN, ..base.clone() },
+            TrainRequest { lambda: -1.0, ..base.clone() },
+            TrainRequest { bandwidth: f64::INFINITY, ..base.clone() },
+            TrainRequest { d: 5000, ..base.clone() }, // d > n
+        ];
+        for req in cases {
+            let err = store.train(&req).unwrap_err();
+            assert_eq!(err.kind, ErrorKind::InvalidInput, "{req:?}: {err}");
+        }
+        // the base request itself is fine — the cases fail for the
+        // mutated field, not something latent in the fixture
+        assert!(store.train(&base).is_ok());
+    }
+
+    #[test]
+    fn quarantine_blocks_until_retrain_heals() {
+        let store = ModelStore::new();
+        let req = TrainRequest {
+            name: "q".into(),
+            dataset: "bimodal".into(),
+            n: 60,
+            kind: SketchKind::Nystrom,
+            d: 6,
+            lambda: 1e-2,
+            bandwidth: 0.0,
+            seed: 1,
+            adaptive: None,
+            precision: Precision::F64,
+        };
+        store.train(&req).unwrap();
+        assert!(!store.is_quarantined("q"));
+        store.quarantine("q");
+        assert!(store.is_quarantined("q"));
+        assert!(!store.is_quarantined("other"), "quarantine is per-name");
+        // a successful retrain stores a fresh model and lifts the flag
+        store.train(&req).unwrap();
+        assert!(!store.is_quarantined("q"));
     }
 
     #[test]

@@ -457,19 +457,17 @@ mod tests {
         }
     }
 
-    /// Quarantined: flaky by construction. A single-seed comparison of two
-    /// Monte-Carlo error averages (15 replicates each) with a fixed 0.8
-    /// separation factor; the gap is real on average (the paper's Fig. 2,
-    /// re-tested statistically in `bench::fig2`) but a seed change — e.g.
-    /// the term-major draw-order refactor that enables grow-in-place
-    /// sketches — can flip this one draw. Run with `--ignored` to check.
+    /// The paper's core claim, in miniature: on *high-incoherence*
+    /// (bimodal, unbalanced) data, accumulation error at m = 16 is much
+    /// lower than Nyström (m = 1) at the same d. (On low-incoherence data
+    /// the two match — that is also the theory.) A single seed can flip
+    /// the ordering — this test spent a long time `#[ignore]`d for exactly
+    /// that — so the assertion compares **medians over independent
+    /// seeds**, each seed's value itself a small replicate average: a
+    /// failure now needs a majority of seeds to invert the ordering, not
+    /// one unlucky draw.
     #[test]
-    #[ignore = "flaky by construction: single-seed Monte-Carlo comparison"]
     fn approximation_error_decreases_with_m() {
-        // the paper's core claim, in miniature: on *high-incoherence*
-        // (bimodal, unbalanced) data, accumulation error at m = 16 is much
-        // lower than Nyström (m = 1) at the same d, averaged over draws.
-        // (On low-incoherence data the two match — that is also the theory.)
         let mut rng = Pcg64::seed(113);
         let cfg = crate::data::BimodalConfig {
             n: 150,
@@ -483,7 +481,7 @@ mod tests {
         let err = |m: usize, seed: u64| -> f64 {
             let mut rng = Pcg64::seed(seed);
             let mut total = 0.0;
-            let reps = 15;
+            let reps = 5;
             for _ in 0..reps {
                 let s = SketchBuilder::new(SketchKind::Accumulation { m }).build(150, 10, &mut rng);
                 let skrr = SketchedKrr::fit(kern, &x, &y, &s, lam, None).unwrap();
@@ -491,11 +489,16 @@ mod tests {
             }
             total / reps as f64
         };
-        let e1 = err(1, 7);
-        let e16 = err(16, 7);
+        let median = |m: usize| -> f64 {
+            let mut vals: Vec<f64> = [7u64, 19, 41, 83, 131].iter().map(|&s| err(m, s)).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals[vals.len() / 2]
+        };
+        let e1 = median(1);
+        let e16 = median(16);
         assert!(
             e16 < e1 * 0.8,
-            "accumulation should beat Nyström: m=1 err {e1} vs m=16 err {e16}"
+            "accumulation should beat Nyström: m=1 median err {e1} vs m=16 median err {e16}"
         );
     }
 

@@ -205,6 +205,14 @@ impl CholFactor {
     /// downdated matrix is not positive-definite to working precision;
     /// callers fall back to re-factorisation (or reject the downdate).
     pub fn rank1_downdate(&mut self, v: &[f64]) -> bool {
+        // Chaos seam: an injected failure reports "not PD" without
+        // touching the factor — exactly the contract of a real
+        // precision-loss failure, so callers' recovery ladders
+        // (diag_update retry, jitter refactorisation) are exercised
+        // end to end by tests/chaos.rs.
+        if crate::util::fault::hit("chol.downdate") {
+            return false;
+        }
         let n = self.n();
         assert_eq!(v.len(), n, "rank1_downdate: dim");
         let backup = self.l.clone();

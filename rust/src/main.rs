@@ -18,6 +18,8 @@
 //! accumkrr client [op] [--addr 127.0.0.1:7878] [--model M] [--x JSON]
 //!          [--json REQ]         # full request object, overrides op flags
 //!          [--legacy]           # newline-JSON instead of framed
+//!          [--retries N] [--backoff-ms T] [--seed S]  # retry policy
+//!          [--deadline-ms T]    # per-request deadline (server-enforced)
 //! accumkrr info [--artifacts DIR]
 //! accumkrr gen-data --dataset rqa --n 1000 --out data.csv [--seed S]
 //! ```
@@ -342,12 +344,13 @@ fn cmd_serve(args: &Args) -> i32 {
 }
 
 /// One-shot client for the serving plane: build (or take via `--json`) a
-/// request, send it framed (default) or newline-JSON (`--legacy`), print
-/// the reply on stdout.
+/// request and send it through the retrying [`Client`] — framed by
+/// default, newline-JSON with `--legacy`; idempotent ops are retried
+/// with exponential backoff (`--retries`, `--backoff-ms`). The reply
+/// prints on stdout; retry/err_code telemetry goes to stderr.
 fn cmd_client(args: &Args) -> i32 {
-    use accumkrr::coordinator::frame::{read_frame, write_frame};
+    use accumkrr::coordinator::{Client, ClientConfig};
     use accumkrr::util::json::Json;
-    let addr = args.str_or("addr", "127.0.0.1:7878");
     let req = if let Some(raw) = args.flags.get("json") {
         match Json::parse(raw) {
             Ok(j) => j,
@@ -371,42 +374,40 @@ fn cmd_client(args: &Args) -> i32 {
                 }
             }
         }
+        if let Some(ms) = args.flags.get("deadline-ms").and_then(|v| v.parse::<usize>().ok()) {
+            fields.push(("deadline_ms", Json::from(ms)));
+        }
         Json::obj(fields)
     };
-    let mut conn = match std::net::TcpStream::connect(addr) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("client: connect {addr}: {e}");
-            return 1;
-        }
-    };
-    let _ = conn.set_nodelay(true);
-    if args.has("legacy") {
-        use std::io::{BufRead, BufReader, Write};
-        if let Err(e) = writeln!(conn, "{req}") {
-            eprintln!("client: {e}");
-            return 1;
-        }
-        let mut line = String::new();
-        if let Err(e) = BufReader::new(conn).read_line(&mut line) {
-            eprintln!("client: {e}");
-            return 1;
-        }
-        print!("{line}");
-    } else {
-        if let Err(e) = write_frame(&mut conn, &req) {
-            eprintln!("client: {e}");
-            return 1;
-        }
-        match read_frame(&mut conn) {
-            Ok(j) => println!("{j}"),
-            Err(e) => {
-                eprintln!("client: {e}");
-                return 1;
+    let mut client = Client::new(ClientConfig {
+        addr: args.str_or("addr", "127.0.0.1:7878").to_string(),
+        retries: args.usize_or("retries", 2) as u32,
+        backoff: std::time::Duration::from_millis(args.usize_or("backoff-ms", 50) as u64),
+        seed: args.usize_or("seed", 1) as u64,
+        legacy: args.has("legacy"),
+    });
+    match client.call(&req) {
+        Ok(reply) => {
+            println!("{reply}");
+            let (attempts, retries) = client.stats();
+            if retries > 0 {
+                eprintln!("client: {attempts} attempts ({retries} retries)");
             }
+            if !client.err_code_tally().is_empty() {
+                let tally: Vec<String> = client
+                    .err_code_tally()
+                    .iter()
+                    .map(|(code, n)| format!("{code}={n}"))
+                    .collect();
+                eprintln!("client: err_codes {}", tally.join(" "));
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("client: {e}");
+            1
         }
     }
-    0
 }
 
 #[cfg(feature = "xla")]

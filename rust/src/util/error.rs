@@ -1,0 +1,155 @@
+//! Structured error taxonomy for the serving plane.
+//!
+//! Every failure that crosses the serving boundary is classified into a
+//! small, stable set of [`ErrorKind`]s and surfaced to framed-protocol
+//! clients as an `err_code` field in the reply envelope. The codes are
+//! the contract: human-readable `error` messages may be reworded, but a
+//! client routing on `err_code` ("retry on `overloaded`, give up on
+//! `invalid_input`") never breaks. Legacy newline-JSON replies predate
+//! the taxonomy and stay byte-identical — the reactor strips `err_code`
+//! before legacy encoding.
+
+use std::fmt;
+
+/// Stable failure classes, ordered roughly by who is at fault: the
+/// request, the load, the clock, the model, the math, or us.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ErrorKind {
+    /// The request itself is unusable: malformed JSON, non-finite
+    /// features, dimension mismatch, unknown fields or bounds.
+    InvalidInput,
+    /// The plane shed the request under backpressure; safe to retry.
+    Overloaded,
+    /// The request's `deadline_ms` expired before an answer was
+    /// produced; no compute was spent past the deadline.
+    DeadlineExceeded,
+    /// The target model is quarantined after a worker panic; retrain to
+    /// heal it.
+    ModelUnhealthy,
+    /// A numeric routine failed beyond its recovery ladder (e.g. a
+    /// Cholesky factorization that jitter could not rescue).
+    NumericFailure,
+    /// Everything else: handler panics, injected faults, bugs.
+    Internal,
+}
+
+impl ErrorKind {
+    /// The wire code — the stable string clients switch on.
+    pub fn code(self) -> &'static str {
+        match self {
+            ErrorKind::InvalidInput => "invalid_input",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::DeadlineExceeded => "deadline_exceeded",
+            ErrorKind::ModelUnhealthy => "model_unhealthy",
+            ErrorKind::NumericFailure => "numeric_failure",
+            ErrorKind::Internal => "internal",
+        }
+    }
+
+    /// Inverse of [`ErrorKind::code`]; `None` for unknown strings.
+    pub fn from_code(code: &str) -> Option<ErrorKind> {
+        ALL.iter().copied().find(|k| k.code() == code)
+    }
+}
+
+/// Every kind, in taxonomy order — handy for exhaustive metrics tables.
+pub const ALL: &[ErrorKind] = &[
+    ErrorKind::InvalidInput,
+    ErrorKind::Overloaded,
+    ErrorKind::DeadlineExceeded,
+    ErrorKind::ModelUnhealthy,
+    ErrorKind::NumericFailure,
+    ErrorKind::Internal,
+];
+
+/// A classified error: a stable kind plus a human-readable message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodedError {
+    /// Which failure class this is — drives `err_code` on the wire.
+    pub kind: ErrorKind,
+    /// Human-readable detail; not part of the stable contract.
+    pub msg: String,
+}
+
+impl CodedError {
+    /// New error of the given kind.
+    pub fn new(kind: ErrorKind, msg: impl Into<String>) -> CodedError {
+        CodedError { kind, msg: msg.into() }
+    }
+
+    /// Shorthand for [`ErrorKind::InvalidInput`].
+    pub fn invalid_input(msg: impl Into<String>) -> CodedError {
+        CodedError::new(ErrorKind::InvalidInput, msg)
+    }
+
+    /// Shorthand for [`ErrorKind::Overloaded`].
+    pub fn overloaded() -> CodedError {
+        CodedError::new(ErrorKind::Overloaded, "overloaded")
+    }
+
+    /// Shorthand for [`ErrorKind::DeadlineExceeded`].
+    pub fn deadline_exceeded() -> CodedError {
+        CodedError::new(ErrorKind::DeadlineExceeded, "deadline exceeded")
+    }
+
+    /// Shorthand for [`ErrorKind::ModelUnhealthy`].
+    pub fn model_unhealthy(model: &str) -> CodedError {
+        CodedError::new(
+            ErrorKind::ModelUnhealthy,
+            format!("model '{model}' is quarantined after a worker panic; retrain to heal"),
+        )
+    }
+
+    /// Shorthand for [`ErrorKind::NumericFailure`].
+    pub fn numeric(msg: impl Into<String>) -> CodedError {
+        CodedError::new(ErrorKind::NumericFailure, msg)
+    }
+
+    /// Shorthand for [`ErrorKind::Internal`].
+    pub fn internal(msg: impl Into<String>) -> CodedError {
+        CodedError::new(ErrorKind::Internal, msg)
+    }
+
+    /// The wire code for this error's kind.
+    pub fn code(&self) -> &'static str {
+        self.kind.code()
+    }
+}
+
+impl fmt::Display for CodedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for CodedError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_round_trip_and_stay_stable() {
+        let want = [
+            "invalid_input",
+            "overloaded",
+            "deadline_exceeded",
+            "model_unhealthy",
+            "numeric_failure",
+            "internal",
+        ];
+        assert_eq!(ALL.len(), want.len());
+        for (k, w) in ALL.iter().zip(want) {
+            assert_eq!(k.code(), w);
+            assert_eq!(ErrorKind::from_code(w), Some(*k));
+        }
+        assert_eq!(ErrorKind::from_code("nope"), None);
+    }
+
+    #[test]
+    fn display_is_the_message() {
+        let e = CodedError::invalid_input("x[0][2] is not finite");
+        assert_eq!(e.to_string(), "x[0][2] is not finite");
+        assert_eq!(e.code(), "invalid_input");
+    }
+}

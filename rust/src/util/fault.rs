@@ -1,0 +1,348 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A registry of *named fault points* compiled into the serving plane's
+//! failure-prone seams (`io.read`, `io.write`, `frame.decode`,
+//! `worker.panic`, `chol.downdate`, `batcher.flush`). Each site asks
+//! [`hit`] whether its fault fires *this* time; when the registry is
+//! disarmed (the default) that is a `Once` check plus one relaxed load
+//! and no branch into the slow path, so hot paths pay nothing.
+//!
+//! Arming is deterministic and seeded, never wall-clock dependent:
+//!
+//! * **Env var** — `ACCUMKRR_FAULTS="io.read=every:7,chol.downdate=nth:1"`
+//!   parsed once on first use. This is how CI's chaos legs arm the matrix.
+//! * **Scoped override** — [`scoped`] swaps the armed set for a guard's
+//!   lifetime while holding a global lock, so chaos tests serialize
+//!   instead of trampling each other's triggers. [`locked`] grabs the
+//!   same lock without changing the armed set, for tests that exercise
+//!   whatever the environment armed.
+//!
+//! Trigger grammar per point: `nth:K` (fire exactly once, on the K-th
+//! hit), `every:K` (fire on every K-th hit), `prob:P[:SEED]` (fire with
+//! probability P, derived deterministically from the seed and the hit
+//! index — no global RNG state, so a given hit sequence always fires the
+//! same way).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Every fault point compiled into the codebase. Specs naming a point
+/// outside this list are rejected, so typos surface instead of silently
+/// never firing.
+pub const KNOWN_POINTS: &[&str] = &[
+    "io.read",
+    "io.write",
+    "frame.decode",
+    "worker.panic",
+    "chol.downdate",
+    "batcher.flush",
+];
+
+/// When a fault point fires, relative to its per-point hit counter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// Fire exactly once, on the k-th hit (1-based).
+    Nth(u64),
+    /// Fire on every k-th hit.
+    Every(u64),
+    /// Fire with probability `p` per hit, drawn deterministically from
+    /// the seed and the hit index.
+    Prob(f64, u64),
+}
+
+impl Trigger {
+    /// Does this trigger fire on (1-based) hit number `n`?
+    fn fires(self, n: u64) -> bool {
+        match self {
+            Trigger::Nth(k) => n == k,
+            Trigger::Every(k) => n % k == 0,
+            Trigger::Prob(p, seed) => ((mix(seed, n) >> 11) as f64) / (1u64 << 53) as f64 < p,
+        }
+    }
+}
+
+struct Point {
+    trigger: Trigger,
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+impl Point {
+    fn new(trigger: Trigger) -> Point {
+        Point {
+            trigger,
+            hits: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+        }
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static FIRED_TOTAL: AtomicU64 = AtomicU64::new(0);
+static ENV_INIT: Once = Once::new();
+static POINTS: RwLock<BTreeMap<String, Point>> = RwLock::new(BTreeMap::new());
+/// Serializes scoped overrides — and therefore the chaos tests that
+/// arm them.
+static SCOPE_LOCK: Mutex<()> = Mutex::new(());
+
+fn read_points() -> RwLockReadGuard<'static, BTreeMap<String, Point>> {
+    POINTS.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_points() -> RwLockWriteGuard<'static, BTreeMap<String, Point>> {
+    POINTS.write().unwrap_or_else(|e| e.into_inner())
+}
+
+fn init_env() {
+    ENV_INIT.call_once(|| {
+        let spec = match std::env::var("ACCUMKRR_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => s,
+            _ => return,
+        };
+        match parse_spec(&spec) {
+            Ok(parsed) => {
+                let mut pts = write_points();
+                for (name, trigger) in parsed {
+                    pts.insert(name, Point::new(trigger));
+                }
+                if !pts.is_empty() {
+                    ARMED.store(true, Ordering::SeqCst);
+                }
+            }
+            Err(e) => eprintln!("ACCUMKRR_FAULTS ignored: {e}"),
+        }
+    });
+}
+
+/// Parse a comma-separated fault spec: `point=mode:arg[:seed]` entries.
+pub fn parse_spec(spec: &str) -> Result<Vec<(String, Trigger)>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (name, rule) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("missing '=' in fault entry {entry:?}"))?;
+        let name = name.trim();
+        if !KNOWN_POINTS.contains(&name) {
+            return Err(format!("unknown fault point {name:?}"));
+        }
+        let mut parts = rule.trim().split(':');
+        let mode = parts.next().unwrap_or("");
+        let trigger = match mode {
+            "nth" | "every" => {
+                let k: u64 = parts
+                    .next()
+                    .ok_or_else(|| format!("{mode} needs a count in {entry:?}"))?
+                    .parse()
+                    .map_err(|_| format!("bad count in {entry:?}"))?;
+                if k == 0 {
+                    return Err(format!("count must be >= 1 in {entry:?}"));
+                }
+                if mode == "nth" {
+                    Trigger::Nth(k)
+                } else {
+                    Trigger::Every(k)
+                }
+            }
+            "prob" => {
+                let p: f64 = parts
+                    .next()
+                    .ok_or_else(|| format!("prob needs a probability in {entry:?}"))?
+                    .parse()
+                    .map_err(|_| format!("bad probability in {entry:?}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("probability out of [0,1] in {entry:?}"));
+                }
+                let seed = match parts.next() {
+                    Some(s) => s.parse().map_err(|_| format!("bad seed in {entry:?}"))?,
+                    None => 0x5eed,
+                };
+                Trigger::Prob(p, seed)
+            }
+            other => return Err(format!("unknown trigger mode {other:?} in {entry:?}")),
+        };
+        if parts.next().is_some() {
+            return Err(format!("trailing fields in {entry:?}"));
+        }
+        out.push((name.to_string(), trigger));
+    }
+    Ok(out)
+}
+
+/// splitmix64-style finalizer: decorrelates (seed, hit-index) pairs for
+/// the `prob` trigger without any shared RNG state.
+fn mix(seed: u64, n: u64) -> u64 {
+    let mut z = seed ^ n.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Should the named fault point fire on this hit? Near-free when the
+/// registry is disarmed.
+#[inline]
+pub fn hit(name: &str) -> bool {
+    init_env();
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    hit_armed(name)
+}
+
+#[cold]
+fn hit_armed(name: &str) -> bool {
+    let pts = read_points();
+    let Some(p) = pts.get(name) else { return false };
+    let n = p.hits.fetch_add(1, Ordering::Relaxed) + 1;
+    let fire = p.trigger.fires(n);
+    if fire {
+        p.fired.fetch_add(1, Ordering::Relaxed);
+        FIRED_TOTAL.fetch_add(1, Ordering::Relaxed);
+    }
+    fire
+}
+
+/// Times `name` has fired under the *current* registry (scoped overrides
+/// start from zero; the global total does not reset).
+pub fn fired(name: &str) -> u64 {
+    read_points().get(name).map_or(0, |p| p.fired.load(Ordering::Relaxed))
+}
+
+/// Times `name` has been evaluated under the current registry.
+pub fn hits(name: &str) -> u64 {
+    read_points().get(name).map_or(0, |p| p.hits.load(Ordering::Relaxed))
+}
+
+/// Total fires across all points since process start — monotone even
+/// across scoped overrides; feeds the `faults_injected` serving metric.
+pub fn fired_total() -> u64 {
+    FIRED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Arm `spec` for the guard's lifetime, restoring the previous registry
+/// (typically the env-armed one, or nothing) on drop. Holds the global
+/// scope lock so concurrent chaos tests serialize; an empty spec disarms
+/// every point within the scope.
+///
+/// # Panics
+/// On a malformed spec — scoped arming is test-side, so fail loudly.
+pub fn scoped(spec: &str) -> FaultGuard {
+    let lock = SCOPE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    init_env();
+    let mut fresh = BTreeMap::new();
+    for (name, trigger) in parse_spec(spec).expect("bad fault spec") {
+        fresh.insert(name, Point::new(trigger));
+    }
+    let armed = !fresh.is_empty();
+    let saved = std::mem::replace(&mut *write_points(), fresh);
+    let saved_armed = ARMED.swap(armed, Ordering::SeqCst);
+    FaultGuard {
+        saved: Some(saved),
+        saved_armed,
+        _lock: lock,
+    }
+}
+
+/// Hold the chaos-test scope lock *without* changing the armed set — for
+/// tests that exercise whatever the environment armed (the CI fault
+/// matrix legs).
+pub fn locked() -> FaultGuard {
+    let lock = SCOPE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    init_env();
+    FaultGuard {
+        saved: None,
+        saved_armed: ARMED.load(Ordering::SeqCst),
+        _lock: lock,
+    }
+}
+
+/// RAII restore for [`scoped`] / [`locked`].
+pub struct FaultGuard {
+    saved: Option<BTreeMap<String, Point>>,
+    saved_armed: bool,
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::SeqCst);
+        if let Some(saved) = self.saved.take() {
+            *write_points() = saved;
+        }
+        ARMED.store(self.saved_armed, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Trigger evaluation and spec parsing are tested purely here; the
+    // global registry (arming, counters, scoping) is exercised by
+    // tests/chaos.rs, which owns the scope lock in its own process so
+    // unit tests elsewhere in this binary never see injected faults.
+
+    #[test]
+    fn parse_accepts_all_modes() {
+        let spec = "io.read=every:7, chol.downdate=nth:1,worker.panic=prob:0.25:99";
+        let parsed = parse_spec(spec).unwrap();
+        assert_eq!(
+            parsed,
+            vec![
+                ("io.read".to_string(), Trigger::Every(7)),
+                ("chol.downdate".to_string(), Trigger::Nth(1)),
+                ("worker.panic".to_string(), Trigger::Prob(0.25, 99)),
+            ]
+        );
+        assert_eq!(parse_spec("").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "io.read",               // no '='
+            "nope.nope=nth:1",       // unknown point
+            "io.read=nth:0",         // zero count
+            "io.read=nth:x",         // non-numeric
+            "io.read=prob:1.5",      // p out of range
+            "io.read=sometimes:3",   // unknown mode
+            "io.read=every:3:4:5",   // trailing fields
+        ] {
+            assert!(parse_spec(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn trigger_semantics() {
+        let fires = |t: Trigger| (1..=12u64).filter(|&n| t.fires(n)).collect::<Vec<_>>();
+        assert_eq!(fires(Trigger::Nth(3)), vec![3]);
+        assert_eq!(fires(Trigger::Every(4)), vec![4, 8, 12]);
+        // prob is deterministic in (seed, n) and roughly calibrated
+        let a = fires(Trigger::Prob(0.5, 7));
+        let b = fires(Trigger::Prob(0.5, 7));
+        assert_eq!(a, b);
+        let n_fired = (1..=10_000u64).filter(|&n| Trigger::Prob(0.3, 11).fires(n)).count();
+        assert!((2_500..3_500).contains(&n_fired), "p=0.3 fired {n_fired}/10000");
+        assert_eq!(fires(Trigger::Prob(0.0, 1)), vec![]);
+        assert_eq!(fires(Trigger::Prob(1.0, 1)).len(), 12);
+    }
+
+    #[test]
+    fn known_points_cover_the_documented_seams() {
+        let want = [
+            "io.read",
+            "io.write",
+            "frame.decode",
+            "worker.panic",
+            "chol.downdate",
+            "batcher.flush",
+        ];
+        for p in want {
+            assert!(KNOWN_POINTS.contains(&p));
+        }
+    }
+}

@@ -1,15 +1,19 @@
 //! Small-infrastructure substrate: JSON, config, CLI parsing, timing,
-//! logging, CSV, and a property-testing mini-framework. All hand-rolled —
+//! logging, CSV, deterministic fault injection, a structured error
+//! taxonomy, and a property-testing mini-framework. All hand-rolled —
 //! the offline image ships no serde/clap/proptest.
 
 pub mod check;
 pub mod cli;
 pub mod config;
 pub mod csv;
+pub mod error;
+pub mod fault;
 pub mod json;
 pub mod log;
 pub mod mem;
 pub mod timer;
 
+pub use error::{CodedError, ErrorKind};
 pub use json::Json;
 pub use timer::Timer;

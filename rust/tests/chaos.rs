@@ -1,0 +1,523 @@
+//! Chaos tests: the serving plane under a deterministic fault matrix.
+//!
+//! Every test opens by taking the global fault-scope lock
+//! ([`fault::scoped`] / [`fault::locked`]) **before** any serving
+//! activity, so the suite serializes even under the default
+//! multi-threaded test harness — scoped triggers like `nth:1` count
+//! hits process-wide and must not observe another test's traffic.
+//!
+//! `cargo test --test chaos` passes with the registry disarmed; CI
+//! additionally runs it with `ACCUMKRR_FAULTS` arming io / panic /
+//! numeric legs, which the [`fault::locked`] survival test exercises
+//! against whatever the environment armed.
+
+use accumkrr::coordinator::frame::{encode_frame, read_frame, write_frame};
+use accumkrr::coordinator::state::TrainRequest;
+use accumkrr::coordinator::{
+    BatcherConfig, Client, ClientConfig, ModelStore, ServerConfig, ServerHandle,
+};
+use accumkrr::krr::AdaptiveOptions;
+use accumkrr::linalg::Precision;
+use accumkrr::sketch::SketchKind;
+use accumkrr::util::json::Json;
+use accumkrr::util::{fault, ErrorKind};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Train a small bimodal model (3 feature columns) into `store` under
+/// `name` — same shape as tests/serving.rs' fixture.
+fn train_into(store: &ModelStore, name: &str) {
+    store
+        .train(&TrainRequest {
+            name: name.into(),
+            dataset: "bimodal".into(),
+            n: 150,
+            kind: SketchKind::Accumulation { m: 3 },
+            d: 10,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 5,
+            adaptive: None,
+            precision: Precision::F64,
+        })
+        .unwrap();
+}
+
+fn store_with_model() -> Arc<ModelStore> {
+    let store = Arc::new(ModelStore::new());
+    train_into(&store, "m");
+    store
+}
+
+fn start(store: Arc<ModelStore>, tweak: impl FnOnce(&mut ServerConfig)) -> ServerHandle {
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    tweak(&mut cfg);
+    ServerHandle::start(store, cfg).unwrap()
+}
+
+fn connect(h: &ServerHandle) -> TcpStream {
+    let c = TcpStream::connect(h.addr()).unwrap();
+    c.set_nodelay(true).unwrap();
+    c
+}
+
+/// Read framed replies until one matches the wanted id.
+fn read_id(conn: &mut TcpStream, want: usize) -> Json {
+    loop {
+        let j = read_frame(conn).unwrap();
+        if j.get("id").and_then(|v| v.as_usize()) == Some(want) {
+            return j;
+        }
+    }
+}
+
+fn predict_req(id: usize, model: &str, rows: &[Vec<f64>]) -> Json {
+    Json::obj(vec![
+        ("id", Json::from(id)),
+        ("method", Json::from("predict")),
+        ("model", Json::from(model)),
+        ("x", Json::Arr(rows.iter().map(|r| Json::nums(r)).collect())),
+    ])
+}
+
+fn code_of(r: &Json) -> &str {
+    r.get("err_code").and_then(|v| v.as_str()).unwrap_or("")
+}
+
+fn metrics_op(conn: &mut TcpStream, id: usize) -> Json {
+    write_frame(
+        conn,
+        &Json::obj(vec![("id", Json::from(id)), ("method", Json::from("metrics"))]),
+    )
+    .unwrap();
+    read_id(conn, id)
+}
+
+/// An injected `chol.downdate` failure in an adaptive fit is rescued by
+/// the diag-jitter retry ladder: the fit succeeds and reports
+/// `jitter_bumps >= 1` instead of degrading to a refactor or dying.
+#[test]
+fn downdate_fault_recovers_with_jitter_in_direct_fit() {
+    let _g = fault::scoped("chol.downdate=nth:1");
+    let store = ModelStore::new();
+    let sm = store
+        .train(&TrainRequest {
+            name: "adm".into(),
+            dataset: "bimodal".into(),
+            n: 150,
+            kind: SketchKind::Accumulation { m: 1 },
+            d: 10,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 7,
+            // rank_update_limit = MAX forces every round through the
+            // incremental rank-update (and so the downdate) path
+            adaptive: Some(AdaptiveOptions {
+                m_max: 16,
+                rel_tol: 0.05,
+                rank_update_limit: Some(usize::MAX),
+                ..Default::default()
+            }),
+            precision: Precision::F64,
+        })
+        .expect("adaptive fit must survive an injected downdate failure");
+    let rep = sm.model.report();
+    assert!(rep.jitter_bumps >= 1, "recovery must be visible: {rep:?}");
+    assert_eq!(fault::fired("chol.downdate"), 1, "nth:1 fires exactly once");
+    assert!(
+        fault::hits("chol.downdate") >= 2,
+        "the retry must re-enter the downdate seam, hits={}",
+        fault::hits("chol.downdate")
+    );
+}
+
+/// Same recovery end to end over the wire: the framed train reply
+/// carries `jitter_bumps` telemetry when the factorization was rescued.
+#[test]
+fn downdate_fault_surfaces_jitter_bumps_in_train_reply() {
+    let _g = fault::scoped("chol.downdate=nth:1");
+    let h = start(Arc::new(ModelStore::new()), |_| {});
+    let mut conn = connect(&h);
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![
+            ("id", Json::from(1usize)),
+            ("method", Json::from("train")),
+            ("name", Json::from("adm")),
+            ("dataset", Json::from("bimodal")),
+            ("n", Json::from(150usize)),
+            ("sketch", Json::from("adaptive")),
+            ("d", Json::from(10usize)),
+            ("lambda", Json::Num(1e-3)),
+            ("m_max", Json::from(16usize)),
+            ("rel_tol", Json::Num(0.05)),
+            ("seed", Json::from(7usize)),
+            ("rank_update_limit", Json::from(1_000_000_000usize)),
+        ]),
+    )
+    .unwrap();
+    let r = read_id(&mut conn, 1);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    let bumps = r.get("jitter_bumps").and_then(|v| v.as_usize());
+    assert!(bumps >= Some(1), "train reply must report the rescue: {r}");
+    h.stop();
+}
+
+/// A worker panic during a batched predict is caught, fails only that
+/// request with `internal`, and quarantines the model: later predicts
+/// answer `model_unhealthy` without running the kernel, other models on
+/// other connections keep serving, and a retrain heals the name.
+#[test]
+fn worker_panic_quarantines_model_until_retrain() {
+    let _g = fault::scoped("worker.panic=nth:1");
+    let store = store_with_model();
+    train_into(&store, "healthy");
+    let h = start(store, |_| {});
+    let metrics = h.metrics();
+    let mut conn = connect(&h);
+    // first predict: the injected panic fails the batch, structured
+    write_frame(&mut conn, &predict_req(1, "m", &[vec![0.1, 0.2, 0.3]])).unwrap();
+    let r = read_id(&mut conn, 1);
+    assert_eq!(code_of(&r), ErrorKind::Internal.code(), "{r}");
+    assert!(
+        r.get("error").and_then(|v| v.as_str()).unwrap().contains("quarantined"),
+        "{r}"
+    );
+    // the poisoned model is now fenced off before the batcher
+    write_frame(&mut conn, &predict_req(2, "m", &[vec![0.1, 0.2, 0.3]])).unwrap();
+    let r = read_id(&mut conn, 2);
+    assert_eq!(code_of(&r), ErrorKind::ModelUnhealthy.code(), "{r}");
+    // no cross-poisoning: another model on another connection serves
+    let mut other = connect(&h);
+    write_frame(&mut other, &predict_req(3, "healthy", &[vec![0.5, 0.5, 0.5]])).unwrap();
+    let r = read_id(&mut other, 3);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(metrics.worker_panics.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.quarantined.load(Ordering::Relaxed), 1);
+    // retrain under the same name heals the quarantine
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![
+            ("id", Json::from(4usize)),
+            ("method", Json::from("train")),
+            ("name", Json::from("m")),
+            ("dataset", Json::from("bimodal")),
+            ("n", Json::from(150usize)),
+            ("sketch", Json::from("accum")),
+            ("m", Json::from(3usize)),
+            ("d", Json::from(10usize)),
+            ("lambda", Json::Num(1e-3)),
+            ("seed", Json::from(5usize)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(read_id(&mut conn, 4).get("ok"), Some(&Json::Bool(true)));
+    write_frame(&mut conn, &predict_req(5, "m", &[vec![0.1, 0.2, 0.3]])).unwrap();
+    let r = read_id(&mut conn, 5);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "healed model must serve: {r}");
+    h.stop();
+}
+
+/// `deadline_ms: 0` is answered `deadline_exceeded` by both the batcher
+/// (predict) and the task pool (train) without spending any compute:
+/// the GEMM row counter stays at zero.
+#[test]
+fn expired_deadline_answers_without_consuming_compute() {
+    let _g = fault::scoped("");
+    let h = start(store_with_model(), |_| {});
+    let metrics = h.metrics();
+    let mut conn = connect(&h);
+    let mut pred = predict_req(1, "m", &[vec![0.1, 0.2, 0.3]]);
+    if let Json::Obj(m) = &mut pred {
+        m.insert("deadline_ms".into(), Json::from(0usize));
+    }
+    write_frame(&mut conn, &pred).unwrap();
+    let r = read_id(&mut conn, 1);
+    assert_eq!(code_of(&r), ErrorKind::DeadlineExceeded.code(), "{r}");
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![
+            ("id", Json::from(2usize)),
+            ("method", Json::from("train")),
+            ("name", Json::from("late")),
+            ("dataset", Json::from("bimodal")),
+            ("n", Json::from(150usize)),
+            ("deadline_ms", Json::from(0usize)),
+        ]),
+    )
+    .unwrap();
+    let r = read_id(&mut conn, 2);
+    assert_eq!(code_of(&r), ErrorKind::DeadlineExceeded.code(), "{r}");
+    assert!(metrics.deadline_expired.load(Ordering::Relaxed) >= 2);
+    assert_eq!(metrics.queries.load(Ordering::Relaxed), 0, "no GEMM for expired work");
+    // the taxonomy table in the metrics op agrees
+    let m = metrics_op(&mut conn, 3);
+    let dl = m
+        .get("err_codes")
+        .and_then(|c| c.get("deadline_exceeded"))
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    assert!(dl >= 2.0, "{m}");
+    h.stop();
+}
+
+/// A queued deadline trumps the batching policy: with a 5 s fixed batch
+/// wait, a request carrying `deadline_ms` is flushed near its deadline
+/// instead of idling out the full wait.
+#[test]
+fn deadline_forces_early_flush_under_long_fixed_wait() {
+    let _g = fault::scoped("");
+    let h = start(store_with_model(), |cfg| {
+        cfg.batcher = BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_secs(5),
+            adaptive: false,
+        };
+    });
+    let mut conn = connect(&h);
+    let mut pred = predict_req(1, "m", &[vec![0.1, 0.2, 0.3]]);
+    if let Json::Obj(m) = &mut pred {
+        m.insert("deadline_ms".into(), Json::from(400usize));
+    }
+    let t0 = Instant::now();
+    write_frame(&mut conn, &pred).unwrap();
+    let r = read_id(&mut conn, 1);
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(2500),
+        "deadline must beat the 5s fixed wait, took {elapsed:?}"
+    );
+    // scheduling jitter may land the flush on either side of the
+    // deadline — both outcomes are in-contract, sitting out 5 s is not
+    if r.get("ok") != Some(&Json::Bool(true)) {
+        assert_eq!(code_of(&r), ErrorKind::DeadlineExceeded.code(), "{r}");
+    }
+    h.stop();
+}
+
+/// An injected read fault mid-request behaves as a connection reset;
+/// the retrying client reconnects and the call still succeeds.
+#[test]
+fn io_read_fault_is_retried_transparently_by_the_client() {
+    let _g = fault::scoped("io.read=nth:1");
+    let h = start(store_with_model(), |_| {});
+    let mut c = Client::new(ClientConfig {
+        addr: h.addr().to_string(),
+        retries: 3,
+        backoff: Duration::from_millis(2),
+        seed: 11,
+        legacy: false,
+    });
+    let r = c.call(&Json::obj(vec![("method", Json::from("ping"))])).unwrap();
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)), "{r}");
+    let (attempts, retries) = c.stats();
+    assert!(retries >= 1, "the killed connection must have been retried");
+    assert!(attempts >= 2);
+    let t0 = Instant::now();
+    h.stop();
+    assert!(t0.elapsed() < Duration::from_secs(2), "shutdown stays bounded");
+}
+
+/// An injected write fault drops a reply (broken pipe): only that
+/// connection dies, the client retries through, and fresh connections
+/// are unaffected.
+#[test]
+fn io_write_fault_drops_reply_but_not_the_server() {
+    let _g = fault::scoped("io.write=nth:1");
+    let h = start(store_with_model(), |_| {});
+    let mut c = Client::new(ClientConfig {
+        addr: h.addr().to_string(),
+        retries: 3,
+        backoff: Duration::from_millis(2),
+        seed: 13,
+        legacy: false,
+    });
+    let r = c.call(&Json::obj(vec![("method", Json::from("ping"))])).unwrap();
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)), "{r}");
+    let (_, retries) = c.stats();
+    assert!(retries >= 1, "the dropped reply must have been retried");
+    // a raw connection opened after the fault is clean
+    let mut conn = connect(&h);
+    write_frame(&mut conn, &predict_req(1, "m", &[vec![0.1, 0.2, 0.3]])).unwrap();
+    assert_eq!(read_id(&mut conn, 1).get("ok"), Some(&Json::Bool(true)));
+    h.stop();
+}
+
+/// An injected decode fault corrupts exactly one frame: the server
+/// answers a structured `invalid_input` and the connection survives for
+/// the next request.
+#[test]
+fn frame_decode_fault_degrades_to_structured_error() {
+    let _g = fault::scoped("frame.decode=nth:1");
+    let h = start(store_with_model(), |_| {});
+    let metrics = h.metrics();
+    let mut conn = connect(&h);
+    write_frame(&mut conn, &Json::obj(vec![("method", Json::from("ping"))])).unwrap();
+    let r = read_frame(&mut conn).unwrap();
+    assert_eq!(code_of(&r), ErrorKind::InvalidInput.code(), "{r}");
+    assert!(
+        r.get("error")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .contains("injected fault: frame.decode"),
+        "{r}"
+    );
+    assert!(metrics.frame_errors.load(Ordering::Relaxed) >= 1);
+    // the connection is not poisoned — the next frame decodes and serves
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![("id", Json::from(2usize)), ("method", Json::from("ping"))]),
+    )
+    .unwrap();
+    assert_eq!(read_id(&mut conn, 2).get("pong"), Some(&Json::Bool(true)));
+    h.stop();
+}
+
+/// An injected flush fault fails the whole batch with `internal` but —
+/// unlike a worker panic — does **not** quarantine the model: the very
+/// next predict serves.
+#[test]
+fn batcher_flush_fault_fails_batch_without_quarantine() {
+    let _g = fault::scoped("batcher.flush=nth:1");
+    let h = start(store_with_model(), |_| {});
+    let mut conn = connect(&h);
+    write_frame(&mut conn, &predict_req(1, "m", &[vec![0.1, 0.2, 0.3]])).unwrap();
+    let r = read_id(&mut conn, 1);
+    assert_eq!(code_of(&r), ErrorKind::Internal.code(), "{r}");
+    assert!(
+        r.get("error")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .contains("injected fault: batcher.flush"),
+        "{r}"
+    );
+    write_frame(&mut conn, &predict_req(2, "m", &[vec![0.1, 0.2, 0.3]])).unwrap();
+    let r = read_id(&mut conn, 2);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "no quarantine for a flush fault: {r}");
+    // injection is visible in the metrics op next to the counters it moved
+    let m = metrics_op(&mut conn, 3);
+    assert!(m.get("faults_injected").and_then(|v| v.as_f64()).unwrap() >= 1.0, "{m}");
+    let internal = m
+        .get("err_codes")
+        .and_then(|c| c.get("internal"))
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    assert!(internal >= 1.0, "{m}");
+    h.stop();
+}
+
+/// Serving-boundary validation: non-finite features, wrong feature
+/// width, missing models, malformed train parameters and unknown ops
+/// are all rejected as `invalid_input` before any compute — and none of
+/// them poisons the connection or the model.
+#[test]
+fn invalid_inputs_are_rejected_at_the_boundary() {
+    let _g = fault::scoped("");
+    let h = start(store_with_model(), |_| {});
+    let mut conn = connect(&h);
+    // 1e999 overflows to +inf during JSON number parsing; the predict
+    // boundary must refuse to put it in a coalesced GEMM batch
+    let raw: &[u8] = b"{\"id\":1,\"method\":\"predict\",\"model\":\"m\",\"x\":[[1e999,0.0,0.0]]}";
+    conn.write_all(&encode_frame(raw)).unwrap();
+    let r = read_id(&mut conn, 1);
+    assert_eq!(code_of(&r), ErrorKind::InvalidInput.code(), "{r}");
+    assert!(r.get("error").and_then(|v| v.as_str()).unwrap().contains("not finite"), "{r}");
+    // wrong feature width is refused before the batcher
+    write_frame(&mut conn, &predict_req(2, "m", &[vec![0.0; 7]])).unwrap();
+    assert_eq!(code_of(&read_id(&mut conn, 2)), ErrorKind::InvalidInput.code());
+    // unknown model
+    write_frame(&mut conn, &predict_req(3, "absent", &[vec![0.0, 0.0, 0.0]])).unwrap();
+    assert_eq!(code_of(&read_id(&mut conn, 3)), ErrorKind::InvalidInput.code());
+    // malformed train parameters never reach the fitter
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![
+            ("id", Json::from(4usize)),
+            ("method", Json::from("train")),
+            ("name", Json::from("bad")),
+            ("dataset", Json::from("bimodal")),
+            ("n", Json::from(150usize)),
+            ("lambda", Json::Num(-1.0)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(code_of(&read_id(&mut conn, 4)), ErrorKind::InvalidInput.code());
+    // unknown op
+    write_frame(
+        &mut conn,
+        &Json::obj(vec![("id", Json::from(5usize)), ("method", Json::from("frobnicate"))]),
+    )
+    .unwrap();
+    assert_eq!(code_of(&read_id(&mut conn, 5)), ErrorKind::InvalidInput.code());
+    // none of the above hurt the model or the connection
+    write_frame(&mut conn, &predict_req(6, "m", &[vec![0.1, 0.2, 0.3]])).unwrap();
+    assert_eq!(read_id(&mut conn, 6).get("ok"), Some(&Json::Bool(true)));
+    h.stop();
+}
+
+/// Survival under whatever `ACCUMKRR_FAULTS` armed (the CI chaos-matrix
+/// legs; a no-op with the registry disarmed): a retrying client pushes
+/// mixed traffic through the plane and every outcome is either success
+/// or a classified taxonomy error — no deadlock, no unclassified
+/// failure, and shutdown stays bounded.
+#[test]
+fn env_fault_matrix_keeps_the_plane_available() {
+    let _g = fault::locked();
+    let store = store_with_model();
+    let h = start(store, |_| {});
+    let mut c = Client::new(ClientConfig {
+        addr: h.addr().to_string(),
+        retries: 6,
+        backoff: Duration::from_millis(2),
+        seed: 42,
+        legacy: false,
+    });
+    let mut pongs = 0;
+    for i in 0..40usize {
+        if i % 2 == 0 {
+            // ping is pure transport: with bounded-period io faults and
+            // 6 retries it must always get through
+            let r = c.call(&Json::obj(vec![("method", Json::from("ping"))])).unwrap();
+            assert_eq!(r.get("pong"), Some(&Json::Bool(true)), "{r}");
+            pongs += 1;
+        } else {
+            let req = predict_req(i, "m", &[vec![0.1, 0.2, 0.3]]);
+            match c.call(&req) {
+                Ok(r) => {
+                    if r.get("ok") != Some(&Json::Bool(true)) {
+                        let code = code_of(&r);
+                        assert!(
+                            ErrorKind::from_code(code).is_some(),
+                            "unclassified failure: {r}"
+                        );
+                    }
+                }
+                Err(e) => panic!("predict transport must retry through: {e}"),
+            }
+        }
+    }
+    assert_eq!(pongs, 20);
+    // every classified failure the client saw is in the taxonomy
+    for code in c.err_code_tally().keys() {
+        assert!(ErrorKind::from_code(code).is_some(), "client tallied {code:?}");
+    }
+    // the metrics op stays serviceable, with the full taxonomy table
+    let m = c.call(&Json::obj(vec![("method", Json::from("metrics"))])).unwrap();
+    let codes = m.get("err_codes").expect("metrics must carry the err_codes table");
+    for k in accumkrr::util::error::ALL {
+        assert!(codes.get(k.code()).is_some(), "missing {:?} in {m}", k.code());
+    }
+    assert!(m.get("faults_injected").and_then(|v| v.as_f64()).is_some(), "{m}");
+    let t0 = Instant::now();
+    h.stop();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown must stay bounded under the fault matrix"
+    );
+}
