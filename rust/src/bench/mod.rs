@@ -14,6 +14,7 @@ mod fig2;
 mod fig3;
 mod fig5;
 mod hotpath;
+mod sampling;
 mod serve;
 mod thm8;
 
@@ -27,16 +28,19 @@ pub use fig1::run_fig1;
 pub use fig2::run_fig2;
 pub use fig3::run_fig3;
 pub use fig5::run_fig5;
+pub use sampling::{run_sampling, run_sampling_to};
 pub use serve::{run_serve, run_serve_to};
 pub use thm8::run_thm8;
 
 /// Dispatch a bench by id (`fig1`, `fig2`, `fig3`, `fig4`, `fig5`, `thm8`,
-/// `cost`, `adaptive`, `cluster`, `serve`). `fig4` is `fig3` over all
-/// three datasets; `adaptive` compares the incremental accumulation
-/// engine against fixed-m refits and emits `BENCH_adaptive.json`;
-/// `cluster` compares streamed vs dense Laplacian spectral clustering
-/// and emits `BENCH_cluster.json`; `serve` load-tests the reactor
-/// serving plane (adaptive batching vs none) and emits
+/// `cost`, `adaptive`, `sampling`, `cluster`, `serve`). `fig4` is `fig3`
+/// over all three datasets; `adaptive` compares the incremental
+/// accumulation engine against fixed-m refits and emits
+/// `BENCH_adaptive.json`; `sampling` compares uniform vs leverage-fed vs
+/// Poisson draws (error-vs-m, time-to-target) and emits
+/// `BENCH_sampling.json`; `cluster` compares streamed vs dense Laplacian
+/// spectral clustering and emits `BENCH_cluster.json`; `serve` load-tests
+/// the reactor serving plane (adaptive batching vs none) and emits
 /// `BENCH_serve.json`.
 pub fn run(id: &str, opts: &BenchOpts) -> Result<Vec<Row>, String> {
     match id {
@@ -48,13 +52,14 @@ pub fn run(id: &str, opts: &BenchOpts) -> Result<Vec<Row>, String> {
         "thm8" => Ok(run_thm8(opts)),
         "cost" => Ok(run_cost(opts)),
         "adaptive" => Ok(run_adaptive(opts)),
+        "sampling" => Ok(run_sampling(opts)),
         "cluster" => Ok(run_cluster(opts)),
         "serve" => Ok(run_serve(opts)),
         "ext-sketches" => Ok(run_ext_sketches(opts)),
         "ext-amm" => Ok(run_ext_amm(opts)),
         "ext-kpca" => Ok(run_ext_kpca(opts)),
         other => Err(format!(
-            "unknown bench id {other:?} (try fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|cluster|serve|ext-sketches|ext-amm|ext-kpca)"
+            "unknown bench id {other:?} (try fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|sampling|cluster|serve|ext-sketches|ext-amm|ext-kpca)"
         )),
     }
 }

@@ -178,6 +178,7 @@ fn bench_config(
             seed,
             adaptive: None,
             precision: Precision::F64,
+            sampling: crate::coordinator::SamplingSpec::Uniform,
         })
         .expect("serve bench: train");
     let handle = ServerHandle::start(

@@ -438,6 +438,7 @@ mod tests {
                 seed: 5,
                 adaptive: None,
                 precision: crate::linalg::Precision::F64,
+                sampling: crate::coordinator::SamplingSpec::Uniform,
             })
             .unwrap();
         store
@@ -569,6 +570,7 @@ mod tests {
                 seed: 5,
                 adaptive: None,
                 precision: crate::linalg::Precision::F64,
+                sampling: crate::coordinator::SamplingSpec::Uniform,
             })
             .unwrap();
         let y = b.predict("m", vec![vec![0.5, 0.5, 0.5]]).unwrap();

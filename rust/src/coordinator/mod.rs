@@ -120,4 +120,4 @@ pub use client::{Client, ClientConfig};
 pub use jobs::{JobScheduler, SweepPoint};
 pub use metrics::{Histogram, ServingMetrics};
 pub use server::{serve, ServerConfig, ServerHandle};
-pub use state::{ClusterRequest, ModelStore, StoredModel, TrainRequest};
+pub use state::{ClusterRequest, ModelStore, SamplingSpec, StoredModel, TrainRequest};

@@ -7,7 +7,7 @@
 //! | op        | request fields                                         | reply |
 //! |-----------|--------------------------------------------------------|-------|
 //! | `ping`    | —                                                      | `{"ok":true,"pong":true}` |
-//! | `train`   | `name,dataset,n,sketch,m,d,lambda,bandwidth,seed` (+ `m_max,rel_tol` for `sketch:"adaptive"`, + optional `precision:"f32"\|"f64"` for one-shot fits) | training metadata (+ `adaptive_m,rounds,rank_updates,refactors` telemetry for adaptive fits) |
+//! | `train`   | `name,dataset,n,sketch,m,d,lambda,bandwidth,seed` (+ `m_max,rel_tol,refine_after_m` for `sketch:"adaptive"`, + optional `precision:"f32"\|"f64"` for one-shot fits, + optional `sampling:"uniform"\|"leverage"\|"poisson"`) | training metadata (+ `adaptive_m,rounds,rank_updates,refactors` telemetry for adaptive fits; + `sampling,d_stat,refine_round` when informed sampling / refinement was active) |
 //! | `predict` | `model, x: [[f64,…],…]` (rectangular)                  | `{"ok":true,"y":[…]}` |
 //! | `cluster` | `dataset,n,k,method,d,m,m_max,rel_tol,bandwidth,seed,k_max` | labels + spectral telemetry (see `coordinator` module docs for the full schema) |
 //! | `models`  | —                                                      | list of stored models |
@@ -29,7 +29,7 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::reactor::{self, Done, ReactorConfig, ReplySink, Router};
 use crate::coordinator::state::{
-    parse_sketch_spec, run_cluster_job, ClusterRequest, ModelStore, TrainRequest,
+    parse_sketch_spec, run_cluster_job, ClusterRequest, ModelStore, SamplingSpec, TrainRequest,
 };
 use crate::linalg::Precision;
 use crate::pool::TaskPool;
@@ -430,10 +430,25 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
             a.rank_update_limit = Some(limit);
         }
     }
+    // optional "refine_after_m": between-term probability refinement for
+    // adaptive fits — once the sketch holds that many terms, leverage is
+    // estimated from the cached support columns and later terms draw
+    // from it (0, the default, disables and keeps the draw stream
+    // bit-identical)
+    if let Some(r) = req.get("refine_after_m").and_then(|v| v.as_usize()) {
+        if let Some(a) = adaptive.as_mut() {
+            a.refine_after_m = r;
+        }
+    }
     // optional "precision": "f64" (default) | "f32" — Gram accumulation
     // precision for one-shot fits; d×d solves are always f64
     let precision = match Precision::parse(&s("precision", "f64")) {
         Ok(p) => p,
+        Err(e) => return err(ErrorKind::InvalidInput, e),
+    };
+    // optional "sampling": "uniform" (default) | "leverage" | "poisson"
+    let sampling = match SamplingSpec::parse(&s("sampling", "uniform")) {
+        Ok(sp) => sp,
         Err(e) => return err(ErrorKind::InvalidInput, e),
     };
     let treq = TrainRequest {
@@ -447,6 +462,7 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
         seed: u("seed", 1) as u64,
         adaptive,
         precision,
+        sampling,
     };
     match store.train(&treq) {
         Ok(meta) => {
@@ -465,6 +481,17 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
                 fields.push(("rounds", Json::from(rep.rounds)));
                 fields.push(("rank_updates", Json::from(rep.rank_updates as usize)));
                 fields.push(("refactors", Json::from(rep.refactors as usize)));
+            }
+            // sampling telemetry is conditional — uniform, unrefined
+            // replies stay byte-identical to the pre-knob protocol
+            if meta.sampling != "uniform" {
+                fields.push(("sampling", Json::Str(meta.sampling)));
+            }
+            if rep.refine_round > 0 {
+                fields.push(("refine_round", Json::from(rep.refine_round)));
+            }
+            if meta.d_stat > 0.0 {
+                fields.push(("d_stat", Json::Num(meta.d_stat)));
             }
             // only reported when the factorization needed rescuing, so
             // healthy train replies stay byte-identical

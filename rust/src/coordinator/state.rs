@@ -1,11 +1,12 @@
 //! Model store: named trained models with JSON persistence.
 
 use crate::data::{normalize_features, Dataset};
-use crate::kernels::Kernel;
+use crate::kernels::{kernel_matrix, Kernel};
 use crate::krr::{AdaptiveOptions, SketchedKrr};
+use crate::leverage::{bless, exact_scores, stat_dim_from_scores, BlessResult};
 use crate::linalg::{Matrix, Precision};
-use crate::rng::Pcg64;
-use crate::sketch::{SketchBuilder, SketchKind};
+use crate::rng::{AliasTable, Pcg64};
+use crate::sketch::{Sampling, SketchBuilder, SketchKind};
 use crate::util::json::Json;
 use crate::util::CodedError;
 use std::collections::{HashMap, HashSet};
@@ -24,6 +25,50 @@ pub struct StoredModel {
     pub sketch: String,
     /// In-sample MSE at train time.
     pub train_mse: f64,
+    /// Row-sampling scheme the sketch was drawn with
+    /// (`uniform` | `leverage` | `poisson`).
+    pub sampling: String,
+    /// Statistical dimension `Σᵢ ℓᵢ` of the leverage profile used
+    /// (0 for uniform sampling — no profile was estimated).
+    pub d_stat: f64,
+}
+
+/// Row-sampling scheme for the sketch draw — the coordinator-level knob
+/// over [`Sampling`]: `uniform` is the classical accumulation draw,
+/// `leverage` feeds ridge-leverage scores (exact for small `n`,
+/// [`bless`] beyond) into the per-term draw probabilities, `poisson`
+/// turns the same profile into independent per-row inclusion
+/// (Nyström-shaped, one-shot).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SamplingSpec {
+    /// Uniform row draws — bit-identical to the pre-knob coordinator.
+    #[default]
+    Uniform,
+    /// Leverage-weighted draws (exact scores for `n ≤ 512`, BLESS above).
+    Leverage,
+    /// Poisson inclusion with leverage-informed `πᵢ = min(1, d·pᵢ)`.
+    Poisson,
+}
+
+impl SamplingSpec {
+    /// Parse the wire/CLI name.
+    pub fn parse(name: &str) -> Result<SamplingSpec, String> {
+        match name {
+            "uniform" => Ok(SamplingSpec::Uniform),
+            "leverage" => Ok(SamplingSpec::Leverage),
+            "poisson" => Ok(SamplingSpec::Poisson),
+            other => Err(format!("unknown sampling {other:?} (uniform|leverage|poisson)")),
+        }
+    }
+
+    /// Wire/CLI name (inverse of [`parse`](Self::parse)).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplingSpec::Uniform => "uniform",
+            SamplingSpec::Leverage => "leverage",
+            SamplingSpec::Poisson => "poisson",
+        }
+    }
 }
 
 /// Parameters of a `train` request (server op or CLI).
@@ -57,6 +102,10 @@ pub struct TrainRequest {
     /// f64-only — its incremental rank-update identities assume exact
     /// f64 Grams.
     pub precision: Precision,
+    /// Row-sampling scheme (`uniform` keeps the draw stream bit-identical
+    /// to requests made before the knob existed — the leverage estimator
+    /// runs on a *derived* RNG, never the sketch RNG).
+    pub sampling: SamplingSpec,
 }
 
 /// Shards in the model registry. Power of two; 16 is plenty — the shard
@@ -197,20 +246,41 @@ impl ModelStore {
             paper_lambda(n, dx)
         };
         let t = crate::util::Timer::start();
+        // Informed sampling: resolve the per-row probability profile
+        // *before* any sketch draw, on a derived RNG — the sketch RNG
+        // stream is untouched, so a uniform request trains a model
+        // bit-identical to the pre-knob coordinator.
+        let (sampling, warm, mut d_stat) =
+            resolve_sampling(req, &kernel, &ds.x, d, lambda)?;
         let (model, sketch_name) = if let Some(aopts) = &req.adaptive {
-            let builder = SketchBuilder::new(req.kind.clone());
-            let (model, _trace) = SketchedKrr::fit_adaptive(
-                kernel, &ds.x, &ds.y, &builder, d, lambda, aopts, &mut rng,
+            let builder = SketchBuilder::new(req.kind.clone()).with_sampling(sampling);
+            let (model, _trace) = SketchedKrr::fit_adaptive_warm(
+                kernel, &ds.x, &ds.y, &builder, d, lambda, aopts, &mut rng, warm.as_ref(),
             )
             .ok_or_else(|| CodedError::numeric("adaptive sketched fit failed (singular system)"))?;
-            let name = format!("adaptive_m{}", model.report().m);
+            // between-term refinement estimates its own profile mid-fit;
+            // that estimate supersedes any draw-time one
+            if model.report().refine_round > 0 {
+                d_stat = model.report().d_stat;
+            }
+            let name = match req.sampling {
+                SamplingSpec::Uniform => format!("adaptive_m{}", model.report().m),
+                _ => format!("adaptive_lev_m{}", model.report().m),
+            };
             (model, name)
         } else {
-            let sketch = SketchBuilder::new(req.kind.clone()).build(n, d, &mut rng);
+            let sketch = SketchBuilder::new(req.kind.clone())
+                .with_sampling(sampling)
+                .build(n, d, &mut rng);
             let model =
                 SketchedKrr::fit_with(kernel, &ds.x, &ds.y, &sketch, lambda, None, req.precision)
                     .ok_or_else(|| CodedError::numeric("sketched fit failed (singular system)"))?;
-            (model, req.kind.name())
+            let name = match req.sampling {
+                SamplingSpec::Uniform => req.kind.name(),
+                SamplingSpec::Leverage => format!("{}_lev", req.kind.name()),
+                SamplingSpec::Poisson => "poisson".to_string(),
+            };
+            (model, name)
         };
         let train_secs = t.secs();
         let train_mse = crate::stats::mse(model.fitted(), &ds.y);
@@ -220,10 +290,54 @@ impl ModelStore {
             train_secs,
             sketch: sketch_name,
             train_mse,
+            sampling: req.sampling.name().to_string(),
+            d_stat,
         };
         self.put(&req.name, stored.clone());
         Ok(stored)
     }
+}
+
+/// Largest `n` for which leverage scores come from the exact `O(n³)`
+/// ridge identity; beyond it the streaming BLESS estimator takes over
+/// (never assembling `n×n`).
+const EXACT_LEVERAGE_N: usize = 512;
+
+/// Salt XORed into the request seed for the leverage estimator's derived
+/// RNG, keeping the sketch draw stream independent of whether (and how)
+/// a profile was estimated.
+const LEVERAGE_SEED_SALT: u64 = 0x1e7e_4a9e_5eed_0b1e;
+
+/// Resolve a [`SamplingSpec`] into the concrete [`Sampling`] distribution
+/// plus (for BLESS) the warm-start landmark panel and the profile's
+/// statistical dimension. Uniform costs nothing and touches no RNG.
+fn resolve_sampling(
+    req: &TrainRequest,
+    kernel: &Kernel,
+    x: &Matrix,
+    d: usize,
+    lambda: f64,
+) -> Result<(Sampling, Option<BlessResult>, f64), CodedError> {
+    if req.sampling == SamplingSpec::Uniform {
+        return Ok((Sampling::Uniform, None, 0.0));
+    }
+    let n = x.rows();
+    let (table, warm, d_stat) = if n <= EXACT_LEVERAGE_N {
+        let scores = exact_scores(&kernel_matrix(kernel, x), lambda);
+        let ds = stat_dim_from_scores(&scores);
+        (AliasTable::new(&scores), None, ds)
+    } else {
+        let mut lrng = Pcg64::seed(req.seed ^ LEVERAGE_SEED_SALT);
+        let b = bless(kernel, x, lambda, d, 2.0, &mut lrng);
+        let ds = stat_dim_from_scores(&b.scores);
+        (b.sampling_table(), Some(b), ds)
+    };
+    let sampling = match req.sampling {
+        SamplingSpec::Uniform => unreachable!("handled above"),
+        SamplingSpec::Leverage => Sampling::Weighted(table),
+        SamplingSpec::Poisson => Sampling::Poisson(table),
+    };
+    Ok((sampling, warm, d_stat))
 }
 
 /// Bounds-check a train request before any compute is spent — every
@@ -245,6 +359,37 @@ fn validate_train_request(req: &TrainRequest) -> Result<(), CodedError> {
         return Err(CodedError::invalid_input(format!(
             "train: bandwidth must be finite and >= 0, got {}",
             req.bandwidth
+        )));
+    }
+    // Poisson is a one-shot per-row inclusion scheme: it has no notion of
+    // accumulated terms, so it composes with the Nyström shape only and
+    // never with adaptive-m growth
+    if req.sampling == SamplingSpec::Poisson {
+        if req.adaptive.is_some() {
+            return Err(CodedError::invalid_input(
+                "train: poisson sampling is one-shot — it cannot grow adaptively \
+                 (use sampling=leverage with the adaptive kind)",
+            ));
+        }
+        if !matches!(req.kind, SketchKind::Nystrom) {
+            return Err(CodedError::invalid_input(format!(
+                "train: poisson sampling requires the nystrom sketch kind, got {}",
+                req.kind.name()
+            )));
+        }
+    }
+    // leverage weights only steer row-sampling sketches; the dense
+    // projections (gaussian/rademacher/verysparse) ignore a row profile
+    if req.sampling == SamplingSpec::Leverage
+        && !matches!(
+            req.kind,
+            SketchKind::Nystrom | SketchKind::Accumulation { .. }
+        )
+    {
+        return Err(CodedError::invalid_input(format!(
+            "train: leverage sampling applies to row-sampling sketches \
+             (nystrom/accum/adaptive), got {}",
+            req.kind.name()
         )));
     }
     Ok(())
@@ -661,6 +806,7 @@ mod tests {
             seed: 3,
             adaptive: None,
             precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
         };
         let meta = store.train(&req).unwrap();
         assert_eq!(meta.n_train, 200);
@@ -688,6 +834,7 @@ mod tests {
                 ..Default::default()
             }),
             precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
         };
         let meta = store.train(&req).unwrap();
         let rep = *meta.model.report();
@@ -695,6 +842,136 @@ mod tests {
         assert!(rep.rounds >= 1);
         assert_eq!(meta.sketch, format!("adaptive_m{}", rep.m));
         assert!(meta.train_mse.is_finite());
+    }
+
+    #[test]
+    fn leverage_sampling_trains_and_reports_d_stat() {
+        let store = ModelStore::new();
+        let req = TrainRequest {
+            name: "lev".into(),
+            dataset: "bimodal".into(),
+            n: 200,
+            kind: SketchKind::Accumulation { m: 4 },
+            d: 12,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 5,
+            adaptive: None,
+            precision: Precision::F64,
+            sampling: SamplingSpec::Leverage,
+        };
+        let meta = store.train(&req).unwrap();
+        assert_eq!(meta.sketch, "accum_m4_lev");
+        assert_eq!(meta.sampling, "leverage");
+        // n = 200 ≤ 512 → exact ridge-leverage profile; its stat dim is
+        // positive and bounded by n
+        assert!(meta.d_stat > 0.0 && meta.d_stat <= 200.0, "{}", meta.d_stat);
+        assert!(meta.train_mse.is_finite());
+    }
+
+    #[test]
+    fn poisson_sampling_trains_via_nystrom() {
+        let store = ModelStore::new();
+        let req = TrainRequest {
+            name: "poi".into(),
+            dataset: "bimodal".into(),
+            n: 150,
+            kind: SketchKind::Nystrom,
+            d: 10,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 6,
+            adaptive: None,
+            precision: Precision::F64,
+            sampling: SamplingSpec::Poisson,
+        };
+        let meta = store.train(&req).unwrap();
+        assert_eq!(meta.sketch, "poisson");
+        assert_eq!(meta.sampling, "poisson");
+        assert!(meta.d_stat > 0.0);
+        assert!(meta.train_mse.is_finite());
+    }
+
+    #[test]
+    fn incompatible_sampling_combinations_rejected() {
+        use crate::util::ErrorKind;
+        let store = ModelStore::new();
+        let base = TrainRequest {
+            name: "x".into(),
+            dataset: "bimodal".into(),
+            n: 80,
+            kind: SketchKind::Nystrom,
+            d: 8,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 1,
+            adaptive: None,
+            precision: Precision::F64,
+            sampling: SamplingSpec::Poisson,
+        };
+        let cases = [
+            // poisson cannot grow adaptively
+            TrainRequest {
+                adaptive: Some(AdaptiveOptions::default()),
+                ..base.clone()
+            },
+            // poisson needs the nystrom shape
+            TrainRequest {
+                kind: SketchKind::Accumulation { m: 4 },
+                ..base.clone()
+            },
+            // leverage weights don't steer dense projections
+            TrainRequest {
+                kind: SketchKind::Gaussian,
+                sampling: SamplingSpec::Leverage,
+                ..base.clone()
+            },
+        ];
+        for req in cases {
+            let err = store.train(&req).unwrap_err();
+            assert_eq!(err.kind, ErrorKind::InvalidInput, "{req:?}: {err}");
+        }
+        assert!(store.train(&base).is_ok());
+    }
+
+    #[test]
+    fn adaptive_leverage_with_refinement_reports_profile() {
+        let store = ModelStore::new();
+        let req = TrainRequest {
+            name: "adlev".into(),
+            dataset: "bimodal".into(),
+            n: 200,
+            kind: SketchKind::Accumulation { m: 1 },
+            d: 12,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 7,
+            adaptive: Some(AdaptiveOptions {
+                m_max: 8,
+                rel_tol: 0.05,
+                refine_after_m: 1,
+                ..Default::default()
+            }),
+            precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
+        };
+        let meta = store.train(&req).unwrap();
+        let rep = *meta.model.report();
+        // started uniform, refined between terms (unless the rule fired
+        // after a single term — rel_tol 0.05 with m_max 8 never does)
+        assert!(rep.refine_round > 0, "{rep:?}");
+        assert!(meta.d_stat > 0.0);
+        assert_eq!(meta.sampling, "uniform");
+        assert!(meta.sketch.starts_with("adaptive_m"), "{}", meta.sketch);
+    }
+
+    #[test]
+    fn sampling_spec_parse_roundtrip() {
+        for s in [SamplingSpec::Uniform, SamplingSpec::Leverage, SamplingSpec::Poisson] {
+            assert_eq!(SamplingSpec::parse(s.name()), Ok(s));
+        }
+        assert!(SamplingSpec::parse("lev").is_err());
+        assert_eq!(SamplingSpec::default(), SamplingSpec::Uniform);
     }
 
     #[test]
@@ -724,6 +1001,7 @@ mod tests {
             seed: 1,
             adaptive: None,
             precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
         };
         let err = store.train(&req).unwrap_err();
         assert_eq!(err.kind, crate::util::ErrorKind::InvalidInput);
@@ -746,6 +1024,7 @@ mod tests {
             seed: 1,
             adaptive: None,
             precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
         };
         let cases = [
             TrainRequest { name: "".into(), ..base.clone() },
@@ -778,6 +1057,7 @@ mod tests {
             seed: 1,
             adaptive: None,
             precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
         };
         store.train(&req).unwrap();
         assert!(!store.is_quarantined("q"));
@@ -923,6 +1203,8 @@ mod tests {
                     train_secs: 0.0,
                     sketch: "nystrom".into(),
                     train_mse: 0.0,
+                    sampling: "uniform".into(),
+                    d_stat: 0.0,
                 },
             );
         }
@@ -945,6 +1227,8 @@ mod tests {
                 train_secs: 0.0,
                 sketch: "nystrom".into(),
                 train_mse: 0.0,
+                sampling: "uniform".into(),
+                d_stat: 0.0,
             },
         );
         assert_eq!(store.get(&names[0]).unwrap().n_train, 21);

@@ -11,12 +11,16 @@
 //! * [`falkon`] — the Falkon baseline (Rudi et al. 2017): preconditioned
 //!   conjugate gradients with early stopping, generalised to take any
 //!   sketch from this crate (paper §3.3 discusses exactly this pairing).
+//! * [`sketched_ols`] — sketched ridge/least-squares on the *raw features*
+//!   (no kernel, the setting of arXiv:2204.04776), reusing the same
+//!   accumulation + sampling machinery on `SᵀX`.
 
 mod cv;
 mod exact;
 mod falkon;
 mod kkmeans;
 mod kpca;
+mod ols;
 mod sketched;
 
 pub use cv::{cv_select, CvResult};
@@ -25,4 +29,5 @@ pub use falkon::{falkon, FalkonOptions, FalkonResult};
 pub use kkmeans::{kernel_kmeans, lloyd, KernelKmeans};
 pub(crate) use kpca::kpca_from_gram;
 pub use kpca::{sketched_kpca, SketchedKpca};
+pub use ols::{feature_leverage, ridge_exact, sketched_ols, OlsReport, SketchedOls};
 pub use sketched::{AdaptiveOptions, AdaptiveRound, SketchedKrr, SketchedKrrReport};

@@ -3,9 +3,12 @@
 //! sketch at runtime.
 
 use crate::kernels::{cross_kernel_rowstable, gather_rows, Kernel};
+use crate::leverage::{stat_dim_from_scores, BlessResult};
 use crate::linalg::{chol_factor, CholFactor, Matrix, Precision};
-use crate::rng::Pcg64;
-use crate::sketch::{sketch_gram_with, IncrementalGram, Sketch, SketchBuilder, SketchOps};
+use crate::rng::{AliasTable, Pcg64};
+use crate::sketch::{
+    sketch_gram_with, IncrementalGram, Sampling, Sketch, SketchBuilder, SketchOps,
+};
 use crate::stats::{amm_error_proxy, rel_change, StoppingRule};
 use crate::util::timer::Timer;
 
@@ -55,6 +58,12 @@ pub struct SketchedKrrReport {
     pub rank_updates: u32,
     /// Rounds that (re)factorised the d×d system.
     pub refactors: u32,
+    /// Statistical dimension `Σᵢ ℓ̂ᵢ` of the refined leverage estimate
+    /// (0.0 when no refinement ran / no scores were computed).
+    pub d_stat: f64,
+    /// 1-based adaptive round after which the sampling distribution was
+    /// refined to estimated leverage scores (0 = never refined).
+    pub refine_round: usize,
 }
 
 /// Knobs of [`SketchedKrr::fit_adaptive`].
@@ -82,6 +91,15 @@ pub struct AdaptiveOptions {
     /// (update wins when `9·rank ≤ d`). `Some(usize::MAX)` forces the
     /// update path (tests / benches).
     pub rank_update_limit: Option<usize>,
+    /// Between-term probability refinement: once the sketch holds at least
+    /// this many terms, estimate leverage scores from the support columns
+    /// already cached in [`IncrementalGram`]
+    /// ([`estimate_leverage`](IncrementalGram::estimate_leverage) — only
+    /// the kernel diagonal is newly evaluated) and switch the remaining
+    /// draws to `pᵢ ∝ ℓ̂ᵢ`. `0` disables refinement (the default — the
+    /// uniform path stays bit-identical to its pre-refinement behaviour);
+    /// `1` refines after the first round, the recommended setting.
+    pub refine_after_m: usize,
 }
 
 impl Default for AdaptiveOptions {
@@ -94,6 +112,7 @@ impl Default for AdaptiveOptions {
             patience: 1,
             amm_tol: None,
             rank_update_limit: None,
+            refine_after_m: 0,
         }
     }
 }
@@ -107,6 +126,11 @@ pub struct AdaptiveRound {
     pub rel_change: f64,
     /// Whether the round re-factorised (vs rank-updated) the d×d system.
     pub refactored: bool,
+    /// Whether this round's appended terms were drawn from the *refined*
+    /// (estimated-leverage) distribution — `false` until the round after
+    /// the switch-over recorded in
+    /// [`SketchedKrrReport::refine_round`].
+    pub refined: bool,
     /// Wall-clock seconds of the round (gram growth + solve).
     pub secs: f64,
 }
@@ -115,7 +139,7 @@ pub struct AdaptiveRound {
 /// production KRR libraries do (sampled columns can collide, leaving
 /// `SᵀKS` rank-deficient). Returns the factor and the bumps applied, or
 /// `None` after 8 failed escalations. `a` is mutated by the bumps.
-fn factor_with_jitter(a: &mut Matrix) -> Option<(CholFactor, u32)> {
+pub(crate) fn factor_with_jitter(a: &mut Matrix) -> Option<(CholFactor, u32)> {
     let mut jitter_bumps = 0u32;
     let scale = (0..a.rows())
         .map(|i| a[(i, i)])
@@ -255,6 +279,29 @@ impl SketchedKrr {
         opts: &AdaptiveOptions,
         rng: &mut Pcg64,
     ) -> Option<(SketchedKrr, Vec<AdaptiveRound>)> {
+        Self::fit_adaptive_warm(kernel, x, y, builder, d, lambda, opts, rng, None)
+    }
+
+    /// [`fit_adaptive`](Self::fit_adaptive) warm-started from a
+    /// [`bless`](crate::leverage::bless) run on the same data: the
+    /// landmark panel `bless` already evaluated is seeded into
+    /// [`IncrementalGram`]'s support-column cache
+    /// ([`seed_columns`](IncrementalGram::seed_columns)), so any sketch
+    /// support that lands on a landmark row — the common case when
+    /// `builder` samples from
+    /// [`sampling_table`](crate::leverage::BlessResult::sampling_table) —
+    /// costs zero new kernel column evaluations.
+    pub fn fit_adaptive_warm(
+        kernel: Kernel,
+        x: &Matrix,
+        y: &[f64],
+        builder: &SketchBuilder,
+        d: usize,
+        lambda: f64,
+        opts: &AdaptiveOptions,
+        rng: &mut Pcg64,
+        warm: Option<&BlessResult>,
+    ) -> Option<(SketchedKrr, Vec<AdaptiveRound>)> {
         let n = x.rows();
         assert_eq!(y.len(), n, "adaptive krr: |y| != n");
         assert!(d >= 1 && opts.m_max >= 1, "adaptive krr: d, m_max >= 1");
@@ -262,6 +309,9 @@ impl SketchedKrr {
 
         let mut acc = builder.grower(n, d);
         let mut inc = IncrementalGram::new(kernel, n, d);
+        if let Some(b) = warm {
+            inc.seed_columns(&b.landmarks, &b.panel);
+        }
         let mut rule = StoppingRule::new(opts.rel_tol, opts.patience);
         if let Some(t) = opts.amm_tol {
             rule = rule.with_amm_tol(t);
@@ -271,8 +321,12 @@ impl SketchedKrr {
         let mut trace: Vec<AdaptiveRound> = Vec::new();
         let (mut gram_secs, mut solve_secs) = (0.0, 0.0);
         let (mut rank_updates, mut refactors, mut jitter_bumps) = (0u32, 0u32, 0u32);
+        let mut refined = false;
+        let mut refine_round = 0usize;
+        let mut d_stat = 0.0f64;
         let mut m_target = opts.m0.max(1).min(opts.m_max);
         loop {
+            let drew_refined = refined;
             let mut t = Timer::start();
             acc.grow_to(m_target, rng);
             let delta = inc.sync(x, &acc).expect("adaptive krr: sketch must grow");
@@ -336,10 +390,25 @@ impl SketchedKrr {
                 m,
                 rel_change: change,
                 refactored: !updated,
+                refined: drew_refined,
                 secs: g_secs + s_secs,
             });
             if rule.observe(m, change, amm_error_proxy(n, d, m)) || m >= opts.m_max {
                 break;
+            }
+            // between-term probability refinement: the support columns the
+            // early uniform terms already cached double as BLESS landmarks
+            // — estimate leverage from them (only the kernel diagonal is
+            // newly evaluated) and let every later term draw `pᵢ ∝ ℓ̂ᵢ`.
+            // Consumes no sketch RNG, so the uniform path (refine_after_m
+            // = 0) is untouched draw for draw.
+            if !refined && opts.refine_after_m > 0 && m >= opts.refine_after_m {
+                if let Some(scores) = inc.estimate_leverage(x, lambda) {
+                    d_stat = stat_dim_from_scores(&scores);
+                    acc.set_sampling(Sampling::Weighted(AliasTable::new(&scores)));
+                    refined = true;
+                    refine_round = trace.len();
+                }
             }
             m_target = ((m as f64 * opts.growth).ceil() as usize)
                 .max(m + 1)
@@ -357,6 +426,8 @@ impl SketchedKrr {
             rounds: trace.len(),
             rank_updates,
             refactors,
+            d_stat,
+            refine_round,
         };
         let sketch = acc.as_sketch();
         let model = SketchedKrr::finish(kernel, x, &sketch, inc.ks(), theta, report);
@@ -588,6 +659,7 @@ mod tests {
             patience: 1,
             amm_tol: None,
             rank_update_limit: None,
+            refine_after_m: 0,
         };
         let builder = SketchBuilder::new(SketchKind::Accumulation { m: m_max });
         let mut rng_a = Pcg64::seed(121);
@@ -670,6 +742,131 @@ mod tests {
         for (u, v) in a.theta().iter().zip(b.theta().iter()) {
             let tol = 1e-6 * v.abs().max(1.0);
             assert!((u - v).abs() < tol, "theta {u} vs {v}");
+        }
+    }
+
+    /// Between-term refinement: with `refine_after_m = 1` the loop
+    /// switches to estimated-leverage draws after the first round and
+    /// records the switch-over in the report and the trace.
+    #[test]
+    fn adaptive_refinement_switches_distribution_and_reports_it() {
+        let (x, y, kern, lam) = toy_problem(80, 128);
+        let (d, m_max) = (10, 8);
+        let opts = AdaptiveOptions {
+            m_max,
+            rel_tol: -1.0, // run to m_max so every round is observed
+            refine_after_m: 1,
+            ..Default::default()
+        };
+        let builder = SketchBuilder::new(SketchKind::Accumulation { m: 1 });
+        let mut rng = Pcg64::seed(129);
+        let (model, trace) =
+            SketchedKrr::fit_adaptive(kern, &x, &y, &builder, d, lam, &opts, &mut rng).unwrap();
+        let rep = model.report();
+        assert_eq!(rep.refine_round, 1, "switch after the first round");
+        assert!(rep.d_stat > 0.0, "d_stat from the refined scores");
+        assert!(!trace[0].refined, "round 1 drew uniform");
+        assert!(
+            trace[1..].iter().all(|r| r.refined),
+            "all later rounds drew refined"
+        );
+        assert_eq!(rep.m, m_max);
+        assert!(model.fitted().iter().all(|v| v.is_finite()));
+        // refinement itself must not consume sketch RNG: the uniform terms
+        // of an unrefined run from the same seed bit-match round 1
+        let mut rng_u = Pcg64::seed(129);
+        let uniform_opts = AdaptiveOptions {
+            m_max,
+            rel_tol: -1.0,
+            ..Default::default()
+        };
+        let (model_u, _) = SketchedKrr::fit_adaptive(
+            kern,
+            &x,
+            &y,
+            &builder,
+            d,
+            lam,
+            &uniform_opts,
+            &mut rng_u,
+        )
+        .unwrap();
+        assert_eq!(model_u.report().refine_round, 0);
+        assert_eq!(model_u.report().d_stat, 0.0);
+    }
+
+    /// The refinement path stays streamed: estimating leverage from cached
+    /// support columns must never assemble an n×n kernel matrix.
+    #[test]
+    fn adaptive_refinement_never_materialises_n_by_n() {
+        let (x, y, kern, lam) = toy_problem(90, 138);
+        let opts = AdaptiveOptions {
+            m_max: 8,
+            rel_tol: -1.0,
+            refine_after_m: 1,
+            ..Default::default()
+        };
+        let builder = SketchBuilder::new(SketchKind::Accumulation { m: 1 });
+        let mut rng = Pcg64::seed(139);
+        crate::kernels::assembly_guard::reset();
+        let (model, _) =
+            SketchedKrr::fit_adaptive(kern, &x, &y, &builder, 9, lam, &opts, &mut rng).unwrap();
+        assert!(model.report().refine_round >= 1);
+        let max_sq = crate::kernels::assembly_guard::max_square();
+        assert!(
+            max_sq < 90,
+            "refinement assembled a {max_sq}×{max_sq} square kernel block"
+        );
+    }
+
+    /// BLESS panel reuse: a warm-started fit whose sampling is the bless
+    /// table restricted to landmark rows pays zero kernel *column*
+    /// evaluations — every support column is already seeded.
+    #[test]
+    fn warm_start_reuses_bless_landmark_panel() {
+        let (x, y, kern, lam) = toy_problem(70, 140);
+        let mut lev_rng = Pcg64::seed(141);
+        let bl = crate::leverage::bless(&kern, &x, lam, 12, 2.0, &mut lev_rng);
+        assert!(!bl.landmarks.is_empty());
+        // concentrate all sampling mass on the landmark rows so the sketch
+        // support is provably a subset of the seeded columns
+        let mut weights = vec![0.0; 70];
+        for &r in &bl.landmarks {
+            weights[r] = bl.scores[r].max(1e-12);
+        }
+        let builder = SketchBuilder::new(SketchKind::Accumulation { m: 1 })
+            .with_sampling(Sampling::Weighted(AliasTable::new(&weights)));
+        let opts = AdaptiveOptions {
+            m_max: 4,
+            rel_tol: -1.0,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed(142);
+        let (model, _) = SketchedKrr::fit_adaptive_warm(
+            kern,
+            &x,
+            &y,
+            &builder,
+            8,
+            lam,
+            &opts,
+            &mut rng,
+            Some(&bl),
+        )
+        .unwrap();
+        assert_eq!(
+            model.report().kernel_evals,
+            0,
+            "support ⊆ landmarks → all columns reused from the bless panel"
+        );
+        // the same fit without the warm start pays for its support columns
+        let mut rng2 = Pcg64::seed(142);
+        let (cold, _) =
+            SketchedKrr::fit_adaptive(kern, &x, &y, &builder, 8, lam, &opts, &mut rng2).unwrap();
+        assert!(cold.report().kernel_evals > 0);
+        // and the models agree: seeding changes cost, not math
+        for (a, b) in model.theta().iter().zip(cold.theta().iter()) {
+            assert!((a - b).abs() < 1e-9 * b.abs().max(1.0), "{a} vs {b}");
         }
     }
 

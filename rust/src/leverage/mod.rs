@@ -44,6 +44,14 @@ pub struct BlessResult {
     pub scores: Vec<f64>,
     /// Landmark set used in the final round.
     pub landmarks: Vec<usize>,
+    /// The final round's `n×s` kernel panel `K[:, landmarks]` (column `v`
+    /// ↔ `landmarks[v]`). These columns are already paid for in
+    /// [`kernel_evals`](Self::kernel_evals); a follow-up fit on the same
+    /// data seeds them into
+    /// [`IncrementalGram`](crate::sketch::IncrementalGram) via
+    /// [`seed_columns`](crate::sketch::IncrementalGram::seed_columns) so
+    /// landmark columns are never re-evaluated.
+    pub panel: Matrix,
     /// Kernel evaluations performed (cost diagnostic).
     pub kernel_evals: usize,
 }
@@ -87,6 +95,8 @@ pub fn bless(
     let mut scores = vec![1.0; n];
     #[allow(unused_assignments)]
     let mut landmarks: Vec<usize> = Vec::new();
+    #[allow(unused_assignments)]
+    let mut panel = Matrix::zeros(0, 0);
 
     // anneal λ_h geometrically from 1.0 down to the target
     let q = 2.0;
@@ -132,6 +142,7 @@ pub fn bless(
         }
         scores = new_scores;
         landmarks = j;
+        panel = kxj;
 
         if lam_h <= lambda {
             break;
@@ -141,6 +152,7 @@ pub fn bless(
     BlessResult {
         scores,
         landmarks,
+        panel,
         kernel_evals,
     }
 }
@@ -240,6 +252,27 @@ mod tests {
             top_exact[..5].iter().map(|&i| rank_of(i) as f64).sum::<f64>() / 5.0;
         assert!(mean_rank < 22.0, "top exact-leverage points rank {mean_rank} on average");
         assert!(approx.kernel_evals < 55 * 55 * 12);
+    }
+
+    /// The returned panel is the final round's `K[:, landmarks]` — the
+    /// reusable columns a follow-up `IncrementalGram` seeds its cache with.
+    #[test]
+    fn bless_panel_matches_kernel_columns() {
+        let x = clustered(24, 3, 139);
+        let kern = Kernel::gaussian(0.6);
+        let mut rng = Pcg64::seed(140);
+        let r = bless(&kern, &x, 1e-2, 8, 2.0, &mut rng);
+        assert_eq!(r.panel.rows(), 27);
+        assert_eq!(r.panel.cols(), r.landmarks.len());
+        let k = kernel_matrix(&kern, &x);
+        for (v, &row) in r.landmarks.iter().enumerate() {
+            for i in 0..27 {
+                assert!(
+                    (r.panel[(i, v)] - k[(i, row)]).abs() < 1e-10,
+                    "panel col {v} (landmark {row}) row {i}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,13 +1,15 @@
 //! `accumkrr` — CLI launcher for the accumulation-sketch KRR framework.
 //!
 //! ```text
-//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|cluster|serve>
+//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|sampling|cluster|serve>
 //!          [--replicates N] [--n-max N] [--seed S] [--csv PATH] [--full]
 //!          [--streamed] [--smoke]  # smoke: CI-sized serve load test
 //! accumkrr train --name M --dataset rqa --n 2000 --sketch accum --m 4
 //!          [--d D] [--lambda L] [--bandwidth B] [--seed S] [--save PATH]
 //!          [--precision f64|f32]  # f32: single-precision Gram assembly
+//!          [--sampling uniform|leverage|poisson]  # informed row draws
 //! accumkrr train --sketch adaptive [--m-max M] [--rel-tol T]  # adaptive m
+//!          [--refine-after-m R]  # refine draw probs between terms
 //! accumkrr cluster --dataset moons --n 600 --k 2
 //!          [--method operator|sketched|adaptive] [--d D] [--m M]
 //!          [--m-max M] [--rel-tol T] [--bandwidth B] [--seed S]
@@ -103,7 +105,7 @@ fn cmd_bench(args: &Args) -> i32 {
 }
 
 fn cmd_train(args: &Args) -> i32 {
-    let (kind, adaptive) = match accumkrr::coordinator::state::parse_sketch_spec(
+    let (kind, mut adaptive) = match accumkrr::coordinator::state::parse_sketch_spec(
         args.str_or("sketch", "accum"),
         args.usize_or("m", 4),
         args.usize_or("m-max", 64),
@@ -115,8 +117,23 @@ fn cmd_train(args: &Args) -> i32 {
             return 2;
         }
     };
+    // --refine-after-m R: adaptive fits estimate leverage from the cached
+    // support columns once R terms accumulated and draw later terms from
+    // it (0 disables — the draw stream stays bit-identical)
+    if let Some(a) = adaptive.as_mut() {
+        a.refine_after_m = args.usize_or("refine-after-m", 0);
+    }
     let precision = match accumkrr::linalg::Precision::parse(args.str_or("precision", "f64")) {
         Ok(p) => p,
+        Err(e) => {
+            eprintln!("train: {e}");
+            return 2;
+        }
+    };
+    let sampling = match accumkrr::coordinator::SamplingSpec::parse(
+        args.str_or("sampling", "uniform"),
+    ) {
+        Ok(sp) => sp,
         Err(e) => {
             eprintln!("train: {e}");
             return 2;
@@ -133,6 +150,7 @@ fn cmd_train(args: &Args) -> i32 {
         seed: args.usize_or("seed", 1) as u64,
         adaptive,
         precision,
+        sampling,
     };
     let store = ModelStore::new();
     match store.train(&req) {
@@ -152,6 +170,12 @@ fn cmd_train(args: &Args) -> i32 {
                     "adaptive: chose m={} in {} rounds ({} rank updates, {} refactors, {} kernel evals)",
                     rep.m, rep.rounds, rep.rank_updates, rep.refactors, rep.kernel_evals
                 );
+            }
+            if meta.sampling != "uniform" || meta.d_stat > 0.0 {
+                println!("sampling: {} (d_stat={:.2})", meta.sampling, meta.d_stat);
+            }
+            if rep.refine_round > 0 {
+                println!("refined draw probabilities at round {}", rep.refine_round);
             }
             if let Some(path) = args.flags.get("save") {
                 let j = model_to_json(&meta.model);

@@ -23,10 +23,14 @@ use super::{Sampling, Sketch, SketchOps, SparseSketch};
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
 
-/// One raw sub-sampling draw: sampled row index + Rademacher sign (the
-/// `1/√(d·m·p)` rescaling is applied at materialisation time, where `m` is
-/// known).
-type RawEntry = (usize, f64);
+/// One raw sub-sampling draw: sampled row index, Rademacher sign, and the
+/// probability the row had *at draw time* (the `1/√(d·m·p)` rescaling is
+/// applied at materialisation time, where `m` is known). Storing `p` with
+/// the draw keeps earlier terms correctly scaled when the sampling
+/// distribution is refined between terms ([`AccumSketch::set_sampling`]):
+/// each term is unbiased under its own draw distribution, so the
+/// accumulated `E[SSᵀ] = Iₙ` survives the switch.
+type RawEntry = (usize, f64, f64);
 
 /// A growable accumulation sketch `S = Σ_{i=1}^{m} S₍ᵢ₎` over `n` points
 /// with projection dimension `d`.
@@ -36,8 +40,8 @@ pub struct AccumSketch {
     d: usize,
     sampling: Sampling,
     signed: bool,
-    /// `terms[i][j]` = (row index, sign) of term `i`'s single non-zero in
-    /// column `j`.
+    /// `terms[i][j]` = (row index, sign, draw-time probability) of term
+    /// `i`'s single non-zero in column `j`.
     terms: Vec<Vec<RawEntry>>,
     /// Materialised sparse view at the current `m` (kept in sync by the
     /// grow operations).
@@ -61,8 +65,28 @@ impl AccumSketch {
     /// Override the sampling distribution (e.g. leverage scores).
     pub fn with_sampling(mut self, sampling: Sampling) -> AccumSketch {
         assert!(self.terms.is_empty(), "set sampling before growing");
+        assert!(
+            !matches!(sampling, Sampling::Poisson(_)),
+            "accum sketch: Poisson is a per-row inclusion scheme, not a \
+             per-column draw — build it via SketchBuilder / PoissonSketch"
+        );
         self.sampling = sampling;
         self
+    }
+
+    /// Switch the sampling distribution *mid-growth* (the between-term
+    /// probability refinement of
+    /// [`fit_adaptive`](crate::krr::SketchedKrr::fit_adaptive)). Only
+    /// future draws use the new distribution; already-appended terms keep
+    /// the probabilities they were drawn under (stored per entry), so their
+    /// weights — and the sketch's unbiasedness — are unaffected.
+    pub fn set_sampling(&mut self, sampling: Sampling) {
+        assert!(
+            !matches!(sampling, Sampling::Poisson(_)),
+            "accum sketch: Poisson is a per-row inclusion scheme, not a \
+             per-column draw — build it via SketchBuilder / PoissonSketch"
+        );
+        self.sampling = sampling;
     }
 
     /// Disable the Rademacher signs (classical Nyström at `m = 1`).
@@ -112,18 +136,28 @@ impl AccumSketch {
     fn push_raw_term(&mut self, rng: &mut Pcg64) {
         let mut term = Vec::with_capacity(self.d);
         for _ in 0..self.d {
-            let j = match &self.sampling {
-                Sampling::Uniform => rng.below(self.n as u64) as usize,
-                Sampling::Weighted(t) => t.sample(rng),
+            let (j, p) = match &self.sampling {
+                Sampling::Uniform => {
+                    let j = rng.below(self.n as u64) as usize;
+                    (j, 1.0 / self.n as f64)
+                }
+                Sampling::Weighted(t) => {
+                    let j = t.sample(rng);
+                    (j, t.p(j))
+                }
+                Sampling::Poisson(_) => {
+                    unreachable!("rejected by with_sampling/set_sampling")
+                }
             };
             let r = if self.signed { rng.rademacher() } else { 1.0 };
-            term.push((j, r));
+            term.push((j, r, p));
         }
         self.terms.push(term);
     }
 
     /// Entries of term `i` at the *current* scaling: `(column, row,
-    /// weight)` with `weight = sign/√(d·m·p_row)`. Consumed by
+    /// weight)` with `weight = sign/√(d·m·p_row)`, `p_row` being the
+    /// probability stored at draw time. Consumed by
     /// [`IncrementalGram`](super::IncrementalGram) when folding appended
     /// terms into the Gram matrices.
     pub fn term_entries(&self, i: usize) -> Vec<(usize, usize, f64)> {
@@ -131,23 +165,20 @@ impl AccumSketch {
         self.terms[i]
             .iter()
             .enumerate()
-            .map(|(col, &(row, sign))| {
-                let p = self.sampling.prob(row, self.n);
-                (col, row, sign / (dm * p).sqrt())
-            })
+            .map(|(col, &(row, sign, p))| (col, row, sign / (dm * p).sqrt()))
             .collect()
     }
 
     /// Rebuild the materialised sparse view at the current `m`. Weights
     /// use the same expression as the one-shot builder
-    /// (`sign / √((d·m)·p)`), so grown and one-shot sketches bit-match.
+    /// (`sign / √((d·m)·p)`) with the draw-time `p`, so grown and one-shot
+    /// sketches bit-match.
     fn rebuild(&mut self) {
         let m = self.terms.len();
         let dm = (self.d * m) as f64;
         let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::with_capacity(m); self.d];
         for term in &self.terms {
-            for (col, &(row, sign)) in term.iter().enumerate() {
-                let p = self.sampling.prob(row, self.n);
+            for (col, &(row, sign, p)) in term.iter().enumerate() {
                 cols[col].push((row, sign / (dm * p).sqrt()));
             }
         }
@@ -269,6 +300,77 @@ mod tests {
                 assert_eq!(wv.to_bits(), w.to_bits());
             }
         }
+    }
+
+    /// Same contract for *weighted* draws: growing 1 → m with a leverage-
+    /// style table bit-matches the one-shot weighted build from the same
+    /// RNG stream (draws stay term-major; the alias table consumes the
+    /// same two u64s per index either way).
+    #[test]
+    fn weighted_grown_sketch_bit_matches_one_shot() {
+        let (n, d, m) = (80, 7, 6);
+        let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 13) as f64).collect();
+        let table = crate::rng::AliasTable::new(&weights);
+        let mut rng_grow = Pcg64::seed(0x1e7a);
+        let mut rng_shot = Pcg64::seed(0x1e7a);
+        let mut acc = AccumSketch::new(n, d).with_sampling(Sampling::Weighted(table.clone()));
+        for _ in 0..m {
+            acc.append_term(&mut rng_grow);
+        }
+        let shot = SketchBuilder::new(SketchKind::Accumulation { m })
+            .with_sampling(Sampling::Weighted(table))
+            .build(n, d, &mut rng_shot);
+        let Sketch::Sparse(shot) = shot else {
+            panic!("accumulation builds sparse")
+        };
+        for j in 0..d {
+            let a = acc.sparse().col(j);
+            let b = shot.col(j);
+            assert_eq!(a.len(), b.len(), "col {j} nnz");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.0, y.0, "col {j} index");
+                assert_eq!(x.1.to_bits(), y.1.to_bits(), "col {j} weight bits");
+            }
+        }
+        assert_eq!(rng_grow.next_u64(), rng_shot.next_u64());
+    }
+
+    /// Refining the distribution mid-growth must leave already-drawn terms
+    /// bit-untouched (their weights come from the stored draw-time
+    /// probabilities, modulo the √(m_old/m_new) accumulation rescale).
+    #[test]
+    fn set_sampling_preserves_earlier_term_weights() {
+        let (n, d) = (60, 5);
+        let mut rng = Pcg64::seed(0xbe5);
+        let mut acc = AccumSketch::new(n, d);
+        acc.grow_to(2, &mut rng);
+        let before: Vec<Vec<(usize, f64)>> = (0..d).map(|j| acc.sparse().col(j).to_vec()).collect();
+        let weights: Vec<f64> = (0..n).map(|i| ((i * 7) % 11 + 1) as f64).collect();
+        acc.set_sampling(Sampling::Weighted(crate::rng::AliasTable::new(&weights)));
+        acc.grow_to(4, &mut rng);
+        // the first two entries of every column are the original draws,
+        // rescaled exactly by √(2/4)
+        let alpha = (2.0f64 / 4.0).sqrt();
+        for j in 0..d {
+            let after = acc.sparse().col(j);
+            assert_eq!(after.len(), 4);
+            for (t, &(row, w)) in before[j].iter().enumerate() {
+                assert_eq!(after[t].0, row, "col {j} term {t} row");
+                assert!(
+                    (after[t].1 - w * alpha).abs() < 1e-12 * w.abs().max(1.0),
+                    "col {j} term {t} weight: {} vs {}",
+                    after[t].1,
+                    w * alpha
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "Poisson")]
+    fn accum_sketch_rejects_poisson_sampling() {
+        let table = crate::rng::AliasTable::new(&[1.0; 8]);
+        let _ = AccumSketch::new(8, 2).with_sampling(Sampling::Poisson(table));
     }
 
     #[test]

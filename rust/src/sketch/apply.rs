@@ -285,6 +285,74 @@ impl IncrementalGram {
         self.ks.matvec_t(y)
     }
 
+    /// Support rows whose kernel columns are currently cached, sorted.
+    pub fn cached_rows(&self) -> Vec<usize> {
+        let mut rows: Vec<usize> = self.kcols.keys().copied().collect();
+        rows.sort_unstable();
+        rows
+    }
+
+    /// Seed the kernel-column cache with already-computed columns (e.g. the
+    /// final-round landmark panel of
+    /// [`bless`](crate::leverage::bless) — column `c` of `panel` must be
+    /// `K[:, rows[c]]`). The evaluations were paid by the producer, so
+    /// [`kernel_evals`](Self::kernel_evals) is *not* incremented; a
+    /// subsequent [`sync`](Self::sync) whose support hits these rows costs
+    /// zero new kernel evaluations.
+    pub fn seed_columns(&mut self, rows: &[usize], panel: &Matrix) {
+        assert_eq!(panel.rows(), self.n, "seed_columns: panel row count");
+        assert_eq!(panel.cols(), rows.len(), "seed_columns: panel columns");
+        for (c, &row) in rows.iter().enumerate() {
+            assert!(row < self.n, "seed_columns: row out of range");
+            self.kcols.entry(row).or_insert_with(|| panel.col(c));
+        }
+    }
+
+    /// Estimate ridge leverage scores from the support columns already in
+    /// the cache — the between-term probability refinement of
+    /// [`fit_adaptive`](crate::krr::SketchedKrr::fit_adaptive).
+    ///
+    /// With cached support `J` (|J| = s), this is one round of the BLESS
+    /// Nyström resolvent ([`bless`](crate::leverage::bless)) at the target
+    /// λ: `ℓ̂ᵢ = (kᵢᵢ − k_{iJ}(K_{JJ} + sλI)⁻¹k_{Ji}) / (nλ)`, clamped to
+    /// `[1e-12, 1]`. Every `k_{iJ}` entry reads the cache, so the only new
+    /// kernel work is the diagonal (`n` evaluations, counted) — the
+    /// landmark-panel cost `bless` would pay is amortised into the terms
+    /// already folded. With `J = [n]` the estimate is exact. `O(n·s²)`
+    /// flops; never materialises anything `n×n`. Returns `None` when the
+    /// cache is empty or λ ≤ 0.
+    pub fn estimate_leverage(&mut self, x: &Matrix, lambda: f64) -> Option<Vec<f64>> {
+        let j = self.cached_rows();
+        if j.is_empty() || !(lambda > 0.0) {
+            return None;
+        }
+        let s = j.len();
+        let mut a = Matrix::from_fn(s, s, |u, v| self.kcols[&j[v]][j[u]]);
+        a.symmetrize();
+        a.add_diag(s as f64 * lambda);
+        let fac = match chol_factor(&a) {
+            Some(f) => f,
+            None => {
+                a.add_diag(1e-8);
+                chol_factor(&a)?
+            }
+        };
+        let diag = GramOperator::new(self.kernel, x).diag();
+        self.kernel_evals += self.n;
+        let nl = self.n as f64 * lambda;
+        let mut ki = vec![0.0; s];
+        let mut scores = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            for (v, &row) in j.iter().enumerate() {
+                ki[v] = self.kcols[&row][i];
+            }
+            let sol = fac.solve(&ki);
+            let reduced: f64 = ki.iter().zip(sol.iter()).map(|(a, b)| a * b).sum();
+            scores.push(((diag[i] - reduced).max(0.0) / nl).clamp(1e-12, 1.0));
+        }
+        Some(scores)
+    }
+
     /// Snapshot into the one-shot [`SketchedGram`] shape the solvers take.
     pub fn snapshot(&self) -> SketchedGram {
         SketchedGram {
@@ -533,6 +601,61 @@ mod tests {
         let _ = inc.sync(&x, &acc);
         // support cannot exceed the 3 weighted rows → no new evals
         assert_eq!(inc.kernel_evals(), evals_after_first);
+    }
+
+    /// Pre-seeded columns (the BLESS landmark-panel reuse path) make a
+    /// sync whose support hits them cost zero kernel evaluations.
+    #[test]
+    fn seeded_columns_make_sync_free() {
+        let (kernel, x, mut rng) = setup(40);
+        let rows = [3usize, 17, 29];
+        let panel = GramOperator::new(kernel, &x).columns(&rows);
+        let mut weights = vec![0.0; 40];
+        for &r in &rows {
+            weights[r] = 1.0;
+        }
+        let d = 8;
+        let mut acc = crate::sketch::AccumSketch::new(40, d)
+            .with_sampling(crate::sketch::Sampling::Weighted(crate::rng::AliasTable::new(
+                &weights,
+            )));
+        let mut inc = IncrementalGram::new(kernel, 40, d);
+        inc.seed_columns(&rows, &panel);
+        assert_eq!(inc.cached_rows(), rows.to_vec());
+        assert_eq!(inc.kernel_evals(), 0, "seeding is free for the consumer");
+        acc.grow_to(4, &mut rng);
+        let _ = inc.sync(&x, &acc);
+        assert_eq!(inc.kernel_evals(), 0, "support ⊆ seeded rows → no evals");
+        // and the Grams are identical to an unseeded rebuild
+        let g = sketch_gram(&kernel, &x, &acc.as_sketch(), None);
+        assert_close(&inc.snapshot().stks, &g.stks, 1e-9, "StKS seeded");
+    }
+
+    /// With the full kernel in the cache, the refinement estimator reduces
+    /// to the exact ridge leverage scores (the J = [n] identity).
+    #[test]
+    fn estimate_leverage_exact_at_full_support() {
+        let (kernel, x, _) = setup(24);
+        let k = kernel_matrix(&kernel, &x);
+        let lambda = 1e-2;
+        let all: Vec<usize> = (0..24).collect();
+        let mut inc = IncrementalGram::new(kernel, 24, 4);
+        inc.seed_columns(&all, &k);
+        let got = inc.estimate_leverage(&x, lambda).expect("cache non-empty");
+        let want = crate::leverage::exact_scores(&k, lambda);
+        for i in 0..24 {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-8,
+                "score {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+        // only the diagonal was newly evaluated
+        assert_eq!(inc.kernel_evals(), 24);
+        // empty cache refuses
+        let mut empty = IncrementalGram::new(kernel, 24, 4);
+        assert!(empty.estimate_leverage(&x, lambda).is_none());
     }
 
     /// `AppendDelta::factor_update` reproduces the dense solver-matrix

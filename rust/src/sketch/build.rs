@@ -2,7 +2,7 @@
 //! evaluation compares against.
 
 use super::sparse::SparseSketch;
-use super::{AccumSketch, Sampling, Sketch};
+use super::{AccumSketch, PoissonSketch, Sampling, Sketch};
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
 
@@ -72,7 +72,9 @@ impl SketchBuilder {
         }
     }
 
-    /// Override the sampling distribution (e.g. leverage scores).
+    /// Override the sampling distribution (e.g. leverage scores, or
+    /// [`Sampling::Poisson`] to switch the sub-sampling kinds to per-row
+    /// independent inclusion).
     pub fn with_sampling(mut self, sampling: Sampling) -> Self {
         self.sampling = sampling;
         self
@@ -83,6 +85,11 @@ impl SketchBuilder {
         &self.kind
     }
 
+    /// The configured sampling distribution.
+    pub fn sampling(&self) -> &Sampling {
+        &self.sampling
+    }
+
     /// Draw a sketch `S ∈ ℝ^{n×d}`.
     ///
     /// Sub-sampling kinds (Nyström / accumulation) are built by growing an
@@ -90,10 +97,20 @@ impl SketchBuilder {
     /// build is *defined* to bit-match a sketch grown 1 → m from the same
     /// RNG stream (draws are consumed term-major: for each term, for each
     /// column, index then sign).
+    /// [`Sampling::Poisson`] routes the sub-sampling kinds (Nyström /
+    /// accumulation) to a [`PoissonSketch`] instead: one independent
+    /// inclusion pass at target dimension `d` (Poisson replaces *both* the
+    /// column draws and the accumulation count, so `m` does not apply and
+    /// `Accumulation` is rejected — grow the expected dimension via
+    /// [`PoissonSketch::grow_to`] instead). Dense kinds ignore the sampling
+    /// distribution as before.
     pub fn build(&self, n: usize, d: usize, rng: &mut Pcg64) -> Sketch {
         assert!(n > 0 && d > 0, "sketch: empty dims");
         match &self.kind {
             SketchKind::Nystrom => {
+                if matches!(self.sampling, Sampling::Poisson(_)) {
+                    return PoissonSketch::draw(n, d, &self.sampling, rng).as_sketch();
+                }
                 let mut acc = AccumSketch::new(n, d)
                     .with_sampling(self.sampling.clone())
                     .unsigned();
@@ -102,6 +119,11 @@ impl SketchBuilder {
             }
             SketchKind::Accumulation { m } => {
                 assert!(*m >= 1, "accumulation: m >= 1");
+                assert!(
+                    !matches!(self.sampling, Sampling::Poisson(_)),
+                    "poisson sampling is a one-shot inclusion scheme: use \
+                     SketchKind::Nystrom (or PoissonSketch directly) and grow d, not m"
+                );
                 let mut acc = AccumSketch::new(n, d).with_sampling(self.sampling.clone());
                 acc.grow_to(*m, rng);
                 acc.as_sketch()
@@ -174,9 +196,80 @@ mod tests {
         }
     }
 
+    /// Same check for an arbitrary builder (non-uniform sampling included —
+    /// the `1/√(d·m·pᵢ)` rescale must make *any* base distribution
+    /// unbiased).
+    fn empirical_ssT_for_builder(builder: SketchBuilder, n: usize, d: usize, reps: usize, tol: f64) {
+        let mut rng = Pcg64::seed(0xbeef);
+        let mut acc = Matrix::zeros(n, n);
+        for _ in 0..reps {
+            let s = builder.build(n, d, &mut rng).to_dense();
+            let sst = matmul_a_bt(&s, &s);
+            acc.axpy(1.0 / reps as f64, &sst);
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (acc[(i, j)] - want).abs() < tol,
+                    "({i},{j}) = {} want {want}",
+                    acc[(i, j)]
+                );
+            }
+        }
+    }
+
     #[test]
     fn nystrom_expectation_identity() {
         empirical_ssT_close_to_identity(SketchKind::Nystrom, 6, 40, 4000, 0.15);
+    }
+
+    /// E[SSᵀ] = I for *weighted* accumulation draws (the leverage-fed
+    /// scheme): skewed base probabilities, seeded Monte Carlo, pinned
+    /// tolerance.
+    #[test]
+    fn weighted_accumulation_expectation_identity() {
+        let table = AliasTable::new(&[1.0, 2.0, 3.0, 4.0, 5.0, 9.0]);
+        empirical_ssT_for_builder(
+            SketchBuilder::new(SketchKind::Accumulation { m: 4 })
+                .with_sampling(Sampling::Weighted(table)),
+            6,
+            40,
+            6000,
+            0.15,
+        );
+    }
+
+    /// E[SSᵀ] = I for Poisson inclusion over a skewed base distribution
+    /// (small d/n keeps every πᵢ < 1 so the random regime is exercised).
+    #[test]
+    fn poisson_expectation_identity() {
+        let table = AliasTable::new(&[1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        empirical_ssT_for_builder(
+            SketchBuilder::new(SketchKind::Nystrom).with_sampling(Sampling::Poisson(table)),
+            6,
+            2,
+            6000,
+            0.15,
+        );
+    }
+
+    #[test]
+    fn poisson_builder_routes_to_poisson_sketch() {
+        let n = 50;
+        let mut rng = Pcg64::seed(0x90);
+        let b = SketchBuilder::new(SketchKind::Nystrom)
+            .with_sampling(Sampling::Poisson(AliasTable::uniform(n)));
+        let s = b.build(n, 10, &mut rng);
+        let Sketch::Sparse(sp) = &s else {
+            panic!("poisson builds sparse")
+        };
+        // every column is a single row with weight 1/√π, π = 10/50
+        let want = (50.0f64 / 10.0).sqrt();
+        for j in 0..sp.d() {
+            assert_eq!(sp.col(j).len(), 1);
+            assert!((sp.col(j)[0].1 - want).abs() < 1e-12);
+        }
     }
 
     #[test]

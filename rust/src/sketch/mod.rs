@@ -44,6 +44,7 @@ mod amm;
 mod apply;
 mod build;
 mod localized;
+mod poisson;
 mod sparse;
 mod srht;
 
@@ -55,6 +56,7 @@ pub use apply::{
 };
 pub use build::{SketchBuilder, SketchKind};
 pub use localized::{localized, LocalKind};
+pub use poisson::PoissonSketch;
 pub use sparse::SparseSketch;
 pub use srht::{countsketch, fwht, srht};
 
@@ -66,19 +68,39 @@ use crate::rng::AliasTable;
 pub enum Sampling {
     /// `p_i = 1/n` (the classical Nyström choice).
     Uniform,
-    /// Arbitrary `p_i` (e.g. statistical leverage scores). The table also
-    /// retains the normalised probabilities needed for the `1/√(dmpᵢ)`
-    /// rescaling.
+    /// Arbitrary `p_i` (e.g. statistical leverage scores), drawn *with
+    /// replacement*: each sketch column samples one index from the table.
+    /// The table also retains the normalised probabilities needed for the
+    /// `1/√(dmpᵢ)` rescaling.
     Weighted(AliasTable),
+    /// Poisson sampling over the base distribution `p_i` (Wang, Zou & Wang,
+    /// arXiv:2205.08588): instead of `d` with-replacement column draws, row
+    /// `i` is included *independently* with probability
+    /// `πᵢ = min(1, d·pᵢ)` and reweighted by `1/√πᵢ`, so `E[SSᵀ] = Iₙ`
+    /// holds exactly and the column count is random with mean `≤ d`.
+    /// Materialised by [`PoissonSketch`] (one cached uniform per row, so
+    /// growing the target dimension is deterministic and nested); the
+    /// per-column draw machinery of [`AccumSketch`] does not apply.
+    Poisson(AliasTable),
 }
 
 impl Sampling {
-    /// Probability of index `i` under the distribution over `n` points.
+    /// Probability of index `i` under the (base) distribution over `n`
+    /// points. For [`Sampling::Poisson`] this is the base `p_i`, not the
+    /// inclusion probability — see [`Sampling::inclusion_prob`].
     pub fn prob(&self, i: usize, n: usize) -> f64 {
         match self {
             Sampling::Uniform => 1.0 / n as f64,
-            Sampling::Weighted(t) => t.p(i),
+            Sampling::Weighted(t) | Sampling::Poisson(t) => t.p(i),
         }
+    }
+
+    /// Poisson inclusion probability `πᵢ = min(1, d·pᵢ)` of row `i` at
+    /// target dimension `d`. Defined for every variant (any base
+    /// distribution can be Poisson-sampled); [`PoissonSketch`] uses this to
+    /// threshold its cached per-row uniforms.
+    pub fn inclusion_prob(&self, i: usize, n: usize, d: usize) -> f64 {
+        (d as f64 * self.prob(i, n)).min(1.0)
     }
 }
 

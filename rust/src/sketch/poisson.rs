@@ -1,0 +1,244 @@
+//! Poisson-sampled sub-sampling sketch — per-row independent inclusion as
+//! an alternative to the paper's with-replacement column draws.
+//!
+//! With-replacement sampling ([`AccumSketch`](super::AccumSketch) /
+//! [`SketchKind::Nystrom`](super::SketchKind)) draws `d` i.i.d. columns, so
+//! a high-probability row can be picked twice while another is missed.
+//! Poisson sampling (Wang, Zou & Wang, arXiv:2205.08588) instead includes
+//! each row `i` *independently* with probability `πᵢ = min(1, d·pᵢ)` and
+//! reweights the surviving rows by `1/√πᵢ`:
+//!
+//! ```text
+//!   E[SSᵀ] = Σᵢ πᵢ · (1/πᵢ) eᵢeᵢᵀ = Iₙ     (exactly, not just per column)
+//! ```
+//!
+//! The column count is random with mean `Σᵢ πᵢ ≤ d` — rows whose inclusion
+//! probability saturates at 1 enter deterministically with unit weight, so
+//! on a concentrated leverage profile the sketch degrades gracefully into
+//! an exact sub-matrix selection.
+//!
+//! **Determinism contract** (the Poisson analogue of grow-1→m): the sketch
+//! caches one uniform `uᵢ` per row, drawn in a single pass of exactly `n`
+//! [`Pcg64::uniform`] calls. Row `i` is included at target dimension `d`
+//! iff `uᵢ < πᵢ(d)`. Because `πᵢ(d)` is non-decreasing in `d`, the supports
+//! are *nested* as `d` grows, and [`PoissonSketch::grow_to`] rematerialises
+//! from the cached uniforms without touching the RNG — a sketch grown
+//! `d₀ → d` is bit-identical to a one-shot draw at `d` from the same RNG
+//! stream.
+
+use super::{Sampling, Sketch, SketchOps, SparseSketch};
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// A growable Poisson-sampled sketch over `n` points with target (expected)
+/// dimension `d_target`.
+#[derive(Clone, Debug)]
+pub struct PoissonSketch {
+    n: usize,
+    d_target: usize,
+    /// Base probabilities `pᵢ` (normalised; uniform = `1/n`).
+    probs: Vec<f64>,
+    /// One cached uniform per row; inclusion at dimension `d` is
+    /// `u[i] < min(1, d·probs[i])`, so growing `d` only moves thresholds.
+    u: Vec<f64>,
+    /// Materialised sparse view at the current `d_target`.
+    sparse: SparseSketch,
+}
+
+impl PoissonSketch {
+    /// Draw a Poisson sketch at target dimension `d_target` over the base
+    /// distribution of `sampling` (any variant: uniform, a leverage table,
+    /// or [`Sampling::Poisson`] carrying its table). Consumes exactly `n`
+    /// uniforms from `rng`, independent of `d_target`.
+    pub fn draw(n: usize, d_target: usize, sampling: &Sampling, rng: &mut Pcg64) -> PoissonSketch {
+        assert!(n > 0 && d_target > 0, "poisson sketch: empty dims");
+        let probs: Vec<f64> = (0..n).map(|i| sampling.prob(i, n)).collect();
+        let u: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let mut sk = PoissonSketch {
+            n,
+            d_target,
+            probs,
+            u,
+            sparse: SparseSketch::new(n, Vec::new()),
+        };
+        sk.materialise();
+        sk
+    }
+
+    /// Grow the target dimension (no-op if already at or beyond it).
+    /// Deterministic: rematerialises from the cached per-row uniforms, so
+    /// the result is bit-identical to a one-shot [`draw`](Self::draw) at
+    /// the new dimension, and the support only ever gains rows.
+    pub fn grow_to(&mut self, d_target: usize) {
+        if d_target <= self.d_target {
+            return;
+        }
+        self.d_target = d_target;
+        self.materialise();
+    }
+
+    fn materialise(&mut self) {
+        let d = self.d_target as f64;
+        let mut cols = Vec::new();
+        for i in 0..self.n {
+            let pi = (d * self.probs[i]).min(1.0);
+            if self.u[i] < pi {
+                // π = 1 rows carry exactly unit weight (1/√1), so the
+                // saturated regime is an unweighted row selection
+                cols.push(vec![(i, 1.0 / pi.sqrt())]);
+            }
+        }
+        self.sparse = SparseSketch::new(self.n, cols);
+    }
+
+    /// Target (expected) dimension `d` the inclusion probabilities use.
+    pub fn d_target(&self) -> usize {
+        self.d_target
+    }
+
+    /// Expected realised dimension `Σᵢ min(1, d·pᵢ)` (`≤ d_target`, with
+    /// equality iff no probability saturates).
+    pub fn expected_dim(&self) -> f64 {
+        let d = self.d_target as f64;
+        self.probs.iter().map(|&p| (d * p).min(1.0)).sum()
+    }
+
+    /// The materialised sparse sketch (one column per included row, in row
+    /// order).
+    pub fn sparse(&self) -> &SparseSketch {
+        &self.sparse
+    }
+
+    /// Clone into the [`Sketch`] enum (for APIs taking any sketch).
+    pub fn as_sketch(&self) -> Sketch {
+        Sketch::Sparse(self.sparse.clone())
+    }
+}
+
+impl SketchOps for PoissonSketch {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Realised dimension (number of included rows) — random, mean
+    /// [`expected_dim`](Self::expected_dim).
+    fn d(&self) -> usize {
+        self.sparse.d()
+    }
+
+    fn nnz(&self) -> usize {
+        self.sparse.nnz()
+    }
+
+    fn to_dense(&self) -> Matrix {
+        self.sparse.to_dense()
+    }
+
+    fn st_mat(&self, b: &Matrix) -> Matrix {
+        self.sparse.st_mat(b)
+    }
+
+    fn st_vec(&self, v: &[f64]) -> Vec<f64> {
+        self.sparse.st_vec(v)
+    }
+
+    fn s_vec(&self, w: &[f64]) -> Vec<f64> {
+        self.sparse.s_vec(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::AliasTable;
+
+    /// Grow-in-d determinism: a sketch grown d₀ → d bit-matches a one-shot
+    /// draw at d from the same RNG stream, and both consume exactly n
+    /// uniforms.
+    #[test]
+    fn grown_poisson_bit_matches_one_shot() {
+        let n = 100;
+        let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 9) as f64).collect();
+        let sampling = Sampling::Poisson(AliasTable::new(&weights));
+        let mut rng_grow = Pcg64::seed(0x9015);
+        let mut rng_shot = Pcg64::seed(0x9015);
+        let mut grown = PoissonSketch::draw(n, 4, &sampling, &mut rng_grow);
+        grown.grow_to(12);
+        grown.grow_to(24);
+        let shot = PoissonSketch::draw(n, 24, &sampling, &mut rng_shot);
+        assert_eq!(grown.d(), shot.d(), "realised dims");
+        for j in 0..shot.d() {
+            let a = grown.sparse().col(j);
+            let b = shot.col(j);
+            assert_eq!(a.len(), 1);
+            assert_eq!(a[0].0, b[0].0, "col {j} row");
+            assert_eq!(a[0].1.to_bits(), b[0].1.to_bits(), "col {j} weight bits");
+        }
+        // identical stream positions: both consumed exactly n uniforms
+        assert_eq!(rng_grow.next_u64(), rng_shot.next_u64());
+    }
+
+    /// Supports are nested in d (the coupling that makes grow deterministic).
+    #[test]
+    fn poisson_supports_are_nested_in_d() {
+        let n = 64;
+        let sampling = Sampling::Uniform;
+        let mut rng = Pcg64::seed(0x2b);
+        let mut sk = PoissonSketch::draw(n, 4, &sampling, &mut rng);
+        let small: Vec<usize> = sk.sparse().support();
+        sk.grow_to(16);
+        let big: Vec<usize> = sk.sparse().support();
+        assert!(small.iter().all(|r| big.contains(r)), "support must nest");
+        assert!(big.len() >= small.len());
+    }
+
+    /// `E[SSᵀ] = Iₙ` unbiasedness (seeded Monte Carlo, pinned tolerance).
+    /// Small n relative to d keeps every πᵢ strictly inside (0, 1) so the
+    /// test exercises the random regime rather than saturated selection.
+    #[test]
+    fn poisson_expectation_is_identity() {
+        let (n, d, reps) = (6, 3, 4000);
+        let mut rng = Pcg64::seed(0xbeef);
+        let sampling = Sampling::Uniform; // πᵢ = 3/6 = 1/2 per row
+        let mut acc = Matrix::zeros(n, n);
+        for _ in 0..reps {
+            let s = PoissonSketch::draw(n, d, &sampling, &mut rng).to_dense();
+            let sst = crate::linalg::matmul_a_bt(&s, &s);
+            for i in 0..n {
+                for j in 0..n {
+                    acc[(i, j)] += sst[(i, j)] / reps as f64;
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (acc[(i, j)] - want).abs() < 0.1,
+                    "E[SSᵀ][{i},{j}] = {} (want {want})",
+                    acc[(i, j)]
+                );
+            }
+        }
+    }
+
+    /// Saturated rows (πᵢ = 1) enter deterministically with unit weight.
+    #[test]
+    fn saturated_rows_included_with_unit_weight() {
+        let n = 10;
+        // all mass on rows 0 and 1 → at d = 4, π₀ = π₁ = 1, rest 0
+        let mut weights = vec![0.0; n];
+        weights[0] = 1.0;
+        weights[1] = 1.0;
+        let sampling = Sampling::Poisson(AliasTable::new(&weights));
+        let mut rng = Pcg64::seed(7);
+        let sk = PoissonSketch::draw(n, 4, &sampling, &mut rng);
+        assert_eq!(sk.d(), 2);
+        let support = sk.sparse().support();
+        assert_eq!(support, vec![0, 1]);
+        for j in 0..2 {
+            assert_eq!(sk.sparse().col(j)[0].1.to_bits(), 1.0f64.to_bits());
+        }
+        assert!((sk.expected_dim() - 2.0).abs() < 1e-12);
+    }
+}

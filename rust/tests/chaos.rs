@@ -12,7 +12,7 @@
 //! against whatever the environment armed.
 
 use accumkrr::coordinator::frame::{encode_frame, read_frame, write_frame};
-use accumkrr::coordinator::state::TrainRequest;
+use accumkrr::coordinator::state::{SamplingSpec, TrainRequest};
 use accumkrr::coordinator::{
     BatcherConfig, Client, ClientConfig, ModelStore, ServerConfig, ServerHandle,
 };
@@ -42,6 +42,7 @@ fn train_into(store: &ModelStore, name: &str) {
             seed: 5,
             adaptive: None,
             precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
         })
         .unwrap();
 }
@@ -125,6 +126,7 @@ fn downdate_fault_recovers_with_jitter_in_direct_fit() {
                 ..Default::default()
             }),
             precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
         })
         .expect("adaptive fit must survive an injected downdate failure");
     let rep = sm.model.report();

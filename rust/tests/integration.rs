@@ -158,6 +158,7 @@ fn coordinator_tcp_service_end_to_end() {
             seed: 9,
             adaptive: None,
             precision: accumkrr::linalg::Precision::F64,
+            sampling: accumkrr::coordinator::SamplingSpec::Uniform,
         })
         .unwrap();
     let addr = serve(

@@ -4,7 +4,7 @@
 //! compositions.
 
 use accumkrr::coordinator::frame::{read_frame, write_frame, MAX_FRAME};
-use accumkrr::coordinator::state::TrainRequest;
+use accumkrr::coordinator::state::{SamplingSpec, TrainRequest};
 use accumkrr::coordinator::{BatcherConfig, ModelStore, ServerConfig, ServerHandle};
 use accumkrr::linalg::Precision;
 use accumkrr::sketch::SketchKind;
@@ -30,6 +30,7 @@ fn store_with_model() -> Arc<ModelStore> {
             seed: 5,
             adaptive: None,
             precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
         })
         .unwrap();
     store
