@@ -17,6 +17,7 @@ mod hotpath;
 mod sampling;
 mod serve;
 mod thm8;
+mod tiles;
 
 pub use adaptive::{run_adaptive, run_adaptive_to};
 pub use cluster::{run_cluster, run_cluster_to};
@@ -31,6 +32,7 @@ pub use fig5::run_fig5;
 pub use sampling::{run_sampling, run_sampling_to};
 pub use serve::{run_serve, run_serve_to};
 pub use thm8::run_thm8;
+pub use tiles::{run_tiles, run_tiles_to};
 
 /// Dispatch a bench by id (`fig1`, `fig2`, `fig3`, `fig4`, `fig5`, `thm8`,
 /// `cost`, `adaptive`, `sampling`, `cluster`, `serve`). `fig4` is `fig3`
@@ -41,7 +43,9 @@ pub use thm8::run_thm8;
 /// `BENCH_sampling.json`; `cluster` compares streamed vs dense Laplacian
 /// spectral clustering and emits `BENCH_cluster.json`; `serve` load-tests
 /// the reactor serving plane (adaptive batching vs none) and emits
-/// `BENCH_serve.json`.
+/// `BENCH_serve.json`; `tiles` compares file-backed (out-of-core) vs
+/// resident training over the `TileSource` backends and emits
+/// `BENCH_tiles.json`.
 pub fn run(id: &str, opts: &BenchOpts) -> Result<Vec<Row>, String> {
     match id {
         "fig1" => Ok(run_fig1(opts)),
@@ -55,11 +59,12 @@ pub fn run(id: &str, opts: &BenchOpts) -> Result<Vec<Row>, String> {
         "sampling" => Ok(run_sampling(opts)),
         "cluster" => Ok(run_cluster(opts)),
         "serve" => Ok(run_serve(opts)),
+        "tiles" => Ok(run_tiles(opts)),
         "ext-sketches" => Ok(run_ext_sketches(opts)),
         "ext-amm" => Ok(run_ext_amm(opts)),
         "ext-kpca" => Ok(run_ext_kpca(opts)),
         other => Err(format!(
-            "unknown bench id {other:?} (try fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|sampling|cluster|serve|ext-sketches|ext-amm|ext-kpca)"
+            "unknown bench id {other:?} (try fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|sampling|cluster|serve|tiles|ext-sketches|ext-amm|ext-kpca)"
         )),
     }
 }

@@ -179,6 +179,7 @@ fn bench_config(
             adaptive: None,
             precision: Precision::F64,
             sampling: crate::coordinator::SamplingSpec::Uniform,
+            data: None,
         })
         .expect("serve bench: train");
     let handle = ServerHandle::start(

@@ -37,6 +37,7 @@
 
 use super::kmeans::kmeans;
 use super::laplacian::{LaplacianOperator, LAPLACIAN_SHIFT};
+use crate::data::TileSource;
 use crate::kernels::{GramOperator, Kernel};
 use crate::krr::kpca_from_gram;
 use crate::linalg::{eigh, matmul_at_b, partial_eigh_op, syrk_at_a, Matrix};
@@ -132,10 +133,13 @@ impl SpectralClustering {
     /// [`EmbedMethod::Operator`] route draws nothing and is fully
     /// deterministic. Returns `None` when the sketched pencil is too
     /// ill-conditioned to factor at every attempted `m` (never happens
-    /// on the operator route).
+    /// on the operator route). `x` is any [`TileSource`]: with a
+    /// file-backed source the whole fit — degrees, embedding, rounding —
+    /// runs with `X` on disk, streaming `tile×p` feature panels
+    /// (DESIGN.md §12); results are bitwise identical across backends.
     pub fn fit(
         kernel: Kernel,
-        x: &Matrix,
+        x: &dyn TileSource,
         opts: &SpectralOptions,
         rng: &mut Pcg64,
     ) -> Option<SpectralClustering> {

@@ -439,6 +439,7 @@ mod tests {
                 adaptive: None,
                 precision: crate::linalg::Precision::F64,
                 sampling: crate::coordinator::SamplingSpec::Uniform,
+                data: None,
             })
             .unwrap();
         store
@@ -571,6 +572,7 @@ mod tests {
                 adaptive: None,
                 precision: crate::linalg::Precision::F64,
                 sampling: crate::coordinator::SamplingSpec::Uniform,
+                data: None,
             })
             .unwrap();
         let y = b.predict("m", vec![vec![0.5, 0.5, 0.5]]).unwrap();

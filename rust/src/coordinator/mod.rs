@@ -100,6 +100,30 @@
 //!                              //      (JobScheduler), pick k by eigengap
 //! ```
 //!
+//! # Out-of-core data specs
+//!
+//! `train` and `cluster` both accept an optional `"data"` object
+//! pointing the job at feature rows already on disk instead of a named
+//! generator ([`state::DataSpec`], DESIGN.md §12). The whole job then
+//! streams row tiles through the [`crate::data::TileSource`] — `X` is
+//! never fully resident — and produces results bitwise identical to the
+//! same rows processed in memory:
+//!
+//! ```text
+//! {"op":"train", "name":"m",
+//!  "data":{"kind":"file",      // file | shards
+//!          "path":"x.bin",     // f64 LE row-major file / shard dir
+//!          "dim":8,            // features per row (file kind only;
+//!                              //  shards read it from manifest.json)
+//!          "y":"y.bin"},       // targets, f64 LE, length n (train only)
+//!  ...}
+//! ```
+//!
+//! When `"data"` is present, `dataset`/`n` are ignored (the file's row
+//! count is authoritative), rows are consumed as stored (writers
+//! pre-normalize), and the kernel is Matérn-3/2 (`train`) or Gaussian
+//! (`cluster`) at the requested bandwidth.
+//!
 //! Reply: `{"ok":true, "k", "labels":[…], "sizes":[…],
 //! "eigenvalues":[…]` (bottom Laplacian spectrum, ascending)`,
 //! "inertia", "secs"` plus `"chosen_m"` for sketched/adaptive embeddings,
@@ -120,4 +144,6 @@ pub use client::{Client, ClientConfig};
 pub use jobs::{JobScheduler, SweepPoint};
 pub use metrics::{Histogram, ServingMetrics};
 pub use server::{serve, ServerConfig, ServerHandle};
-pub use state::{ClusterRequest, ModelStore, SamplingSpec, StoredModel, TrainRequest};
+pub use state::{
+    parse_data_spec, ClusterRequest, DataSpec, ModelStore, SamplingSpec, StoredModel, TrainRequest,
+};

@@ -29,7 +29,8 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::reactor::{self, Done, ReactorConfig, ReplySink, Router};
 use crate::coordinator::state::{
-    parse_sketch_spec, run_cluster_job, ClusterRequest, ModelStore, SamplingSpec, TrainRequest,
+    parse_data_spec, parse_sketch_spec, run_cluster_job, ClusterRequest, ModelStore, SamplingSpec,
+    TrainRequest,
 };
 use crate::linalg::Precision;
 use crate::pool::TaskPool;
@@ -451,6 +452,12 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
         Ok(sp) => sp,
         Err(e) => return err(ErrorKind::InvalidInput, e),
     };
+    // optional "data": out-of-core source spec — train streams X off
+    // disk instead of generating the named dataset (DESIGN.md §12)
+    let data = match parse_data_spec(req) {
+        Ok(d) => d,
+        Err(e) => return err(ErrorKind::InvalidInput, e),
+    };
     let treq = TrainRequest {
         name: s("name", "default"),
         dataset: s("dataset", "bimodal"),
@@ -463,6 +470,7 @@ fn op_train(req: &Json, store: &ModelStore) -> Json {
         adaptive,
         precision,
         sampling,
+        data,
     };
     match store.train(&treq) {
         Ok(meta) => {
@@ -511,6 +519,10 @@ fn op_cluster(req: &Json) -> Json {
     };
     let u = |k: &str, d: usize| req.get(k).and_then(|v| v.as_usize()).unwrap_or(d);
     let f = |k: &str, d: f64| req.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+    let data = match parse_data_spec(req) {
+        Ok(d) => d,
+        Err(e) => return err(ErrorKind::InvalidInput, e),
+    };
     let creq = ClusterRequest {
         dataset: s("dataset", &defaults.dataset),
         n: u("n", defaults.n),
@@ -523,6 +535,7 @@ fn op_cluster(req: &Json) -> Json {
         rel_tol: f("rel_tol", defaults.rel_tol),
         bandwidth: f("bandwidth", defaults.bandwidth),
         seed: u("seed", defaults.seed as usize) as u64,
+        data,
     };
     match run_cluster_job(&creq) {
         Ok(reply) => reply,

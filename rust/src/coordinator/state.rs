@@ -1,9 +1,11 @@
 //! Model store: named trained models with JSON persistence.
 
-use crate::data::{normalize_features, Dataset};
+use crate::data::{
+    load_all, normalize_features, read_f64_vec, Dataset, F64File, ShardedFile, TileSource,
+};
 use crate::kernels::{kernel_matrix, Kernel};
 use crate::krr::{AdaptiveOptions, SketchedKrr};
-use crate::leverage::{bless, exact_scores, stat_dim_from_scores, BlessResult};
+use crate::leverage::{exact_scores, stat_dim_from_scores, try_bless, BlessResult};
 use crate::linalg::{Matrix, Precision};
 use crate::rng::{AliasTable, Pcg64};
 use crate::sketch::{Sampling, SketchBuilder, SketchKind};
@@ -36,7 +38,8 @@ pub struct StoredModel {
 /// Row-sampling scheme for the sketch draw — the coordinator-level knob
 /// over [`Sampling`]: `uniform` is the classical accumulation draw,
 /// `leverage` feeds ridge-leverage scores (exact for small `n`,
-/// [`bless`] beyond) into the per-term draw probabilities, `poisson`
+/// [`bless`](crate::leverage::bless) beyond) into the per-term draw
+/// probabilities, `poisson`
 /// turns the same profile into independent per-row inclusion
 /// (Nyström-shaped, one-shot).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -69,6 +72,71 @@ impl SamplingSpec {
             SamplingSpec::Poisson => "poisson",
         }
     }
+}
+
+/// Out-of-core dataset reference carried by `train`/`cluster` requests:
+/// instead of naming a generator, the client points at feature rows
+/// already on disk in one of the [`TileSource`] storage formats
+/// (DESIGN.md §12). The whole job then streams `tile×p` panels off the
+/// file — `X` is never fully resident — and produces results bitwise
+/// identical to the same rows trained in memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataSpec {
+    /// Backend: `file` (one little-endian f64 row-major file, opened as
+    /// [`F64File`]) or `shards` (a directory with a `manifest.json`,
+    /// opened as [`ShardedFile`]).
+    pub kind: String,
+    /// Path of the file (kind `file`) or shard directory (kind `shards`).
+    pub path: String,
+    /// Features per row. Required for `file` (the flat file carries no
+    /// geometry); ignored for `shards` (the manifest records it).
+    pub dim: usize,
+    /// Optional little-endian f64 file of training targets, length `n`.
+    /// Required by `train` jobs, unused by `cluster`.
+    pub y_path: Option<String>,
+}
+
+impl DataSpec {
+    /// Open the referenced backend. Malformed specs (unknown kind, bad
+    /// path, geometry mismatch) are `invalid_input` protocol errors.
+    pub fn open(&self) -> Result<Box<dyn TileSource>, CodedError> {
+        match self.kind.as_str() {
+            "file" => Ok(Box::new(F64File::open(&self.path, self.dim)?)),
+            "shards" => Ok(Box::new(ShardedFile::open(&self.path)?)),
+            other => Err(CodedError::invalid_input(format!(
+                "data: unknown kind {other:?} (file|shards)"
+            ))),
+        }
+    }
+}
+
+/// Parse the optional `data` object of a train/cluster request body:
+/// `{"kind": "file"|"shards", "path": ..., "dim": p, "y": ...}`.
+/// Shared by the TCP ops and the CLI so both surfaces accept identical
+/// specs. Absent field → `Ok(None)` (the request names a dataset
+/// instead).
+pub fn parse_data_spec(j: &Json) -> Result<Option<DataSpec>, String> {
+    let Some(obj) = j.get("data") else {
+        return Ok(None);
+    };
+    let kind = obj
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .ok_or("data.kind missing (file|shards)")?
+        .to_string();
+    let path = obj
+        .get("path")
+        .and_then(|v| v.as_str())
+        .ok_or("data.path missing")?
+        .to_string();
+    let dim = obj.get("dim").and_then(|v| v.as_usize()).unwrap_or(0);
+    let y_path = obj.get("y").and_then(|v| v.as_str()).map(str::to_string);
+    Ok(Some(DataSpec {
+        kind,
+        path,
+        dim,
+        y_path,
+    }))
 }
 
 /// Parameters of a `train` request (server op or CLI).
@@ -106,6 +174,11 @@ pub struct TrainRequest {
     /// to requests made before the knob existed — the leverage estimator
     /// runs on a *derived* RNG, never the sketch RNG).
     pub sampling: SamplingSpec,
+    /// Out-of-core dataset reference. When set, `dataset`/`n` are ignored
+    /// and the job streams X off disk (a `y` target file is required);
+    /// the kernel is Matérn-3/2 at `bandwidth` (default 1.0), matching
+    /// the CSV fallback of [`dataset_for`].
+    pub data: Option<DataSpec>,
 }
 
 /// Shards in the model registry. Power of two; 16 is plenty — the shard
@@ -226,10 +299,40 @@ impl ModelStore {
     pub fn train(&self, req: &TrainRequest) -> Result<StoredModel, CodedError> {
         validate_train_request(req)?;
         let mut rng = Pcg64::seed(req.seed);
-        let (mut ds, dx, kernel) = dataset_for(&req.dataset, req.n, req.bandwidth, &mut rng)
-            .map_err(CodedError::invalid_input)?;
-        normalize_features(&mut ds.x);
-        let n = ds.n();
+        // Resolve the training rows: a named/generated dataset (features
+        // normalized, fully resident) or an out-of-core `data` spec,
+        // where X stays on disk and every Gram pass streams row tiles
+        // through the [`TileSource`] (DESIGN.md §12). File-backed rows
+        // are consumed as stored — writers pre-normalize.
+        let (src, y, dx, kernel): (Box<dyn TileSource>, Vec<f64>, usize, Kernel) =
+            if let Some(spec) = &req.data {
+                let src = spec.open()?;
+                let y_path = spec.y_path.as_deref().ok_or_else(|| {
+                    CodedError::invalid_input("train: data spec needs a y target file")
+                })?;
+                let y = read_f64_vec(y_path)?;
+                if y.len() != src.rows() {
+                    return Err(CodedError::invalid_input(format!(
+                        "train: y file has {} targets but data has {} rows",
+                        y.len(),
+                        src.rows()
+                    )));
+                }
+                let dx = src.dim();
+                let bw = if req.bandwidth > 0.0 { req.bandwidth } else { 1.0 };
+                (src, y, dx, Kernel::matern(1.5, bw))
+            } else {
+                let (mut ds, dx, kernel) =
+                    dataset_for(&req.dataset, req.n, req.bandwidth, &mut rng)
+                        .map_err(CodedError::invalid_input)?;
+                normalize_features(&mut ds.x);
+                (Box::new(ds.x), ds.y, dx, kernel)
+            };
+        let x: &dyn TileSource = src.as_ref();
+        let n = x.rows();
+        if n == 0 {
+            return Err(CodedError::invalid_input("train: dataset has no rows"));
+        }
         let d = if req.d > 0 {
             req.d
         } else {
@@ -250,13 +353,12 @@ impl ModelStore {
         // *before* any sketch draw, on a derived RNG — the sketch RNG
         // stream is untouched, so a uniform request trains a model
         // bit-identical to the pre-knob coordinator.
-        let (sampling, warm, mut d_stat) =
-            resolve_sampling(req, &kernel, &ds.x, d, lambda)?;
+        let (sampling, warm, mut d_stat) = resolve_sampling(req, &kernel, x, d, lambda)?;
         let (model, sketch_name) = if let Some(aopts) = &req.adaptive {
             let builder = SketchBuilder::new(req.kind.clone()).with_sampling(sampling);
-            let (model, _trace) = SketchedKrr::fit_adaptive_warm(
-                kernel, &ds.x, &ds.y, &builder, d, lambda, aopts, &mut rng, warm.as_ref(),
-            )
+            let (model, _trace) = SketchedKrr::try_fit_adaptive_warm(
+                kernel, x, &y, &builder, d, lambda, aopts, &mut rng, warm.as_ref(),
+            )?
             .ok_or_else(|| CodedError::numeric("adaptive sketched fit failed (singular system)"))?;
             // between-term refinement estimates its own profile mid-fit;
             // that estimate supersedes any draw-time one
@@ -273,7 +375,7 @@ impl ModelStore {
                 .with_sampling(sampling)
                 .build(n, d, &mut rng);
             let model =
-                SketchedKrr::fit_with(kernel, &ds.x, &ds.y, &sketch, lambda, None, req.precision)
+                SketchedKrr::try_fit_with(kernel, x, &y, &sketch, lambda, None, req.precision)?
                     .ok_or_else(|| CodedError::numeric("sketched fit failed (singular system)"))?;
             let name = match req.sampling {
                 SamplingSpec::Uniform => req.kind.name(),
@@ -283,7 +385,7 @@ impl ModelStore {
             (model, name)
         };
         let train_secs = t.secs();
-        let train_mse = crate::stats::mse(model.fitted(), &ds.y);
+        let train_mse = crate::stats::mse(model.fitted(), &y);
         let stored = StoredModel {
             model: Arc::new(model),
             n_train: n,
@@ -314,7 +416,7 @@ const LEVERAGE_SEED_SALT: u64 = 0x1e7e_4a9e_5eed_0b1e;
 fn resolve_sampling(
     req: &TrainRequest,
     kernel: &Kernel,
-    x: &Matrix,
+    x: &dyn TileSource,
     d: usize,
     lambda: f64,
 ) -> Result<(Sampling, Option<BlessResult>, f64), CodedError> {
@@ -323,12 +425,15 @@ fn resolve_sampling(
     }
     let n = x.rows();
     let (table, warm, d_stat) = if n <= EXACT_LEVERAGE_N {
-        let scores = exact_scores(&kernel_matrix(kernel, x), lambda);
+        // small n: materialise the rows once — the exact identity needs
+        // the full n×n kernel matrix anyway
+        let xm = load_all(x)?;
+        let scores = exact_scores(&kernel_matrix(kernel, &xm), lambda);
         let ds = stat_dim_from_scores(&scores);
         (AliasTable::new(&scores), None, ds)
     } else {
         let mut lrng = Pcg64::seed(req.seed ^ LEVERAGE_SEED_SALT);
-        let b = bless(kernel, x, lambda, d, 2.0, &mut lrng);
+        let b = try_bless(kernel, x, lambda, d, 2.0, &mut lrng)?;
         let ds = stat_dim_from_scores(&b.scores);
         (b.sampling_table(), Some(b), ds)
     };
@@ -346,7 +451,9 @@ fn validate_train_request(req: &TrainRequest) -> Result<(), CodedError> {
     if req.name.is_empty() {
         return Err(CodedError::invalid_input("train: model name is empty"));
     }
-    if req.n == 0 {
+    // with an out-of-core data spec the row count comes from the file,
+    // not the request
+    if req.n == 0 && req.data.is_none() {
         return Err(CodedError::invalid_input("train: n must be >= 1"));
     }
     if !req.lambda.is_finite() || req.lambda < 0.0 {
@@ -518,6 +625,11 @@ pub struct ClusterRequest {
     pub bandwidth: f64,
     /// RNG seed (data generation + sketch draws).
     pub seed: u64,
+    /// Out-of-core dataset reference. When set, `dataset`/`n` are ignored
+    /// and the whole spectral fit streams X off disk with a Gaussian
+    /// kernel at `bandwidth` (default 1.5); no ground truth is known, so
+    /// the reply carries no `ari_vs_truth`.
+    pub data: Option<DataSpec>,
 }
 
 impl Default for ClusterRequest {
@@ -534,6 +646,7 @@ impl Default for ClusterRequest {
             rel_tol: 5e-2,
             bandwidth: 0.0,
             seed: 1,
+            data: None,
         }
     }
 }
@@ -608,7 +721,7 @@ pub fn run_cluster_job(req: &ClusterRequest) -> Result<Json, CodedError> {
         adjusted_rand_index, cluster_sizes, lloyd_kmeans, row_normalize, SpectralClustering,
         SpectralOptions,
     };
-    if req.n == 0 {
+    if req.n == 0 && req.data.is_none() {
         return Err(CodedError::invalid_input("cluster: n must be >= 1"));
     }
     if !req.bandwidth.is_finite() || req.bandwidth < 0.0 {
@@ -623,13 +736,23 @@ pub fn run_cluster_job(req: &ClusterRequest) -> Result<Json, CodedError> {
     // data generation always uses the requested k (the "true" cluster
     // count for labelled generators); k_max only bounds the search
     let gen_k = req.k.max(2);
-    let (x, truth, kernel) =
-        cluster_dataset_for(&req.dataset, req.n, gen_k, req.bandwidth, &mut rng)
-            .map_err(CodedError::invalid_input)?;
+    // an out-of-core `data` spec clusters rows already on disk: the fit
+    // streams tiles through the TileSource (DESIGN.md §12), bitwise
+    // identical to the same rows clustered in memory
+    let (x, truth, kernel): (Box<dyn TileSource>, Option<Vec<usize>>, Kernel) =
+        if let Some(spec) = &req.data {
+            let bw = if req.bandwidth > 0.0 { req.bandwidth } else { 1.5 };
+            (spec.open()?, None, Kernel::gaussian(bw))
+        } else {
+            let (x, truth, kernel) =
+                cluster_dataset_for(&req.dataset, req.n, gen_k, req.bandwidth, &mut rng)
+                    .map_err(CodedError::invalid_input)?;
+            (Box::new(x), truth, kernel)
+        };
     // validate against the *actual* row count — CSV datasets may hold
-    // fewer rows than requested (dataset_for truncates), and a bad k or
-    // k_max must surface as a protocol error, not a panic that kills
-    // the connection thread
+    // fewer rows than requested (dataset_for truncates), file-backed
+    // sources carry their own count, and a bad k or k_max must surface
+    // as a protocol error, not a panic that kills the connection thread
     let n = x.rows();
     if fit_k < 1 || fit_k > n {
         return Err(CodedError::invalid_input(format!(
@@ -662,7 +785,7 @@ pub fn run_cluster_job(req: &ClusterRequest) -> Result<Json, CodedError> {
         ..Default::default()
     };
     let t = crate::util::Timer::start();
-    let fit = SpectralClustering::fit(kernel, &x, &opts, &mut rng)
+    let fit = SpectralClustering::fit(kernel, x.as_ref(), &opts, &mut rng)
         .ok_or_else(|| CodedError::numeric("cluster: sketched pencil factorisation failed"))?;
     // model selection: per-k Lloyd sweep through the job scheduler +
     // eigengap choice on the bottom Laplacian spectrum
@@ -807,6 +930,7 @@ mod tests {
             adaptive: None,
             precision: Precision::F64,
             sampling: SamplingSpec::Uniform,
+            data: None,
         };
         let meta = store.train(&req).unwrap();
         assert_eq!(meta.n_train, 200);
@@ -835,6 +959,7 @@ mod tests {
             }),
             precision: Precision::F64,
             sampling: SamplingSpec::Uniform,
+            data: None,
         };
         let meta = store.train(&req).unwrap();
         let rep = *meta.model.report();
@@ -859,6 +984,7 @@ mod tests {
             adaptive: None,
             precision: Precision::F64,
             sampling: SamplingSpec::Leverage,
+            data: None,
         };
         let meta = store.train(&req).unwrap();
         assert_eq!(meta.sketch, "accum_m4_lev");
@@ -884,6 +1010,7 @@ mod tests {
             adaptive: None,
             precision: Precision::F64,
             sampling: SamplingSpec::Poisson,
+            data: None,
         };
         let meta = store.train(&req).unwrap();
         assert_eq!(meta.sketch, "poisson");
@@ -908,6 +1035,7 @@ mod tests {
             adaptive: None,
             precision: Precision::F64,
             sampling: SamplingSpec::Poisson,
+            data: None,
         };
         let cases = [
             // poisson cannot grow adaptively
@@ -954,6 +1082,7 @@ mod tests {
             }),
             precision: Precision::F64,
             sampling: SamplingSpec::Uniform,
+            data: None,
         };
         let meta = store.train(&req).unwrap();
         let rep = *meta.model.report();
@@ -1002,6 +1131,7 @@ mod tests {
             adaptive: None,
             precision: Precision::F64,
             sampling: SamplingSpec::Uniform,
+            data: None,
         };
         let err = store.train(&req).unwrap_err();
         assert_eq!(err.kind, crate::util::ErrorKind::InvalidInput);
@@ -1025,6 +1155,7 @@ mod tests {
             adaptive: None,
             precision: Precision::F64,
             sampling: SamplingSpec::Uniform,
+            data: None,
         };
         let cases = [
             TrainRequest { name: "".into(), ..base.clone() },
@@ -1058,6 +1189,7 @@ mod tests {
             adaptive: None,
             precision: Precision::F64,
             sampling: SamplingSpec::Uniform,
+            data: None,
         };
         store.train(&req).unwrap();
         assert!(!store.is_quarantined("q"));
@@ -1233,6 +1365,158 @@ mod tests {
         );
         assert_eq!(store.get(&names[0]).unwrap().n_train, 21);
         assert_eq!(store.list().len(), names.len());
+    }
+
+    #[test]
+    fn parse_data_spec_reads_and_rejects() {
+        let j = Json::parse(
+            r#"{"data":{"kind":"file","path":"/tmp/x.bin","dim":4,"y":"/tmp/y.bin"}}"#,
+        )
+        .unwrap();
+        let spec = parse_data_spec(&j).unwrap().unwrap();
+        assert_eq!(spec.kind, "file");
+        assert_eq!(spec.path, "/tmp/x.bin");
+        assert_eq!(spec.dim, 4);
+        assert_eq!(spec.y_path.as_deref(), Some("/tmp/y.bin"));
+        // absent field → no spec; missing kind/path → protocol error
+        assert_eq!(parse_data_spec(&Json::parse("{}").unwrap()).unwrap(), None);
+        assert!(parse_data_spec(&Json::parse(r#"{"data":{"path":"p"}}"#).unwrap()).is_err());
+        assert!(parse_data_spec(&Json::parse(r#"{"data":{"kind":"file"}}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn file_backed_train_matches_in_memory_bitwise() {
+        use crate::data::{write_f64_file, write_f64_vec};
+        let mut drng = Pcg64::seed(0x0dc1);
+        let n = 80;
+        let x = Matrix::from_fn(n, 3, |_, _| drng.normal());
+        let y: Vec<f64> = (0..n).map(|i| (x[(i, 0)] + x[(i, 1)]).sin()).collect();
+        let xp = std::env::temp_dir().join("accumkrr_state_train_x.bin");
+        let yp = std::env::temp_dir().join("accumkrr_state_train_y.bin");
+        write_f64_file(xp.to_str().unwrap(), &x).unwrap();
+        write_f64_vec(yp.to_str().unwrap(), &y).unwrap();
+        let store = ModelStore::new();
+        let req = TrainRequest {
+            name: "ooc".into(),
+            dataset: String::new(),
+            n: 0,
+            kind: SketchKind::Accumulation { m: 4 },
+            d: 10,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 11,
+            adaptive: None,
+            precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
+            data: Some(DataSpec {
+                kind: "file".into(),
+                path: xp.to_string_lossy().into_owned(),
+                dim: 3,
+                y_path: Some(yp.to_string_lossy().into_owned()),
+            }),
+        };
+        let meta = store.train(&req).unwrap();
+        assert_eq!(meta.n_train, n);
+        assert!(meta.train_mse.is_finite());
+        // replicate the job in memory: the same seed draws the same
+        // sketch, and the streamed file route must land on bitwise the
+        // same coefficients
+        let mut rng = Pcg64::seed(11);
+        let sketch = SketchBuilder::new(SketchKind::Accumulation { m: 4 })
+            .with_sampling(Sampling::Uniform)
+            .build(n, 10, &mut rng);
+        let want = SketchedKrr::fit_with(
+            Kernel::matern(1.5, 1.0),
+            &x,
+            &y,
+            &sketch,
+            1e-3,
+            None,
+            Precision::F64,
+        )
+        .unwrap();
+        assert_eq!(meta.model.beta(), want.beta());
+        std::fs::remove_file(&xp).ok();
+        std::fs::remove_file(&yp).ok();
+    }
+
+    #[test]
+    fn shard_backed_cluster_job_runs_from_disk() {
+        use crate::data::write_shards;
+        let mut drng = Pcg64::seed(0x0dc2);
+        let n = 90;
+        let x = Matrix::from_fn(n, 2, |i, _| {
+            let c = if i % 2 == 0 { 4.0 } else { -4.0 };
+            c + 0.3 * drng.normal()
+        });
+        let dir = std::env::temp_dir().join("accumkrr_state_cluster_shards");
+        write_shards(dir.to_str().unwrap(), &x, 17).unwrap();
+        let req = ClusterRequest {
+            k: 2,
+            data: Some(DataSpec {
+                kind: "shards".into(),
+                path: dir.to_string_lossy().into_owned(),
+                dim: 0,
+                y_path: None,
+            }),
+            ..Default::default()
+        };
+        let j = run_cluster_job(&req).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("n").and_then(|v| v.as_usize()), Some(n));
+        assert_eq!(
+            j.get("labels").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(n)
+        );
+        assert!(j.get("ari_vs_truth").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn data_spec_errors_are_protocol_errors() {
+        use crate::data::{write_f64_file, write_f64_vec};
+        use crate::util::ErrorKind;
+        // unknown backend kind
+        let bad = DataSpec {
+            kind: "mmap".into(),
+            path: "x".into(),
+            dim: 2,
+            y_path: None,
+        };
+        assert_eq!(bad.open().unwrap_err().kind, ErrorKind::InvalidInput);
+        // a train data spec must carry targets, of matching length
+        let xp = std::env::temp_dir().join("accumkrr_state_noy_x.bin");
+        let yp = std::env::temp_dir().join("accumkrr_state_noy_y.bin");
+        let x = Matrix::from_fn(6, 2, |i, j| (i * 2 + j) as f64);
+        write_f64_file(xp.to_str().unwrap(), &x).unwrap();
+        write_f64_vec(yp.to_str().unwrap(), &[0.0; 5]).unwrap();
+        let store = ModelStore::new();
+        let mut req = TrainRequest {
+            name: "noy".into(),
+            dataset: String::new(),
+            n: 0,
+            kind: SketchKind::Nystrom,
+            d: 3,
+            lambda: 1e-3,
+            bandwidth: 0.0,
+            seed: 1,
+            adaptive: None,
+            precision: Precision::F64,
+            sampling: SamplingSpec::Uniform,
+            data: Some(DataSpec {
+                kind: "file".into(),
+                path: xp.to_string_lossy().into_owned(),
+                dim: 2,
+                y_path: None,
+            }),
+        };
+        let err = store.train(&req).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::InvalidInput, "{err}");
+        req.data.as_mut().unwrap().y_path = Some(yp.to_string_lossy().into_owned());
+        let err = store.train(&req).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::InvalidInput, "{err}");
+        std::fs::remove_file(&xp).ok();
+        std::fs::remove_file(&yp).ok();
     }
 
     #[test]

@@ -45,10 +45,14 @@ impl Dataset {
 }
 
 /// Load a numeric CSV whose **last column is the response** (the layout of
-/// the UCI RQA/CASP/GAS files after their header row).
+/// the UCI RQA/CASP/GAS files after their header row). Streams the file
+/// line by line (`BufRead` into a reused buffer) instead of slurping it
+/// with `read_to_string`, so ingestion cost is one parsed copy of the
+/// values — never text + values — matching the out-of-core story
+/// (DESIGN.md §12).
 pub fn load_csv_dataset(path: &str, skip_header: bool) -> Result<Dataset, String> {
-    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-    let m = csv::parse_numeric(&text, skip_header)?;
+    let file = std::fs::File::open(path).map_err(|e| format!("{path}: {e}"))?;
+    let m = csv::parse_numeric_reader(std::io::BufReader::new(file), skip_header)?;
     if m.cols() < 2 {
         return Err("dataset needs ≥ 1 feature + response".into());
     }
@@ -150,6 +154,46 @@ mod tests {
         assert_eq!(ds.n(), 2);
         assert_eq!(ds.x.cols(), 2);
         assert_eq!(ds.y, vec![3.0, 6.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn multi_megabyte_csv_streams_with_unchanged_behavior() {
+        // Regression for the read_to_string → BufRead switch: a CSV well
+        // past any internal buffer size must round-trip with identical
+        // shape, values, and error context to the in-memory parser.
+        use std::io::Write;
+        let path = std::env::temp_dir().join("accumkrr_loader_big.csv");
+        let (n, p) = (40_000usize, 7usize);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        writeln!(f, "{},y", (0..p - 1).map(|j| format!("f{j}")).collect::<Vec<_>>().join(",")).unwrap();
+        for i in 0..n {
+            let row: Vec<String> =
+                (0..p).map(|j| format!("{:.6}", ((i * p + j) as f64).sin())).collect();
+            writeln!(f, "{}", row.join(",")).unwrap();
+        }
+        drop(f);
+        assert!(std::fs::metadata(&path).unwrap().len() > 2_000_000, "fixture must be multi-MB");
+        let ds = load_csv_dataset(path.to_str().unwrap(), true).unwrap();
+        assert_eq!((ds.n(), ds.x.cols()), (n, p - 1));
+        for &i in &[0usize, 1, 12_345, n - 1] {
+            for j in 0..p - 1 {
+                assert_eq!(ds.x[(i, j)], format!("{:.6}", ((i * p + j) as f64).sin()).parse::<f64>().unwrap());
+            }
+            assert_eq!(ds.y[i], format!("{:.6}", ((i * p + p - 1) as f64).sin()).parse::<f64>().unwrap());
+        }
+        // error context is unchanged: corrupt one field deep in the file
+        // and expect the same line/col message the in-memory parser gives
+        let text = std::fs::read_to_string(&path).unwrap();
+        let needle = format!("{:.6}", ((12_345 * p + 3) as f64).sin());
+        let bad = text.replacen(&needle, "not_a_number", 1);
+        assert_ne!(text, bad, "corruption target must exist");
+        drop(text);
+        std::fs::write(&path, &bad).unwrap();
+        let stream_err = load_csv_dataset(path.to_str().unwrap(), true).unwrap_err();
+        let mem_err = crate::util::csv::parse_numeric(&bad, true).unwrap_err();
+        assert_eq!(stream_err, mem_err);
+        assert!(stream_err.contains("not a number"), "{stream_err}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,11 +1,17 @@
 //! Datasets: the paper's synthetic bimodal generator, simulated UCI
 //! surrogates (see `data::ucisim` for the substitutions), a CSV loader for the real
-//! files, and preprocessing (normalisation, train/test splits).
+//! files, preprocessing (normalisation, train/test splits), and the
+//! out-of-core [`TileSource`] storage backends (DESIGN.md §12).
 
 mod loader;
 mod synthetic;
+pub mod tiles;
 mod ucisim;
 
 pub use loader::{load_csv_dataset, normalize_features, train_test_split, Dataset};
 pub use synthetic::{bimodal, blobs, f_star, rings, two_moons, BimodalConfig};
+pub use tiles::{
+    gather_rows_source, load_all, load_rows, read_f64_vec, write_f64_file, write_f64_vec,
+    write_shards, F64File, ShardedFile, TileCache, TileSource, CACHE_BUDGET_ENV,
+};
 pub use ucisim::{casp_sim, gas_sim, rqa_sim, UciSim};

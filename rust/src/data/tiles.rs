@@ -1,0 +1,823 @@
+//! Out-of-core tile sources — the storage layer under every row tile.
+//!
+//! `GramOperator` freed the pipeline from the `O(n²)` kernel matrix by
+//! streaming `K[tile, :]`; the last residency wall was `X` itself. A
+//! [`TileSource`] abstracts "the rows of X" behind one operation —
+//! [`fill_tile`](TileSource::fill_tile) copies rows `r0..r1` into a
+//! caller-owned buffer — so every consumer (fit, adaptive, KPCA,
+//! leverage, ksat, clustering) runs at `O(tile·p + n·d)` resident with
+//! the dataset on disk.
+//!
+//! Three backends:
+//!
+//! * **in-memory** — [`Matrix`] itself implements the trait (row copies
+//!   out of the resident buffer; [`as_matrix`](TileSource::as_matrix)
+//!   exposes the zero-copy fast path), so every existing `&Matrix` call
+//!   site coerces to `&dyn TileSource` unchanged;
+//! * [`F64File`] — one headerless little-endian f64 row-major file, read
+//!   with positioned `pread`s (`std::os::unix::fs::FileExt::read_at`).
+//!   No mmap crate: `pread` keeps the zero-registry-deps invariant, never
+//!   takes a SIGBUS on a truncated file, and makes every byte that enters
+//!   the address space an explicit, fault-injectable read;
+//! * [`ShardedFile`] — a directory of row-range shards listed by a tiny
+//!   JSON manifest ([`MANIFEST`]); tiles may straddle any number of shard
+//!   boundaries, including a ragged final shard.
+//!
+//! # The equivalence contract
+//!
+//! Backends supply **exact bytes**: `fill_tile` must reproduce the f64
+//! bit patterns of the in-memory rows, so the assembly schedule above it
+//! (fixed column blocks through the row-stable GEMM — see
+//! `kernels::operator`) makes every downstream result bitwise identical
+//! across backends, tile sizes and thread counts. `tests/tiles.rs` pins
+//! that end to end.
+//!
+//! File reads are wired into the `util::fault` `io.read` seam: an armed
+//! fault surfaces as a [`CodedError`] from `fill_tile` and propagates up
+//! the fallible (`try_*`) operator entry points — no panic, no partially
+//! filled cache entry (DESIGN.md §12).
+
+use crate::linalg::Matrix;
+use crate::util::fault;
+use crate::util::json::Json;
+use crate::util::CodedError;
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::Write as _;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+
+/// Name of the shard-directory manifest file.
+pub const MANIFEST: &str = "manifest.json";
+
+/// A random-access source of dataset rows. `fill_tile` is the single
+/// primitive every streamed consumer is built on; implementations must
+/// reproduce the exact f64 bit patterns of the logical matrix (see the
+/// module docs for why that makes the storage backend invisible).
+///
+/// `Sync` because row tiles are pulled from inside pool-parallel
+/// assembly loops; `Debug` so operators holding a `&dyn TileSource`
+/// can keep deriving `Debug`.
+pub trait TileSource: Sync + std::fmt::Debug {
+    /// Number of rows `n` in the logical matrix.
+    fn rows(&self) -> usize;
+
+    /// Number of columns `p` (the feature dimension).
+    fn dim(&self) -> usize;
+
+    /// Copy rows `r0..r1` (row-major, `(r1-r0)·dim` values) into `out`.
+    /// Callers pass `r0 ≤ r1 ≤ rows()` and a correctly sized buffer;
+    /// violations are programmer errors (panic), while I/O failures —
+    /// real or injected through the `io.read` fault seam — come back as
+    /// a [`CodedError`].
+    fn fill_tile(&self, r0: usize, r1: usize, out: &mut [f64]) -> Result<(), CodedError>;
+
+    /// The resident matrix, if this source is the in-memory backend —
+    /// the zero-copy fast path for consumers that genuinely need all of
+    /// `X` (dense-sketch application, `SymOp::materialize`). Disk
+    /// backends return `None` and those consumers fall back to
+    /// [`load_all`].
+    fn as_matrix(&self) -> Option<&Matrix> {
+        None
+    }
+}
+
+/// The in-memory backend: the matrix itself. `fill_tile` is a straight
+/// row-range copy, `as_matrix` the zero-copy escape hatch — which is
+/// what makes `&Matrix` coerce to `&dyn TileSource` at every call site
+/// that predates the out-of-core layer.
+impl TileSource for Matrix {
+    fn rows(&self) -> usize {
+        Matrix::rows(self)
+    }
+
+    fn dim(&self) -> usize {
+        self.cols()
+    }
+
+    fn fill_tile(&self, r0: usize, r1: usize, out: &mut [f64]) -> Result<(), CodedError> {
+        let p = self.cols();
+        out.copy_from_slice(&self.data()[r0 * p..r1 * p]);
+        Ok(())
+    }
+
+    fn as_matrix(&self) -> Option<&Matrix> {
+        Some(self)
+    }
+}
+
+/// Copy rows `r0..r1` of a source into a fresh tile matrix.
+pub fn load_rows(src: &dyn TileSource, r0: usize, r1: usize) -> Result<Matrix, CodedError> {
+    let mut t = Matrix::zeros(r1 - r0, src.dim());
+    src.fill_tile(r0, r1, t.data_mut())?;
+    Ok(t)
+}
+
+/// Materialise the whole source as one resident matrix — the documented
+/// *exit* from the out-of-core memory model (dense-sketch application
+/// and `SymOp::materialize` fallbacks only). The in-memory backend
+/// short-circuits to a clone of itself.
+pub fn load_all(src: &dyn TileSource) -> Result<Matrix, CodedError> {
+    if let Some(m) = src.as_matrix() {
+        return Ok(m.clone());
+    }
+    load_rows(src, 0, src.rows())
+}
+
+/// Gather selected rows (duplicates allowed, any order) into a new
+/// matrix — the source-routed analogue of `kernels::gather_rows`, used
+/// for landmark / support panels. One `fill_tile` per requested row.
+pub fn gather_rows_source(src: &dyn TileSource, idx: &[usize]) -> Result<Matrix, CodedError> {
+    let p = src.dim();
+    let mut out = Matrix::zeros(idx.len(), p);
+    for (r, &i) in idx.iter().enumerate() {
+        let dst = &mut out.data_mut()[r * p..(r + 1) * p];
+        src.fill_tile(i, i + 1, dst)?;
+    }
+    Ok(out)
+}
+
+/// The armed-`io.read` error every file backend returns: one stable
+/// message shape so chaos tests and logs can attribute the failure to
+/// the storage layer.
+fn injected_read_error(path: &str) -> CodedError {
+    CodedError::internal(format!("tile source {path}: injected io.read fault"))
+}
+
+fn read_error(path: &str, e: std::io::Error) -> CodedError {
+    CodedError::internal(format!("tile source {path}: read failed: {e}"))
+}
+
+/// Decode a little-endian f64 byte buffer into `out`.
+fn decode_le_f64(bytes: &[u8], out: &mut [f64]) {
+    for (dst, chunk) in out.iter_mut().zip(bytes.chunks_exact(8)) {
+        *dst = f64::from_le_bytes(chunk.try_into().expect("8-byte chunk"));
+    }
+}
+
+/// One headerless little-endian f64 row-major file. The row count is
+/// derived from the file length (which must divide evenly into
+/// `8·dim`-byte rows), so the on-disk format is exactly
+/// `Matrix::data()`'s buffer — [`write_f64_file`] round-trips bitwise.
+#[derive(Debug)]
+pub struct F64File {
+    file: File,
+    path: String,
+    rows: usize,
+    dim: usize,
+}
+
+impl F64File {
+    /// Open `path` as an `n×dim` f64 matrix. Length mismatches (or
+    /// `dim == 0`) are `invalid_input` — malformed data specs must
+    /// surface as protocol errors, never a panic mid-fit.
+    pub fn open(path: &str, dim: usize) -> Result<F64File, CodedError> {
+        if dim == 0 {
+            return Err(CodedError::invalid_input(format!(
+                "tile source {path}: dim must be >= 1"
+            )));
+        }
+        let file = File::open(path)
+            .map_err(|e| CodedError::invalid_input(format!("tile source {path}: {e}")))?;
+        let len = file
+            .metadata()
+            .map_err(|e| CodedError::invalid_input(format!("tile source {path}: {e}")))?
+            .len() as usize;
+        let row_bytes = 8 * dim;
+        if len % row_bytes != 0 {
+            return Err(CodedError::invalid_input(format!(
+                "tile source {path}: {len} bytes is not a whole number of {dim}-column f64 rows"
+            )));
+        }
+        Ok(F64File {
+            file,
+            path: path.to_string(),
+            rows: len / row_bytes,
+            dim,
+        })
+    }
+}
+
+impl TileSource for F64File {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn fill_tile(&self, r0: usize, r1: usize, out: &mut [f64]) -> Result<(), CodedError> {
+        assert!(r0 <= r1 && r1 <= self.rows, "fill_tile: row range");
+        assert_eq!(out.len(), (r1 - r0) * self.dim, "fill_tile: buffer size");
+        if r0 == r1 {
+            return Ok(());
+        }
+        if fault::hit("io.read") {
+            return Err(injected_read_error(&self.path));
+        }
+        let mut bytes = vec![0u8; out.len() * 8];
+        self.file
+            .read_exact_at(&mut bytes, (r0 * self.dim * 8) as u64)
+            .map_err(|e| read_error(&self.path, e))?;
+        decode_le_f64(&bytes, out);
+        Ok(())
+    }
+}
+
+/// One shard of a [`ShardedFile`]: an open handle plus the global row
+/// range it covers.
+#[derive(Debug)]
+struct Shard {
+    file: File,
+    path: String,
+    start: usize,
+    rows: usize,
+}
+
+/// A directory of fixed-format row shards described by a
+/// [`MANIFEST`] JSON file:
+///
+/// ```text
+/// {"dim": 4,
+///  "shards": [{"file": "shard-00000.bin", "rows": 1000},
+///             {"file": "shard-00001.bin", "rows": 1000},
+///             {"file": "shard-00002.bin", "rows": 613}]}
+/// ```
+///
+/// Each shard is the same headerless little-endian f64 row-major format
+/// as [`F64File`]; the final shard may be ragged. `fill_tile` maps a
+/// global row span onto however many shards it straddles and issues one
+/// positioned read per shard segment.
+#[derive(Debug)]
+pub struct ShardedFile {
+    dir: String,
+    dim: usize,
+    rows: usize,
+    shards: Vec<Shard>,
+}
+
+impl ShardedFile {
+    /// Open a shard directory by reading and validating its manifest:
+    /// every listed shard must exist with exactly `8·dim·rows` bytes, so
+    /// format drift is caught at open time, not as a short read mid-fit.
+    pub fn open(dir: &str) -> Result<ShardedFile, CodedError> {
+        let mpath = Path::new(dir).join(MANIFEST);
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            CodedError::invalid_input(format!("tile source {}: {e}", mpath.display()))
+        })?;
+        let j = Json::parse(&text).map_err(|e| {
+            CodedError::invalid_input(format!("tile source {}: bad manifest: {e}", mpath.display()))
+        })?;
+        let bad = |what: &str| {
+            CodedError::invalid_input(format!(
+                "tile source {}: manifest missing {what}",
+                mpath.display()
+            ))
+        };
+        let dim = j
+            .get("dim")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad("dim"))?;
+        if dim == 0 {
+            return Err(CodedError::invalid_input(format!(
+                "tile source {}: dim must be >= 1",
+                mpath.display()
+            )));
+        }
+        let entries = j
+            .get("shards")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("shards"))?;
+        let mut shards = Vec::with_capacity(entries.len());
+        let mut start = 0usize;
+        for e in entries {
+            let name = e
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| bad("shard file"))?;
+            let rows = e
+                .get("rows")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| bad("shard rows"))?;
+            let spath = Path::new(dir).join(name);
+            let file = File::open(&spath).map_err(|e| {
+                CodedError::invalid_input(format!("tile source {}: {e}", spath.display()))
+            })?;
+            let len = file
+                .metadata()
+                .map_err(|e| {
+                    CodedError::invalid_input(format!("tile source {}: {e}", spath.display()))
+                })?
+                .len() as usize;
+            if len != rows * dim * 8 {
+                return Err(CodedError::invalid_input(format!(
+                    "tile source {}: {len} bytes, manifest says {rows} rows x {dim} cols",
+                    spath.display()
+                )));
+            }
+            shards.push(Shard {
+                file,
+                path: spath.display().to_string(),
+                start,
+                rows,
+            });
+            start += rows;
+        }
+        Ok(ShardedFile {
+            dir: dir.to_string(),
+            dim,
+            rows: start,
+            shards,
+        })
+    }
+}
+
+impl TileSource for ShardedFile {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn fill_tile(&self, r0: usize, r1: usize, out: &mut [f64]) -> Result<(), CodedError> {
+        assert!(r0 <= r1 && r1 <= self.rows, "fill_tile: row range");
+        assert_eq!(out.len(), (r1 - r0) * self.dim, "fill_tile: buffer size");
+        if r0 == r1 {
+            return Ok(());
+        }
+        // one fault-point evaluation per tile (not per straddled shard),
+        // so nth/every trigger counts line up with fill_tile calls
+        if fault::hit("io.read") {
+            return Err(injected_read_error(&self.dir));
+        }
+        // first shard containing r0 (starts are ascending)
+        let mut s = match self
+            .shards
+            .binary_search_by(|sh| sh.start.cmp(&r0))
+        {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let mut row = r0;
+        while row < r1 {
+            let sh = &self.shards[s];
+            let lo = row - sh.start; // local start row within the shard
+            let hi = (r1 - sh.start).min(sh.rows); // local end row
+            let seg = &mut out[(row - r0) * self.dim..(sh.start + hi - r0) * self.dim];
+            let mut bytes = vec![0u8; seg.len() * 8];
+            sh.file
+                .read_exact_at(&mut bytes, (lo * self.dim * 8) as u64)
+                .map_err(|e| read_error(&sh.path, e))?;
+            decode_le_f64(&bytes, seg);
+            row = sh.start + hi;
+            s += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Environment knob for the [`TileCache`] byte budget, in megabytes.
+pub const CACHE_BUDGET_ENV: &str = "ACCUMKRR_TILE_CACHE_MB";
+
+/// Default [`TileCache`] budget when [`CACHE_BUDGET_ENV`] is unset.
+const DEFAULT_CACHE_MB: usize = 256;
+
+#[derive(Clone, Debug)]
+struct CacheSlot {
+    row: usize,
+    col: Vec<f64>,
+    pinned: bool,
+    /// Second-chance bit; a `Cell` so reads (`get`) can mark recency
+    /// without `&mut`.
+    referenced: std::cell::Cell<bool>,
+}
+
+/// Byte-budgeted working set of f64 columns keyed by row index — the
+/// explicit form of `IncrementalGram`'s support-column cache
+/// (DESIGN.md §12).
+///
+/// * **Pinned** entries (the accumulated sketch's support columns — the
+///   solver's live working set) are exempt from eviction and may carry
+///   the cache past its budget; the budget then bounds only the
+///   *opportunistic* population (seeded landmark panels, refinement
+///   leftovers).
+/// * Unpinned entries are evicted by a deterministic **clock**
+///   (second-chance) sweep: a hand walks the slot ring, clears one
+///   referenced bit per pass, and frees the first unreferenced unpinned
+///   slot. Slot positions are assigned from an explicit free list (never
+///   compacted), so the ring order — and therefore every eviction
+///   decision — is a pure function of the operation sequence: no
+///   hashing, clocks, or addresses involved, keeping cache behavior
+///   bit-reproducible across runs, backends, and thread counts.
+/// * Entries are inserted whole (a column is computed, *then* cached),
+///   so a failed source read can never leave a partially filled column
+///   behind — the chaos suite pins that.
+///
+/// Budget accounting covers column payload bytes (`8·len`); the default
+/// comes from [`CACHE_BUDGET_ENV`] (megabytes, default 256). Tests use
+/// [`set_budget`](TileCache::set_budget) rather than the env var to
+/// avoid cross-test races.
+#[derive(Clone, Debug)]
+pub struct TileCache {
+    slots: Vec<Option<CacheSlot>>,
+    free: Vec<usize>,
+    index: HashMap<usize, usize>,
+    hand: usize,
+    budget: usize,
+    bytes: usize,
+}
+
+impl TileCache {
+    /// Empty cache with an explicit byte budget.
+    pub fn new(budget_bytes: usize) -> TileCache {
+        TileCache {
+            slots: Vec::new(),
+            free: Vec::new(),
+            index: HashMap::new(),
+            hand: 0,
+            budget: budget_bytes,
+            bytes: 0,
+        }
+    }
+
+    /// Empty cache budgeted from [`CACHE_BUDGET_ENV`] (megabytes; default
+    /// 256 MB when unset or unparsable).
+    pub fn from_env() -> TileCache {
+        let mb = std::env::var(CACHE_BUDGET_ENV)
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CACHE_MB);
+        TileCache::new(mb.saturating_mul(1024 * 1024))
+    }
+
+    /// Byte budget for unpinned residency.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Payload bytes currently cached (pinned + unpinned).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Number of cached columns.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Re-budget (the test hook) and evict down to the new budget.
+    pub fn set_budget(&mut self, budget_bytes: usize) {
+        self.budget = budget_bytes;
+        self.evict_to_budget();
+    }
+
+    /// Is this row's column cached?
+    pub fn contains(&self, row: usize) -> bool {
+        self.index.contains_key(&row)
+    }
+
+    /// Fetch a cached column, marking it recently used.
+    pub fn get(&self, row: usize) -> Option<&[f64]> {
+        let &i = self.index.get(&row)?;
+        let s = self.slots[i].as_ref().expect("indexed slot is occupied");
+        s.referenced.set(true);
+        Some(&s.col)
+    }
+
+    /// Pin an already-cached row into the working set (no-op if absent);
+    /// returns whether the row was present.
+    pub fn pin(&mut self, row: usize) -> bool {
+        match self.index.get(&row) {
+            Some(&i) => {
+                self.slots[i].as_mut().expect("indexed slot is occupied").pinned = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Insert a complete column. If the row is already cached the
+    /// existing column is kept (columns are immutable for a fixed
+    /// dataset) and only upgraded to `pinned` if requested. New entries
+    /// may trigger clock eviction of unpinned columns down to the
+    /// budget.
+    pub fn insert(&mut self, row: usize, col: Vec<f64>, pinned: bool) {
+        if let Some(&i) = self.index.get(&row) {
+            let s = self.slots[i].as_mut().expect("indexed slot is occupied");
+            s.pinned |= pinned;
+            s.referenced.set(true);
+            return;
+        }
+        self.bytes += col.len() * 8;
+        let slot = CacheSlot {
+            row,
+            col,
+            pinned,
+            referenced: std::cell::Cell::new(true),
+        };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(slot);
+                i
+            }
+            None => {
+                self.slots.push(Some(slot));
+                self.slots.len() - 1
+            }
+        };
+        self.index.insert(row, i);
+        self.evict_to_budget();
+    }
+
+    /// Rows currently cached, sorted ascending.
+    pub fn cached_rows(&self) -> Vec<usize> {
+        let mut rows: Vec<usize> = self.index.keys().copied().collect();
+        rows.sort_unstable();
+        rows
+    }
+
+    /// Clock sweep: while over budget, advance the hand over the slot
+    /// ring, give referenced slots a second chance, and evict the first
+    /// unreferenced unpinned slot. Gives up after two full revolutions
+    /// without an eviction (everything left is pinned).
+    fn evict_to_budget(&mut self) {
+        if self.slots.is_empty() {
+            return;
+        }
+        let mut idle_steps = 0usize;
+        while self.bytes > self.budget && idle_steps < 2 * self.slots.len() {
+            if self.hand >= self.slots.len() {
+                self.hand = 0;
+            }
+            let i = self.hand;
+            self.hand = (self.hand + 1) % self.slots.len();
+            let evict = match &self.slots[i] {
+                Some(s) if !s.pinned => {
+                    if s.referenced.get() {
+                        s.referenced.set(false);
+                        false
+                    } else {
+                        true
+                    }
+                }
+                _ => false,
+            };
+            if evict {
+                let s = self.slots[i].take().expect("slot checked occupied");
+                self.index.remove(&s.row);
+                self.bytes -= s.col.len() * 8;
+                self.free.push(i);
+                idle_steps = 0;
+            } else {
+                idle_steps += 1;
+            }
+        }
+    }
+}
+
+/// Write a matrix as one headerless little-endian f64 row-major file —
+/// the [`F64File`] on-disk format. Round-trips bitwise.
+pub fn write_f64_file(path: &str, x: &Matrix) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(File::create(path)?);
+    for v in x.data() {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.flush()
+}
+
+/// Write a matrix as a [`ShardedFile`] directory: `shard_rows` rows per
+/// shard (the final shard ragged), plus the [`MANIFEST`].
+pub fn write_shards(dir: &str, x: &Matrix, shard_rows: usize) -> std::io::Result<()> {
+    assert!(shard_rows >= 1, "write_shards: shard_rows >= 1");
+    std::fs::create_dir_all(dir)?;
+    let p = x.cols();
+    let mut entries = Vec::new();
+    let mut r0 = 0usize;
+    let mut idx = 0usize;
+    while r0 < Matrix::rows(x) || (Matrix::rows(x) == 0 && idx == 0) {
+        let r1 = (r0 + shard_rows).min(Matrix::rows(x));
+        let name = format!("shard-{idx:05}.bin");
+        let mut f = std::io::BufWriter::new(File::create(Path::new(dir).join(&name))?);
+        for v in &x.data()[r0 * p..r1 * p] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        f.flush()?;
+        entries.push(Json::obj(vec![
+            ("file", Json::Str(name)),
+            ("rows", Json::from(r1 - r0)),
+        ]));
+        r0 = r1;
+        idx += 1;
+        if Matrix::rows(x) == 0 {
+            break;
+        }
+    }
+    let manifest = Json::obj(vec![
+        ("dim", Json::from(p)),
+        ("shards", Json::Arr(entries)),
+    ]);
+    std::fs::write(Path::new(dir).join(MANIFEST), manifest.to_string())
+}
+
+/// Write a vector as a headerless little-endian f64 file (targets /
+/// labels riding next to a feature file).
+pub fn write_f64_vec(path: &str, v: &[f64]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(File::create(path)?);
+    for x in v {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    f.flush()
+}
+
+/// Read a whole little-endian f64 vector file (the `y` side of a
+/// file-backed train job — `O(n)` resident by design).
+pub fn read_f64_vec(path: &str) -> Result<Vec<f64>, CodedError> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| CodedError::invalid_input(format!("tile source {path}: {e}")))?;
+    if bytes.len() % 8 != 0 {
+        return Err(CodedError::invalid_input(format!(
+            "tile source {path}: {} bytes is not a whole number of f64 values",
+            bytes.len()
+        )));
+    }
+    let mut out = vec![0.0f64; bytes.len() / 8];
+    decode_le_f64(&bytes, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("accumkrr_tiles_{name}"))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn randm(seed: u64, n: usize, p: usize) -> Matrix {
+        let mut r = Pcg64::seed(seed);
+        Matrix::from_fn(n, p, |_, _| r.normal())
+    }
+
+    fn tile_of(src: &dyn TileSource, r0: usize, r1: usize) -> Vec<f64> {
+        let mut out = vec![0.0; (r1 - r0) * src.dim()];
+        src.fill_tile(r0, r1, &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn matrix_backend_is_identity() {
+        let x = randm(1, 13, 4);
+        let src: &dyn TileSource = &x;
+        assert_eq!((src.rows(), src.dim()), (13, 4));
+        assert_eq!(tile_of(src, 0, 13), x.data());
+        assert_eq!(tile_of(src, 5, 9), &x.data()[5 * 4..9 * 4]);
+        assert!(std::ptr::eq(src.as_matrix().unwrap(), &x));
+    }
+
+    #[test]
+    fn f64_file_roundtrips_bitwise() {
+        let x = randm(2, 57, 3);
+        let path = tmp("roundtrip.bin");
+        write_f64_file(&path, &x).unwrap();
+        let f = F64File::open(&path, 3).unwrap();
+        assert_eq!((TileSource::rows(&f), f.dim()), (57, 3));
+        assert_eq!(tile_of(&f, 0, 57), x.data());
+        for &(a, b) in &[(0usize, 1usize), (10, 11), (3, 40), (56, 57), (8, 8)] {
+            assert_eq!(tile_of(&f, a, b), &x.data()[a * 3..b * 3], "span {a}..{b}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn f64_file_rejects_bad_shapes() {
+        let path = tmp("badlen.bin");
+        std::fs::write(&path, [0u8; 20]).unwrap(); // not a multiple of 8·dim
+        assert!(F64File::open(&path, 3).is_err());
+        assert!(F64File::open(&path, 0).is_err());
+        assert!(F64File::open(&tmp("nonexistent.bin"), 2).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sharded_roundtrips_across_boundaries() {
+        let x = randm(3, 47, 5);
+        let dir = tmp("shards_roundtrip");
+        write_shards(&dir, &x, 10).unwrap(); // 4 full shards + ragged 7
+        let s = ShardedFile::open(&dir).unwrap();
+        assert_eq!((TileSource::rows(&s), s.dim()), (47, 5));
+        assert_eq!(tile_of(&s, 0, 47), x.data());
+        // spans inside one shard, straddling one boundary, straddling
+        // several, and touching the ragged tail
+        for &(a, b) in &[(2usize, 7usize), (8, 13), (5, 38), (39, 47), (46, 47)] {
+            assert_eq!(tile_of(&s, a, b), &x.data()[a * 5..b * 5], "span {a}..{b}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_rejects_manifest_drift() {
+        let x = randm(4, 12, 2);
+        let dir = tmp("shards_drift");
+        write_shards(&dir, &x, 5).unwrap();
+        // truncate a shard behind the manifest's back
+        let victim = Path::new(&dir).join("shard-00001.bin");
+        std::fs::write(&victim, [0u8; 8]).unwrap();
+        assert!(ShardedFile::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(ShardedFile::open(&tmp("no_such_dir")).is_err());
+    }
+
+    #[test]
+    fn vec_file_roundtrips() {
+        let v: Vec<f64> = (0..19).map(|i| (i as f64).sin()).collect();
+        let path = tmp("vec.bin");
+        write_f64_vec(&path, &v).unwrap();
+        assert_eq!(read_f64_vec(&path).unwrap(), v);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tile_cache_evicts_unpinned_by_clock_and_respects_pins() {
+        let col = |v: f64| vec![v; 4]; // 32 bytes each
+        let mut c = TileCache::new(96); // room for 3 columns
+        c.insert(10, col(1.0), true); // pinned — never evicted
+        c.insert(11, col(2.0), false);
+        c.insert(12, col(3.0), false);
+        assert_eq!((c.len(), c.bytes()), (3, 96));
+        // over budget: the clock clears second-chance bits on pass one,
+        // then evicts the first unpinned slot in ring order (row 11)
+        c.insert(13, col(4.0), false);
+        assert_eq!(c.bytes(), 96);
+        assert!(c.contains(10) && !c.contains(11), "rows: {:?}", c.cached_rows());
+        assert_eq!(c.cached_rows(), vec![10, 12, 13]);
+        // a get() renews row 12's second chance, so the next eviction
+        // passes it over and takes row 13
+        assert_eq!(c.get(12).unwrap(), &[3.0; 4]);
+        c.insert(14, col(5.0), false);
+        assert_eq!(c.cached_rows(), vec![10, 12, 14]);
+        // pins win over the budget: pinning everything lets inserts
+        // exceed it rather than evict the working set
+        c.pin(12);
+        c.pin(14);
+        c.insert(15, col(6.0), true);
+        assert!(c.bytes() > c.budget());
+        assert_eq!(c.cached_rows(), vec![10, 12, 14, 15]);
+        // re-inserting an existing row keeps one copy and can upgrade it
+        c.insert(15, col(9.0), false);
+        assert_eq!(c.get(15).unwrap(), &[6.0; 4]);
+        assert_eq!(c.len(), 4);
+        // shrinking the budget only sheds what is unpinned (nothing here)
+        c.set_budget(0);
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn tile_cache_eviction_order_is_deterministic() {
+        let run = || {
+            let mut c = TileCache::new(256); // 4 × 64-byte columns
+            for r in 0..12usize {
+                c.insert(r, vec![r as f64; 8], r % 5 == 0);
+                if r % 3 == 0 {
+                    c.get(r / 2);
+                }
+            }
+            c.cached_rows()
+        };
+        let first = run();
+        for _ in 0..5 {
+            assert_eq!(run(), first);
+        }
+    }
+
+    #[test]
+    fn injected_read_fault_surfaces_as_coded_error_and_heals() {
+        use crate::util::ErrorKind;
+        let x = randm(5, 20, 3);
+        let fpath = tmp("faulty.bin");
+        let dir = tmp("faulty_shards");
+        write_f64_file(&fpath, &x).unwrap();
+        write_shards(&dir, &x, 6).unwrap();
+        let f = F64File::open(&fpath, 3).unwrap();
+        let s = ShardedFile::open(&dir).unwrap();
+        {
+            let _g = fault::scoped("io.read=every:1");
+            let mut out = vec![0.0; 12];
+            let ef = f.fill_tile(0, 4, &mut out).unwrap_err();
+            assert_eq!(ef.kind, ErrorKind::Internal);
+            let es = s.fill_tile(4, 8, &mut out).unwrap_err();
+            assert_eq!(es.kind, ErrorKind::Internal);
+        }
+        // guard dropped: the same sources serve clean tiles again
+        assert_eq!(tile_of(&f, 0, 20), x.data());
+        assert_eq!(tile_of(&s, 0, 20), x.data());
+        std::fs::remove_file(&fpath).ok();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

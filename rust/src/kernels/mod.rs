@@ -27,5 +27,5 @@ pub use matrix::{
     assembly_guard, cross_kernel, cross_kernel_rowstable, gather_rows, kernel_cols, kernel_diag,
     kernel_matrix,
 };
-pub use operator::{GramOperator, DEFAULT_TILE};
+pub use operator::{GramOperator, COL_TILE, DEFAULT_TILE, ROW_TILE_ENV};
 pub use rff::{RandomFourierFeatures, RffKrr};

@@ -3,9 +3,10 @@
 //! The paper's whole argument is that accumulation makes the *effective*
 //! problem `d×d`; the one thing that must never happen on the way there is
 //! materialising the `n×n` kernel matrix. [`GramOperator`] assembles
-//! `K[tile, :]` on the fly (one row tile at a time, through the same
-//! GEMM-routed [`cross_kernel`] that dense assembly uses) and exposes the
-//! products the rest of the system actually consumes:
+//! `K[tile, :]` on the fly over a [`TileSource`] — the rows of `X`
+//! in memory, in one f64 file, or across a shard directory
+//! (DESIGN.md §12) — and exposes the products the rest of the system
+//! actually consumes:
 //!
 //! * `K·B` / `Kᵀ·B` ([`matmul`](GramOperator::matmul) — identical for the
 //!   symmetric Gram) for dense-sketch application and subspace iteration,
@@ -20,61 +21,110 @@
 //!   consumers (KPCA pencil, K-satisfiability) iterate `K/n` implicitly.
 //!
 //! Peak memory is `O(tile·n + n·d)` — the tile panel plus the thin
-//! factors — instead of `O(n²)`, which is what flips the system's scaling
-//! ceiling from RAM to arithmetic.
+//! factors — instead of `O(n²)`; with a file-backed source, `X` itself
+//! drops out of residency too and the footprint becomes
+//! `O(tile·p + n·d)`. That is what flips the system's scaling ceiling
+//! from RAM to arithmetic (and, out of core, to I/O bandwidth).
 //!
 //! # Determinism rule
 //!
-//! Results are **bitwise independent of the tile size and the thread
-//! count**. Two disciplines buy that (same spirit as the GEMM core's
-//! fixed row panels, DESIGN.md §5):
+//! Results are **bitwise independent of the tile size, the thread count,
+//! and the storage backend**. Three disciplines buy that (same spirit as
+//! the GEMM core's fixed row panels, DESIGN.md §5):
 //!
-//! 1. tile assembly is per-row independent: each row of `K[tile, :]` is
-//!    produced by the same GEMM + norm-fold + kernel-map sequence whatever
-//!    tile it lands in (the packed GEMM's per-element accumulation order
-//!    depends only on the inner dimension, and `p ≤ KC` always holds for
-//!    feature matrices);
-//! 2. every output row of a product has exactly one owner, and its
+//! 1. every backend feeds the assembly the exact f64 bytes of `X`'s rows
+//!    (the [`TileSource`] contract), and every backend — the in-memory
+//!    one included — goes through the same `fill_tile` → scratch-panel
+//!    path, so there is literally one code path to be invariant;
+//! 2. panels are assembled through the row-stable GEMM entry
+//!    ([`cross_kernel_rowstable`]) over a **fixed [`COL_TILE`]-wide
+//!    column-block schedule**: block boundaries sit at multiples of
+//!    `COL_TILE` whatever the row-tile height, so each `K[i, c0..c1]`
+//!    block is produced by an identical GEMM + norm-fold + kernel-map
+//!    call however rows are tiled (the row-stable entry never takes the
+//!    small-flops shortcut, whose accumulation order would otherwise
+//!    depend on the tile height);
+//! 3. every output row of a product has exactly one owner, and its
 //!    accumulation order is fixed: `out[i, :] = Σⱼ K[i,j]·B[j, :]` with
 //!    `j` strictly ascending, regardless of how rows are grouped into
 //!    tiles or distributed over workers.
 //!
 //! The streamed products therefore differ from the dense
-//! `kernel_matrix` + packed-GEMM route only by floating-point grouping
-//! (and not at all for `n ≤ KC`); equality tests pin both routes together.
+//! `kernel_matrix` + packed-GEMM route only by floating-point grouping;
+//! equality tests pin both routes together, and `tests/tiles.rs` pins
+//! whole-pipeline outputs bitwise across all three backends.
+//!
+//! # Fallibility
+//!
+//! Disk reads can fail (and the `io.read` fault seam injects failures on
+//! purpose), so every product has a fallible `try_*` core returning
+//! [`CodedError`]; the original infallible names are thin wrappers that
+//! panic on error — the right behavior for in-memory sources (which
+//! cannot fail) and for consumers behind the coordinator's worker-panic
+//! containment. Fit paths route through the `try_*` entries so an
+//! injected read failure surfaces as a coded error, not a panic.
 
 use super::functions::Kernel;
 use super::matrix::{
-    cross_kernel, cross_kernel_f32, cross_kernel_rows_f32, gather_rows, kernel_diag, kernel_matrix,
+    cross_kernel_f32, cross_kernel_rows_f32, cross_kernel_rowstable, kernel_diag, kernel_matrix,
 };
+use crate::data::{gather_rows_source, load_all, load_rows, TileSource};
 use crate::linalg::{syrk_at_a, Matrix, Precision, SymOp};
 use crate::pool;
 use crate::sketch::{Sketch, SketchOps, SparseSketch};
+use crate::util::CodedError;
 use std::collections::HashMap;
 
 /// Default row-tile height: matches the assembly tile in
 /// `kernels::matrix` (L2-resident working set at the paper's widths).
 pub const DEFAULT_TILE: usize = 128;
 
-/// Row-tiled implicit Gram matrix `α·K` over the rows of `x` (`n×p`).
-/// Cheap to copy — it owns only the kernel, a data reference, and the
-/// schedule knobs.
+/// Env var overriding the row-tile height every new operator starts
+/// with (`ACCUMKRR_ROW_TILE`). A memory/performance knob like
+/// [`with_tile`](GramOperator::with_tile) — results are bitwise
+/// unaffected, which is exactly why `tests/tiles.rs` uses it to drive
+/// *whole fits* across tile heights without any API plumbing.
+pub const ROW_TILE_ENV: &str = "ACCUMKRR_ROW_TILE";
+
+/// The starting tile height: [`ROW_TILE_ENV`] when set to a positive
+/// integer, [`DEFAULT_TILE`] otherwise.
+fn initial_tile() -> usize {
+    std::env::var(ROW_TILE_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(DEFAULT_TILE)
+}
+
+/// Fixed column-block width of the panel assembly schedule. Not a tuning
+/// knob: the determinism contract (see the module docs) is defined in
+/// terms of these block boundaries, so the value is part of the bitwise
+/// behavior. 512 keeps a block of `B` rows L2-resident next to the tile
+/// and is a multiple of every SIMD lane width in use, so only the final
+/// ragged block ever runs map tails.
+pub const COL_TILE: usize = 512;
+
+/// Row-tiled implicit Gram matrix `α·K` over the rows of a tile source
+/// (`n×p`). Cheap to copy — it owns only the kernel, a source reference,
+/// and the schedule knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct GramOperator<'a> {
     kernel: Kernel,
-    x: &'a Matrix,
+    src: &'a dyn TileSource,
     tile: usize,
     scale: f64,
     precision: Precision,
 }
 
 impl<'a> GramOperator<'a> {
-    /// Operator for the un-scaled Gram `K` of `x` under `kernel`.
-    pub fn new(kernel: Kernel, x: &'a Matrix) -> GramOperator<'a> {
+    /// Operator for the un-scaled Gram `K` of a source under `kernel`.
+    /// `&Matrix` coerces to the source trait object, so in-memory call
+    /// sites are unchanged: `GramOperator::new(kern, &x)`.
+    pub fn new(kernel: Kernel, src: &'a dyn TileSource) -> GramOperator<'a> {
         GramOperator {
             kernel,
-            x,
-            tile: DEFAULT_TILE,
+            src,
+            tile: initial_tile(),
             scale: 1.0,
             precision: Precision::F64,
         }
@@ -93,9 +143,10 @@ impl<'a> GramOperator<'a> {
     /// `exp` under AVX2), `K·B` accumulates in f32, and each output entry
     /// is widened to f64 exactly once. Radial kernels only — non-radial
     /// kernels silently stay on the f64 path. All `d×d` solves downstream
-    /// remain f64 regardless. Determinism contracts (bitwise tile- and
-    /// thread-invariance) hold for the f32 path too; only the precision
-    /// of the values changes (bounds: EXPERIMENTS.md §Mixed-precision).
+    /// remain f64 regardless. Determinism contracts (bitwise tile-,
+    /// thread- and backend-invariance) hold for the f32 path too; only
+    /// the precision of the values changes (bounds: EXPERIMENTS.md
+    /// §Mixed-precision).
     pub fn with_precision(mut self, precision: Precision) -> GramOperator<'a> {
         self.precision = precision;
         self
@@ -116,7 +167,7 @@ impl<'a> GramOperator<'a> {
 
     /// Number of data points `n` (the operator is `n×n`).
     pub fn n(&self) -> usize {
-        self.x.rows()
+        self.src.rows()
     }
 
     /// Kernel behind the operator.
@@ -124,35 +175,72 @@ impl<'a> GramOperator<'a> {
         &self.kernel
     }
 
-    /// Data matrix the Gram is implicit over.
-    pub fn data(&self) -> &Matrix {
-        self.x
+    /// The tile source the Gram is implicit over.
+    pub fn source(&self) -> &'a dyn TileSource {
+        self.src
     }
 
-    /// `diag(α·K)` — `O(n)` evaluations, no assembly.
-    pub fn diag(&self) -> Vec<f64> {
-        let mut d = kernel_diag(&self.kernel, self.x);
+    /// `diag(α·K)` — `O(n)` evaluations, streamed one row tile at a time.
+    pub fn try_diag(&self) -> Result<Vec<f64>, CodedError> {
+        let n = self.n();
+        let mut d = Vec::with_capacity(n);
+        let mut r0 = 0usize;
+        while r0 < n {
+            let r1 = (r0 + self.tile).min(n);
+            let xt = load_rows(self.src, r0, r1)?;
+            d.extend_from_slice(&kernel_diag(&self.kernel, &xt));
+            r0 = r1;
+        }
         if self.scale != 1.0 {
             for v in d.iter_mut() {
                 *v *= self.scale;
             }
         }
-        d
+        Ok(d)
+    }
+
+    /// Infallible [`GramOperator::try_diag`] — panics on a source read
+    /// failure (in-memory sources cannot fail).
+    pub fn diag(&self) -> Vec<f64> {
+        self.try_diag().expect("gram operator: tile source read failed")
     }
 
     /// Gathered column block `α·K[:, idx]` (`n × |idx|`) — the Nyström /
-    /// landmark fast path, `O(n·|idx|)` evaluations and memory.
-    pub fn columns(&self, idx: &[usize]) -> Matrix {
-        let landmarks = gather_rows(self.x, idx);
-        let mut c = if self.use_f32() {
-            cross_kernel_f32(&self.kernel, self.x, &landmarks)
-        } else {
-            cross_kernel(&self.kernel, self.x, &landmarks)
-        };
+    /// landmark fast path, `O(n·|idx|)` evaluations and memory. The
+    /// landmark rows are gathered once; the `n`-side streams row tiles
+    /// through the row-stable assembly, so the result is bitwise
+    /// tile/thread/backend-invariant.
+    pub fn try_columns(&self, idx: &[usize]) -> Result<Matrix, CodedError> {
+        let n = self.n();
+        let landmarks = gather_rows_source(self.src, idx)?;
+        let mut c = Matrix::zeros(n, idx.len());
+        if idx.is_empty() {
+            return Ok(c);
+        }
+        let mut r0 = 0usize;
+        while r0 < n {
+            let r1 = (r0 + self.tile).min(n);
+            let xt = load_rows(self.src, r0, r1)?;
+            let kb = if self.use_f32() {
+                cross_kernel_f32(&self.kernel, &xt, &landmarks)
+            } else {
+                cross_kernel_rowstable(&self.kernel, &xt, &landmarks)
+            };
+            for li in 0..r1 - r0 {
+                c.row_mut(r0 + li).copy_from_slice(kb.row(li));
+            }
+            r0 = r1;
+        }
         if self.scale != 1.0 {
             c.scale(self.scale);
         }
-        c
+        Ok(c)
+    }
+
+    /// Infallible [`GramOperator::try_columns`].
+    pub fn columns(&self, idx: &[usize]) -> Matrix {
+        self.try_columns(idx)
+            .expect("gram operator: tile source read failed")
     }
 
     /// F32 requested *and* applicable (radial kernel).
@@ -160,10 +248,55 @@ impl<'a> GramOperator<'a> {
         self.precision == Precision::F32 && self.kernel.is_radial()
     }
 
+    /// Assemble the un-scaled panel `K[r0..r1, :]` through the fixed
+    /// [`COL_TILE`] column-block schedule — the only routine in the crate
+    /// that produces streamed panel values, so the determinism argument
+    /// lives in one place. Each block is one row-stable `cross_kernel`
+    /// over scratch tiles pulled from the source.
+    fn try_panel(&self, r0: usize, r1: usize) -> Result<Matrix, CodedError> {
+        let n = self.n();
+        let a = load_rows(self.src, r0, r1)?;
+        let mut kt = Matrix::zeros(r1 - r0, n);
+        let mut c0 = 0usize;
+        while c0 < n {
+            let c1 = (c0 + COL_TILE).min(n);
+            let blk = load_rows(self.src, c0, c1)?;
+            let kb = cross_kernel_rowstable(&self.kernel, &a, &blk);
+            for li in 0..r1 - r0 {
+                kt.row_mut(li)[c0..c1].copy_from_slice(kb.row(li));
+            }
+            c0 = c1;
+        }
+        Ok(kt)
+    }
+
+    /// The f32 panel: same fixed column-block schedule, per-element
+    /// scalar dots + vectorized f32 kernel map (`cross_kernel_rows_f32`),
+    /// row-major `(r1-r0)×n`.
+    fn try_panel_f32(&self, r0: usize, r1: usize) -> Result<Vec<f32>, CodedError> {
+        let n = self.n();
+        let a = load_rows(self.src, r0, r1)?;
+        let th = r1 - r0;
+        let mut kt = vec![0.0f32; th * n];
+        let mut c0 = 0usize;
+        while c0 < n {
+            let c1 = (c0 + COL_TILE).min(n);
+            let blk = load_rows(self.src, c0, c1)?;
+            let kb = cross_kernel_rows_f32(&self.kernel, &a, &blk);
+            let w = c1 - c0;
+            for li in 0..th {
+                kt[li * n + c0..li * n + c1].copy_from_slice(&kb[li * w..(li + 1) * w]);
+            }
+            c0 = c1;
+        }
+        Ok(kt)
+    }
+
     /// Streamed `α·K·B` for a tall `n×c` block, never holding more than
-    /// one `tile×n` panel of `K`. Since the Gram is symmetric this is also
-    /// `Kᵀ·B`. See the module docs for the fixed accumulation schedule
-    /// that makes the result bitwise tile- and thread-invariant.
+    /// one `tile×n` panel of `K` and two scratch row tiles of `X`. Since
+    /// the Gram is symmetric this is also `Kᵀ·B`. See the module docs for
+    /// the fixed assembly + accumulation schedule that makes the result
+    /// bitwise tile-, thread- and backend-invariant.
     ///
     /// The tile product is a hand-rolled per-row axpy sweep rather than a
     /// call into the packed GEMM **on purpose**: the GEMM's small-flops
@@ -173,17 +306,17 @@ impl<'a> GramOperator<'a> {
     /// contiguous rows, and for radial kernels at the paper's `p` the
     /// panel *assembly* (transcendental-bound) dominates the product
     /// anyway — see the `gram_op` vs dense `K·B` hotpath cases.
-    pub fn matmul(&self, b: &Matrix) -> Matrix {
+    pub fn try_matmul(&self, b: &Matrix) -> Result<Matrix, CodedError> {
         let n = self.n();
         assert_eq!(b.rows(), n, "gram operator: K·B row mismatch");
         let c = b.cols();
         let mut out = Matrix::zeros(n, c);
         if c == 0 || n == 0 {
-            return out;
+            return Ok(out);
         }
         if self.use_f32() {
-            self.matmul_f32_into(b, &mut out);
-            return out;
+            self.try_matmul_f32_into(b, &mut out)?;
+            return Ok(out);
         }
         let bd = b.data();
         let scale = self.scale;
@@ -191,8 +324,7 @@ impl<'a> GramOperator<'a> {
         while r0 < n {
             let r1 = (r0 + self.tile).min(n);
             // assemble K[r0..r1, :] — the only K storage that ever exists
-            let xt = self.x.slice(r0, r1, 0, self.x.cols());
-            let kt = cross_kernel(&self.kernel, &xt, self.x);
+            let kt = self.try_panel(r0, r1)?;
             let out_chunk = &mut out.data_mut()[r0 * c..r1 * c];
             // one owner per output row; j ascending inside a row
             pool::scope_chunks(out_chunk, c, |li, orow| {
@@ -211,15 +343,21 @@ impl<'a> GramOperator<'a> {
             });
             r0 = r1;
         }
-        out
+        Ok(out)
     }
 
-    /// The [`Precision::F32`] body of [`GramOperator::matmul`]: f32 tile
-    /// panels (`cross_kernel_rows_f32`), f32 row accumulation with the
-    /// same one-owner-per-row / j-ascending schedule as the f64 path, a
-    /// single f32→f64 widen per output entry, and the scale applied in
-    /// f64. Bitwise tile- and thread-invariant for the same reasons.
-    fn matmul_f32_into(&self, b: &Matrix, out: &mut Matrix) {
+    /// Infallible [`GramOperator::try_matmul`].
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        self.try_matmul(b)
+            .expect("gram operator: tile source read failed")
+    }
+
+    /// The [`Precision::F32`] body of [`GramOperator::try_matmul`]: f32
+    /// tile panels, f32 row accumulation with the same
+    /// one-owner-per-row / j-ascending schedule as the f64 path, a single
+    /// f32→f64 widen per output entry, and the scale applied in f64.
+    /// Bitwise tile/thread/backend-invariant for the same reasons.
+    fn try_matmul_f32_into(&self, b: &Matrix, out: &mut Matrix) -> Result<(), CodedError> {
         let n = self.n();
         let c = b.cols();
         let bf: Vec<f32> = b.data().iter().map(|&v| v as f32).collect();
@@ -227,8 +365,7 @@ impl<'a> GramOperator<'a> {
         let mut r0 = 0usize;
         while r0 < n {
             let r1 = (r0 + self.tile).min(n);
-            let xt = self.x.slice(r0, r1, 0, self.x.cols());
-            let kt = cross_kernel_rows_f32(&self.kernel, &xt, self.x);
+            let kt = self.try_panel_f32(r0, r1)?;
             let out_chunk = &mut out.data_mut()[r0 * c..r1 * c];
             let (bf, kt) = (&bf, &kt);
             pool::scope_chunks(out_chunk, c, |li, orow| {
@@ -246,23 +383,36 @@ impl<'a> GramOperator<'a> {
             });
             r0 = r1;
         }
+        Ok(())
     }
 
     /// Streamed `α·K·v` matrix–vector product.
+    pub fn try_matvec(&self, v: &[f64]) -> Result<Vec<f64>, CodedError> {
+        let kv = self.try_matmul(&Matrix::col_vec(v))?;
+        Ok(kv.data().to_vec())
+    }
+
+    /// Infallible [`GramOperator::try_matvec`].
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
-        let kv = self.matmul(&Matrix::col_vec(v));
-        kv.data().to_vec()
+        self.try_matvec(v)
+            .expect("gram operator: tile source read failed")
     }
 
     /// `α·K·S` plus the kernel-evaluation count. Sparse sketches take the
     /// support-column path (`O(n·|U|)` evaluations, the paper's §3.3
     /// argument); dense sketches stream row tiles (`O(n²)` evaluations —
     /// unavoidable — but `O(tile·n)` memory instead of the dense `O(n²)`).
-    pub fn ks(&self, sketch: &Sketch) -> (Matrix, usize) {
+    pub fn try_ks(&self, sketch: &Sketch) -> Result<(Matrix, usize), CodedError> {
         match sketch {
-            Sketch::Sparse(sp) => self.ks_sparse(sp),
-            Sketch::Dense(s) => (self.matmul(s), self.n() * self.n()),
+            Sketch::Sparse(sp) => self.try_ks_sparse(sp),
+            Sketch::Dense(s) => Ok((self.try_matmul(s)?, self.n() * self.n())),
         }
+    }
+
+    /// Infallible [`GramOperator::try_ks`].
+    pub fn ks(&self, sketch: &Sketch) -> (Matrix, usize) {
+        self.try_ks(sketch)
+            .expect("gram operator: tile source read failed")
     }
 
     /// `Sᵀ·(α·K)·S` from a previously computed `ks`, symmetrised.
@@ -280,11 +430,11 @@ impl<'a> GramOperator<'a> {
     /// Support-column `K·S` for a sparse sketch: column `j` of `KS` is
     /// `Σ_{(i,w)∈col j} w · K[:, i]` over the gathered support block.
     /// (Crate-visible so `sketch::sketch_kernel_cols` can delegate.)
-    pub(crate) fn ks_sparse(&self, sp: &SparseSketch) -> (Matrix, usize) {
+    pub(crate) fn try_ks_sparse(&self, sp: &SparseSketch) -> Result<(Matrix, usize), CodedError> {
         let n = self.n();
         assert_eq!(SketchOps::n(sp), n, "gram operator: sketch n mismatch");
         let support = sp.support();
-        let kcols = self.columns(&support); // n × |U|
+        let kcols = self.try_columns(&support)?; // n × |U|
         let mut pos = HashMap::with_capacity(support.len());
         for (p, &i) in support.iter().enumerate() {
             pos.insert(i, p);
@@ -298,14 +448,16 @@ impl<'a> GramOperator<'a> {
                 }
             }
         }
-        (ks, n * support.len())
+        Ok((ks, n * support.len()))
     }
 }
 
 /// Feeds [`partial_eigh_op`](crate::linalg::partial_eigh_op): subspace
 /// iteration sees `α·K` through tile-streamed products;
 /// [`materialize`](SymOp::materialize) (small-n / stalled-iteration
-/// fallbacks only) is the one route back to a dense assembly.
+/// fallbacks only) is the one route back to a dense assembly — and, for
+/// a disk-backed source, the one route that loads all of `X` (the
+/// documented exit from the out-of-core model).
 impl SymOp for GramOperator<'_> {
     fn dim(&self) -> usize {
         self.n()
@@ -316,7 +468,13 @@ impl SymOp for GramOperator<'_> {
     }
 
     fn materialize(&self) -> Matrix {
-        let mut k = kernel_matrix(&self.kernel, self.x);
+        let mut k = match self.src.as_matrix() {
+            Some(x) => kernel_matrix(&self.kernel, x),
+            None => {
+                let x = load_all(self.src).expect("gram operator: tile source read failed");
+                kernel_matrix(&self.kernel, &x)
+            }
+        };
         if self.scale != 1.0 {
             k.scale(self.scale);
         }
@@ -353,8 +511,7 @@ mod tests {
     }
 
     /// Streamed `K·B` equals the dense assemble-then-GEMM route. The two
-    /// differ only by FP grouping (not at all while `n ≤ KC`), so the
-    /// tolerance is tight.
+    /// differ only by FP grouping, so the tolerance is tight.
     #[test]
     fn streamed_matmul_matches_dense() {
         for &n in &[35usize, 220, 300] {
@@ -368,18 +525,20 @@ mod tests {
     }
 
     /// The determinism rule: bitwise identical output across tile sizes
-    /// {1 row, odd, default, n} and thread counts {1, 4}.
+    /// {1 row, odd, default, n} and thread counts {1, 4}. n > COL_TILE so
+    /// the column-block schedule (boundary + ragged tail) is exercised.
     #[test]
     fn bitwise_invariant_across_tile_sizes_and_threads() {
         let _guard = pool::TEST_THREADS_LOCK
             .lock()
             .unwrap_or_else(|e| e.into_inner());
-        let (kern, x, mut rng) = setup(301, 0x0902);
-        let b = Matrix::from_fn(301, 5, |_, _| rng.normal());
+        let n = COL_TILE + 89;
+        let (kern, x, mut rng) = setup(n, 0x0902);
+        let b = Matrix::from_fn(n, 5, |_, _| rng.normal());
         let before = pool::num_threads();
         pool::set_num_threads(1);
         let reference = GramOperator::new(kern, &x).matmul(&b);
-        for &tile in &[1usize, 37, DEFAULT_TILE, 301] {
+        for &tile in &[1usize, 37, DEFAULT_TILE, n] {
             for &threads in &[1usize, 4] {
                 pool::set_num_threads(threads);
                 let got = GramOperator::new(kern, &x).with_tile(tile).matmul(&b);
@@ -391,6 +550,39 @@ mod tests {
             }
         }
         pool::set_num_threads(before);
+    }
+
+    /// The file and shard backends reproduce the in-memory operator
+    /// products bitwise — the unit-level face of the cross-backend
+    /// equivalence harness in `tests/tiles.rs`.
+    #[test]
+    fn file_backends_match_in_memory_bitwise() {
+        let (kern, x, mut rng) = setup(90, 0x0909);
+        let b = Matrix::from_fn(90, 4, |_, _| rng.normal());
+        let dir = std::env::temp_dir().join("accumkrr_op_backends");
+        std::fs::create_dir_all(&dir).unwrap();
+        let fpath = dir.join("x.bin");
+        let sdir = dir.join("shards");
+        crate::data::write_f64_file(fpath.to_str().unwrap(), &x).unwrap();
+        crate::data::write_shards(sdir.to_str().unwrap(), &x, 17).unwrap();
+        let f = crate::data::F64File::open(fpath.to_str().unwrap(), 3).unwrap();
+        let s = crate::data::ShardedFile::open(sdir.to_str().unwrap()).unwrap();
+        let mem = GramOperator::new(kern, &x);
+        let (want_mm, want_cols, want_diag) =
+            (mem.matmul(&b), mem.columns(&[3, 40, 40, 71]), mem.diag());
+        for src in [&f as &dyn crate::data::TileSource, &s] {
+            for &tile in &[1usize, 23, DEFAULT_TILE] {
+                let op = GramOperator::new(kern, src).with_tile(tile);
+                assert_eq!(op.matmul(&b).data(), want_mm.data(), "matmul tile={tile}");
+                assert_eq!(
+                    op.columns(&[3, 40, 40, 71]).data(),
+                    want_cols.data(),
+                    "columns tile={tile}"
+                );
+                assert_eq!(op.diag(), want_diag, "diag tile={tile}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// The f32 streamed product tracks the f64 one to single-precision

@@ -9,6 +9,7 @@
 //! of `C W⁻¹ Cᵀ / n` equals that of `(L⁻¹ Cᵀ C L⁻ᵀ)/n`, a d×d symmetric
 //! eigenproblem; eigenvectors lift back as `V = C L⁻ᵀ Q Λ^{-1/2}/√n`.
 
+use crate::data::TileSource;
 use crate::kernels::Kernel;
 use crate::linalg::{chol_factor, matmul, partial_eigh, Matrix};
 use crate::sketch::{sketch_gram, Sketch, SketchOps, SketchedGram};
@@ -26,10 +27,13 @@ pub struct SketchedKpca {
 /// Compute the top-`r` sketched kernel principal components. The Grams
 /// stream through the row-tiled Gram operator (`sketch_gram` with no
 /// shared K), so the `n×n` kernel matrix is never materialised; the
-/// spectral work happens on the `d×d` pencil.
+/// spectral work happens on the `d×d` pencil. `x` is any
+/// [`TileSource`] — an in-memory matrix, or one of the out-of-core
+/// file backends (DESIGN.md §12) when `X` itself should not be
+/// resident either.
 pub fn sketched_kpca(
     kernel: &Kernel,
-    x: &Matrix,
+    x: &dyn TileSource,
     sketch: &Sketch,
     r: usize,
 ) -> Option<SketchedKpca> {

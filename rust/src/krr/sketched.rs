@@ -2,15 +2,17 @@
 //! fit and the adaptive-m incremental fit that grows the accumulation
 //! sketch at runtime.
 
-use crate::kernels::{cross_kernel_rowstable, gather_rows, Kernel};
+use crate::data::{gather_rows_source, load_all, TileSource};
+use crate::kernels::{cross_kernel_rowstable, Kernel};
 use crate::leverage::{stat_dim_from_scores, BlessResult};
 use crate::linalg::{chol_factor, CholFactor, Matrix, Precision};
 use crate::rng::{AliasTable, Pcg64};
 use crate::sketch::{
-    sketch_gram_with, IncrementalGram, Sampling, Sketch, SketchBuilder, SketchOps,
+    try_sketch_gram_with, IncrementalGram, Sampling, Sketch, SketchBuilder, SketchOps,
 };
 use crate::stats::{amm_error_proxy, rel_change, StoppingRule};
 use crate::util::timer::Timer;
+use crate::util::CodedError;
 
 /// Trained sketched-KRR model.
 ///
@@ -162,30 +164,34 @@ pub(crate) fn factor_with_jitter(a: &mut Matrix) -> Option<(CholFactor, u32)> {
 impl SketchedKrr {
     /// Assemble the trained model from a solved system: fitted values from
     /// `KSθ`, prediction weights by folding `Sθ` into the sketch support.
+    /// Sparse sketches gather only their support rows off the source (one
+    /// tile read per landmark — the out-of-core path stays `O(|support|·p)`
+    /// resident); dense sketches support *every* row, so the model loads
+    /// all of `X` — dense baselines are documented as not out-of-core.
     fn finish(
         kernel: Kernel,
-        x: &Matrix,
+        x: &dyn TileSource,
         sketch: &Sketch,
         ks: &Matrix,
         theta: Vec<f64>,
         report: SketchedKrrReport,
-    ) -> SketchedKrr {
+    ) -> Result<SketchedKrr, CodedError> {
         let fitted = ks.matvec(&theta);
         let (landmarks, beta) = match sketch {
             Sketch::Sparse(sp) => {
                 let (support, beta) = sp.landmark_weights(&theta);
-                (gather_rows(x, &support), beta)
+                (gather_rows_source(x, &support)?, beta)
             }
-            Sketch::Dense(_) => (x.clone(), sketch.s_vec(&theta)),
+            Sketch::Dense(_) => (load_all(x)?, sketch.s_vec(&theta)),
         };
-        SketchedKrr {
+        Ok(SketchedKrr {
             kernel,
             landmarks,
             beta,
             theta,
             fitted,
             report,
-        }
+        })
     }
 
     /// Fit the sketched estimator. With `k_full = None` (the production
@@ -196,13 +202,28 @@ impl SketchedKrr {
     /// matrix across fits (bench sweeps that amortise one assembly).
     pub fn fit(
         kernel: Kernel,
-        x: &Matrix,
+        x: &dyn TileSource,
         y: &[f64],
         sketch: &Sketch,
         lambda: f64,
         k_full: Option<&Matrix>,
     ) -> Option<SketchedKrr> {
         Self::fit_with(kernel, x, y, sketch, lambda, k_full, Precision::F64)
+    }
+
+    /// Fallible [`fit`](Self::fit): a failed tile-source read (real, or
+    /// injected through the `io.read` fault seam) surfaces as a
+    /// [`CodedError`] instead of a panic. `Ok(None)` still means the
+    /// sketched system could not be factored.
+    pub fn try_fit(
+        kernel: Kernel,
+        x: &dyn TileSource,
+        y: &[f64],
+        sketch: &Sketch,
+        lambda: f64,
+        k_full: Option<&Matrix>,
+    ) -> Result<Option<SketchedKrr>, CodedError> {
+        Self::try_fit_with(kernel, x, y, sketch, lambda, k_full, Precision::F64)
     }
 
     /// [`SketchedKrr::fit`] with an explicit Gram-accumulation
@@ -217,17 +238,32 @@ impl SketchedKrr {
     /// the Grams are exact in f64.
     pub fn fit_with(
         kernel: Kernel,
-        x: &Matrix,
+        x: &dyn TileSource,
         y: &[f64],
         sketch: &Sketch,
         lambda: f64,
         k_full: Option<&Matrix>,
         precision: Precision,
     ) -> Option<SketchedKrr> {
+        Self::try_fit_with(kernel, x, y, sketch, lambda, k_full, precision)
+            .expect("sketched krr: tile source read failed")
+    }
+
+    /// Fallible [`fit_with`](Self::fit_with) — the core every fit wrapper
+    /// routes through.
+    pub fn try_fit_with(
+        kernel: Kernel,
+        x: &dyn TileSource,
+        y: &[f64],
+        sketch: &Sketch,
+        lambda: f64,
+        k_full: Option<&Matrix>,
+        precision: Precision,
+    ) -> Result<Option<SketchedKrr>, CodedError> {
         let n = x.rows();
         assert_eq!(y.len(), n, "sketched krr: |y| != n");
         let mut t = Timer::start();
-        let gram = sketch_gram_with(&kernel, x, sketch, k_full, precision);
+        let gram = try_sketch_gram_with(&kernel, x, sketch, k_full, precision)?;
         let gram_secs = t.lap();
 
         // A = SᵀK²S + nλ·SᵀKS ; rhs = SᵀKY = (KS)ᵀ y
@@ -236,7 +272,9 @@ impl SketchedKrr {
         a.axpy(nl, &gram.stks);
         a.symmetrize();
         let rhs = gram.ks.matvec_t(y);
-        let (fac, jitter_bumps) = factor_with_jitter(&mut a)?;
+        let Some((fac, jitter_bumps)) = factor_with_jitter(&mut a) else {
+            return Ok(None);
+        };
         let theta = fac.solve(&rhs);
         let solve_secs = t.lap();
 
@@ -249,7 +287,9 @@ impl SketchedKrr {
             jitter_bumps,
             ..Default::default()
         };
-        Some(SketchedKrr::finish(kernel, x, sketch, &gram.ks, theta, report))
+        Ok(Some(SketchedKrr::finish(
+            kernel, x, sketch, &gram.ks, theta, report,
+        )?))
     }
 
     /// Fit with an **adaptively grown** accumulation sketch: starting from
@@ -271,7 +311,7 @@ impl SketchedKrr {
     /// grown sketch bit-matches it, and θ agrees to solver round-off.
     pub fn fit_adaptive(
         kernel: Kernel,
-        x: &Matrix,
+        x: &dyn TileSource,
         y: &[f64],
         builder: &SketchBuilder,
         d: usize,
@@ -280,6 +320,23 @@ impl SketchedKrr {
         rng: &mut Pcg64,
     ) -> Option<(SketchedKrr, Vec<AdaptiveRound>)> {
         Self::fit_adaptive_warm(kernel, x, y, builder, d, lambda, opts, rng, None)
+    }
+
+    /// Fallible [`fit_adaptive`](Self::fit_adaptive): a failed tile-source
+    /// read surfaces as a [`CodedError`]; the incremental state is local to
+    /// the call, so nothing is poisoned — retrying the fit after the fault
+    /// clears recomputes every column.
+    pub fn try_fit_adaptive(
+        kernel: Kernel,
+        x: &dyn TileSource,
+        y: &[f64],
+        builder: &SketchBuilder,
+        d: usize,
+        lambda: f64,
+        opts: &AdaptiveOptions,
+        rng: &mut Pcg64,
+    ) -> Result<Option<(SketchedKrr, Vec<AdaptiveRound>)>, CodedError> {
+        Self::try_fit_adaptive_warm(kernel, x, y, builder, d, lambda, opts, rng, None)
     }
 
     /// [`fit_adaptive`](Self::fit_adaptive) warm-started from a
@@ -293,7 +350,7 @@ impl SketchedKrr {
     /// costs zero new kernel column evaluations.
     pub fn fit_adaptive_warm(
         kernel: Kernel,
-        x: &Matrix,
+        x: &dyn TileSource,
         y: &[f64],
         builder: &SketchBuilder,
         d: usize,
@@ -302,6 +359,23 @@ impl SketchedKrr {
         rng: &mut Pcg64,
         warm: Option<&BlessResult>,
     ) -> Option<(SketchedKrr, Vec<AdaptiveRound>)> {
+        Self::try_fit_adaptive_warm(kernel, x, y, builder, d, lambda, opts, rng, warm)
+            .expect("sketched krr: tile source read failed")
+    }
+
+    /// Fallible [`fit_adaptive_warm`](Self::fit_adaptive_warm) — the core
+    /// the adaptive wrappers route through.
+    pub fn try_fit_adaptive_warm(
+        kernel: Kernel,
+        x: &dyn TileSource,
+        y: &[f64],
+        builder: &SketchBuilder,
+        d: usize,
+        lambda: f64,
+        opts: &AdaptiveOptions,
+        rng: &mut Pcg64,
+        warm: Option<&BlessResult>,
+    ) -> Result<Option<(SketchedKrr, Vec<AdaptiveRound>)>, CodedError> {
         let n = x.rows();
         assert_eq!(y.len(), n, "adaptive krr: |y| != n");
         assert!(d >= 1 && opts.m_max >= 1, "adaptive krr: d, m_max >= 1");
@@ -329,7 +403,9 @@ impl SketchedKrr {
             let drew_refined = refined;
             let mut t = Timer::start();
             acc.grow_to(m_target, rng);
-            let delta = inc.sync(x, &acc).expect("adaptive krr: sketch must grow");
+            let delta = inc
+                .try_sync(x, &acc)?
+                .expect("adaptive krr: sketch must grow");
             let g_secs = t.lap();
             gram_secs += g_secs;
 
@@ -369,7 +445,9 @@ impl SketchedKrr {
                 let mut a = inc.stk2s().clone();
                 a.axpy(nl, inc.stks());
                 a.symmetrize();
-                let (f, bumps) = factor_with_jitter(&mut a)?;
+                let Some((f, bumps)) = factor_with_jitter(&mut a) else {
+                    return Ok(None);
+                };
                 jitter_bumps += bumps;
                 fac = Some(f);
                 refactors += 1;
@@ -403,7 +481,7 @@ impl SketchedKrr {
             // Consumes no sketch RNG, so the uniform path (refine_after_m
             // = 0) is untouched draw for draw.
             if !refined && opts.refine_after_m > 0 && m >= opts.refine_after_m {
-                if let Some(scores) = inc.estimate_leverage(x, lambda) {
+                if let Some(scores) = inc.try_estimate_leverage(x, lambda)? {
                     d_stat = stat_dim_from_scores(&scores);
                     acc.set_sampling(Sampling::Weighted(AliasTable::new(&scores)));
                     refined = true;
@@ -430,8 +508,8 @@ impl SketchedKrr {
             refine_round,
         };
         let sketch = acc.as_sketch();
-        let model = SketchedKrr::finish(kernel, x, &sketch, inc.ks(), theta, report);
-        Some((model, trace))
+        let model = SketchedKrr::finish(kernel, x, &sketch, inc.ks(), theta, report)?;
+        Ok(Some((model, trace)))
     }
 
     /// In-sample fitted values `f̂_S(xᵢ)`.

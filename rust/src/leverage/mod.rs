@@ -9,9 +9,11 @@
 //! estimated through a growing landmark set while the regularisation is
 //! annealed down to the target λ.
 
+use crate::data::TileSource;
 use crate::kernels::{GramOperator, Kernel};
 use crate::linalg::{chol_factor, Matrix};
 use crate::rng::{AliasTable, Pcg64};
+use crate::util::CodedError;
 
 /// Exact ridge leverage scores `ℓᵢ = (K(K+nλI)⁻¹)ᵢᵢ = 1 − nλ·[(K+nλI)⁻¹]ᵢᵢ`.
 ///
@@ -75,20 +77,40 @@ impl BlessResult {
 ///    with `D = diag(1/(s·p_J))` correcting for the sampling,
 ///
 /// which costs `O(n·|J|² )` per round instead of `O(n³)` total.
+///
+/// `x` is any [`TileSource`]; panics on a tile-source read failure
+/// (in-memory sources cannot fail) — see [`try_bless`] for the fallible
+/// route the coordinator's file-backed jobs take.
 pub fn bless(
     kernel: &Kernel,
-    x: &Matrix,
+    x: &dyn TileSource,
     lambda: f64,
     d_target: usize,
     oversample: f64,
     rng: &mut Pcg64,
 ) -> BlessResult {
+    try_bless(kernel, x, lambda, d_target, oversample, rng)
+        .expect("bless: tile source read failed")
+}
+
+/// Fallible [`bless`]: a failed read off a file-backed source (real, or
+/// injected through the `io.read` fault seam) surfaces as a
+/// [`CodedError`] instead of a panic. The RNG may have consumed draws
+/// for the round that failed; rerun with a fresh seed position.
+pub fn try_bless(
+    kernel: &Kernel,
+    x: &dyn TileSource,
+    lambda: f64,
+    d_target: usize,
+    oversample: f64,
+    rng: &mut Pcg64,
+) -> Result<BlessResult, CodedError> {
     let n = x.rows();
     assert!(n > 0 && lambda > 0.0);
     // every kernel quantity streams off the Gram operator: the full n×n
     // matrix is never assembled, only n×s landmark panels
     let op = GramOperator::new(*kernel, x);
-    let diag = op.diag();
+    let diag = op.try_diag()?;
     let mut kernel_evals = 0usize;
 
     // initial estimates: uniform
@@ -118,7 +140,7 @@ pub fn bless(
         // regularisation proportional to its size (BLESS's rescaling).
         // One streamed n×s panel serves both: K_JJ is its rows at J (the
         // s² landmark-vs-landmark evals the old subset assembly re-paid).
-        let kxj = op.columns(&j); // n × s
+        let kxj = op.try_columns(&j)?; // n × s
         kernel_evals += n * s;
         let mut a = Matrix::from_fn(s, s, |u, v| kxj[(j[u], v)]);
         a.add_diag(s as f64 * lam_h);
@@ -149,12 +171,12 @@ pub fn bless(
         }
     }
 
-    BlessResult {
+    Ok(BlessResult {
         scores,
         landmarks,
         panel,
         kernel_evals,
-    }
+    })
 }
 
 #[cfg(test)]

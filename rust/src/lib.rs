@@ -25,7 +25,10 @@
 //! The memory side of the same argument is the **tiled Gram-operator
 //! pipeline** ([`kernels::GramOperator`], DESIGN.md §5): training and
 //! diagnostic paths stream `K` as `tile×n` row panels instead of
-//! materialising it, so peak memory is `O(tile·n + n·d)`. The one
+//! materialising it, so peak memory is `O(tile·n + n·d)` — and with the
+//! out-of-core [`data::TileSource`] backends (one f64 file or a shard
+//! directory, DESIGN.md §12) `X` itself leaves residency too, while
+//! every result stays bitwise identical to the in-memory run. The one
 //! documented exception is the partial eigensolver's dense fallback
 //! (small n, oversized block, or a stalled/clustered spectrum), which
 //! assembles `K` rather than return unconverged pairs — observable via
@@ -107,6 +110,7 @@ pub mod stats;
 pub mod util;
 
 pub use cluster::{LaplacianOperator, SpectralClustering};
+pub use data::{F64File, ShardedFile, TileSource};
 pub use kernels::{GramOperator, Kernel};
 pub use krr::{AdaptiveOptions, KrrModel, SketchedKrr};
 pub use linalg::{Matrix, Precision};

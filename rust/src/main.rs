@@ -1,7 +1,7 @@
 //! `accumkrr` — CLI launcher for the accumulation-sketch KRR framework.
 //!
 //! ```text
-//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|sampling|cluster|serve>
+//! accumkrr bench <fig1|fig2|fig3|fig4|fig5|thm8|cost|adaptive|sampling|cluster|serve|tiles>
 //!          [--replicates N] [--n-max N] [--seed S] [--csv PATH] [--full]
 //!          [--streamed] [--smoke]  # smoke: CI-sized serve load test
 //! accumkrr train --name M --dataset rqa --n 2000 --sketch accum --m 4
@@ -10,10 +10,14 @@
 //!          [--sampling uniform|leverage|poisson]  # informed row draws
 //! accumkrr train --sketch adaptive [--m-max M] [--rel-tol T]  # adaptive m
 //!          [--refine-after-m R]  # refine draw probs between terms
+//! accumkrr train --data-path X.bin --data-kind file --data-dim P --data-y Y.bin
+//!          # out-of-core: stream X off disk (f64 LE row-major file or
+//!          # shard directory via --data-kind shards), never resident
 //! accumkrr cluster --dataset moons --n 600 --k 2
 //!          [--method operator|sketched|adaptive] [--d D] [--m M]
 //!          [--m-max M] [--rel-tol T] [--bandwidth B] [--seed S]
 //!          [--k-max K]  # sweep k in 2..=K, pick by eigengap
+//!          [--data-path P --data-kind file|shards --data-dim D]  # out-of-core
 //! accumkrr serve [--addr 127.0.0.1:7878] [--max-batch N] [--max-wait-ms T]
 //!          [--fixed-wait]       # disable the adaptive batching wait
 //!          [--max-inflight N] [--high-water BYTES] [--workers N]
@@ -104,6 +108,20 @@ fn cmd_bench(args: &Args) -> i32 {
     }
 }
 
+/// Shared `--data-*` flags → an out-of-core `DataSpec`: `--data-path P`
+/// activates the file-backed route (`--data-kind file|shards`,
+/// `--data-dim D` for flat files, `--data-y Y` for train targets);
+/// absent, jobs use the named dataset generators.
+fn data_spec_from_args(args: &Args) -> Option<accumkrr::coordinator::DataSpec> {
+    let path = args.flags.get("data-path")?.clone();
+    Some(accumkrr::coordinator::DataSpec {
+        kind: args.str_or("data-kind", "file").to_string(),
+        path,
+        dim: args.usize_or("data-dim", 0),
+        y_path: args.flags.get("data-y").cloned(),
+    })
+}
+
 fn cmd_train(args: &Args) -> i32 {
     let (kind, mut adaptive) = match accumkrr::coordinator::state::parse_sketch_spec(
         args.str_or("sketch", "accum"),
@@ -151,6 +169,7 @@ fn cmd_train(args: &Args) -> i32 {
         adaptive,
         precision,
         sampling,
+        data: data_spec_from_args(args),
     };
     let store = ModelStore::new();
     match store.train(&req) {
@@ -287,6 +306,7 @@ fn cmd_cluster(args: &Args) -> i32 {
         rel_tol: args.f64_or("rel-tol", defaults.rel_tol),
         bandwidth: args.f64_or("bandwidth", defaults.bandwidth),
         seed: args.usize_or("seed", defaults.seed as usize) as u64,
+        data: data_spec_from_args(args),
     };
     match run_cluster_job(&req) {
         Ok(j) => {
@@ -294,7 +314,9 @@ fn cmd_cluster(args: &Args) -> i32 {
             println!(
                 "clustered {} (n={}): k={} method={} secs={:.3}",
                 req.dataset,
-                req.n,
+                // the reply's n is authoritative (file-backed sources
+                // carry their own row count)
+                g("n").and_then(|v| v.as_usize()).unwrap_or(req.n),
                 g("k").and_then(|v| v.as_usize()).unwrap_or(0),
                 req.method,
                 g("secs").and_then(|v| v.as_f64()).unwrap_or(0.0),

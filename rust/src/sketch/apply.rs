@@ -20,8 +20,10 @@
 //! on single-term growth.
 
 use super::{AccumSketch, Sketch, SketchOps, SparseSketch};
+use crate::data::{TileCache, TileSource};
 use crate::kernels::{GramOperator, Kernel};
 use crate::linalg::{chol_factor, matmul, matmul_at_b, syrk_at_a, Matrix, Precision};
+use crate::util::CodedError;
 use std::collections::HashMap;
 
 /// All sketched quantities the KRR solvers need, with the cost model used
@@ -42,9 +44,12 @@ pub struct SketchedGram {
 /// Compute `K[:, support]` for a sparse sketch and fold the per-column
 /// weights to get `KS` directly: column `j` of `KS` is
 /// `Σ_{(i,w)∈col j} w · K[:, i]`. Thin wrapper over the operator's
-/// support-column path.
-pub fn sketch_kernel_cols(kernel: &Kernel, x: &Matrix, s: &SparseSketch) -> (Matrix, usize) {
-    GramOperator::new(*kernel, x).ks_sparse(s)
+/// support-column path. Panics on a tile-source read failure (in-memory
+/// sources cannot fail).
+pub fn sketch_kernel_cols(kernel: &Kernel, x: &dyn TileSource, s: &SparseSketch) -> (Matrix, usize) {
+    GramOperator::new(*kernel, x)
+        .try_ks_sparse(s)
+        .expect("sketch kernel cols: tile source read failed")
 }
 
 /// Form every Gram quantity for the given sketch.
@@ -56,7 +61,7 @@ pub fn sketch_kernel_cols(kernel: &Kernel, x: &Matrix, s: &SparseSketch) -> (Mat
 /// allocated.
 pub fn sketch_gram(
     kernel: &Kernel,
-    x: &Matrix,
+    x: &dyn TileSource,
     sketch: &Sketch,
     k_full: Option<&Matrix>,
 ) -> SketchedGram {
@@ -101,31 +106,53 @@ pub fn sketch_gram(
 /// coordinator job schema's `precision` field.
 pub fn sketch_gram_with(
     kernel: &Kernel,
-    x: &Matrix,
+    x: &dyn TileSource,
     sketch: &Sketch,
     k_full: Option<&Matrix>,
     precision: Precision,
 ) -> SketchedGram {
-    if k_full.is_none() && precision == Precision::F32 {
+    try_sketch_gram_with(kernel, x, sketch, k_full, precision)
+        .expect("sketch gram: tile source read failed")
+}
+
+/// Fallible [`sketch_gram_with`] — the route fit paths take so a failed
+/// tile-source read (real or injected through the `io.read` seam)
+/// surfaces as a [`CodedError`] instead of a panic.
+pub fn try_sketch_gram_with(
+    kernel: &Kernel,
+    x: &dyn TileSource,
+    sketch: &Sketch,
+    k_full: Option<&Matrix>,
+    precision: Precision,
+) -> Result<SketchedGram, CodedError> {
+    if k_full.is_none() {
         let op = GramOperator::new(*kernel, x).with_precision(precision);
-        return sketch_gram_streamed(&op, sketch);
+        return try_sketch_gram_streamed(&op, sketch);
     }
-    sketch_gram(kernel, x, sketch, k_full)
+    Ok(sketch_gram(kernel, x, sketch, k_full))
 }
 
 /// [`sketch_gram`] against an existing [`GramOperator`] (callers that
 /// stream several sketched computations over one dataset build the
 /// operator once). Peak memory `O(tile·n + n·d)`.
 pub fn sketch_gram_streamed(op: &GramOperator, sketch: &Sketch) -> SketchedGram {
-    let (ks, kernel_evals) = op.ks(sketch);
+    try_sketch_gram_streamed(op, sketch).expect("sketch gram: tile source read failed")
+}
+
+/// Fallible [`sketch_gram_streamed`].
+pub fn try_sketch_gram_streamed(
+    op: &GramOperator,
+    sketch: &Sketch,
+) -> Result<SketchedGram, CodedError> {
+    let (ks, kernel_evals) = op.try_ks(sketch)?;
     let stks = op.stks(sketch, &ks);
     let stk2s = op.stk2s(&ks);
-    SketchedGram {
+    Ok(SketchedGram {
         ks,
         stks,
         stk2s,
         kernel_evals,
-    }
+    })
 }
 
 /// The factored form of one accumulation step's effect on the solver
@@ -215,8 +242,13 @@ impl AppendDelta {
 /// every sketch, this struct *grows* them as terms are appended to an
 /// [`AccumSketch`]:
 ///
-/// * kernel columns are cached per support row, so appending terms costs
-///   kernel evaluations only at **new** support points;
+/// * kernel columns are cached per support row in a [`TileCache`] — the
+///   support columns of the accumulated sketch are **pinned** (the
+///   solver's live working set; never evicted), while opportunistic
+///   columns (seeded landmark panels) stay evictable under the cache's
+///   byte budget (`ACCUMKRR_TILE_CACHE_MB`, DESIGN.md §12) — so
+///   appending terms costs kernel evaluations only at support points
+///   not already resident;
 /// * `KS` and `SᵀKS` are updated in `O(n·d)` / `O(δ·d²)` per append
 ///   (δ = distinct support rows appended);
 /// * `SᵀK²S` is updated with two thin GEMMs against the `n×δ` panel of
@@ -231,8 +263,9 @@ pub struct IncrementalGram {
     n: usize,
     d: usize,
     m_done: usize,
-    /// Cache of kernel columns `K[:, u]`, keyed by support row.
-    kcols: HashMap<usize, Vec<f64>>,
+    /// Budgeted cache of kernel columns `K[:, u]`, keyed by support row;
+    /// sketch-support columns are pinned, seeded ones evictable.
+    kcols: TileCache,
     ks: Matrix,
     stks: Matrix,
     stk2s: Matrix,
@@ -240,19 +273,35 @@ pub struct IncrementalGram {
 }
 
 impl IncrementalGram {
-    /// Empty accumulator for an `n×d` sketch under `kernel`.
+    /// Empty accumulator for an `n×d` sketch under `kernel`. The column
+    /// cache takes its byte budget from `ACCUMKRR_TILE_CACHE_MB`
+    /// ([`TileCache::from_env`]); see
+    /// [`set_cache_budget`](Self::set_cache_budget) for the explicit
+    /// override.
     pub fn new(kernel: Kernel, n: usize, d: usize) -> IncrementalGram {
         IncrementalGram {
             kernel,
             n,
             d,
             m_done: 0,
-            kcols: HashMap::new(),
+            kcols: TileCache::from_env(),
             ks: Matrix::zeros(n, d),
             stks: Matrix::zeros(d, d),
             stk2s: Matrix::zeros(d, d),
             kernel_evals: 0,
         }
+    }
+
+    /// Override the column-cache byte budget (tests and embedders; the
+    /// default comes from the environment). Shrinking evicts unpinned
+    /// columns immediately — pinned support columns always stay.
+    pub fn set_cache_budget(&mut self, bytes: usize) {
+        self.kcols.set_budget(bytes);
+    }
+
+    /// The support-column cache (inspection: residency, budget, pins).
+    pub fn cache(&self) -> &TileCache {
+        &self.kcols
     }
 
     /// Terms folded in so far.
@@ -287,9 +336,7 @@ impl IncrementalGram {
 
     /// Support rows whose kernel columns are currently cached, sorted.
     pub fn cached_rows(&self) -> Vec<usize> {
-        let mut rows: Vec<usize> = self.kcols.keys().copied().collect();
-        rows.sort_unstable();
-        rows
+        self.kcols.cached_rows()
     }
 
     /// Seed the kernel-column cache with already-computed columns (e.g. the
@@ -298,13 +345,18 @@ impl IncrementalGram {
     /// `K[:, rows[c]]`). The evaluations were paid by the producer, so
     /// [`kernel_evals`](Self::kernel_evals) is *not* incremented; a
     /// subsequent [`sync`](Self::sync) whose support hits these rows costs
-    /// zero new kernel evaluations.
+    /// zero new kernel evaluations. Seeded columns are **unpinned** —
+    /// they are an opportunistic prefetch, evictable under the cache
+    /// budget (a later `sync` that needs an evicted one just recomputes
+    /// and pins it).
     pub fn seed_columns(&mut self, rows: &[usize], panel: &Matrix) {
         assert_eq!(panel.rows(), self.n, "seed_columns: panel row count");
         assert_eq!(panel.cols(), rows.len(), "seed_columns: panel columns");
         for (c, &row) in rows.iter().enumerate() {
             assert!(row < self.n, "seed_columns: row out of range");
-            self.kcols.entry(row).or_insert_with(|| panel.col(c));
+            if !self.kcols.contains(row) {
+                self.kcols.insert(row, panel.col(c), false);
+            }
         }
     }
 
@@ -320,37 +372,58 @@ impl IncrementalGram {
     /// landmark-panel cost `bless` would pay is amortised into the terms
     /// already folded. With `J = [n]` the estimate is exact. `O(n·s²)`
     /// flops; never materialises anything `n×n`. Returns `None` when the
-    /// cache is empty or λ ≤ 0.
-    pub fn estimate_leverage(&mut self, x: &Matrix, lambda: f64) -> Option<Vec<f64>> {
+    /// cache is empty or λ ≤ 0. If the cache evicted some seeded columns
+    /// under budget pressure, `J` is just smaller — a coarser but still
+    /// valid Nyström estimate. Panics on a tile-source read failure
+    /// (in-memory sources cannot fail); see
+    /// [`try_estimate_leverage`](Self::try_estimate_leverage).
+    pub fn estimate_leverage(&mut self, x: &dyn TileSource, lambda: f64) -> Option<Vec<f64>> {
+        self.try_estimate_leverage(x, lambda)
+            .expect("incremental gram: tile source read failed")
+    }
+
+    /// Fallible core of [`estimate_leverage`](Self::estimate_leverage):
+    /// a diagonal read off a file-backed source surfaces as `Err` instead
+    /// of panicking. Nothing is mutated before the fallible read, so an
+    /// error leaves the accumulator (and its cache) exactly as it was.
+    pub fn try_estimate_leverage(
+        &mut self,
+        x: &dyn TileSource,
+        lambda: f64,
+    ) -> Result<Option<Vec<f64>>, CodedError> {
         let j = self.cached_rows();
         if j.is_empty() || !(lambda > 0.0) {
-            return None;
+            return Ok(None);
         }
         let s = j.len();
-        let mut a = Matrix::from_fn(s, s, |u, v| self.kcols[&j[v]][j[u]]);
+        let col = |row: usize| self.kcols.get(row).expect("cached_rows listed this row");
+        let mut a = Matrix::from_fn(s, s, |u, v| col(j[v])[j[u]]);
         a.symmetrize();
         a.add_diag(s as f64 * lambda);
         let fac = match chol_factor(&a) {
             Some(f) => f,
             None => {
                 a.add_diag(1e-8);
-                chol_factor(&a)?
+                match chol_factor(&a) {
+                    Some(f) => f,
+                    None => return Ok(None),
+                }
             }
         };
-        let diag = GramOperator::new(self.kernel, x).diag();
+        let diag = GramOperator::new(self.kernel, x).try_diag()?;
         self.kernel_evals += self.n;
         let nl = self.n as f64 * lambda;
         let mut ki = vec![0.0; s];
         let mut scores = Vec::with_capacity(self.n);
         for i in 0..self.n {
             for (v, &row) in j.iter().enumerate() {
-                ki[v] = self.kcols[&row][i];
+                ki[v] = self.kcols.get(row).expect("cached_rows listed this row")[i];
             }
             let sol = fac.solve(&ki);
             let reduced: f64 = ki.iter().zip(sol.iter()).map(|(a, b)| a * b).sum();
             scores.push(((diag[i] - reduced).max(0.0) / nl).clamp(1e-12, 1.0));
         }
-        Some(scores)
+        Ok(Some(scores))
     }
 
     /// Snapshot into the one-shot [`SketchedGram`] shape the solvers take.
@@ -366,13 +439,36 @@ impl IncrementalGram {
     /// Fold every term the sketch has grown past this accumulator's count
     /// into the Grams. Returns `None` when the sketch has no new terms,
     /// otherwise the [`AppendDelta`] describing the step for the solver.
-    pub fn sync(&mut self, x: &Matrix, sketch: &AccumSketch) -> Option<AppendDelta> {
+    /// Panics on a tile-source read failure (in-memory sources cannot
+    /// fail); see [`try_sync`](Self::try_sync).
+    pub fn sync(&mut self, x: &dyn TileSource, sketch: &AccumSketch) -> Option<AppendDelta> {
+        self.try_sync(x, sketch)
+            .expect("incremental gram: tile source read failed")
+    }
+
+    /// Fallible core of [`sync`](Self::sync): a kernel-column read off a
+    /// file-backed source surfaces as `Err` instead of panicking. The
+    /// fallible read happens **before** any state mutation (cache inserts,
+    /// Gram rescale, `m_done`), so an error leaves the accumulator
+    /// untouched — a retry after the fault clears folds the same terms.
+    ///
+    /// Cache discipline: the batch's support columns are inserted (or
+    /// re-marked) **pinned** — they are the sketch's live support, read
+    /// again on every later append and by
+    /// [`estimate_leverage`](Self::estimate_leverage), and must not be
+    /// evicted mid-update. Pinned bytes may exceed the budget; only the
+    /// evictable (seeded) columns compete for what remains.
+    pub fn try_sync(
+        &mut self,
+        x: &dyn TileSource,
+        sketch: &AccumSketch,
+    ) -> Result<Option<AppendDelta>, CodedError> {
         assert_eq!(x.rows(), self.n, "incremental gram: n mismatch");
         assert_eq!(SketchOps::n(sketch), self.n, "incremental gram: sketch n");
         assert_eq!(SketchOps::d(sketch), self.d, "incremental gram: sketch d");
         let m_new = sketch.m();
         if m_new <= self.m_done {
-            return None;
+            return Ok(None);
         }
         let m_old = self.m_done;
         let alpha = ((m_old as f64) / (m_new as f64)).sqrt();
@@ -395,19 +491,25 @@ impl IncrementalGram {
 
         // cache kernel columns for rows not seen before — streamed off the
         // operator's gathered-column path (tile-assembled, never touches a
-        // dense K); the cache is `O(n·|support|)`, support ≤ m·d ≪ n
+        // dense K); pinned bytes are `O(n·|support|)`, support ≤ m·d ≪ n.
+        // This read is the only fallible step: it runs before any mutation.
         let missing: Vec<usize> = rows
             .iter()
             .copied()
-            .filter(|r| !self.kcols.contains_key(r))
+            .filter(|r| !self.kcols.contains(*r))
             .collect();
         if !missing.is_empty() {
             let op = GramOperator::new(self.kernel, x);
-            let fresh = op.columns(&missing); // n × |missing|
+            let fresh = op.try_columns(&missing)?; // n × |missing|
             for (c, &row) in missing.iter().enumerate() {
-                self.kcols.insert(row, fresh.col(c));
+                self.kcols.insert(row, fresh.col(c), true);
             }
             self.kernel_evals += self.n * missing.len();
+        }
+        // promote already-cached batch rows (seeded or from earlier terms)
+        // to pinned: they are live support from here on
+        for &row in &rows {
+            self.kcols.pin(row);
         }
 
         // C (d×δ): per-column weight against each distinct support row
@@ -418,7 +520,7 @@ impl IncrementalGram {
         // Kb (n×δ): cached kernel columns of the batch support
         let mut kb = Matrix::zeros(self.n, delta_k);
         for (u, row) in rows.iter().enumerate() {
-            let kcol = &self.kcols[row];
+            let kcol = self.kcols.get(*row).expect("batch support pinned above");
             for i in 0..self.n {
                 kb[(i, u)] = kcol[i];
             }
@@ -433,7 +535,9 @@ impl IncrementalGram {
         let a_cols = matmul_at_b(&self.ks, &kb); // d×δ : Pᵀ·k_u
         let b_rows = Matrix::from_fn(delta_k, self.d, |u, j| self.ks[(rows[u], j)]);
         let guu = syrk_at_a(&kb); // δ×δ : k_uᵀ k_v (symmetric — triangle + mirror)
-        let kuu = Matrix::from_fn(delta_k, delta_k, |u, v| self.kcols[&rows[v]][rows[u]]);
+        let kuu = Matrix::from_fn(delta_k, delta_k, |u, v| {
+            self.kcols.get(rows[v]).expect("batch support pinned above")[rows[u]]
+        });
 
         let ct = c.transpose();
         let kt = matmul(&kb, &ct); // n×d : K·T
@@ -456,14 +560,14 @@ impl IncrementalGram {
         self.ks.axpy(1.0, &kt);
 
         self.m_done = m_new;
-        Some(AppendDelta {
+        Ok(Some(AppendDelta {
             alpha,
             c,
             a_cols,
             b_rows,
             guu,
             kuu,
-        })
+        }))
     }
 }
 

@@ -51,8 +51,8 @@ mod srht;
 pub use accum::AccumSketch;
 pub use amm::{amm_rel_error, approx_matmul};
 pub use apply::{
-    sketch_gram, sketch_gram_streamed, sketch_gram_with, sketch_kernel_cols, AppendDelta,
-    IncrementalGram, SketchedGram,
+    sketch_gram, sketch_gram_streamed, sketch_gram_with, sketch_kernel_cols,
+    try_sketch_gram_streamed, try_sketch_gram_with, AppendDelta, IncrementalGram, SketchedGram,
 };
 pub use build::{SketchBuilder, SketchKind};
 pub use localized::{localized, LocalKind};

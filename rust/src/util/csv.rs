@@ -6,44 +6,91 @@
 
 use crate::linalg::Matrix;
 
+/// Line-by-line numeric accumulator shared by the in-memory and
+/// streaming parse entries: one flat value buffer (no per-row `Vec`s, no
+/// second copy of the text), identical row/col error context either way.
+struct NumericAccum {
+    data: Vec<f64>,
+    width: Option<usize>,
+    nrows: usize,
+}
+
+impl NumericAccum {
+    fn new() -> NumericAccum {
+        NumericAccum { data: Vec::new(), width: None, nrows: 0 }
+    }
+
+    /// Parse one physical line (0-based `lineno` for error context).
+    /// Blank lines are skipped; field and raggedness errors abort the
+    /// whole parse, so no cleanup of partially pushed values is needed.
+    fn push_line(&mut self, line: &str, lineno: usize) -> Result<(), String> {
+        let line = line.trim();
+        if line.is_empty() {
+            return Ok(());
+        }
+        let start = self.data.len();
+        for (col, f) in line.split(',').enumerate() {
+            let v = f.trim().parse::<f64>().map_err(|_| {
+                format!("line {} col {}: not a number: {f:?}", lineno + 1, col + 1)
+            })?;
+            self.data.push(v);
+        }
+        let w = self.data.len() - start;
+        match self.width {
+            Some(ww) if w != ww => {
+                return Err(format!("line {}: ragged row ({w} vs {ww})", lineno + 1))
+            }
+            None => self.width = Some(w),
+            _ => {}
+        }
+        self.nrows += 1;
+        Ok(())
+    }
+
+    fn finish(self) -> Result<Matrix, String> {
+        let w = self.width.ok_or("empty csv")?;
+        Ok(Matrix::from_vec(self.nrows, w, self.data))
+    }
+}
+
 /// Parse numeric CSV text into a matrix. `skip_header` drops the first
 /// line; non-numeric fields are an error (with row/col context).
 pub fn parse_numeric(text: &str, skip_header: bool) -> Result<Matrix, String> {
-    let mut rows: Vec<Vec<f64>> = Vec::new();
-    let mut width = None;
+    let mut acc = NumericAccum::new();
     for (lineno, line) in text.lines().enumerate() {
         if lineno == 0 && skip_header {
             continue;
         }
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let vals: Result<Vec<f64>, String> = line
-            .split(',')
-            .enumerate()
-            .map(|(col, f)| {
-                f.trim()
-                    .parse::<f64>()
-                    .map_err(|_| format!("line {} col {}: not a number: {f:?}", lineno + 1, col + 1))
-            })
-            .collect();
-        let vals = vals?;
-        if let Some(w) = width {
-            if vals.len() != w {
-                return Err(format!("line {}: ragged row ({} vs {w})", lineno + 1, vals.len()));
-            }
-        } else {
-            width = Some(vals.len());
-        }
-        rows.push(vals);
+        acc.push_line(line, lineno)?;
     }
-    let w = width.ok_or("empty csv")?;
-    let mut m = Matrix::zeros(rows.len(), w);
-    for (i, r) in rows.iter().enumerate() {
-        m.row_mut(i).copy_from_slice(r);
+    acc.finish()
+}
+
+/// Streaming variant of [`parse_numeric`]: reads one line at a time from
+/// a `BufRead` into a reused buffer, so ingesting a multi-gigabyte file
+/// never holds the raw text — only the parsed values — in memory. Same
+/// grammar and error messages; read failures carry line context.
+pub fn parse_numeric_reader<R: std::io::BufRead>(
+    mut reader: R,
+    skip_header: bool,
+) -> Result<Matrix, String> {
+    let mut acc = NumericAccum::new();
+    let mut buf = String::new();
+    let mut lineno = 0usize;
+    loop {
+        buf.clear();
+        let nread = reader
+            .read_line(&mut buf)
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        if nread == 0 {
+            break;
+        }
+        if !(lineno == 0 && skip_header) {
+            acc.push_line(&buf, lineno)?;
+        }
+        lineno += 1;
     }
-    Ok(m)
+    acc.finish()
 }
 
 /// Write a header + rows of f64 columns as CSV.
@@ -81,5 +128,25 @@ mod tests {
     fn skips_blank_lines() {
         let m = parse_numeric("1,2\n\n3,4\n", false).unwrap();
         assert_eq!(m.rows(), 2);
+    }
+
+    #[test]
+    fn reader_matches_in_memory_parse_including_errors() {
+        for (text, skip) in [
+            ("a,b\n1,2\n3.5,-4\n", true),
+            ("1,2\n\n3,4", false),
+            ("1,2\n3\n", false),
+            ("1,x\n", false),
+            ("", false),
+            ("h\n", true),
+        ] {
+            let mem = parse_numeric(text, skip);
+            let rdr = parse_numeric_reader(text.as_bytes(), skip);
+            match (mem, rdr) {
+                (Ok(a), Ok(b)) => assert_eq!(a.data(), b.data(), "{text:?}"),
+                (Err(a), Err(b)) => assert_eq!(a, b, "{text:?}"),
+                (a, b) => panic!("divergence on {text:?}: {a:?} vs {b:?}"),
+            }
+        }
     }
 }

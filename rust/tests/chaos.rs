@@ -14,11 +14,14 @@
 use accumkrr::coordinator::frame::{encode_frame, read_frame, write_frame};
 use accumkrr::coordinator::state::{SamplingSpec, TrainRequest};
 use accumkrr::coordinator::{
-    BatcherConfig, Client, ClientConfig, ModelStore, ServerConfig, ServerHandle,
+    BatcherConfig, Client, ClientConfig, DataSpec, ModelStore, ServerConfig, ServerHandle,
 };
-use accumkrr::krr::AdaptiveOptions;
-use accumkrr::linalg::Precision;
-use accumkrr::sketch::SketchKind;
+use accumkrr::data::{write_f64_file, write_f64_vec, CACHE_BUDGET_ENV};
+use accumkrr::kernels::Kernel;
+use accumkrr::krr::{AdaptiveOptions, SketchedKrr};
+use accumkrr::linalg::{Matrix, Precision};
+use accumkrr::rng::Pcg64;
+use accumkrr::sketch::{Sampling, SketchBuilder, SketchKind};
 use accumkrr::util::json::Json;
 use accumkrr::util::{fault, ErrorKind};
 use std::io::Write;
@@ -43,6 +46,7 @@ fn train_into(store: &ModelStore, name: &str) {
             adaptive: None,
             precision: Precision::F64,
             sampling: SamplingSpec::Uniform,
+            data: None,
         })
         .unwrap();
 }
@@ -127,6 +131,7 @@ fn downdate_fault_recovers_with_jitter_in_direct_fit() {
             }),
             precision: Precision::F64,
             sampling: SamplingSpec::Uniform,
+            data: None,
         })
         .expect("adaptive fit must survive an injected downdate failure");
     let rep = sm.model.report();
@@ -461,6 +466,141 @@ fn invalid_inputs_are_rejected_at_the_boundary() {
     write_frame(&mut conn, &predict_req(6, "m", &[vec![0.1, 0.2, 0.3]])).unwrap();
     assert_eq!(read_id(&mut conn, 6).get("ok"), Some(&Json::Bool(true)));
     h.stop();
+}
+
+/// Write a small out-of-core training set (X as an f64 file, y as an
+/// f64 vector file) and the matching file-backed [`TrainRequest`].
+/// Returns the in-memory copies so tests can replicate the fit.
+fn out_of_core_fixture(tag: &str) -> (TrainRequest, Matrix, Vec<f64>) {
+    let (n, p) = (120usize, 3usize);
+    let mut rng = Pcg64::seed(0x00C);
+    let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+    let y: Vec<f64> = (0..n).map(|i| (x[(i, 0)] + x[(i, 1)]).tanh()).collect();
+    let xp = std::env::temp_dir().join(format!("accumkrr_chaos_{tag}_x.bin"));
+    let yp = std::env::temp_dir().join(format!("accumkrr_chaos_{tag}_y.bin"));
+    write_f64_file(&xp.to_string_lossy(), &x).unwrap();
+    write_f64_vec(&yp.to_string_lossy(), &y).unwrap();
+    let req = TrainRequest {
+        name: format!("ooc_{tag}"),
+        dataset: String::new(),
+        n: 0,
+        kind: SketchKind::Accumulation { m: 4 },
+        d: 10,
+        lambda: 1e-3,
+        bandwidth: 0.0,
+        seed: 11,
+        adaptive: None,
+        precision: Precision::F64,
+        sampling: SamplingSpec::Uniform,
+        data: Some(DataSpec {
+            kind: "file".into(),
+            path: xp.to_string_lossy().into_owned(),
+            dim: p,
+            y_path: Some(yp.to_string_lossy().into_owned()),
+        }),
+    };
+    (req, x, y)
+}
+
+fn cleanup_out_of_core(req: &TrainRequest) {
+    if let Some(spec) = &req.data {
+        std::fs::remove_file(&spec.path).ok();
+        if let Some(y) = &spec.y_path {
+            std::fs::remove_file(y).ok();
+        }
+    }
+}
+
+/// An injected `io.read` failure mid-way through a file-backed fit
+/// surfaces as a classified `internal` error — no panic, no model under
+/// the name — and a retrain over the same files (fault consumed) heals,
+/// landing bitwise on the never-faulted in-memory coefficients: the
+/// failed attempt left no poisoned state behind.
+#[test]
+fn out_of_core_read_fault_is_coded_and_retrain_heals_bitwise() {
+    let _g = fault::scoped("io.read=nth:1");
+    let (req, x, y) = out_of_core_fixture("readfault");
+    let store = ModelStore::new();
+    let err = store.train(&req).expect_err("first fill_tile must fail");
+    assert_eq!(err.kind, ErrorKind::Internal, "{err:?}");
+    assert!(err.msg.contains("io.read"), "{err:?}");
+    assert_eq!(fault::fired("io.read"), 1, "nth:1 fires exactly once");
+    assert!(store.get(&req.name).is_none(), "failed train must not store a model");
+    // the trigger is consumed — the identical request now succeeds
+    let meta = store.train(&req).expect("retrain over the same files heals");
+    let n = x.rows();
+    let mut rng = Pcg64::seed(req.seed);
+    let sketch = SketchBuilder::new(SketchKind::Accumulation { m: 4 })
+        .with_sampling(Sampling::Uniform)
+        .build(n, req.d, &mut rng);
+    let want = SketchedKrr::fit_with(
+        Kernel::matern(1.5, 1.0),
+        &x,
+        &y,
+        &sketch,
+        req.lambda,
+        None,
+        Precision::F64,
+    )
+    .unwrap();
+    assert_eq!(
+        meta.model.beta(),
+        want.beta(),
+        "healed fit must match the never-faulted fit bitwise"
+    );
+    cleanup_out_of_core(&req);
+}
+
+/// Clock eviction under fault pressure never serves a stale tile: with
+/// the support-column cache budget forced to zero (every unpinned
+/// column evicted as soon as the clock hand reaches it) an adaptive
+/// file-backed fit that dies on an injected read mid-round, then
+/// retrains, still lands bitwise on the never-faulted zero-budget
+/// in-memory fit — re-reads after eviction return the same bytes the
+/// first read did.
+#[test]
+fn cache_eviction_under_read_fault_never_serves_stale_tiles() {
+    let _g = fault::scoped("io.read=nth:3");
+    std::env::set_var(CACHE_BUDGET_ENV, "0");
+    // restore the env var even if an assertion below panics
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            std::env::remove_var(CACHE_BUDGET_ENV);
+        }
+    }
+    let _restore = Restore;
+    let (mut req, x, y) = out_of_core_fixture("evict");
+    let aopts = AdaptiveOptions {
+        m0: 2,
+        m_max: 8,
+        ..Default::default()
+    };
+    req.adaptive = Some(aopts.clone());
+    let store = ModelStore::new();
+    let err = store.train(&req).expect_err("third tile read must fail mid-fit");
+    assert_eq!(err.kind, ErrorKind::Internal, "{err:?}");
+    assert!(fault::fired("io.read") >= 1);
+    let meta = store.train(&req).expect("retrain heals after the fault is consumed");
+    let builder = SketchBuilder::new(SketchKind::Accumulation { m: 4 })
+        .with_sampling(Sampling::Uniform);
+    let (want, _trace) = SketchedKrr::fit_adaptive(
+        Kernel::matern(1.5, 1.0),
+        &x,
+        &y,
+        &builder,
+        req.d,
+        req.lambda,
+        &aopts,
+        &mut Pcg64::seed(req.seed),
+    )
+    .unwrap();
+    assert_eq!(
+        meta.model.beta(),
+        want.beta(),
+        "eviction + fault + retrain must not change a single bit"
+    );
+    cleanup_out_of_core(&req);
 }
 
 /// Survival under whatever `ACCUMKRR_FAULTS` armed (the CI chaos-matrix

@@ -159,6 +159,7 @@ fn coordinator_tcp_service_end_to_end() {
             adaptive: None,
             precision: accumkrr::linalg::Precision::F64,
             sampling: accumkrr::coordinator::SamplingSpec::Uniform,
+            data: None,
         })
         .unwrap();
     let addr = serve(

@@ -31,6 +31,7 @@ fn store_with_model() -> Arc<ModelStore> {
             adaptive: None,
             precision: Precision::F64,
             sampling: SamplingSpec::Uniform,
+            data: None,
         })
         .unwrap();
     store

@@ -1,0 +1,334 @@
+//! Cross-backend bitwise equivalence harness for the out-of-core
+//! `TileSource` backends (DESIGN.md §12).
+//!
+//! The determinism contract says training results are a function of the
+//! *bytes* of `X`, not of where they live or how they are scheduled:
+//! every backend feeds exact f64 tiles through the same fixed-width
+//! column-blocked assembly, and each output row has a single owner. So
+//! sketched-KRR coefficients, adaptive fits and spectral-cluster labels
+//! must be **bitwise identical** across
+//!
+//! * backend ∈ {in-memory [`Matrix`], [`F64File`], [`ShardedFile`]},
+//! * row-tile height ∈ {1, odd, default, n} (via `ACCUMKRR_ROW_TILE`),
+//! * worker threads ∈ {1, 4}.
+//!
+//! Every leg runs under `assembly_guard`, pinning the "streamed paths
+//! never assemble the `n×n` kernel" contract at the same time.
+//!
+//! This suite owns its process (its own integration-test binary), but
+//! the `#[test]` fns inside it share the process-global row-tile env
+//! var and pool width — they serialize on a local mutex.
+
+use accumkrr::cluster::{SpectralClustering, SpectralOptions};
+use accumkrr::data::{write_f64_file, write_shards, F64File, ShardedFile, TileSource};
+use accumkrr::kernels::{assembly_guard, Kernel, DEFAULT_TILE, ROW_TILE_ENV};
+use accumkrr::krr::{AdaptiveOptions, SketchedKrr};
+use accumkrr::linalg::{Matrix, Precision};
+use accumkrr::pool;
+use accumkrr::rng::Pcg64;
+use accumkrr::sketch::{SketchBuilder, SketchKind};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Serializes the tests in this binary: they mutate the process-global
+/// row-tile override and thread-pool width. (`pool`'s own test lock is
+/// crate-private; integration tests are a separate crate.)
+static GLOBAL_STATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_STATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the row-tile env var and pool width even if a leg panics.
+struct StateGuard {
+    prev_threads: usize,
+}
+
+impl StateGuard {
+    fn new() -> StateGuard {
+        StateGuard {
+            prev_threads: pool::num_threads(),
+        }
+    }
+}
+
+impl Drop for StateGuard {
+    fn drop(&mut self) {
+        std::env::remove_var(ROW_TILE_ENV);
+        pool::set_num_threads(self.prev_threads);
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+/// Deterministic feature matrix: standard normals from a pinned stream.
+fn random_x(n: usize, p: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::seed(seed);
+    Matrix::from_fn(n, p, |_, _| rng.normal())
+}
+
+/// Two well-separated Gaussian blobs (rows 0..n/2 near -2, rest near +2)
+/// so the cluster test has an unambiguous 2-way structure.
+fn blob_x(n: usize, p: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::seed(seed);
+    Matrix::from_fn(n, p, |i, _| {
+        let c = if i < n / 2 { -2.0 } else { 2.0 };
+        c + 0.3 * rng.normal()
+    })
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Write `x` to a fresh f64 file and shard directory (shard height is
+/// deliberately not a divisor of `n`, so tiles straddle boundaries and
+/// the final shard is ragged), then run `leg` once per backend. The
+/// in-memory matrix itself is the third backend (unsized coercion to
+/// `&dyn TileSource`).
+fn for_each_backend(tag: &str, x: &Matrix, leg: &mut dyn FnMut(&str, &dyn TileSource)) {
+    let file = tmp(&format!("accumkrr_tiles_it_{tag}.bin"));
+    let dir = tmp(&format!("accumkrr_tiles_it_{tag}_shards"));
+    write_f64_file(&file.to_string_lossy(), x).expect("write f64 file");
+    let shard_rows = (x.rows() / 3).max(1) + 1;
+    write_shards(&dir.to_string_lossy(), x, shard_rows).expect("write shards");
+
+    leg("memory", x);
+    let f = F64File::open(&file.to_string_lossy(), x.cols()).expect("open f64 file");
+    leg("file", &f);
+    let s = ShardedFile::open(&dir.to_string_lossy()).expect("open shards");
+    leg("shards", &s);
+
+    std::fs::remove_file(&file).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The (tile, threads) grid every fit below is pinned across. Tile 1 is
+/// the degenerate schedule, 37 an odd non-divisor, `DEFAULT_TILE` the
+/// production height, `n` a single whole-matrix tile.
+fn tile_grid(n: usize) -> [usize; 4] {
+    [1, 37, DEFAULT_TILE, n]
+}
+
+const THREADS: [usize; 2] = [1, 4];
+
+/// Sketched-KRR coefficients are bitwise identical across all three
+/// backends × 4 tile heights × 2 thread widths, and no leg assembles an
+/// `n×n` kernel.
+#[test]
+fn fit_is_bitwise_identical_across_backends_tiles_and_threads() {
+    let _g = lock();
+    let _restore = StateGuard::new();
+    let (n, p, d, lambda) = (96usize, 4usize, 12usize, 1e-3);
+    let kern = Kernel::matern(1.5, 1.0);
+    let x = random_x(n, p, 0xA110);
+    let y: Vec<f64> = (0..n).map(|i| (x[(i, 0)] - x[(i, 1)]).sin()).collect();
+    let mut rng = Pcg64::seed(0xBEEF);
+    let sketch = SketchBuilder::new(SketchKind::Accumulation { m: 4 }).build(n, d, &mut rng);
+
+    // reference: in-memory, default tile, one worker
+    std::env::remove_var(ROW_TILE_ENV);
+    pool::set_num_threads(1);
+    let reference = SketchedKrr::fit_with(kern, &x, &y, &sketch, lambda, None, Precision::F64)
+        .expect("reference fit");
+    let want = bits(reference.beta());
+
+    for tile in tile_grid(n) {
+        std::env::set_var(ROW_TILE_ENV, tile.to_string());
+        for threads in THREADS {
+            pool::set_num_threads(threads);
+            for_each_backend("fit", &x, &mut |name, src| {
+                assembly_guard::reset();
+                let model =
+                    SketchedKrr::fit_with(kern, src, &y, &sketch, lambda, None, Precision::F64)
+                        .expect("streamed fit");
+                assert!(
+                    assembly_guard::max_square() < n,
+                    "{name} tile={tile} threads={threads}: assembled an n×n kernel"
+                );
+                assert_eq!(
+                    bits(model.beta()),
+                    want,
+                    "beta drifted: backend={name} tile={tile} threads={threads}"
+                );
+            });
+        }
+    }
+}
+
+/// The adaptive engine (incremental accumulation + stopping rule) lands
+/// on the same rounds and bitwise-equal coefficients regardless of
+/// backend, tile height or thread width: every quantity the stopping
+/// rule inspects is itself bitwise pinned.
+#[test]
+fn fit_adaptive_is_bitwise_identical_across_backends_tiles_and_threads() {
+    let _g = lock();
+    let _restore = StateGuard::new();
+    let (n, p, d, lambda) = (80usize, 3usize, 10usize, 1e-3);
+    let kern = Kernel::matern(1.5, 1.0);
+    let x = random_x(n, p, 0xADA);
+    let y: Vec<f64> = (0..n).map(|i| x[(i, 0)].tanh() + 0.1 * x[(i, 2)]).collect();
+    let builder = SketchBuilder::new(SketchKind::Accumulation { m: 2 });
+    let aopts = AdaptiveOptions {
+        m0: 2,
+        m_max: 8,
+        ..AdaptiveOptions::default()
+    };
+
+    std::env::remove_var(ROW_TILE_ENV);
+    pool::set_num_threads(1);
+    let (ref_model, ref_trace) = SketchedKrr::fit_adaptive(
+        kern,
+        &x,
+        &y,
+        &builder,
+        d,
+        lambda,
+        &aopts,
+        &mut Pcg64::seed(7),
+    )
+    .expect("reference adaptive fit");
+    let want = bits(ref_model.beta());
+
+    for tile in tile_grid(n) {
+        std::env::set_var(ROW_TILE_ENV, tile.to_string());
+        for threads in THREADS {
+            pool::set_num_threads(threads);
+            for_each_backend("adaptive", &x, &mut |name, src| {
+                assembly_guard::reset();
+                // fresh, identically seeded stream per leg: identical
+                // intermediate values => identical draw sequence
+                let (model, trace) = SketchedKrr::fit_adaptive(
+                    kern,
+                    src,
+                    &y,
+                    &builder,
+                    d,
+                    lambda,
+                    &aopts,
+                    &mut Pcg64::seed(7),
+                )
+                .expect("streamed adaptive fit");
+                assert!(
+                    assembly_guard::max_square() < n,
+                    "{name} tile={tile} threads={threads}: assembled an n×n kernel"
+                );
+                assert_eq!(
+                    trace.len(),
+                    ref_trace.len(),
+                    "round count drifted: backend={name} tile={tile} threads={threads}"
+                );
+                assert_eq!(
+                    bits(model.beta()),
+                    want,
+                    "adaptive beta drifted: backend={name} tile={tile} threads={threads}"
+                );
+            });
+        }
+    }
+}
+
+/// Streamed spectral clustering pins labels *and* the raw embedding
+/// bitwise across the full backend × tile × thread grid.
+#[test]
+fn spectral_cluster_is_bitwise_identical_across_backends_tiles_and_threads() {
+    let _g = lock();
+    let _restore = StateGuard::new();
+    let (n, p) = (90usize, 3usize);
+    let kern = Kernel::gaussian(1.5);
+    let x = blob_x(n, p, 0xC105);
+    let opts = SpectralOptions {
+        k: 2,
+        ..SpectralOptions::default()
+    };
+
+    std::env::remove_var(ROW_TILE_ENV);
+    pool::set_num_threads(1);
+    let reference = SpectralClustering::fit(kern, &x, &opts, &mut Pcg64::seed(9))
+        .expect("reference clustering");
+    let want_embed = bits(reference.embedding.data());
+
+    for tile in tile_grid(n) {
+        std::env::set_var(ROW_TILE_ENV, tile.to_string());
+        for threads in THREADS {
+            pool::set_num_threads(threads);
+            for_each_backend("cluster", &x, &mut |name, src| {
+                assembly_guard::reset();
+                let got = SpectralClustering::fit(kern, src, &opts, &mut Pcg64::seed(9))
+                    .expect("streamed clustering");
+                assert!(
+                    assembly_guard::max_square() < n,
+                    "{name} tile={tile} threads={threads}: assembled an n×n kernel"
+                );
+                assert_eq!(
+                    got.labels, reference.labels,
+                    "labels drifted: backend={name} tile={tile} threads={threads}"
+                );
+                assert_eq!(
+                    bits(got.embedding.data()),
+                    want_embed,
+                    "embedding drifted: backend={name} tile={tile} threads={threads}"
+                );
+            });
+        }
+    }
+}
+
+/// Seeded shard-boundary property test: 64 random (n, p, shard height,
+/// tile span) configurations where the shard height never divides `n`
+/// (ragged final shard) and the probed tile straddles at least two
+/// shards. `fill_tile` must return the exact bytes of the in-memory
+/// rows for every probe, including the whole-matrix span.
+#[test]
+fn shard_boundary_tiles_match_in_memory_bytes() {
+    let mut rng = Pcg64::seed(0x5EED_2021);
+    for trial in 0..64u64 {
+        let n = 11 + rng.below(110) as usize;
+        let p = 1 + rng.below(6) as usize;
+        // shard height: >= 2 shards, non-divisor so the last is ragged
+        let mut shard_rows = 0usize;
+        for _ in 0..256 {
+            let s = 1 + rng.below((n / 2) as u64) as usize;
+            if n % s != 0 {
+                shard_rows = s;
+                break;
+            }
+        }
+        assert!(shard_rows >= 1, "trial {trial}: no ragged shard height for n={n}");
+
+        let x = random_x(n, p, 0x7EA + trial);
+        let dir = tmp(&format!("accumkrr_tiles_it_prop_{trial}"));
+        write_shards(&dir.to_string_lossy(), &x, shard_rows).expect("write shards");
+        let src = ShardedFile::open(&dir.to_string_lossy()).expect("open shards");
+        assert_eq!(src.rows(), n);
+        assert_eq!(src.dim(), p);
+
+        let check = |r0: usize, r1: usize| {
+            let mut out = vec![0.0f64; (r1 - r0) * p];
+            src.fill_tile(r0, r1, &mut out).expect("fill_tile");
+            assert_eq!(
+                bits(&out),
+                bits(&x.data()[r0 * p..r1 * p]),
+                "trial {trial}: n={n} p={p} shard_rows={shard_rows} span={r0}..{r1}"
+            );
+        };
+
+        // a span guaranteed to straddle >= 1 boundary (starts inside
+        // shard 0, ends past it)
+        let r0 = rng.below(shard_rows as u64) as usize;
+        let r1 = shard_rows + 1 + rng.below((n - shard_rows) as u64) as usize;
+        check(r0, r1.min(n));
+        // a span ending inside the ragged final shard
+        let last_start = n - n % shard_rows;
+        check(last_start.saturating_sub(1 + rng.below(shard_rows as u64) as usize), n);
+        // the whole matrix in one tile
+        check(0, n);
+        // an empty tile at a random offset
+        let at = rng.below((n + 1) as u64) as usize;
+        check(at, at);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
